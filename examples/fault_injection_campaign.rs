@@ -1,0 +1,99 @@
+//! Fault-injection campaign: sweep transient-fault rates across AMR
+//! redundancy modes and recovery mechanisms, plus a TCLS (safe-domain)
+//! soak test.
+//!
+//! Demonstrates the paper's reliability story end to end: INDIP corrupts
+//! silently, DLM/TLM detect everything, HFR keeps the overhead at 24
+//! cycles per fault while software recovery and reboots blow it up.
+//!
+//! Run with: `cargo run --release --example fault_injection_campaign`
+
+use carfield::coordinator::metrics::print_table;
+use carfield::soc::amr::{AmrCluster, AmrMode, AmrTask, IntPrecision, Recovery};
+use carfield::soc::axi::{InitiatorId, TargetModel};
+use carfield::soc::mem::Dcspm;
+use carfield::soc::safed::{Commit, Tcls};
+use carfield::soc::tsu::TsuConfig;
+use carfield::soc::SocSim;
+use carfield::util::XorShift;
+
+fn run_amr(mode: AmrMode, recovery: Recovery, fault_rate: f64, seed: u64) -> (u64, u64, u64, u64) {
+    let mut cluster = AmrCluster::new(InitiatorId(0)).with_seed(seed);
+    cluster.mode = mode;
+    cluster.recovery = recovery;
+    cluster.fault_per_kcycle = fault_rate;
+    cluster.submit(
+        AmrTask {
+            precision: IntPrecision::Int8,
+            m: 128,
+            k: 128,
+            n: 128,
+            tile: 32,
+            src_base: 0,
+            dst_base: 0x8_0000,
+            part_id: 0,
+        },
+        0,
+    );
+    let mut soc = SocSim::new(1, vec![Box::new(Dcspm::new()) as Box<dyn TargetModel>]);
+    soc.attach(Box::new(cluster), TsuConfig::passthrough());
+    assert!(soc.run_until_done(200_000_000));
+    let c: &mut AmrCluster = soc.initiator_mut(InitiatorId(0));
+    (
+        c.stats.finished_at,
+        c.stats.faults_detected,
+        c.stats.faults_silent,
+        c.stats.recovery_cycles,
+    )
+}
+
+fn main() {
+    println!("== AMR cluster campaign: 128^3 int8 MatMul under transient faults");
+    let mut rows = Vec::new();
+    for &rate in &[0.0, 0.2, 1.0, 5.0] {
+        for (label, mode, rec) in [
+            ("INDIP (no protection)", AmrMode::Indip, Recovery::Hfr),
+            ("DLM + HFR", AmrMode::Dlm, Recovery::Hfr),
+            ("TLM + HFR", AmrMode::Tlm, Recovery::Hfr),
+            ("TLM + SW recovery", AmrMode::Tlm, Recovery::Software),
+            ("DLM reboot-only", AmrMode::Dlm, Recovery::RebootOnly),
+        ] {
+            let (makespan, detected, silent, rec_cycles) = run_amr(mode, rec, rate, 42);
+            rows.push(vec![
+                format!("{rate:.1}"),
+                label.to_string(),
+                makespan.to_string(),
+                detected.to_string(),
+                silent.to_string(),
+                rec_cycles.to_string(),
+                format!("{:.2}%", rec_cycles as f64 / makespan as f64 * 100.0),
+            ]);
+        }
+    }
+    print_table(
+        "faults/kcycle sweep",
+        &["rate", "config", "makespan", "detected", "SILENT", "recovery cyc", "overhead"],
+        &rows,
+    );
+
+    println!("\n== Safe-domain TCLS soak: 100k commits with random single-event upsets");
+    let mut tcls = Tcls::new();
+    let mut rng = XorShift::new(0xFA07);
+    let mut corrected = 0u64;
+    let mut fatal = 0u64;
+    for now in 0..100_000u64 {
+        if rng.chance(0.001) {
+            tcls.inject_fault(rng.below(3) as usize, &mut rng);
+        }
+        match tcls.commit(now) {
+            Commit::Corrected { .. } => corrected += 1,
+            Commit::Fatal => fatal += 1,
+            Commit::Clean => {}
+        }
+    }
+    println!(
+        "commits=100000 corrected={corrected} fatal={fatal} (single faults must never be fatal)"
+    );
+    assert_eq!(fatal, 0, "TCLS masked every single fault");
+    println!("TCLS soak passed: all single-event upsets masked by the voter.");
+}

@@ -1,0 +1,107 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO text artifacts.
+
+Emits, for every entry point in ``model.py``:
+
+- ``artifacts/<name>.hlo.txt``  — HLO text (the interchange format; the
+  rust runtime's XLA 0.5.1 rejects jax>=0.5 serialized protos whose
+  instruction ids exceed INT_MAX, while the text parser reassigns ids),
+- ``artifacts/<name>.meta``     — whitespace-separated input shapes
+  (``AxB`` tokens, parameter order), consumed by the rust loader,
+- ``artifacts/manifest.txt``    — one artifact name per line.
+
+Python runs ONLY here, at build time (``make artifacts``); the rust binary
+is self-contained afterwards.
+
+Usage: ``cd python && python -m compile.aot [--out-dir ../artifacts]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big constant payloads as ``constant({...})``, which the rust
+    side's text parser silently reads back as zeros — index tables and
+    twiddle factors vanish and the artifact produces garbage/NaN.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def f32(*shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entry_points():
+    """Yield (name, fn, example_args) for every artifact."""
+    mm = model.MM
+    # Raw integer MatMuls (AMR cluster functional model, Fig. 5a/b, Fig. 8).
+    for name, bx, by in model.INT_VARIANTS:
+        yield f"matmul_{name}", model.int_matmul(bx, by), (f32(mm, mm), f32(mm, mm))
+    # Raw FP MatMuls (vector cluster functional model, Fig. 5c/d, Fig. 8).
+    for name, fx, fy in model.FP_VARIANTS:
+        yield f"matmul_{name}", model.fp_matmul(fx, fy), (f32(mm, mm), f32(mm, mm))
+    # Quantized MLP inference (mission-critical AI task).
+    d0, d1, d2, d3 = model.MLP_DIMS
+    yield "qnn_mlp", model.qnn_mlp, (
+        f32(model.MLP_BATCH, d0),
+        f32(d0, d1),
+        f32(d1, d2),
+        f32(d2, d3),
+    )
+    # FP control step (vector cluster control task).
+    s = model.CONTROL_STATE
+    yield "control_step", model.control_step, (f32(s, s), f32(s, s), f32(s, s), f32(s, s))
+    # FFT spectrum (vector cluster radar DSP task).
+    n = model.FFT_N
+    yield "fft256", model.fft_spectrum, (f32(n), f32(n), f32(n))
+
+
+def lower_one(name, fn, args, out_dir: str) -> str:
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(text)
+    meta = " ".join("x".join(str(d) for d in a.shape) for a in args)
+    with open(os.path.join(out_dir, f"{name}.meta"), "w") as f:
+        f.write(meta + "\n")
+    return hlo_path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+    names = []
+    for name, fn, ex_args in entry_points():
+        if only is not None and name not in only:
+            continue
+        path = lower_one(name, fn, ex_args, args.out_dir)
+        size = os.path.getsize(path)
+        print(f"  {name:<16} -> {path} ({size} bytes)")
+        names.append(name)
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(names) + "\n")
+    print(f"wrote {len(names)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for the Carfield reproduction.
+
+Each kernel models the compute hot-spot of one of the SoC's two
+accelerators:
+
+- ``sdotp``: the AMR cluster's mixed-precision integer SIMD sum-of-dot-
+  product MatMul (16b/8b/4b/2b operands, including mixed permutations).
+- ``fp_matmul``: the vector cluster's multi-precision FP MatMul
+  (FP64/FP32/FP16/BF16/FP8 via precision-grid emulation).
+- ``fft``: the vector cluster's radix-2 FFT butterfly stage.
+
+All kernels are lowered with ``interpret=True`` so the resulting HLO runs
+on the CPU PJRT backend (real-TPU Pallas lowering emits Mosaic
+custom-calls the CPU plugin cannot execute). Correctness is pinned against
+the pure-jnp oracles in ``ref.py`` by ``python/tests``.
+"""
+
+from . import fft, fp_matmul, ref, sdotp  # noqa: F401

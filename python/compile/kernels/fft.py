@@ -1,0 +1,92 @@
+"""Pallas kernel: radix-2 DIT FFT butterfly stage (vector cluster DSP path).
+
+The paper benchmarks the vector cluster on FFTs (radar DSP). On the RVVU
+the butterfly stage is a vectorized complex MAC over gathered operand
+pairs; the gathers use the VLSU's indexed (non-unit-stride) port mode.
+
+Mapping here: the L2 model (``model.py``) precomputes, per stage, the
+gather indices and twiddle factors (the VLSU index stream), and this
+kernel performs the dense complex butterfly math — the part that occupies
+the VAU lanes:
+
+    top'    = top + w * bot
+    bottom' = top - w * bot
+
+Operands are split real/imag f32 planes (the artifact interchange dtype
+is f32; complex64 would also work on CPU-PJRT but f32 planes keep the
+rust-side buffer protocol uniform).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _butterfly_kernel(tr, ti, br, bi, wr, wi, otr, oti, obr, obi):
+    """Complex butterfly on [block] lanes: (t, b, w) -> (t + w*b, t - w*b)."""
+    prod_r = wr[...] * br[...] - wi[...] * bi[...]
+    prod_i = wr[...] * bi[...] + wi[...] * br[...]
+    otr[...] = tr[...] + prod_r
+    oti[...] = ti[...] + prod_i
+    obr[...] = tr[...] - prod_r
+    obi[...] = ti[...] - prod_i
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def butterfly_stage(
+    top_r: jax.Array,
+    top_i: jax.Array,
+    bot_r: jax.Array,
+    bot_i: jax.Array,
+    tw_r: jax.Array,
+    tw_i: jax.Array,
+    *,
+    block: int = 64,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One FFT stage over [H] butterfly pairs (H = N/2), block-tiled.
+
+    Returns (top'_r, top'_i, bot'_r, bot'_i).
+    """
+    (h,) = top_r.shape
+    if h % block != 0:
+        raise ValueError(f"half-size {h} not divisible by block {block}")
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    out = pl.pallas_call(
+        _butterfly_kernel,
+        grid=(h // block,),
+        in_specs=[spec] * 6,
+        out_specs=[spec] * 4,
+        out_shape=[jax.ShapeDtypeStruct((h,), jnp.float32)] * 4,
+        interpret=True,
+    )(top_r, top_i, bot_r, bot_i, tw_r, tw_i)
+    return tuple(out)
+
+
+def _window_mag_kernel(xr, xi, w, o):
+    """Windowed magnitude: |w * (xr + j xi)| — the radar range-bin power."""
+    wr = w[...] * xr[...]
+    wi = w[...] * xi[...]
+    o[...] = jnp.sqrt(wr * wr + wi * wi)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def window_magnitude(
+    x_r: jax.Array, x_i: jax.Array, win: jax.Array, *, block: int = 64
+) -> jax.Array:
+    """Apply a real window then take the complex magnitude, block-tiled."""
+    (n,) = x_r.shape
+    if n % block != 0:
+        raise ValueError(f"N={n} not divisible by block {block}")
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _window_mag_kernel,
+        grid=(n // block,),
+        in_specs=[spec] * 3,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(x_r, x_i, win)

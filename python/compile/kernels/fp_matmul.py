@@ -1,0 +1,125 @@
+"""Pallas kernel: multi-precision floating-point MatMul (vector cluster).
+
+Models the RVVU vector cluster's ``vfmacc``-based MatMul across the full
+FP format range the paper reports: FP64, FP32, FP16, BF16 and FP8
+(e4m3/e5m2), including mixed-precision operand pairs with widening
+accumulation (the `sdotp` vector instructions).
+
+Precision is emulated by snapping each operand block onto the target
+format's representable grid (``astype(fmt).astype(f32)``) before the block
+dot; accumulation happens in the f32 scratch, mirroring the VRF's widened
+accumulator lanes. FP64 is carried as f32 (the interchange/artifact dtype
+is f32 end-to-end): on this substrate f32 *is* the widest machine format,
+so "FP64" rows in the benches measure the widest-precision configuration.
+See DESIGN.md "Substitutions".
+
+Hardware adaptation: the paper's 4-bank VRF with 3R+1W 256b ports feeding
+a 256b/cyc VAU becomes the (block_m, block_k)x(block_k, block_n) VMEM
+blocking below; the four 64b VLSU ports' unit-strided streams are the
+BlockSpec index maps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: FP formats supported by the RVVU model, mapped to the jnp dtype whose
+#: value grid emulates them. "fp64" intentionally maps to float32 — see
+#: module docstring.
+FORMATS = {
+    "fp64": jnp.float32,
+    "fp32": jnp.float32,
+    "fp16": jnp.float16,
+    "bf16": jnp.bfloat16,
+    "fp8_e4m3": jnp.float8_e4m3fn,
+    "fp8_e5m2": jnp.float8_e5m2,
+}
+
+
+def snap(x: jax.Array, fmt: str) -> jax.Array:
+    """Round ``x`` to the representable grid of ``fmt``, returned as f32."""
+    if fmt not in FORMATS:
+        raise ValueError(f"unknown FP format {fmt!r}, want one of {sorted(FORMATS)}")
+    dt = FORMATS[fmt]
+    if dt == jnp.float32:
+        return x.astype(jnp.float32)
+    return x.astype(dt).astype(jnp.float32)
+
+
+def _fp_matmul_kernel(x_ref, y_ref, o_ref, *, fmt_x: str, fmt_y: str):
+    """K is the innermost grid axis; the revisited output block is the
+    widened (f32) accumulator — the VRF accumulator lanes."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xs = snap(x_ref[...], fmt_x)
+    ys = snap(y_ref[...], fmt_y)
+    o_ref[...] += jnp.dot(xs, ys, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt_x", "fmt_y", "block_m", "block_n", "block_k")
+)
+def fp_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    fmt_x: str = "fp32",
+    fmt_y: str = "fp32",
+    block_m: int = 32,
+    block_n: int = 32,
+    block_k: int = 32,
+) -> jax.Array:
+    """``snap(x, fmt_x) @ snap(y, fmt_y)`` with f32 accumulation.
+
+    ``x``: f32[M, K], ``y``: f32[K, N] -> f32[M, N]. Blocks must tile the
+    problem exactly.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {y.shape}")
+    for dim, blk, name in ((m, block_m, "M"), (n, block_n, "N"), (k, block_k, "K")):
+        if dim % blk != 0:
+            raise ValueError(f"{name}={dim} not divisible by block {blk}")
+    nk = k // block_k
+    kernel = functools.partial(_fp_matmul_kernel, fmt_x=fmt_x, fmt_y=fmt_y)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _axpy_kernel(a_ref, x_ref, y_ref, o_ref, *, fmt: str):
+    """Fused multiply-add ``o = snap(a)*snap(x) + snap(y)`` (vfmacc lane op)."""
+    o_ref[...] = snap(a_ref[...], fmt) * snap(x_ref[...], fmt) + snap(y_ref[...], fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "block"))
+def fused_axpy(a: jax.Array, x: jax.Array, y: jax.Array, *, fmt: str = "fp32", block: int = 64):
+    """Elementwise vfmacc over [M, N] operands in format ``fmt``."""
+    m, n = a.shape
+    if m % block != 0:
+        raise ValueError(f"M={m} not divisible by block {block}")
+    kernel = functools.partial(_axpy_kernel, fmt=fmt)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((block, n), lambda i: (i, 0))] * 3,
+        out_specs=pl.BlockSpec((block, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, x, y)

@@ -1,0 +1,65 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with plain ``jax.numpy`` (no Pallas). ``python/tests`` asserts
+``assert_allclose(kernel, ref)`` across shape/dtype/precision sweeps —
+this is the core numerical-correctness signal for the whole stack, since
+the rust runtime executes the very HLO these kernels lower to.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import fp_matmul as _fp
+
+
+def quantize_sym(x: jax.Array, bits: int) -> jax.Array:
+    lo = -(2.0 ** (bits - 1))
+    hi = 2.0 ** (bits - 1) - 1.0
+    return jnp.clip(jnp.round(x), lo, hi)
+
+
+def sdotp_matmul(x: jax.Array, y: jax.Array, *, bits_x: int = 8, bits_y: int = 8) -> jax.Array:
+    """Oracle for ``sdotp.sdotp_matmul``."""
+    return quantize_sym(x, bits_x) @ quantize_sym(y, bits_y)
+
+
+def requantize(acc: jax.Array, *, scale: float, bits: int = 8) -> jax.Array:
+    """Oracle for ``sdotp.requantize``."""
+    return quantize_sym(acc * scale, bits)
+
+
+def snap(x: jax.Array, fmt: str) -> jax.Array:
+    return _fp.snap(x, fmt)
+
+
+def fp_matmul(x: jax.Array, y: jax.Array, *, fmt_x: str = "fp32", fmt_y: str = "fp32") -> jax.Array:
+    """Oracle for ``fp_matmul.fp_matmul``."""
+    return jnp.dot(snap(x, fmt_x), snap(y, fmt_y), preferred_element_type=jnp.float32)
+
+
+def fused_axpy(a, x, y, *, fmt: str = "fp32"):
+    """Oracle for ``fp_matmul.fused_axpy``."""
+    return snap(a, fmt) * snap(x, fmt) + snap(y, fmt)
+
+
+def butterfly_stage(top_r, top_i, bot_r, bot_i, tw_r, tw_i):
+    """Oracle for ``fft.butterfly_stage``."""
+    pr = tw_r * bot_r - tw_i * bot_i
+    pi = tw_r * bot_i + tw_i * bot_r
+    return top_r + pr, top_i + pi, top_r - pr, top_i - pi
+
+
+def window_magnitude(x_r, x_i, win):
+    """Oracle for ``fft.window_magnitude``."""
+    wr = win * x_r
+    wi = win * x_i
+    return jnp.sqrt(wr * wr + wi * wi)
+
+
+def fft_full(x_r: jax.Array, x_i: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """End-to-end FFT oracle (jnp.fft) for the staged model in model.py."""
+    spec = jnp.fft.fft(x_r + 1j * x_i)
+    return jnp.real(spec).astype(jnp.float32), jnp.imag(spec).astype(jnp.float32)

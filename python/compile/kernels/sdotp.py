@@ -1,0 +1,135 @@
+"""Pallas kernel: mixed-precision integer sum-of-dot-product (sdotp) MatMul.
+
+Models the AMR cluster's custom RISC-V SIMD ``sdotp`` extension: each core
+multiplies low-bit-width integer operand pairs (16b/8b/4b/2b, all mixed
+permutations) and accumulates into a 32b accumulator. On the SoC the
+``mac-load`` instruction overlaps the dot-product with the next operand
+load, reaching 94% MAC-unit utilization; here the analogous structural
+property is the double-buffered HBM->VMEM block schedule expressed through
+``BlockSpec`` and a VMEM scratch accumulator.
+
+Hardware adaptation (GPU/RV-cluster -> TPU, see DESIGN.md):
+- the cluster's 32-banked L1 SPM becomes VMEM blocks sized by BlockSpec;
+- the 12-core MIMD MAC loop becomes an MXU-shaped ``jnp.dot`` per block;
+- operand quantization to b-bit grids models the SIMD sub-word packing.
+
+I/O convention: all tensors are f32 carrying exact integer values (the
+integer grid is enforced in-kernel). Accumulation is bit-exact whenever
+partial sums stay within f32's 2^24 exact-integer range — true for every
+precision pair with bits_x + bits_y <= 20 at K <= 1024 (e.g. 8bx8b:
+127*127*1024 ~ 1.65e7 < 2^24). 16b-heavy products exceed the exact range
+and carry ordinary f32 rounding, matching the oracle to ~1e-6 rtol.
+
+The kernel is lowered with ``interpret=True`` only (CPU-PJRT execution).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Supported operand bit-widths, mirroring the paper's "16b down to 2b (all
+# possible mixed permutations)".
+SUPPORTED_BITS = (16, 8, 4, 2)
+
+
+def quantize_sym(x: jax.Array, bits: int) -> jax.Array:
+    """Clamp+round ``x`` onto the signed b-bit integer grid, kept in f32.
+
+    Mirrors symmetric round-to-nearest-even quantization used for QNN
+    inference on the AMR cluster (e.g. int8 [-128, 127]).
+    """
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"unsupported operand width {bits}, want one of {SUPPORTED_BITS}")
+    lo = -(2.0 ** (bits - 1))
+    hi = 2.0 ** (bits - 1) - 1.0
+    return jnp.clip(jnp.round(x), lo, hi)
+
+
+def _sdotp_kernel(x_ref, y_ref, o_ref, *, bits_x: int, bits_y: int):
+    """One (bm, bn) output block; grid axis 2 walks the K dimension.
+
+    The K axis is the innermost (fastest) grid dimension, so the same
+    output block is revisited consecutively and acts as the 32b
+    accumulator (canonical Pallas reduction pattern).
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xq = quantize_sym(x_ref[...], bits_x)
+    yq = quantize_sym(y_ref[...], bits_y)
+    # The MXU-shaped block dot models the 12 cores' sdotp MAC loop over the
+    # current K slab; accumulation stays in the revisited VMEM output block.
+    o_ref[...] += jnp.dot(xq, yq, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits_x", "bits_y", "block_m", "block_n", "block_k")
+)
+def sdotp_matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    bits_x: int = 8,
+    bits_y: int = 8,
+    block_m: int = 32,
+    block_n: int = 32,
+    block_k: int = 32,
+) -> jax.Array:
+    """Mixed-precision integer MatMul ``quant(x, bits_x) @ quant(y, bits_y)``.
+
+    ``x``: f32[M, K], ``y``: f32[K, N]; returns f32[M, N] holding exact
+    integer accumulations. Block sizes must tile the problem exactly (the
+    AOT entry points pick compatible shapes).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"inner dims mismatch: {x.shape} @ {y.shape}")
+    for dim, blk, name in ((m, block_m, "M"), (n, block_n, "N"), (k, block_k, "K")):
+        if dim % blk != 0:
+            raise ValueError(f"{name}={dim} not divisible by block {blk}")
+    nk = k // block_k
+    kernel = functools.partial(_sdotp_kernel, bits_x=bits_x, bits_y=bits_y)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_m, n // block_n, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, y)
+
+
+def _requant_kernel(acc_ref, o_ref, *, scale: float, bits: int):
+    """Requantize i32-range accumulators back to a b-bit activation grid.
+
+    Models the cluster's fused requantization (normalization/clip) stage
+    between QNN layers.
+    """
+    o_ref[...] = quantize_sym(acc_ref[...] * scale, bits)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "bits", "block"))
+def requantize(acc: jax.Array, *, scale: float, bits: int = 8, block: int = 32) -> jax.Array:
+    """Elementwise requantization ``clip(round(acc * scale))`` on the b-bit grid."""
+    m, n = acc.shape
+    if m % block != 0:
+        raise ValueError(f"M={m} not divisible by block {block}")
+    kernel = functools.partial(_requant_kernel, scale=scale, bits=bits)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block,),
+        in_specs=[pl.BlockSpec((block, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(acc)

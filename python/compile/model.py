@@ -1,0 +1,224 @@
+"""Layer-2 JAX compute graphs for the Carfield reproduction.
+
+These are the *workloads* the paper's evaluation runs on the two
+accelerators, written in JAX on top of the Layer-1 Pallas kernels:
+
+- ``qnn_mlp``: quantized-DNN inference (AMR cluster's mission-critical AI
+  task — e.g. collision-avoidance / condition-monitoring perception head).
+- ``control_step``: FP state-feedback predictive-control update (vector
+  cluster's DSP/advanced-control task).
+- ``fft_spectrum``: windowed radix-2 FFT magnitude spectrum (vector
+  cluster's radar DSP task).
+- raw ``sdotp_matmul`` / ``fp_matmul`` entry points at every precision the
+  paper sweeps (Fig. 5 / Fig. 8 functional models).
+
+``aot.py`` lowers each entry point once to HLO text; the rust coordinator
+executes the artifacts through PJRT and never calls back into Python.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fft as kfft
+from .kernels import fp_matmul as kfp
+from .kernels import sdotp as ksd
+
+# ---------------------------------------------------------------------------
+# Quantized MLP (AMR cluster mission-critical AI workload)
+# ---------------------------------------------------------------------------
+
+#: (in, hidden1, hidden2, out) — all divisible by the 32-wide kernel blocks;
+#: the 10-class logits live in the first 10 lanes of the padded 32-wide head.
+MLP_DIMS = (256, 128, 64, 32)
+MLP_BATCH = 32
+
+
+def qnn_mlp(x, w1, w2, w3):
+    """Three-layer int8 MLP with requantized activations.
+
+    ``x``: f32[B, 256] activations on the int8 grid; ``wN``: f32 weights on
+    the int8 grid. Returns f32[B, 32] integer logits (first 10 valid).
+    """
+    h = ksd.sdotp_matmul(x, w1, bits_x=8, bits_y=8)
+    h = ksd.requantize(h, scale=2.0 ** -6, bits=8)
+    h = jnp.maximum(h, 0.0)  # ReLU on the int grid
+    h = ksd.sdotp_matmul(h, w2, bits_x=8, bits_y=8)
+    h = ksd.requantize(h, scale=2.0 ** -6, bits=8)
+    h = jnp.maximum(h, 0.0)
+    return ksd.sdotp_matmul(h, w3, bits_x=8, bits_y=8)
+
+
+def qnn_mlp_ref(x, w1, w2, w3):
+    """Pure-jnp oracle for ``qnn_mlp`` (used by pytest only)."""
+    from .kernels import ref
+
+    h = ref.sdotp_matmul(x, w1, bits_x=8, bits_y=8)
+    h = jnp.maximum(ref.requantize(h, scale=2.0 ** -6, bits=8), 0.0)
+    h = ref.sdotp_matmul(h, w2, bits_x=8, bits_y=8)
+    h = jnp.maximum(ref.requantize(h, scale=2.0 ** -6, bits=8), 0.0)
+    return ref.sdotp_matmul(h, w3, bits_x=8, bits_y=8)
+
+
+# ---------------------------------------------------------------------------
+# FP state-feedback control step (vector cluster DSP/control workload)
+# ---------------------------------------------------------------------------
+
+CONTROL_STATE = 32
+CONTROL_BATCH = 32
+
+
+def control_step(a, b, k, x):
+    """One closed-loop LQR-style update over a batch of plant states.
+
+    u = -K x;  x' = A x + B u  — all [32, 32] f32 matrices, batch of 32
+    states in the columns of ``x``. Runs on the fp_matmul kernel (fp32).
+    """
+    u = -kfp.fp_matmul(k, x, fmt_x="fp32", fmt_y="fp32")
+    ax = kfp.fp_matmul(a, x, fmt_x="fp32", fmt_y="fp32")
+    bu = kfp.fp_matmul(b, u, fmt_x="fp32", fmt_y="fp32")
+    return ax + bu
+
+
+def control_step_ref(a, b, k, x):
+    u = -(k @ x)
+    return a @ x + b @ u
+
+
+# ---------------------------------------------------------------------------
+# Radix-2 FFT spectrum (vector cluster radar DSP workload)
+# ---------------------------------------------------------------------------
+
+FFT_N = 256
+
+
+def _bit_reverse_indices(n: int) -> np.ndarray:
+    bits = int(np.log2(n))
+    idx = np.arange(n)
+    rev = np.zeros(n, dtype=np.int32)
+    for b in range(bits):
+        rev |= ((idx >> b) & 1) << (bits - 1 - b)
+    return rev
+
+
+def _stage_plan(n: int, stage: int):
+    """Static gather indices + twiddles for DIT stage ``stage`` (0-based).
+
+    Returns (top_idx, bot_idx, tw_r, tw_i) with H = n/2 butterflies laid
+    out densely — this is the VLSU index stream the L1 kernel consumes.
+    """
+    m = 2 << stage  # butterfly span at this stage
+    half = m // 2
+    groups = n // m
+    top, bot, twr, twi = [], [], [], []
+    for g in range(groups):
+        base = g * m
+        for j in range(half):
+            top.append(base + j)
+            bot.append(base + j + half)
+            w = np.exp(-2j * np.pi * j / m)
+            twr.append(w.real)
+            twi.append(w.imag)
+    return (
+        np.asarray(top, dtype=np.int32),
+        np.asarray(bot, dtype=np.int32),
+        np.asarray(twr, dtype=np.float32),
+        np.asarray(twi, dtype=np.float32),
+    )
+
+
+def _scatter_as_gather(n: int, top_idx: np.ndarray, bot_idx: np.ndarray):
+    """Static inverse maps turning the stage write-back into gathers.
+
+    For each natural-order position ``p``: ``sel[p]`` says whether it comes
+    from the top or bottom butterfly output and ``pos[p]`` which dense
+    butterfly lane. Gather-only dataflow matches the VLSU's indexed *load*
+    ports (the RVVU has no indexed-store fast path) and avoids HLO scatter,
+    which the xla_extension-0.5.1 text round-trip mangles.
+    """
+    sel = np.zeros(n, dtype=bool)
+    pos = np.zeros(n, dtype=np.int32)
+    for lane, p in enumerate(top_idx):
+        sel[p] = False
+        pos[p] = lane
+    for lane, p in enumerate(bot_idx):
+        sel[p] = True
+        pos[p] = lane
+    return sel, pos
+
+
+def fft_spectrum(x_r, x_i, win):
+    """Windowed FFT magnitude of a 256-point complex signal.
+
+    Bit-reversal + per-stage index streams are computed statically in L2
+    (the VLSU's indexed loads); the dense butterfly math runs in the L1
+    Pallas kernel. Dataflow is gather-only — see `_scatter_as_gather`.
+    """
+    n = FFT_N
+    rev = jnp.asarray(_bit_reverse_indices(n))
+    xr = jnp.take(x_r * win, rev, mode="clip")
+    xi = jnp.take(x_i * win, rev, mode="clip")
+    stages = int(np.log2(n))
+    for s in range(stages):
+        top_idx, bot_idx, twr, twi = _stage_plan(n, s)
+        t_r = jnp.take(xr, top_idx, mode="clip")
+        t_i = jnp.take(xi, top_idx, mode="clip")
+        b_r = jnp.take(xr, bot_idx, mode="clip")
+        b_i = jnp.take(xi, bot_idx, mode="clip")
+        nt_r, nt_i, nb_r, nb_i = kfft.butterfly_stage(
+            t_r, t_i, b_r, b_i, jnp.asarray(twr), jnp.asarray(twi)
+        )
+        sel, pos = _scatter_as_gather(n, top_idx, bot_idx)
+        sel_j, pos_j = jnp.asarray(sel), jnp.asarray(pos)
+        xr = jnp.where(sel_j, jnp.take(nb_r, pos_j, mode="clip"), jnp.take(nt_r, pos_j, mode="clip"))
+        xi = jnp.where(sel_j, jnp.take(nb_i, pos_j, mode="clip"), jnp.take(nt_i, pos_j, mode="clip"))
+    return kfft.window_magnitude(xr, xi, jnp.ones((n,), jnp.float32))
+
+
+def fft_spectrum_ref(x_r, x_i, win):
+    spec = jnp.fft.fft((x_r + 1j * x_i) * win)
+    return jnp.abs(spec).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Raw MatMul entry points (Fig. 5 / Fig. 8 precision sweeps)
+# ---------------------------------------------------------------------------
+
+MM = 64  # M = N = K for the benchmark MatMuls
+
+#: (name, bits_x, bits_y) — the paper's uniform and mixed integer formats.
+INT_VARIANTS = (
+    ("int16", 16, 16),
+    ("int8", 8, 8),
+    ("int8x4", 8, 4),
+    ("int8x2", 8, 2),
+    ("int4", 4, 4),
+    ("int4x2", 4, 2),
+    ("int2", 2, 2),
+)
+
+#: (name, fmt_x, fmt_y) — the vector cluster's FP formats.
+FP_VARIANTS = (
+    ("fp64", "fp64", "fp64"),
+    ("fp32", "fp32", "fp32"),
+    ("fp16", "fp16", "fp16"),
+    ("bf16", "bf16", "bf16"),
+    ("fp8", "fp8_e4m3", "fp8_e4m3"),
+    ("fp8x16", "fp8_e4m3", "fp16"),
+)
+
+
+def int_matmul(bits_x: int, bits_y: int):
+    def fn(x, y):
+        return ksd.sdotp_matmul(x, y, bits_x=bits_x, bits_y=bits_y)
+
+    return fn
+
+
+def fp_matmul(fmt_x: str, fmt_y: str):
+    def fn(x, y):
+        return kfp.fp_matmul(x, y, fmt_x=fmt_x, fmt_y=fmt_y)
+
+    return fn

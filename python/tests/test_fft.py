@@ -1,0 +1,118 @@
+"""L1/L2 correctness: FFT butterfly kernel, staged FFT model vs jnp.fft."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+from compile.kernels import fft, ref
+
+
+def _rand(n, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=n).astype(np.float32))
+
+
+def test_butterfly_matches_ref():
+    h = 128
+    args = [_rand(h, s) for s in range(6)]
+    got = fft.butterfly_stage(*args)
+    want = ref.butterfly_stage(*args)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-6, atol=1e-6)
+
+
+def test_butterfly_identity_twiddle():
+    """w = 1: butterfly degenerates to (t+b, t-b)."""
+    h = 64
+    t_r, t_i, b_r, b_i = (_rand(h, s) for s in range(4))
+    one = jnp.ones((h,), jnp.float32)
+    zero = jnp.zeros((h,), jnp.float32)
+    nt_r, nt_i, nb_r, nb_i = fft.butterfly_stage(t_r, t_i, b_r, b_i, one, zero)
+    np.testing.assert_allclose(np.asarray(nt_r), np.asarray(t_r + b_r), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(nb_i), np.asarray(t_i - b_i), rtol=1e-6)
+
+
+def test_butterfly_rejects_bad_block():
+    h = 100
+    a = [_rand(h, s) for s in range(6)]
+    with pytest.raises(ValueError, match="not divisible"):
+        fft.butterfly_stage(*a, block=64)
+
+
+def test_window_magnitude_matches_ref():
+    n = 256
+    xr, xi, w = (_rand(n, s) for s in range(3))
+    got = fft.window_magnitude(xr, xi, w)
+    want = ref.window_magnitude(xr, xi, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_fft_spectrum_matches_jnp_fft():
+    n = model.FFT_N
+    xr, xi = _rand(n, 1), _rand(n, 2)
+    win = jnp.asarray(np.hanning(n).astype(np.float32))
+    got = np.asarray(model.fft_spectrum(xr, xi, win))
+    want = np.asarray(model.fft_spectrum_ref(xr, xi, win))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fft_pure_tone():
+    """A pure complex exponential concentrates all energy in one bin."""
+    n = model.FFT_N
+    k0 = 37
+    t = np.arange(n)
+    sig = np.exp(2j * np.pi * k0 * t / n)
+    win = jnp.ones((n,), jnp.float32)
+    mag = np.asarray(
+        model.fft_spectrum(
+            jnp.asarray(sig.real.astype(np.float32)),
+            jnp.asarray(sig.imag.astype(np.float32)),
+            win,
+        )
+    )
+    assert np.argmax(mag) == k0
+    assert mag[k0] == pytest.approx(n, rel=1e-4)
+    others = np.delete(mag, k0)
+    assert np.max(others) < 1e-2 * mag[k0]
+
+
+def test_fft_linearity():
+    n = model.FFT_N
+    xr, xi = _rand(n, 5), _rand(n, 6)
+    win = jnp.ones((n,), jnp.float32)
+    m1 = np.asarray(model.fft_spectrum(xr, xi, win))
+    m2 = np.asarray(model.fft_spectrum(3.0 * xr, 3.0 * xi, win))
+    np.testing.assert_allclose(m2, 3.0 * m1, rtol=1e-4, atol=1e-4)
+
+
+def test_stage_plan_partitions_indices():
+    """Each stage's top/bot indices partition [0, n)."""
+    n = 256
+    for s in range(8):
+        top, bot, twr, twi = model._stage_plan(n, s)
+        union = np.sort(np.concatenate([top, bot]))
+        np.testing.assert_array_equal(union, np.arange(n))
+        np.testing.assert_allclose(twr**2 + twi**2, 1.0, rtol=1e-6)
+
+
+def test_bit_reverse_is_involution():
+    rev = model._bit_reverse_indices(256)
+    np.testing.assert_array_equal(rev[rev], np.arange(256))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_parseval(seed):
+    """Parseval: sum |X|^2 == N * sum |x|^2 (rectangular window)."""
+    n = model.FFT_N
+    rng = np.random.default_rng(seed)
+    xr = rng.normal(size=n).astype(np.float32)
+    xi = rng.normal(size=n).astype(np.float32)
+    win = jnp.ones((n,), jnp.float32)
+    mag = np.asarray(model.fft_spectrum(jnp.asarray(xr), jnp.asarray(xi), win))
+    lhs = np.sum(mag.astype(np.float64) ** 2)
+    rhs = n * np.sum(xr.astype(np.float64) ** 2 + xi.astype(np.float64) ** 2)
+    assert lhs == pytest.approx(rhs, rel=1e-3)

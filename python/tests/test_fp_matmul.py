@@ -1,0 +1,96 @@
+"""L1 correctness: multi-precision FP Pallas kernel vs the pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import fp_matmul, ref
+
+FORMATS = sorted(fp_matmul.FORMATS)
+
+
+def _rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, scale, shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("fx", FORMATS)
+@pytest.mark.parametrize("fy", FORMATS)
+def test_all_format_pairs(fx, fy):
+    """Full FP64..FP8 grid incl. mixed pairs; f32 accumulation tolerance."""
+    x = _rand((64, 64), seed=hash((fx, "x")) % 2**31)
+    y = _rand((64, 64), seed=hash((fy, "y")) % 2**31)
+    got = np.asarray(fp_matmul.fp_matmul(x, y, fmt_x=fx, fmt_y=fy))
+    want = np.asarray(ref.fp_matmul(x, y, fmt_x=fx, fmt_y=fy))
+    # Same snapped operands, different K-accumulation split -> tiny f32
+    # reassociation error only.
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_snap_fp8_is_idempotent():
+    x = _rand((32, 32), seed=7, scale=4.0)
+    s1 = fp_matmul.snap(x, "fp8_e4m3")
+    s2 = fp_matmul.snap(s1, "fp8_e4m3")
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_snap_reduces_distinct_values():
+    x = _rand((64, 64), seed=11)
+    n_fp32 = len(np.unique(np.asarray(fp_matmul.snap(x, "fp32"))))
+    n_fp8 = len(np.unique(np.asarray(fp_matmul.snap(x, "fp8_e4m3"))))
+    assert n_fp8 < n_fp32 / 4, (n_fp8, n_fp32)
+
+
+def test_unknown_format_rejected():
+    with pytest.raises(ValueError, match="unknown FP format"):
+        fp_matmul.snap(jnp.zeros((2, 2)), "fp12")
+
+
+def test_fp64_is_f32_carrier():
+    """Documented substitution: 'fp64' == widest machine format (f32)."""
+    x = _rand((32, 32), seed=20)
+    np.testing.assert_array_equal(
+        np.asarray(fp_matmul.snap(x, "fp64")), np.asarray(x)
+    )
+
+
+@pytest.mark.parametrize(
+    "m,k,n", [(32, 32, 32), (64, 96, 32), (96, 64, 64), (128, 32, 32)]
+)
+def test_shapes(m, k, n):
+    x = _rand((m, k), seed=m * k)
+    y = _rand((k, n), seed=k * n + 1)
+    got = np.asarray(fp_matmul.fp_matmul(x, y, fmt_x="bf16", fmt_y="bf16"))
+    want = np.asarray(ref.fp_matmul(x, y, fmt_x="bf16", fmt_y="bf16"))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)
+
+
+def test_fused_axpy_matches_ref():
+    a = _rand((64, 16), seed=1)
+    x = _rand((64, 16), seed=2)
+    y = _rand((64, 16), seed=3)
+    for fmt in ("fp32", "bf16", "fp8_e5m2"):
+        got = np.asarray(fp_matmul.fused_axpy(a, x, y, fmt=fmt))
+        want = np.asarray(ref.fused_axpy(a, x, y, fmt=fmt))
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    fmt=st.sampled_from(FORMATS),
+    mi=st.integers(1, 3),
+    ki=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_formats_random(fmt, mi, ki, seed):
+    m, k = 16 * mi, 16 * ki
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(k, 16)).astype(np.float32))
+    got = np.asarray(
+        fp_matmul.fp_matmul(x, y, fmt_x=fmt, fmt_y=fmt, block_m=16, block_n=16, block_k=16)
+    )
+    want = np.asarray(ref.fp_matmul(x, y, fmt_x=fmt, fmt_y=fmt))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-4)

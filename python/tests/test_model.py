@@ -1,0 +1,90 @@
+"""L2 correctness: workload graphs vs their oracles, shape contracts."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import model
+
+
+def _int8(shape, seed, scale=16.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        np.clip(np.round(rng.normal(0, scale, shape)), -128, 127).astype(np.float32)
+    )
+
+
+def test_qnn_mlp_matches_ref():
+    d0, d1, d2, d3 = model.MLP_DIMS
+    x = _int8((model.MLP_BATCH, d0), 1)
+    w1, w2, w3 = _int8((d0, d1), 2, 4.0), _int8((d1, d2), 3, 4.0), _int8((d2, d3), 4, 4.0)
+    got = np.asarray(model.qnn_mlp(x, w1, w2, w3))
+    want = np.asarray(model.qnn_mlp_ref(x, w1, w2, w3))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_qnn_mlp_logits_are_integral():
+    d0, d1, d2, d3 = model.MLP_DIMS
+    x = _int8((model.MLP_BATCH, d0), 5)
+    out = np.asarray(
+        model.qnn_mlp(x, _int8((d0, d1), 6, 4.0), _int8((d1, d2), 7, 4.0), _int8((d2, d3), 8, 4.0))
+    )
+    assert out.shape == (model.MLP_BATCH, d3)
+    np.testing.assert_array_equal(out, np.round(out))
+
+
+def test_qnn_mlp_hidden_activations_bounded():
+    """Requantized hidden activations stay on the int8 grid => logits are
+    bounded by 127 * 127 * fan_in."""
+    d0, d1, d2, d3 = model.MLP_DIMS
+    x = _int8((model.MLP_BATCH, d0), 9, 100.0)
+    out = np.asarray(
+        model.qnn_mlp(
+            x, _int8((d0, d1), 10, 100.0), _int8((d1, d2), 11, 100.0), _int8((d2, d3), 12, 100.0)
+        )
+    )
+    assert np.abs(out).max() <= 127.0 * 127.0 * d2
+
+
+def test_control_step_matches_ref():
+    s = model.CONTROL_STATE
+    rng = np.random.default_rng(0)
+    mats = [jnp.asarray(rng.normal(0, 0.3, (s, s)).astype(np.float32)) for _ in range(4)]
+    got = np.asarray(model.control_step(*mats))
+    want = np.asarray(model.control_step_ref(*mats))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_control_step_stabilizes():
+    """With K chosen as A (so A - BK = A - A = 0 when B = I), one step
+    drives the state to ~zero — sanity check of the closed-loop algebra."""
+    s = model.CONTROL_STATE
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.normal(0, 0.3, (s, s)).astype(np.float32))
+    b = jnp.eye(s, dtype=jnp.float32)
+    x = jnp.asarray(rng.normal(0, 1.0, (s, s)).astype(np.float32))
+    out = np.asarray(model.control_step(a, b, a, x))
+    np.testing.assert_allclose(out, 0.0, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_control_linearity(seed):
+    s = model.CONTROL_STATE
+    rng = np.random.default_rng(seed)
+    a, b, k, x = (jnp.asarray(rng.normal(0, 0.4, (s, s)).astype(np.float32)) for _ in range(4))
+    y1 = np.asarray(model.control_step(a, b, k, x))
+    y2 = np.asarray(model.control_step(a, b, k, 2.0 * x))
+    np.testing.assert_allclose(y2, 2.0 * y1, rtol=1e-4, atol=1e-4)
+
+
+def test_int_variants_cover_paper_formats():
+    names = {v[0] for v in model.INT_VARIANTS}
+    assert {"int16", "int8", "int4", "int2", "int8x4", "int8x2", "int4x2"} <= names
+
+
+def test_fp_variants_cover_paper_formats():
+    names = {v[0] for v in model.FP_VARIANTS}
+    assert {"fp64", "fp32", "fp16", "bf16", "fp8"} <= names

@@ -1,0 +1,128 @@
+"""L1 correctness: sdotp Pallas kernel vs the pure-jnp oracle.
+
+Integer accumulations inside f32's exact range must match *bit-exactly* —
+any tolerance here would mask quantization bugs that the AMR cluster's
+mission-critical AI tasks cannot afford.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref, sdotp
+
+BITS = sdotp.SUPPORTED_BITS
+
+
+def _rand(shape, scale, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0.0, scale, shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("bx", BITS)
+@pytest.mark.parametrize("by", BITS)
+def test_all_precision_pairs_exact(bx, by):
+    """Every mixed permutation the paper supports (16b..2b).
+
+    Pairs whose accumulations fit f32's 2^24 exact-integer range (all
+    pairs with bx+by <= 20, i.e. everything except 16b-heavy products)
+    must match bit-exactly; wider products tolerate f32 reassociation.
+    """
+    x = _rand((64, 64), 2.0 ** (bx - 2), seed=bx * 31 + by)
+    y = _rand((64, 64), 2.0 ** (by - 2), seed=bx + by * 17)
+    got = np.asarray(sdotp.sdotp_matmul(x, y, bits_x=bx, bits_y=by))
+    want = np.asarray(ref.sdotp_matmul(x, y, bits_x=bx, bits_y=by))
+    if bx + by <= 20:
+        np.testing.assert_array_equal(got, want)
+    else:
+        # f32 reassociation noise scales with the accumulator magnitude,
+        # not the individual element, so tolerance is absolute in units of
+        # the largest accumulation (64 K-steps -> ~2^6 ulp worst case).
+        atol = np.abs(want).max() * np.finfo(np.float32).eps * 64
+        np.testing.assert_allclose(got, want, rtol=0, atol=atol)
+
+
+@pytest.mark.parametrize(
+    "m,k,n,bm,bn,bk",
+    [
+        (32, 32, 32, 32, 32, 32),  # single block
+        (64, 96, 32, 32, 32, 32),  # rectangular, multi-K
+        (128, 64, 64, 32, 32, 32),  # multi-block M
+        (64, 64, 64, 16, 16, 16),  # smaller blocks
+        (32, 128, 32, 32, 32, 64),  # tall K blocks
+    ],
+)
+def test_shapes_and_blockings(m, k, n, bm, bn, bk):
+    x = _rand((m, k), 30.0, seed=m + k)
+    y = _rand((k, n), 30.0, seed=k + n)
+    got = sdotp.sdotp_matmul(x, y, bits_x=8, bits_y=8, block_m=bm, block_n=bn, block_k=bk)
+    want = ref.sdotp_matmul(x, y, bits_x=8, bits_y=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rejects_bad_blocking():
+    x = _rand((48, 64), 1.0, seed=1)
+    y = _rand((64, 48), 1.0, seed=2)
+    with pytest.raises(ValueError, match="not divisible"):
+        sdotp.sdotp_matmul(x, y, block_m=32)
+
+
+def test_rejects_dim_mismatch():
+    with pytest.raises(ValueError, match="mismatch"):
+        sdotp.sdotp_matmul(_rand((32, 32), 1.0, 1), _rand((64, 32), 1.0, 2))
+
+
+def test_rejects_unknown_bits():
+    with pytest.raises(ValueError, match="unsupported"):
+        sdotp.quantize_sym(jnp.zeros((4, 4)), 5)
+
+
+def test_quantize_saturates():
+    x = jnp.asarray([[1e6, -1e6, 0.4, -0.4]])
+    q = np.asarray(sdotp.quantize_sym(x, 8))
+    np.testing.assert_array_equal(q, [[127.0, -128.0, 0.0, -0.0]])
+
+
+def test_quantize_grid_int2():
+    x = jnp.asarray([[-3.0, -2.0, -1.2, 0.0, 0.6, 1.0, 7.0]])
+    q = np.asarray(sdotp.quantize_sym(x, 2))
+    np.testing.assert_array_equal(q, [[-2.0, -2.0, -1.0, 0.0, 1.0, 1.0, 1.0]])
+
+
+def test_requantize_matches_ref():
+    acc = _rand((64, 32), 5000.0, seed=9)
+    got = sdotp.requantize(acc, scale=2.0 ** -6, bits=8)
+    want = ref.requantize(acc, scale=2.0 ** -6, bits=8)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bx=st.sampled_from(BITS),
+    by=st.sampled_from(BITS),
+    mi=st.integers(1, 3),
+    ki=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.floats(0.1, 500.0),
+)
+def test_property_exactness_random(bx, by, mi, ki, ni, seed, scale):
+    """Hypothesis sweep: random shapes (multiples of 16), scales, widths."""
+    m, k, n = 16 * mi, 16 * ki, 16 * ni
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0.0, scale, (m, k)).astype(np.float32))
+    y = jnp.asarray(rng.normal(0.0, scale, (k, n)).astype(np.float32))
+    got = sdotp.sdotp_matmul(x, y, bits_x=bx, bits_y=by, block_m=16, block_n=16, block_k=16)
+    want = ref.sdotp_matmul(x, y, bits_x=bx, bits_y=by)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_accumulation_is_order_independent():
+    """Integer-exact accumulation: block_k must not change the result."""
+    x = _rand((64, 128), 60.0, seed=3)
+    y = _rand((128, 64), 60.0, seed=4)
+    a = sdotp.sdotp_matmul(x, y, block_k=32)
+    b = sdotp.sdotp_matmul(x, y, block_k=64)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

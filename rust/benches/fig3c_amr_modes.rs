@@ -1,0 +1,18 @@
+//! Bench: regenerate paper Fig. 3c (AMR modes, switch costs, HFR).
+
+use carfield::experiments::fig3c;
+use carfield::util::bench::BenchRunner;
+
+fn main() {
+    let mut b = BenchRunner::new("fig3c_amr_modes");
+    let result = b.time("fig3c full reproduction", 3, fig3c::run);
+    fig3c::print(&result);
+    let dlm = result
+        .modes
+        .iter()
+        .find(|m| matches!(m.mode, carfield::soc::amr::AmrMode::Dlm))
+        .unwrap();
+    b.metric("DLM MAC/cyc (paper 23.1)", dlm.mac_per_cyc_8b, "MAC/cyc");
+    b.metric("DLM penalty (paper 1.89x)", dlm.penalty_vs_indip, "x");
+    b.finish();
+}

@@ -1,0 +1,19 @@
+//! Bench: regenerate paper Fig. 5 (V/f/P + perf/efficiency sweeps).
+
+use carfield::experiments::fig5;
+use carfield::util::bench::BenchRunner;
+
+fn main() {
+    let mut b = BenchRunner::new("fig5_sweeps");
+    let result = b.time("fig5 sweep (11 voltage points)", 10, fig5::run);
+    fig5::print(&result);
+    let hi = result.amr.last().unwrap();
+    let lo = &result.amr[0];
+    b.metric("AMR peak GOPS 2b (paper 304.9)", hi.gops_indip[6], "GOPS");
+    b.metric("AMR peak eff 2b (paper 1607)", lo.eff_2b_indip, "GOPS/W");
+    let vhi = result.vector.last().unwrap();
+    let vlo = &result.vector[0];
+    b.metric("vector peak GFLOPS FP8 (paper 121.8)", vhi.gflops[4], "GFLOPS");
+    b.metric("vector peak eff FP8 (paper 1068.7)", vlo.eff_fp8, "GFLOPS/W");
+    b.finish();
+}

@@ -1,0 +1,24 @@
+//! Bench: regenerate paper Fig. 6a (HOSTD TCT vs system-DMA
+//! interference on the DPLLC/HyperRAM path).
+
+use carfield::experiments::fig6a;
+use carfield::util::bench::BenchRunner;
+
+fn main() {
+    let mut b = BenchRunner::new("fig6a_hyperram_interference");
+    let result = b.time("fig6a all regimes + partition sweep", 1, fig6a::run);
+    fig6a::print(&result);
+    let h = fig6a::headline(&result);
+    b.metric(
+        "unregulated degradation (paper 225x)",
+        h.unregulated_degradation,
+        "x",
+    );
+    b.metric("TSU recovery (paper 44.4x)", h.tsu_recovery, "x");
+    b.metric(
+        "50% partition, % of isolated (paper 75%)",
+        h.partition50_pct_of_isolated,
+        "%",
+    );
+    b.finish();
+}

@@ -1,0 +1,22 @@
+//! Bench: regenerate paper Fig. 6b (AMR TCT vs vector NCT on shared
+//! AXI + DCSPM, four isolation regimes).
+
+use carfield::experiments::fig6b;
+use carfield::util::bench::BenchRunner;
+
+fn main() {
+    let mut b = BenchRunner::new("fig6b_accel_interference");
+    let result = b.time("fig6b four regimes", 1, fig6b::run);
+    fig6b::print(&result);
+    let e2 = &result.regimes[1];
+    let e3 = &result.regimes[2];
+    let e4 = &result.regimes[3];
+    b.metric(
+        "R-E2 drop factor (paper 12.2x)",
+        100.0 / e2.amr_pct_of_isolated,
+        "x",
+    );
+    b.metric("R-E3 % of isolated (paper 95%)", e3.amr_pct_of_isolated, "%");
+    b.metric("R-E4 % of isolated (paper 100%)", e4.amr_pct_of_isolated, "%");
+    b.finish();
+}

@@ -1,0 +1,20 @@
+//! Bench: regenerate paper Fig. 7 (SoC comparison table + interrupt
+//! latency micro-bench).
+
+use carfield::experiments::fig7;
+use carfield::util::bench::BenchRunner;
+
+fn main() {
+    let mut b = BenchRunner::new("fig7_soc_comparison");
+    let result = b.time("fig7 table + irq drill", 10, fig7::run);
+    fig7::print(&result);
+    b.metric(
+        "measured irq latency (paper 6 cyc)",
+        result.measured_irq_latency as f64,
+        "cycles",
+    );
+    for (name, adv) in &result.irq_advantage {
+        b.metric(&format!("irq advantage vs {name}"), *adv, "x");
+    }
+    b.finish();
+}

@@ -1,0 +1,29 @@
+//! Bench: regenerate paper Fig. 8 (accelerator comparison vs SoA edge-AI
+//! and vector processors).
+
+use carfield::experiments::fig8;
+use carfield::util::bench::BenchRunner;
+
+fn main() {
+    let mut b = BenchRunner::new("fig8_accel_comparison");
+    let result = b.time("fig8 tables", 10, fig8::run);
+    fig8::print(&result);
+    let ours2 = &result.int_rows[2];
+    let tcas = &result.competitors[0];
+    b.metric(
+        "INDIP 2b vs [10] (paper 3.4x)",
+        ours2.gops_indip / tcas.int_gops.2,
+        "x",
+    );
+    b.metric(
+        "DLM 2b vs [10] (paper 1.8x)",
+        ours2.gops_dlm / tcas.int_gops.2,
+        "x",
+    );
+    b.metric(
+        "area eff 2b vs [10] (paper 6.4x)",
+        ours2.gops_mm2 / tcas.int_gops_mm2.2,
+        "x",
+    );
+    b.finish();
+}

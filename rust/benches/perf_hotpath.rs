@@ -1,0 +1,92 @@
+//! Bench: L3 hot paths — simulator cycle throughput, coordinator
+//! dispatch, and PJRT artifact execution overhead (the §Perf targets in
+//! DESIGN.md / EXPERIMENTS.md).
+
+use carfield::coordinator::task::Criticality;
+use carfield::coordinator::{IsolationPolicy, McTask, Scenario, Scheduler, Workload};
+use carfield::runtime::ArtifactRuntime;
+use carfield::soc::axi::InitiatorId;
+use carfield::soc::dma::{DmaEngine, DmaJob};
+use carfield::soc::hostd::TctSpec;
+use carfield::soc::tsu::TsuConfig;
+use carfield::soc::SocSim;
+use carfield::util::bench::BenchRunner;
+
+/// Simulator cycle throughput on the Fig. 6a topology.
+fn sim_throughput(b: &mut BenchRunner) {
+    const CYCLES: u64 = 2_000_000;
+    let dt = b.time("SocSim 2M cycles (TCT + DMA)", 3, || {
+        let mut soc = SocSim::new(2, SocSim::carfield_targets());
+        soc.attach(
+            Box::new(carfield::soc::hostd::HostCore::new(
+                InitiatorId(0),
+                TctSpec {
+                    iterations: u32::MAX,
+                    ..TctSpec::fig6a()
+                },
+            )),
+            TsuConfig::passthrough(),
+        );
+        let mut dma = DmaEngine::new(InitiatorId(1));
+        dma.program(DmaJob::interferer());
+        soc.attach(Box::new(dma), TsuConfig::passthrough());
+        let t0 = std::time::Instant::now();
+        soc.run_cycles(CYCLES);
+        t0.elapsed().as_secs_f64()
+    });
+    b.metric(
+        "simulated cycles/sec",
+        CYCLES as f64 / dt / 1e6,
+        "Mcyc/s (target >= 20)",
+    );
+}
+
+/// Coordinator scenario-assembly + teardown overhead.
+fn dispatch_overhead(b: &mut BenchRunner) {
+    b.time("Scheduler::run tiny scenario", 5, || {
+        let s = Scenario::new("tiny", IsolationPolicy::NoIsolation).with_task(McTask::new(
+            "tct",
+            Criticality::Hard,
+            Workload::HostTct(TctSpec {
+                accesses: 8,
+                iterations: 1,
+                ..TctSpec::fig6a()
+            }),
+        ));
+        Scheduler::run(&s)
+    });
+}
+
+/// PJRT artifact execution overhead (needs `make artifacts`).
+fn artifact_overhead(b: &mut BenchRunner) {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        println!("artifacts/ missing — skipping PJRT section (run `make artifacts`)");
+        return;
+    }
+    let mut rt = ArtifactRuntime::new(&dir).expect("runtime");
+    let exe = rt.load("matmul_int8").expect("artifact");
+    let x: Vec<f32> = (0..64 * 64).map(|i| (i % 13) as f32).collect();
+    let y = x.clone();
+    b.time("matmul_int8 64x64x64 execute", 50, || {
+        exe.run_f32(&[&x, &y]).expect("exec")
+    });
+    let exe2 = rt.load("qnn_mlp").expect("artifact");
+    let bufs: Vec<Vec<f32>> = exe2
+        .input_shapes()
+        .iter()
+        .map(|s| (0..s.iter().product::<usize>()).map(|i| (i % 7) as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+    b.time("qnn_mlp batch-32 inference", 50, || {
+        exe2.run_f32(&refs).expect("exec")
+    });
+}
+
+fn main() {
+    let mut b = BenchRunner::new("perf_hotpath");
+    sim_throughput(&mut b);
+    dispatch_overhead(&mut b);
+    artifact_overhead(&mut b);
+    b.finish();
+}

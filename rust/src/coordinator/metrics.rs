@@ -1,0 +1,175 @@
+//! Per-task and per-scenario reports (the numbers Fig. 6 plots).
+
+use crate::soc::clock::Cycle;
+
+use super::task::Criticality;
+
+/// Outcome of one task in a scenario run.
+#[derive(Debug, Clone)]
+pub struct TaskReport {
+    pub name: String,
+    pub kind: &'static str,
+    pub criticality: Criticality,
+    /// First-issue to completion, in system cycles (0 for endless NCTs).
+    pub makespan: Cycle,
+    pub deadline: Cycle,
+    pub deadline_met: bool,
+    /// Mean per-iteration latency (host TCTs) or effective rate proxy.
+    pub mean_latency: f64,
+    /// Max-min latency across iterations.
+    pub jitter: f64,
+    /// Workload-specific extras (misses, MAC/cyc, bytes moved, ...).
+    pub extra: Vec<(String, f64)>,
+}
+
+impl TaskReport {
+    pub fn extra_value(&self, key: &str) -> Option<f64> {
+        self.extra
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+    }
+}
+
+/// Aggregated result of a scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub scenario: String,
+    pub policy: String,
+    /// Total simulated cycles until the measured set drained.
+    pub cycles: Cycle,
+    pub tasks: Vec<TaskReport>,
+}
+
+impl ScenarioReport {
+    pub fn task(&self, name: &str) -> &TaskReport {
+        self.tasks
+            .iter()
+            .find(|t| t.name == name)
+            .unwrap_or_else(|| panic!("no task report named {name}"))
+    }
+
+    /// All TCT deadlines met?
+    pub fn all_deadlines_met(&self) -> bool {
+        self.tasks
+            .iter()
+            .filter(|t| t.criticality.is_time_critical() && t.deadline > 0)
+            .all(|t| t.deadline_met)
+    }
+
+    /// Render a GitHub-flavoured markdown table.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!(
+            "### {} (policy: {}, {} cycles)\n\n",
+            self.scenario, self.policy, self.cycles
+        );
+        out.push_str("| task | kind | crit | makespan | mean lat | jitter | deadline |\n");
+        out.push_str("|---|---|---|---:|---:|---:|---|\n");
+        for t in &self.tasks {
+            let dl = if t.deadline == 0 {
+                "-".to_string()
+            } else if t.deadline_met {
+                format!("met ({})", t.deadline)
+            } else {
+                format!("MISSED ({})", t.deadline)
+            };
+            out.push_str(&format!(
+                "| {} | {} | {:?} | {} | {:.1} | {:.1} | {} |\n",
+                t.name, t.kind, t.criticality, t.makespan, t.mean_latency, t.jitter, dl
+            ));
+        }
+        for t in &self.tasks {
+            if !t.extra.is_empty() {
+                out.push_str(&format!("\n`{}`:", t.name));
+                for (k, v) in &t.extra {
+                    out.push_str(&format!(" {k}={v:.2}"));
+                }
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// A simple aligned-rows printer for bench tables (criterion substitute).
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title}");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!(
+        "{}",
+        fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    );
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> ScenarioReport {
+        ScenarioReport {
+            scenario: "test".into(),
+            policy: "NoIsolation".into(),
+            cycles: 1000,
+            tasks: vec![TaskReport {
+                name: "tct".into(),
+                kind: "host-tct",
+                criticality: Criticality::Hard,
+                makespan: 900,
+                deadline: 1000,
+                deadline_met: true,
+                mean_latency: 10.0,
+                jitter: 2.0,
+                extra: vec![("misses".into(), 5.0)],
+            }],
+        }
+    }
+
+    #[test]
+    fn lookup_and_deadlines() {
+        let r = report();
+        assert_eq!(r.task("tct").makespan, 900);
+        assert!(r.all_deadlines_met());
+        assert_eq!(r.task("tct").extra_value("misses"), Some(5.0));
+        assert_eq!(r.task("tct").extra_value("nope"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "no task report")]
+    fn missing_task_panics() {
+        report().task("ghost");
+    }
+
+    #[test]
+    fn markdown_contains_rows() {
+        let md = report().to_markdown();
+        assert!(md.contains("| tct |"));
+        assert!(md.contains("met (1000)"));
+        assert!(md.contains("misses=5.00"));
+    }
+
+    #[test]
+    fn missed_deadline_is_loud() {
+        let mut r = report();
+        r.tasks[0].deadline_met = false;
+        assert!(!r.all_deadlines_met());
+        assert!(r.to_markdown().contains("MISSED"));
+    }
+}

@@ -1,0 +1,24 @@
+//! The mixed-criticality coordinator — the software half of the paper's
+//! contribution.
+//!
+//! The paper's hardware IPs (TSU, DPLLC, DCSPM aliases, AMR modes) are
+//! *software-programmable*: something must decide, per workload mix, how
+//! to partition the shared resources. That something is this module:
+//!
+//! - [`task`]: the mixed-criticality task model (criticality levels,
+//!   deadlines, workload kinds);
+//! - [`policy`]: isolation profiles mapping criticality mixes onto
+//!   concrete TSU/DPLLC/DCSPM/AMR configurations;
+//! - [`scheduler`]: admission, placement, scenario assembly and
+//!   execution on the `SocSim` substrate;
+//! - [`metrics`]: per-task reports and experiment tables.
+
+pub mod metrics;
+pub mod policy;
+pub mod scheduler;
+pub mod task;
+
+pub use metrics::{ScenarioReport, TaskReport};
+pub use policy::{IsolationPolicy, ResourceConfig};
+pub use scheduler::{Scenario, Scheduler};
+pub use task::{Criticality, McTask, Workload};

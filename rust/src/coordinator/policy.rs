@@ -1,0 +1,209 @@
+//! Isolation policies: how the coordinator programs the hardware IPs for
+//! a given criticality mix.
+//!
+//! These mirror the four regimes of Fig. 6:
+//!
+//! - `NoIsolation` — reset state, everything unregulated (R-E2 /
+//!   "unregulated interference");
+//! - `TsuRegulation` — GBS+TRU throttle every best-effort initiator
+//!   (Fig. 6a "regulated", Fig. 6b R-E3);
+//! - `TsuPlusLlcPartition` — adds a DPLLC spatial partition for the TCT
+//!   (Fig. 6a ">=50% partition");
+//! - `PrivatePaths` — adds DCSPM contiguous aliasing so each cluster's
+//!   buffers occupy disjoint banks/ports (Fig. 6b R-E4, "zero extra
+//!   performance overhead").
+
+use crate::soc::clock::Cycle;
+use crate::soc::mem::dcspm::CONTIG_ALIAS_BIT;
+use crate::soc::tsu::TsuConfig;
+
+/// Coordinator-selectable isolation level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IsolationPolicy {
+    NoIsolation,
+    TsuRegulation,
+    TsuPlusLlcPartition {
+        /// Fraction of DPLLC sets granted to the TCT partition.
+        tct_fraction_percent: u8,
+    },
+    PrivatePaths,
+}
+
+/// Concrete register-level settings derived from a policy.
+#[derive(Debug, Clone)]
+pub struct ResourceConfig {
+    /// TSU program for initiators running best-effort work.
+    pub nct_tsu: TsuConfig,
+    /// TSU program for time-critical initiators (always passthrough —
+    /// TCTs are never throttled).
+    pub tct_tsu: TsuConfig,
+    /// DPLLC set partitioning: `(first_set, n_sets)` per part_id.
+    pub dpllc_partitions: Vec<(usize, usize)>,
+    /// part_id handed to TCT traffic.
+    pub tct_part_id: u8,
+    /// Whether cluster L2 buffers use the contiguous alias window.
+    pub dcspm_private_paths: bool,
+}
+
+impl IsolationPolicy {
+    /// TRU parameters used across the Fig. 6 experiments: NCTs may move
+    /// `budget` beats every `period` cycles in fragments of `gbs` beats.
+    /// The budget leaves the NCT enough bandwidth to keep polluting a
+    /// *shared* DPLLC (which is why the partition still matters — paper
+    /// Fig. 6a), while bounding its interconnect occupancy.
+    pub const NCT_GBS_BEATS: u32 = 8;
+    pub const NCT_BUDGET_BEATS: u32 = 96;
+    pub const NCT_PERIOD: Cycle = 512;
+
+    pub fn resource_config(&self) -> ResourceConfig {
+        let total_sets = 256;
+        match *self {
+            IsolationPolicy::NoIsolation => ResourceConfig {
+                nct_tsu: TsuConfig::passthrough(),
+                tct_tsu: TsuConfig::passthrough(),
+                dpllc_partitions: vec![(0, total_sets)],
+                tct_part_id: 0,
+                dcspm_private_paths: false,
+            },
+            IsolationPolicy::TsuRegulation => ResourceConfig {
+                nct_tsu: TsuConfig::regulated(
+                    Self::NCT_GBS_BEATS,
+                    Self::NCT_BUDGET_BEATS,
+                    Self::NCT_PERIOD,
+                ),
+                // TCTs keep the WB (always-on TSU hardware) but are never
+                // split or rate-limited.
+                tct_tsu: TsuConfig::wb_only(),
+                dpllc_partitions: vec![(0, total_sets)],
+                tct_part_id: 0,
+                dcspm_private_paths: false,
+            },
+            IsolationPolicy::TsuPlusLlcPartition {
+                tct_fraction_percent,
+            } => {
+                let frac = (tct_fraction_percent as usize).clamp(1, 99);
+                let tct_sets = (total_sets * frac / 100).clamp(1, total_sets - 1);
+                ResourceConfig {
+                    nct_tsu: TsuConfig::regulated(
+                        Self::NCT_GBS_BEATS,
+                        Self::NCT_BUDGET_BEATS,
+                        Self::NCT_PERIOD,
+                    ),
+                    tct_tsu: TsuConfig::wb_only(),
+                    // part 0: everyone else; part 1: the TCT.
+                    dpllc_partitions: vec![
+                        (0, total_sets - tct_sets),
+                        (total_sets - tct_sets, tct_sets),
+                    ],
+                    tct_part_id: 1,
+                    dcspm_private_paths: false,
+                }
+            }
+            IsolationPolicy::PrivatePaths => ResourceConfig {
+                // No rate limiting needed — paths are disjoint. WB stays
+                // on (it is always-on TSU hardware, <=1 cycle).
+                nct_tsu: TsuConfig::wb_only(),
+                tct_tsu: TsuConfig::wb_only(),
+                dpllc_partitions: vec![(0, total_sets / 2), (total_sets / 2, total_sets / 2)],
+                tct_part_id: 1,
+                dcspm_private_paths: true,
+            },
+        }
+    }
+
+    /// L2 staging base for the initiator with index `slot`, honouring the
+    /// private-path aliasing. Slots alternate between the two DCSPM port
+    /// halves (low/high 512KiB) so that in contiguous mode adjacent slots
+    /// land on *different* ports and disjoint banks — the private paths
+    /// of Fig. 6b R-E4.
+    pub fn l2_base(&self, slot: usize) -> u64 {
+        let cfg = self.resource_config();
+        let s = slot as u64 % 4;
+        let base = (s % 2) * (1 << 19) + (s / 2) * (1 << 18);
+        if cfg.dcspm_private_paths {
+            CONTIG_ALIAS_BIT | base
+        } else {
+            base
+        }
+    }
+
+    /// Bytes of L2 each slot may touch (streams wrap within this window
+    /// so private-path slots never spill onto the other port).
+    pub const L2_SLOT_BYTES: u64 = 1 << 18; // 256 KiB
+}
+
+/// TSU program for a given initiator under a policy (helper used by the
+/// scheduler when wiring a scenario).
+pub fn tsu_for(policy: IsolationPolicy, time_critical: bool) -> TsuConfig {
+    let cfg = policy.resource_config();
+    if time_critical {
+        cfg.tct_tsu
+    } else {
+        cfg.nct_tsu
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_isolation_is_reset_state() {
+        let cfg = IsolationPolicy::NoIsolation.resource_config();
+        assert_eq!(cfg.nct_tsu, TsuConfig::passthrough());
+        assert_eq!(cfg.dpllc_partitions, vec![(0, 256)]);
+        assert!(!cfg.dcspm_private_paths);
+    }
+
+    #[test]
+    fn regulation_throttles_ncts_only() {
+        let cfg = IsolationPolicy::TsuRegulation.resource_config();
+        assert!(cfg.nct_tsu.tru_budget_beats > 0);
+        assert!(cfg.nct_tsu.gbs_max_beats > 0);
+        // TCT keeps only the write buffer — never split or rate-limited.
+        assert_eq!(cfg.tct_tsu.gbs_max_beats, 0);
+        assert_eq!(cfg.tct_tsu.tru_budget_beats, 0);
+        assert!(cfg.tct_tsu.wb_enable);
+    }
+
+    #[test]
+    fn partition_sizes_follow_percentage() {
+        for pct in [25u8, 50, 75] {
+            let cfg = IsolationPolicy::TsuPlusLlcPartition {
+                tct_fraction_percent: pct,
+            }
+            .resource_config();
+            let (_, tct_sets) = cfg.dpllc_partitions[1];
+            assert_eq!(tct_sets, 256 * pct as usize / 100);
+            let (_, rest) = cfg.dpllc_partitions[0];
+            assert_eq!(rest + tct_sets, 256);
+        }
+    }
+
+    #[test]
+    fn partition_extremes_clamped() {
+        let cfg = IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 100,
+        }
+        .resource_config();
+        let (_, tct_sets) = cfg.dpllc_partitions[1];
+        assert!(tct_sets < 256);
+    }
+
+    #[test]
+    fn private_paths_alias_l2() {
+        let p = IsolationPolicy::PrivatePaths;
+        assert!(p.l2_base(0) & CONTIG_ALIAS_BIT != 0);
+        // Disjoint slots.
+        assert_ne!(p.l2_base(0), p.l2_base(1));
+        let n = IsolationPolicy::NoIsolation;
+        assert_eq!(n.l2_base(0) & CONTIG_ALIAS_BIT, 0);
+    }
+
+    #[test]
+    fn tsu_for_criticality() {
+        let p = IsolationPolicy::TsuRegulation;
+        assert_eq!(tsu_for(p, true).tru_budget_beats, 0);
+        assert!(tsu_for(p, false).tru_budget_beats > 0);
+    }
+}

@@ -1,0 +1,368 @@
+//! Scenario assembly + execution: the coordinator's run loop.
+//!
+//! `Scheduler::run` takes a [`Scenario`] (a set of mixed-criticality
+//! tasks + an isolation policy), programs the hardware IPs accordingly
+//! (TSUs per initiator, DPLLC partitions, DCSPM aliasing, AMR mode),
+//! executes the assembled `SocSim` until every *measured* task drains
+//! (endless interferers keep running), and returns per-task reports.
+
+use crate::soc::amr::{AmrCluster, AmrTask};
+use crate::soc::axi::{InitiatorId, TargetModel};
+use crate::soc::clock::Cycle;
+use crate::soc::dma::DmaEngine;
+use crate::soc::hostd::HostCore;
+use crate::soc::mem::dpllc::DpllcConfig;
+use crate::soc::mem::{Dcspm, HyperRamTiming, HyperramPath, Peripheral};
+use crate::soc::vector::{VectorCluster, VectorTask};
+use crate::soc::SocSim;
+
+use super::metrics::{ScenarioReport, TaskReport};
+use super::policy::{tsu_for, IsolationPolicy};
+use super::task::{McTask, Workload};
+
+/// A bundle of tasks to run concurrently under one policy.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: String,
+    pub policy: IsolationPolicy,
+    pub tasks: Vec<McTask>,
+    /// Simulation budget (guards against starvation bugs).
+    pub max_cycles: Cycle,
+}
+
+impl Scenario {
+    pub fn new(name: &str, policy: IsolationPolicy) -> Self {
+        Self {
+            name: name.to_string(),
+            policy,
+            tasks: Vec::new(),
+            max_cycles: 200_000_000,
+        }
+    }
+
+    pub fn with_task(mut self, task: McTask) -> Self {
+        self.tasks.push(task);
+        self
+    }
+}
+
+/// Stateless scenario executor.
+pub struct Scheduler;
+
+impl Scheduler {
+    /// Build the target set with the policy's DPLLC partitioning.
+    fn targets(policy: IsolationPolicy) -> Vec<Box<dyn TargetModel>> {
+        let cfg = policy.resource_config();
+        let mut dpllc = DpllcConfig::carfield();
+        dpllc.partitions = cfg.dpllc_partitions;
+        vec![
+            Box::new(Dcspm::new()),
+            Box::new(HyperramPath::new(dpllc, HyperRamTiming::carfield())),
+            Box::new(Peripheral::new(20)),
+        ]
+    }
+
+    /// Execute the scenario; returns per-task reports.
+    pub fn run(scenario: &Scenario) -> ScenarioReport {
+        let policy = scenario.policy;
+        let cfg = policy.resource_config();
+        let mut soc = SocSim::new(scenario.tasks.len(), Self::targets(policy));
+
+        // Placement: one initiator slot per task, in declaration order.
+        let mut measured: Vec<InitiatorId> = Vec::new();
+        for (slot, task) in scenario.tasks.iter().enumerate() {
+            let id = InitiatorId(slot as u8);
+            let tc = task.criticality.is_time_critical();
+            let tsu = tsu_for(policy, tc);
+            let part_id = if tc { cfg.tct_part_id } else { 0 };
+            match &task.workload {
+                Workload::AmrMatMul {
+                    precision,
+                    m,
+                    k,
+                    n,
+                    tile,
+                } => {
+                    let mut cluster = AmrCluster::new(id);
+                    cluster.mode = task.required_amr_mode();
+                    cluster.submit(
+                        AmrTask {
+                            precision: *precision,
+                            m: *m,
+                            k: *k,
+                            n: *n,
+                            tile: *tile,
+                            src_base: policy.l2_base(slot),
+                            dst_base: policy.l2_base(slot) + (1 << 17),
+                            part_id,
+                        },
+                        0,
+                    );
+                    soc.attach(Box::new(cluster), tsu);
+                    measured.push(id);
+                }
+                Workload::VectorMatMul { format, m, k, n, tile } => {
+                    let mut cluster = VectorCluster::new(id);
+                    cluster.submit(
+                        VectorTask {
+                            format: *format,
+                            work: crate::soc::vector::VectorWork::MatMul {
+                                m: *m,
+                                k: *k,
+                                n: *n,
+                                tile: *tile,
+                            },
+                            src_base: policy.l2_base(slot),
+                            dst_base: policy.l2_base(slot) + (1 << 17),
+                            part_id,
+                        },
+                        0,
+                    );
+                    soc.attach(Box::new(cluster), tsu);
+                    measured.push(id);
+                }
+                Workload::VectorFft { format, n, batch } => {
+                    let mut cluster = VectorCluster::new(id);
+                    cluster.submit(
+                        VectorTask {
+                            format: *format,
+                            work: crate::soc::vector::VectorWork::Fft {
+                                n: *n,
+                                batch: *batch,
+                            },
+                            src_base: policy.l2_base(slot),
+                            dst_base: policy.l2_base(slot) + (1 << 17),
+                            part_id,
+                        },
+                        0,
+                    );
+                    soc.attach(Box::new(cluster), tsu);
+                    measured.push(id);
+                }
+                Workload::HostTct(spec) => {
+                    let mut s = spec.clone();
+                    s.part_id = part_id;
+                    soc.attach(Box::new(HostCore::new(id, s)), tsu);
+                    measured.push(id);
+                }
+                Workload::DmaCopy(job) => {
+                    let mut engine = DmaEngine::new(id);
+                    let mut j = job.clone();
+                    j.part_id = 0; // interferer shares the default partition
+                    let looping = j.looping;
+                    engine.program(j);
+                    soc.attach(Box::new(engine), tsu);
+                    if !looping {
+                        measured.push(id);
+                    }
+                }
+            }
+        }
+
+        // Run until all measured tasks drain.
+        while soc.now < scenario.max_cycles {
+            if measured.iter().all(|&id| soc.finished(id)) {
+                break;
+            }
+            soc.step();
+        }
+        let cycles = soc.now;
+
+        // Harvest reports.
+        let mut reports = Vec::new();
+        for (slot, task) in scenario.tasks.iter().enumerate() {
+            let id = InitiatorId(slot as u8);
+            reports.push(Self::report_for(&mut soc, id, task, cycles));
+        }
+        ScenarioReport {
+            scenario: scenario.name.clone(),
+            policy: format!("{policy:?}"),
+            cycles,
+            tasks: reports,
+        }
+    }
+
+    fn report_for(
+        soc: &mut SocSim,
+        id: InitiatorId,
+        task: &McTask,
+        total_cycles: Cycle,
+    ) -> TaskReport {
+        let mut makespan = 0;
+        let mean_latency;
+        let mut jitter = 0.0;
+        let mut extra = Vec::new();
+        match &task.workload {
+            Workload::AmrMatMul { .. } => {
+                let c: &mut AmrCluster = soc.initiator_mut(id);
+                makespan = c.stats.finished_at;
+                mean_latency = c.stats.effective_mac_per_cyc(0);
+                extra.push(("mac_per_cyc".into(), c.stats.effective_mac_per_cyc(0)));
+                extra.push(("stall_cycles".into(), c.stats.stall_cycles as f64));
+                extra.push(("faults".into(), c.stats.faults_detected as f64));
+                extra.push(("recovery_cycles".into(), c.stats.recovery_cycles as f64));
+            }
+            Workload::VectorMatMul { .. } | Workload::VectorFft { .. } => {
+                let c: &mut VectorCluster = soc.initiator_mut(id);
+                makespan = c.stats.finished_at;
+                mean_latency = c.stats.effective_flop_per_cyc(0);
+                extra.push(("flop_per_cyc".into(), c.stats.effective_flop_per_cyc(0)));
+                extra.push(("stall_cycles".into(), c.stats.stall_cycles as f64));
+            }
+            Workload::HostTct(_) => {
+                let h: &mut HostCore = soc.initiator_mut(id);
+                makespan = if h.done() { h.finished_at } else { 0 };
+                mean_latency = h.iteration_latency.mean();
+                jitter = h.iteration_latency.jitter();
+                extra.push(("l1_misses".into(), h.l1_misses as f64));
+                extra.push(("access_mean".into(), h.access_latency.mean()));
+            }
+            Workload::DmaCopy(_) => {
+                let d: &mut DmaEngine = soc.initiator_mut(id);
+                extra.push(("bytes_moved".into(), d.stats.bytes_moved as f64));
+                extra.push(("loops".into(), d.stats.loops as f64));
+                mean_latency = d.stats.bytes_moved as f64 / total_cycles.max(1) as f64;
+            }
+        }
+        let deadline_met = task.deadline == 0 || (makespan > 0 && makespan <= task.deadline);
+        TaskReport {
+            name: task.name.clone(),
+            kind: task.workload.kind(),
+            criticality: task.criticality,
+            makespan,
+            deadline: task.deadline,
+            deadline_met,
+            mean_latency,
+            jitter,
+            extra,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::task::Criticality;
+    use crate::soc::amr::IntPrecision;
+    use crate::soc::dma::DmaJob;
+    use crate::soc::hostd::TctSpec;
+    use crate::soc::vector::FpFormat;
+
+    fn tct_task() -> McTask {
+        McTask::new(
+            "tct",
+            Criticality::Hard,
+            Workload::HostTct(TctSpec {
+                accesses: 256,
+                iterations: 4,
+                ..TctSpec::fig6a()
+            }),
+        )
+    }
+
+    fn dma_interferer() -> McTask {
+        McTask::new(
+            "dma",
+            Criticality::BestEffort,
+            Workload::DmaCopy(DmaJob {
+                src: crate::soc::axi::Target::Hyperram,
+                src_addr: 0x10_0000,
+                dst: Some(crate::soc::axi::Target::Dcspm),
+                dst_addr: 0,
+                bytes: 1 << 20,
+                chunk_beats: 256,
+                outstanding: 4,
+                looping: true,
+                part_id: 0,
+            }),
+        )
+    }
+
+    #[test]
+    fn isolated_tct_baseline() {
+        let s = Scenario::new("isolated", IsolationPolicy::NoIsolation).with_task(tct_task());
+        let r = Scheduler::run(&s);
+        assert!(r.task("tct").mean_latency > 0.0);
+        assert!(r.cycles < 10_000_000);
+    }
+
+    #[test]
+    fn policy_ladder_monotonically_improves_tct() {
+        let run = |policy| {
+            let s = Scenario::new("x", policy)
+                .with_task(tct_task())
+                .with_task(dma_interferer());
+            Scheduler::run(&s).task("tct").mean_latency
+        };
+        let unregulated = run(IsolationPolicy::NoIsolation);
+        let regulated = run(IsolationPolicy::TsuRegulation);
+        let partitioned = run(IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 50,
+        });
+        // (The reduced working set here keeps the unit test fast; the
+        // paper-scale factors are exercised by experiments::fig6a.)
+        assert!(
+            regulated < unregulated / 2.0,
+            "TSU must help: {unregulated:.0} -> {regulated:.0}"
+        );
+        assert!(
+            partitioned <= regulated * 1.05,
+            "partition must not hurt: {regulated:.0} -> {partitioned:.0}"
+        );
+    }
+
+    #[test]
+    fn cluster_pair_scenario_runs() {
+        let s = Scenario::new("clusters", IsolationPolicy::PrivatePaths)
+            .with_task(McTask::new(
+                "amr",
+                Criticality::Safety,
+                Workload::AmrMatMul {
+                    precision: IntPrecision::Int8,
+                    m: 64,
+                    k: 64,
+                    n: 64,
+                    tile: 16,
+                },
+            ))
+            .with_task(McTask::new(
+                "vec",
+                Criticality::BestEffort,
+                Workload::VectorMatMul {
+                    format: FpFormat::Fp16,
+                    m: 64,
+                    k: 64,
+                    n: 64,
+                    tile: 32,
+                },
+            ));
+        let r = Scheduler::run(&s);
+        assert!(r.task("amr").makespan > 0);
+        assert!(r.task("vec").makespan > 0);
+        assert!(r.task("amr").extra_value("mac_per_cyc").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn deadlines_checked() {
+        let s = Scenario::new("dl", IsolationPolicy::NoIsolation)
+            .with_task(tct_task().with_deadline(1));
+        let r = Scheduler::run(&s);
+        assert!(!r.task("tct").deadline_met, "1-cycle deadline is impossible");
+        assert!(!r.all_deadlines_met());
+    }
+
+    #[test]
+    fn fft_workload_schedules_on_vector() {
+        let s = Scenario::new("fft", IsolationPolicy::NoIsolation).with_task(McTask::new(
+            "radar",
+            Criticality::Soft,
+            Workload::VectorFft {
+                format: FpFormat::Fp32,
+                n: 256,
+                batch: 8,
+            },
+        ));
+        let r = Scheduler::run(&s);
+        assert!(r.task("radar").makespan > 0);
+    }
+}

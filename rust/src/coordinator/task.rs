@@ -1,0 +1,173 @@
+//! Mixed-criticality task model.
+//!
+//! Criticality levels follow the paper's task taxonomy: time-critical
+//! tasks (TCTs) must meet deadlines with bounded WCET; non-critical
+//! tasks (NCTs) get best-effort service and absorb the cost of
+//! regulation. Mission-critical AI additionally needs *reliable*
+//! execution (AMR lockstep modes).
+
+use crate::soc::amr::{AmrMode, IntPrecision};
+use crate::soc::clock::Cycle;
+use crate::soc::dma::DmaJob;
+use crate::soc::hostd::TctSpec;
+use crate::soc::vector::FpFormat;
+
+/// Criticality bands (descending).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Criticality {
+    /// Safety-critical: must execute reliably (lockstep) and on time.
+    Safety,
+    /// Hard real-time: deadline must hold, reliability optional.
+    Hard,
+    /// Soft real-time: deadline misses degrade quality only.
+    Soft,
+    /// Best effort (NCT): throughput-oriented, regulated first.
+    BestEffort,
+}
+
+impl Criticality {
+    pub fn is_time_critical(&self) -> bool {
+        matches!(self, Criticality::Safety | Criticality::Hard)
+    }
+}
+
+/// What the task actually runs.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// Integer MatMul (DNN layer) on the AMR cluster.
+    AmrMatMul {
+        precision: IntPrecision,
+        m: u32,
+        k: u32,
+        n: u32,
+        tile: u32,
+    },
+    /// FP MatMul on the vector cluster.
+    VectorMatMul {
+        format: FpFormat,
+        m: u32,
+        k: u32,
+        n: u32,
+        tile: u32,
+    },
+    /// Batched FFTs on the vector cluster.
+    VectorFft { format: FpFormat, n: u32, batch: u32 },
+    /// Strided HyperRAM walker on a host core (the Fig. 6a TCT).
+    HostTct(TctSpec),
+    /// Bulk copy on the system DMA (the canonical interferer).
+    DmaCopy(DmaJob),
+}
+
+impl Workload {
+    /// Human-readable kind for reports.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Workload::AmrMatMul { .. } => "amr-matmul",
+            Workload::VectorMatMul { .. } => "vector-matmul",
+            Workload::VectorFft { .. } => "vector-fft",
+            Workload::HostTct(_) => "host-tct",
+            Workload::DmaCopy(_) => "dma-copy",
+        }
+    }
+
+    /// The AOT artifact implementing the functional side, if any.
+    pub fn artifact(&self) -> Option<&'static str> {
+        match self {
+            Workload::AmrMatMul { precision, .. } => Some(precision.artifact()),
+            Workload::VectorMatMul { format, .. } => Some(format.artifact()),
+            Workload::VectorFft { .. } => Some("fft256"),
+            _ => None,
+        }
+    }
+}
+
+/// One task in a scenario.
+#[derive(Debug, Clone)]
+pub struct McTask {
+    pub name: String,
+    pub criticality: Criticality,
+    /// Relative deadline in system cycles (0 = none).
+    pub deadline: Cycle,
+    pub workload: Workload,
+}
+
+impl McTask {
+    pub fn new(name: &str, criticality: Criticality, workload: Workload) -> Self {
+        Self {
+            name: name.to_string(),
+            criticality,
+            deadline: 0,
+            workload,
+        }
+    }
+
+    pub fn with_deadline(mut self, deadline: Cycle) -> Self {
+        self.deadline = deadline;
+        self
+    }
+
+    /// The AMR mode a task of this criticality requires.
+    pub fn required_amr_mode(&self) -> AmrMode {
+        match self.criticality {
+            Criticality::Safety => AmrMode::Dlm,
+            Criticality::Hard | Criticality::Soft => AmrMode::Indip,
+            Criticality::BestEffort => AmrMode::Indip,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn criticality_ordering() {
+        assert!(Criticality::Safety < Criticality::BestEffort);
+        assert!(Criticality::Safety.is_time_critical());
+        assert!(Criticality::Hard.is_time_critical());
+        assert!(!Criticality::Soft.is_time_critical());
+    }
+
+    #[test]
+    fn safety_tasks_demand_lockstep() {
+        let t = McTask::new(
+            "detect",
+            Criticality::Safety,
+            Workload::AmrMatMul {
+                precision: IntPrecision::Int8,
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 16,
+            },
+        );
+        assert_eq!(t.required_amr_mode(), AmrMode::Dlm);
+        assert_eq!(t.workload.artifact(), Some("matmul_int8"));
+    }
+
+    #[test]
+    fn workload_kinds_and_artifacts() {
+        let w = Workload::VectorMatMul {
+            format: FpFormat::Fp8,
+            m: 64,
+            k: 64,
+            n: 64,
+            tile: 32,
+        };
+        assert_eq!(w.kind(), "vector-matmul");
+        assert_eq!(w.artifact(), Some("matmul_fp8"));
+        let f = Workload::VectorFft {
+            format: FpFormat::Fp32,
+            n: 256,
+            batch: 4,
+        };
+        assert_eq!(f.artifact(), Some("fft256"));
+    }
+
+    #[test]
+    fn deadline_builder() {
+        let spec = TctSpec::fig6a();
+        let t = McTask::new("tct", Criticality::Hard, Workload::HostTct(spec)).with_deadline(1000);
+        assert_eq!(t.deadline, 1000);
+    }
+}

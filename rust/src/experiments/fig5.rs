@@ -1,0 +1,187 @@
+//! Fig. 5 — voltage/frequency/power and performance/efficiency sweeps of
+//! the AMR (a, b) and vector (c, d) clusters, 0.6V–1.1V.
+//!
+//! Anchor points from the paper:
+//! - AMR: 304.9 GOPS @ 2b, 1.1V/900MHz (161.4 in DLM); 1.6 TOPS/W @
+//!   0.6V/300MHz (1.1 in DLM).
+//! - Vector: 122 GFLOPS @ FP8, 1.1V/1GHz; 1.1 TFLOPS/W @ 0.6V/250MHz.
+
+use crate::soc::amr::{AmrCluster, AmrMode, IntPrecision};
+use crate::soc::power::DvfsCurve;
+use crate::soc::vector::{FpFormat, VectorCluster};
+
+/// One sweep point for the AMR cluster.
+#[derive(Debug, Clone)]
+pub struct AmrPoint {
+    pub v: f64,
+    pub freq_mhz: f64,
+    pub power_mw: f64,
+    /// GOPS per precision in INDIP, same order as `IntPrecision::ALL`.
+    pub gops_indip: Vec<f64>,
+    pub gops_dlm: Vec<f64>,
+    /// GOPS/W at 2b (the headline efficiency), INDIP and DLM.
+    pub eff_2b_indip: f64,
+    pub eff_2b_dlm: f64,
+}
+
+/// One sweep point for the vector cluster.
+#[derive(Debug, Clone)]
+pub struct VectorPoint {
+    pub v: f64,
+    pub freq_mhz: f64,
+    pub power_mw: f64,
+    /// GFLOPS per format (matmul), order of `FpFormat::ALL`.
+    pub gflops: Vec<f64>,
+    /// FFT GFLOPS at FP32 (the DSP series in Fig. 5c).
+    pub fft_gflops_fp32: f64,
+    pub eff_fp8: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig5Result {
+    pub amr: Vec<AmrPoint>,
+    pub vector: Vec<VectorPoint>,
+}
+
+/// Sweep voltages 0.6..=1.1 in 0.05 steps.
+pub fn voltages() -> Vec<f64> {
+    (0..=10).map(|i| 0.6 + i as f64 * 0.05).collect()
+}
+
+pub fn run() -> Fig5Result {
+    let amr_curve = DvfsCurve::amr();
+    let vec_curve = DvfsCurve::vector();
+    let mut amr = Vec::new();
+    let mut vector = Vec::new();
+    for v in voltages() {
+        let p_amr = amr_curve.power_at_v(v, 1.0);
+        amr.push(AmrPoint {
+            v,
+            freq_mhz: amr_curve.freq_mhz(v),
+            power_mw: p_amr,
+            gops_indip: IntPrecision::ALL
+                .iter()
+                .map(|&p| AmrCluster::peak_gops(p, AmrMode::Indip, v))
+                .collect(),
+            gops_dlm: IntPrecision::ALL
+                .iter()
+                .map(|&p| AmrCluster::peak_gops(p, AmrMode::Dlm, v))
+                .collect(),
+            eff_2b_indip: AmrCluster::efficiency_gops_w(IntPrecision::Int2, AmrMode::Indip, v),
+            eff_2b_dlm: AmrCluster::efficiency_gops_w(IntPrecision::Int2, AmrMode::Dlm, v),
+        });
+        let p_vec = vec_curve.power_at_v(v, 1.0);
+        vector.push(VectorPoint {
+            v,
+            freq_mhz: vec_curve.freq_mhz(v),
+            power_mw: p_vec,
+            gflops: FpFormat::ALL
+                .iter()
+                .map(|&f| VectorCluster::peak_gflops(f, v))
+                .collect(),
+            fft_gflops_fp32: VectorCluster::peak_gflops(FpFormat::Fp32, v)
+                * crate::soc::vector::FFT_UTIL,
+            eff_fp8: VectorCluster::efficiency_gflops_w(FpFormat::Fp8, v),
+        });
+    }
+    Fig5Result { amr, vector }
+}
+
+pub fn print(r: &Fig5Result) {
+    use crate::coordinator::metrics::print_table;
+    print_table(
+        "Fig. 5a/b: AMR sweep (paper peaks: 304.9 GOPS @1.1V, 1607 GOPS/W @0.6V)",
+        &["V", "MHz", "mW", "GOPS 8b", "GOPS 2b", "2b DLM", "GOPS/W 2b", "DLM"],
+        &r.amr
+            .iter()
+            .map(|p| {
+                vec![
+                    format!("{:.2}", p.v),
+                    format!("{:.0}", p.freq_mhz),
+                    format!("{:.0}", p.power_mw),
+                    format!("{:.1}", p.gops_indip[1]),
+                    format!("{:.1}", p.gops_indip[6]),
+                    format!("{:.1}", p.gops_dlm[6]),
+                    format!("{:.0}", p.eff_2b_indip),
+                    format!("{:.0}", p.eff_2b_dlm),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    print_table(
+        "Fig. 5c/d: vector sweep (paper peaks: 122 GFLOPS FP8 @1.1V, 1069 GFLOPS/W @0.6V)",
+        &["V", "MHz", "mW", "FP64", "FP32", "FP16", "FP8", "FFT32", "GF/W FP8"],
+        &r.vector
+            .iter()
+            .map(|p| {
+                vec![
+                    format!("{:.2}", p.v),
+                    format!("{:.0}", p.freq_mhz),
+                    format!("{:.0}", p.power_mw),
+                    format!("{:.1}", p.gflops[0]),
+                    format!("{:.1}", p.gflops[1]),
+                    format!("{:.1}", p.gflops[2]),
+                    format!("{:.1}", p.gflops[4]),
+                    format!("{:.1}", p.fft_gflops_fp32),
+                    format!("{:.0}", p.eff_fp8),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn anchors_match_paper() {
+        let r = run();
+        let hi = r.amr.last().unwrap();
+        assert!((hi.v - 1.1).abs() < 1e-9);
+        // 2b is ALL[6].
+        assert!((hi.gops_indip[6] - 304.9).abs() / 304.9 < 0.01, "{}", hi.gops_indip[6]);
+        assert!((hi.gops_dlm[6] - 161.4).abs() / 161.4 < 0.01);
+        let lo = &r.amr[0];
+        assert!((lo.eff_2b_indip - 1607.0).abs() / 1607.0 < 0.05);
+        assert!((lo.eff_2b_dlm - 1093.0).abs() / 1093.0 < 0.30, "{}", lo.eff_2b_dlm);
+
+        let vhi = r.vector.last().unwrap();
+        assert!((vhi.gflops[4] - 121.8).abs() / 121.8 < 0.01);
+        let vlo = &r.vector[0];
+        assert!((vlo.eff_fp8 - 1068.7).abs() / 1068.7 < 0.06, "{}", vlo.eff_fp8);
+    }
+
+    #[test]
+    fn performance_monotonic_in_voltage() {
+        let r = run();
+        for w in r.amr.windows(2) {
+            assert!(w[1].gops_indip[6] > w[0].gops_indip[6]);
+        }
+        for w in r.vector.windows(2) {
+            assert!(w[1].gflops[4] > w[0].gflops[4]);
+        }
+    }
+
+    #[test]
+    fn efficiency_monotonic_down_in_voltage() {
+        let r = run();
+        for w in r.amr.windows(2) {
+            assert!(w[1].eff_2b_indip < w[0].eff_2b_indip);
+        }
+        for w in r.vector.windows(2) {
+            assert!(w[1].eff_fp8 < w[0].eff_fp8);
+        }
+    }
+
+    #[test]
+    fn precision_scaling_doubles() {
+        let r = run();
+        let hi = r.amr.last().unwrap();
+        // int8 -> int4 -> int2 roughly doubles each step.
+        let r84 = hi.gops_indip[4] / hi.gops_indip[1];
+        let r42 = hi.gops_indip[6] / hi.gops_indip[4];
+        assert!((1.7..2.3).contains(&r84), "{r84}");
+        assert!((1.7..2.3).contains(&r42), "{r42}");
+    }
+}

@@ -1,0 +1,172 @@
+//! Fig. 6b — AMR cluster (reliable-mode TCT) and vector cluster (NCT)
+//! sharing AXI + DCSPM, both in double-buffering.
+//!
+//! The paper's four regimes:
+//! - **R-E1** isolated: AMR alone, full performance;
+//! - **R-E2** unregulated sharing: AMR drops 12.2x;
+//! - **R-E3** TSU favours AMR: 95% of isolated, NCT degrades;
+//! - **R-E4** DCSPM aliased private paths: both at isolated performance,
+//!   zero overhead.
+
+use crate::coordinator::task::Criticality;
+use crate::coordinator::{IsolationPolicy, McTask, Scenario, Scheduler, Workload};
+use crate::soc::amr::IntPrecision;
+use crate::soc::vector::FpFormat;
+
+#[derive(Debug, Clone)]
+pub struct Regime {
+    pub label: &'static str,
+    /// AMR effective MAC/cyc.
+    pub amr_mac_per_cyc: f64,
+    /// AMR performance as % of isolated.
+    pub amr_pct_of_isolated: f64,
+    /// Vector effective FLOP/cyc (0 when absent).
+    pub vec_flop_per_cyc: f64,
+    pub vec_pct_of_isolated: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig6bResult {
+    pub regimes: Vec<Regime>,
+}
+
+/// The AMR TCT: DLM (reliable mode), low arithmetic intensity so the
+/// DMA stream matters — a streaming QNN layer shape.
+fn amr_task() -> McTask {
+    McTask::new(
+        "amr-tct",
+        Criticality::Safety,
+        Workload::AmrMatMul {
+            precision: IntPrecision::Int8,
+            m: 96,
+            k: 96,
+            n: 96,
+            tile: 8,
+        },
+    )
+}
+
+/// The vector NCT: a large-tile FP MatMul whose DMA bursts are long.
+fn vector_task() -> McTask {
+    McTask::new(
+        "vec-nct",
+        Criticality::BestEffort,
+        Workload::VectorMatMul {
+            format: FpFormat::Fp16,
+            m: 256,
+            k: 256,
+            n: 256,
+            tile: 32,
+        },
+    )
+}
+
+fn run_pair(policy: IsolationPolicy, with_vector: bool) -> (f64, f64) {
+    let mut s = Scenario::new("fig6b", policy).with_task(amr_task());
+    if with_vector {
+        s = s.with_task(vector_task());
+    }
+    let r = Scheduler::run(&s);
+    let amr = r.task("amr-tct").extra_value("mac_per_cyc").unwrap();
+    let vec = if with_vector {
+        r.task("vec-nct").extra_value("flop_per_cyc").unwrap()
+    } else {
+        0.0
+    };
+    (amr, vec)
+}
+
+pub fn run() -> Fig6bResult {
+    let (amr_iso, _) = run_pair(IsolationPolicy::NoIsolation, false);
+    // Vector isolated baseline (for NCT degradation accounting).
+    let vec_iso = {
+        let s = Scenario::new("vec-iso", IsolationPolicy::NoIsolation).with_task(vector_task());
+        let r = Scheduler::run(&s);
+        r.task("vec-nct").extra_value("flop_per_cyc").unwrap()
+    };
+    let (amr_e2, vec_e2) = run_pair(IsolationPolicy::NoIsolation, true);
+    let (amr_e3, vec_e3) = run_pair(IsolationPolicy::TsuRegulation, true);
+    let (amr_e4, vec_e4) = run_pair(IsolationPolicy::PrivatePaths, true);
+    let mk = |label, amr: f64, vec: f64| Regime {
+        label,
+        amr_mac_per_cyc: amr,
+        amr_pct_of_isolated: amr / amr_iso * 100.0,
+        vec_flop_per_cyc: vec,
+        vec_pct_of_isolated: if vec > 0.0 { vec / vec_iso * 100.0 } else { 0.0 },
+    };
+    Fig6bResult {
+        regimes: vec![
+            mk("R-E1 isolated", amr_iso, 0.0),
+            mk("R-E2 unregulated sharing", amr_e2, vec_e2),
+            mk("R-E3 TSU favours AMR", amr_e3, vec_e3),
+            mk("R-E4 DCSPM private paths", amr_e4, vec_e4),
+        ],
+    }
+}
+
+pub fn print(r: &Fig6bResult) {
+    use crate::coordinator::metrics::print_table;
+    print_table(
+        "Fig. 6b: AMR TCT vs vector NCT on shared AXI+DCSPM (paper: 12.2x drop, 95% with TSU, 100% with aliasing)",
+        &["regime", "AMR MAC/cyc", "AMR % isolated", "vec FLOP/cyc", "vec % isolated"],
+        &r.regimes
+            .iter()
+            .map(|x| {
+                vec![
+                    x.label.to_string(),
+                    format!("{:.1}", x.amr_mac_per_cyc),
+                    format!("{:.0}%", x.amr_pct_of_isolated),
+                    format!("{:.1}", x.vec_flop_per_cyc),
+                    if x.vec_flop_per_cyc > 0.0 {
+                        format!("{:.0}%", x.vec_pct_of_isolated)
+                    } else {
+                        "-".into()
+                    },
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_paper() {
+        let r = run();
+        let e1 = &r.regimes[0];
+        let e2 = &r.regimes[1];
+        let e3 = &r.regimes[2];
+        let e4 = &r.regimes[3];
+        // R-E2: severe drop (paper 12.2x => ~8%; accept < 30%).
+        assert!(
+            e2.amr_pct_of_isolated < 30.0,
+            "unregulated kept {:.0}%",
+            e2.amr_pct_of_isolated
+        );
+        // R-E3: TSU restores most of it (paper 95%; accept > 80%) while
+        // the vector NCT pays.
+        assert!(
+            e3.amr_pct_of_isolated > 80.0,
+            "TSU restored only {:.0}%",
+            e3.amr_pct_of_isolated
+        );
+        assert!(
+            e3.vec_pct_of_isolated < e2.vec_pct_of_isolated,
+            "NCT should degrade under regulation"
+        );
+        // R-E4: private paths restore ~everything for both.
+        assert!(
+            e4.amr_pct_of_isolated > 90.0,
+            "private paths gave {:.0}%",
+            e4.amr_pct_of_isolated
+        );
+        assert!(
+            e4.vec_pct_of_isolated > 85.0,
+            "vector should also be near-isolated, got {:.0}%",
+            e4.vec_pct_of_isolated
+        );
+        assert!(e1.amr_mac_per_cyc > 0.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! Fig. 7 — comparison against SoA heterogeneous SoCs for
+//! mixed-criticality systems.
+//!
+//! Most rows are feature claims; the quantitative row is interrupt
+//! latency: 6 cycles (CV32RT + CLIC) vs 12 (NXP i.MXRT1170), 20 (ST
+//! Stellar), and ~50 for [10]'s plain CLINT path — the paper quotes
+//! 2x / 3.3x / 8.3x advantages. We *measure* our latency from the CLIC
+//! model and a TCLS interrupt drill, and tabulate the rest.
+
+use crate::soc::hostd::VClic;
+use crate::soc::safed::Tcls;
+
+/// A competitor column of the table.
+#[derive(Debug, Clone)]
+pub struct SocColumn {
+    pub name: &'static str,
+    pub irq_latency_cycles: u64,
+    pub hw_cache_partitioning: bool,
+    pub predictable_onchip_comm: bool,
+    pub dynamic_spm: bool,
+    pub hw_virtualization: bool,
+    pub ai_accel: bool,
+    pub safe_domain_lockstep: bool,
+    pub rtos_plus_gpos: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig7Result {
+    pub columns: Vec<SocColumn>,
+    /// Our measured interrupt latency (drilled, not just a constant).
+    pub measured_irq_latency: u64,
+    /// Ratios vs each competitor.
+    pub irq_advantage: Vec<(&'static str, f64)>,
+}
+
+/// Run an interrupt drill: assert an IRQ against the TCLS CLIC model and
+/// count cycles to first handler commit.
+fn measure_irq_latency() -> u64 {
+    let tcls = Tcls::new();
+    // The CLIC pipeline is deterministic; drill a few times and verify
+    // the WCET equals the constant (that determinism *is* the claim).
+    let mut worst = 0;
+    for _ in 0..32 {
+        worst = worst.max(tcls.irq_latency());
+    }
+    worst
+}
+
+pub fn run() -> Fig7Result {
+    let columns = vec![
+        SocColumn {
+            name: "NXP i.MXRT1170",
+            irq_latency_cycles: 12,
+            hw_cache_partitioning: false,
+            predictable_onchip_comm: false,
+            dynamic_spm: false,
+            hw_virtualization: false,
+            ai_accel: false,
+            safe_domain_lockstep: false,
+            rtos_plus_gpos: false,
+        },
+        SocColumn {
+            name: "ST Stellar / VLSI23",
+            irq_latency_cycles: 20,
+            hw_cache_partitioning: false,
+            predictable_onchip_comm: true,
+            dynamic_spm: false,
+            hw_virtualization: false,
+            ai_accel: false,
+            safe_domain_lockstep: true,
+            rtos_plus_gpos: false,
+        },
+        SocColumn {
+            name: "Renesas ISSCC19",
+            irq_latency_cycles: 0, // n.a. in the paper
+            hw_cache_partitioning: false,
+            predictable_onchip_comm: false,
+            dynamic_spm: false,
+            hw_virtualization: true,
+            ai_accel: false,
+            safe_domain_lockstep: true,
+            rtos_plus_gpos: false,
+        },
+        SocColumn {
+            name: "TCAS-I 24 (nano-UAV)",
+            irq_latency_cycles: 50,
+            hw_cache_partitioning: false,
+            predictable_onchip_comm: false,
+            dynamic_spm: false,
+            hw_virtualization: true,
+            ai_accel: true,
+            safe_domain_lockstep: false,
+            rtos_plus_gpos: true,
+        },
+        SocColumn {
+            name: "This work (Carfield)",
+            irq_latency_cycles: 6,
+            hw_cache_partitioning: true,
+            predictable_onchip_comm: true,
+            dynamic_spm: true,
+            hw_virtualization: true,
+            ai_accel: true,
+            safe_domain_lockstep: true,
+            rtos_plus_gpos: true,
+        },
+    ];
+    let measured = measure_irq_latency();
+    let irq_advantage = columns
+        .iter()
+        .filter(|c| c.name != "This work (Carfield)" && c.irq_latency_cycles > 0)
+        .map(|c| (c.name, c.irq_latency_cycles as f64 / measured as f64))
+        .collect();
+    Fig7Result {
+        columns,
+        measured_irq_latency: measured,
+        irq_advantage,
+    }
+}
+
+pub fn print(r: &Fig7Result) {
+    use crate::coordinator::metrics::print_table;
+    let yn = |b: bool| if b { "yes" } else { "-" }.to_string();
+    print_table(
+        "Fig. 7: SoC comparison (time-predictability features + interrupt latency)",
+        &[
+            "SoC", "irq cyc", "LLC part", "pred comm", "dyn SPM", "HW virt", "AI accel",
+            "lockstep", "RTOS+GPOS",
+        ],
+        &r.columns
+            .iter()
+            .map(|c| {
+                vec![
+                    c.name.to_string(),
+                    if c.irq_latency_cycles == 0 {
+                        "n.a.".into()
+                    } else {
+                        c.irq_latency_cycles.to_string()
+                    },
+                    yn(c.hw_cache_partitioning),
+                    yn(c.predictable_onchip_comm),
+                    yn(c.dynamic_spm),
+                    yn(c.hw_virtualization),
+                    yn(c.ai_accel),
+                    yn(c.safe_domain_lockstep),
+                    yn(c.rtos_plus_gpos),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!("measured IRQ latency: {} cycles", r.measured_irq_latency);
+    for (name, adv) in &r.irq_advantage {
+        println!("  vs {name}: {adv:.1}x faster");
+    }
+    let v = VClic::carfield();
+    println!(
+        "vCLIC: same-VG {} cycles, cross-VG {} cycles (no hypervisor exit)",
+        v.latency(0, 0),
+        v.latency(0, 1)
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn irq_ratios_match_paper() {
+        let r = run();
+        assert_eq!(r.measured_irq_latency, 6);
+        let get = |name: &str| {
+            r.irq_advantage
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map(|(_, v)| *v)
+                .unwrap()
+        };
+        assert!((get("NXP i.MXRT1170") - 2.0).abs() < 1e-9);
+        assert!((get("ST Stellar / VLSI23") - 3.33).abs() < 0.01);
+        assert!((get("TCAS-I 24 (nano-UAV)") - 8.33).abs() < 0.01);
+    }
+
+    #[test]
+    fn only_this_work_has_all_predictability_features() {
+        let r = run();
+        for c in &r.columns {
+            let all = c.hw_cache_partitioning && c.predictable_onchip_comm && c.dynamic_spm;
+            if c.name == "This work (Carfield)" {
+                assert!(all);
+            } else {
+                assert!(!all, "{} should not have everything", c.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Fig. 8 — comparison against SoA edge-AI and vector processors: peak
+//! performance, energy efficiency and area efficiency per precision.
+//!
+//! Our columns come from the calibrated cluster + DVFS models evaluated
+//! at the paper's corners; competitor columns are the published numbers
+//! the paper compares against. Tests assert the paper's headline ratios
+//! (e.g. 3.4x INDIP / 1.8x DLM over [10] at uniform 8/4/2b, 6.4x area
+//! efficiency, 2.2x / 3x over [21] on FP16).
+
+use crate::soc::amr::{AmrCluster, AmrMode, IntPrecision};
+use crate::soc::vector::{FpFormat, VectorCluster};
+
+/// Die areas from the paper (mm^2, Intel 16).
+pub const AMR_AREA_MM2: f64 = 1.17;
+pub const VECTOR_AREA_MM2: f64 = 1.14;
+
+/// Our integer rows (per precision tier).
+#[derive(Debug, Clone)]
+pub struct IntRow {
+    pub tier: &'static str,
+    pub gops_indip: f64,
+    pub gops_dlm: f64,
+    pub gops_w_indip: f64,
+    pub gops_w_dlm: f64,
+    pub gops_mm2: f64,
+}
+
+/// Our FP rows.
+#[derive(Debug, Clone)]
+pub struct FpRow {
+    pub fmt: FpFormat,
+    pub gflops: f64,
+    pub gflops_w: f64,
+    pub gflops_mm2: f64,
+}
+
+/// Published competitor peaks used for the ratio claims.
+#[derive(Debug, Clone)]
+pub struct Competitor {
+    pub name: &'static str,
+    /// (8b, 4b, 2b) GOPS, zero when unsupported.
+    pub int_gops: (f64, f64, f64),
+    /// (8b, 4b, 2b) GOPS/mm2.
+    pub int_gops_mm2: (f64, f64, f64),
+    /// FP16 GFLOPS / GFLOPS/W / GFLOPS/mm2 (zero when n.a.).
+    pub fp16: (f64, f64, f64),
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig8Result {
+    pub int_rows: Vec<IntRow>,
+    pub fp_rows: Vec<FpRow>,
+    pub competitors: Vec<Competitor>,
+}
+
+pub fn competitors() -> Vec<Competitor> {
+    vec![
+        Competitor {
+            name: "TCAS-I 24 [10]",
+            int_gops: (26.0, 50.0, 90.0),
+            int_gops_mm2: (11.8, 22.7, 40.9),
+            fp16: (7.9, 120.0, 3.6),
+        },
+        Competitor {
+            name: "JSSCC23 [18]",
+            int_gops: (16.0, 0.0, 0.0),
+            int_gops_mm2: (3.4, 0.0, 0.0),
+            fp16: (0.0, 0.0, 0.0),
+        },
+        Competitor {
+            name: "JSSCC22 [21]",
+            int_gops: (0.0, 0.0, 0.0),
+            int_gops_mm2: (0.0, 0.0, 0.0),
+            fp16: (368.4, 209.5, 17.9),
+        },
+        Competitor {
+            name: "ISSCC24 [22]",
+            int_gops: (31.8, 0.0, 0.0),
+            int_gops_mm2: (7.95, 0.0, 0.0),
+            fp16: (25.3, 230.1, 6.3),
+        },
+    ]
+}
+
+pub fn run() -> Fig8Result {
+    let tiers = [
+        ("8b", IntPrecision::Int8),
+        ("4b", IntPrecision::Int4),
+        ("2b", IntPrecision::Int2),
+    ];
+    let int_rows = tiers
+        .iter()
+        .map(|&(tier, p)| {
+            let gops_indip = AmrCluster::peak_gops(p, AmrMode::Indip, 1.1);
+            let gops_dlm = AmrCluster::peak_gops(p, AmrMode::Dlm, 1.1);
+            IntRow {
+                tier,
+                gops_indip,
+                gops_dlm,
+                gops_w_indip: AmrCluster::efficiency_gops_w(p, AmrMode::Indip, 0.6),
+                gops_w_dlm: AmrCluster::efficiency_gops_w(p, AmrMode::Dlm, 0.6),
+                gops_mm2: gops_indip / AMR_AREA_MM2,
+            }
+        })
+        .collect();
+    let fp_rows = [FpFormat::Fp64, FpFormat::Fp32, FpFormat::Fp16, FpFormat::Fp8]
+        .iter()
+        .map(|&f| {
+            let g = VectorCluster::peak_gflops(f, 1.1);
+            FpRow {
+                fmt: f,
+                gflops: g,
+                gflops_w: VectorCluster::efficiency_gflops_w(f, 0.6),
+                gflops_mm2: g / VECTOR_AREA_MM2,
+            }
+        })
+        .collect();
+    Fig8Result {
+        int_rows,
+        fp_rows,
+        competitors: competitors(),
+    }
+}
+
+pub fn print(r: &Fig8Result) {
+    use crate::coordinator::metrics::print_table;
+    print_table(
+        "Fig. 8 (ours): AMR integer peaks (paper: 78.5/152.3/304.9 GOPS; 413.6/802.6/1607 GOPS/W; 67.1/130.2/260.7 GOPS/mm2)",
+        &["tier", "GOPS", "GOPS DLM", "GOPS/W", "GOPS/W DLM", "GOPS/mm2"],
+        &r.int_rows
+            .iter()
+            .map(|x| {
+                vec![
+                    x.tier.to_string(),
+                    format!("{:.1}", x.gops_indip),
+                    format!("{:.1}", x.gops_dlm),
+                    format!("{:.0}", x.gops_w_indip),
+                    format!("{:.0}", x.gops_w_dlm),
+                    format!("{:.1}", x.gops_mm2),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    print_table(
+        "Fig. 8 (ours): vector FP peaks (paper: 15.7/31.3/61.5/121.8 GFLOPS; ...; 13.7/27.5/54/106.8 GFLOPS/mm2)",
+        &["fmt", "GFLOPS", "GFLOPS/W", "GFLOPS/mm2"],
+        &r.fp_rows
+            .iter()
+            .map(|x| {
+                vec![
+                    format!("{:?}", x.fmt),
+                    format!("{:.1}", x.gflops),
+                    format!("{:.0}", x.gflops_w),
+                    format!("{:.1}", x.gflops_mm2),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    // Headline ratios (paper quotes them at the 2b tier).
+    let ours2 = &r.int_rows[2];
+    let tcas = &r.competitors[0];
+    println!(
+        "vs [10] 2b: INDIP {:.1}x, DLM {:.1}x, area eff {:.1}x",
+        ours2.gops_indip / tcas.int_gops.2,
+        ours2.gops_dlm / tcas.int_gops.2,
+        ours2.gops_mm2 / tcas.int_gops_mm2.2
+    );
+    let fp16 = r
+        .fp_rows
+        .iter()
+        .find(|x| x.fmt == FpFormat::Fp16)
+        .unwrap();
+    let jsscc22 = &r.competitors[2];
+    println!(
+        "vs [21] FP16: energy eff {:.1}x, area eff {:.1}x",
+        fp16.gflops_w / jsscc22.fp16.1,
+        fp16.gflops_mm2 / jsscc22.fp16.2
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn our_numbers_match_paper() {
+        let r = run();
+        let pairs = [
+            (r.int_rows[0].gops_indip, 78.5),
+            (r.int_rows[1].gops_indip, 152.3),
+            (r.int_rows[2].gops_indip, 304.9),
+            (r.int_rows[2].gops_dlm, 161.4),
+            (r.int_rows[2].gops_mm2, 260.7),
+        ];
+        for (got, want) in pairs {
+            assert!((got - want).abs() / want < 0.02, "{got} vs {want}");
+        }
+        let fp8 = r.fp_rows.iter().find(|x| x.fmt == FpFormat::Fp8).unwrap();
+        assert!((fp8.gflops - 121.8).abs() / 121.8 < 0.01);
+        assert!((fp8.gflops_mm2 - 106.8).abs() / 106.8 < 0.01);
+    }
+
+    #[test]
+    fn headline_ratios_match_paper() {
+        let r = run();
+        // Paper: "In DLM ... 1.8x better performance (3.4x in INDIP) on
+        // uniform 8b/4b/2b MatMuls, with 6.4x better area efficiency" —
+        // the quoted factors hold at the uniform 2b tier.
+        let ours2 = &r.int_rows[2];
+        let tcas = &r.competitors[0];
+        let indip_ratio = ours2.gops_indip / tcas.int_gops.2;
+        let dlm_ratio = ours2.gops_dlm / tcas.int_gops.2;
+        let area_ratio = ours2.gops_mm2 / tcas.int_gops_mm2.2;
+        assert!((indip_ratio - 3.4).abs() < 0.35, "{indip_ratio}");
+        assert!((dlm_ratio - 1.8).abs() < 0.25, "{dlm_ratio}");
+        assert!((area_ratio - 6.4).abs() < 0.8, "{area_ratio}");
+        // Paper: vs [18] "2.6x higher performance in DLM" (8b, 16 GOPS).
+        let ours8 = &r.int_rows[0];
+        let jsscc23 = &r.competitors[1];
+        let dlm_vs_18 = ours8.gops_dlm / jsscc23.int_gops.0;
+        assert!((dlm_vs_18 - 2.6).abs() < 0.3, "{dlm_vs_18}");
+        // Paper: vs [21] FP16 "2.2x and 3x higher energy and area eff".
+        let fp16 = r.fp_rows.iter().find(|x| x.fmt == FpFormat::Fp16).unwrap();
+        let jsscc22 = &r.competitors[2];
+        assert!((fp16.gflops_w / jsscc22.fp16.1 - 2.2).abs() < 0.3);
+        assert!((fp16.gflops_mm2 / jsscc22.fp16.2 - 3.0).abs() < 0.4);
+    }
+}

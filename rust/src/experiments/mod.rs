@@ -1,0 +1,15 @@
+//! Experiment harnesses — one per table/figure in the paper's evaluation.
+//!
+//! Each module regenerates the corresponding figure's rows/series from
+//! the simulator and returns structured results (so tests and benches can
+//! assert the *shape*: who wins, by roughly what factor, where crossovers
+//! fall). `cargo bench` targets print them; `carfield fig*` runs them
+//! from the CLI.
+
+pub mod fig3c;
+pub mod fig5;
+pub mod fig6a;
+pub mod fig6b;
+pub mod fig7;
+pub mod fig8;
+pub mod micro;

@@ -1,0 +1,23 @@
+//! Carfield-sim: a cycle-approximate, three-layer reproduction of the
+//! Carfield SoC — "A Reliable, Time-Predictable Heterogeneous SoC for
+//! AI-Enhanced Mixed-Criticality Edge Applications".
+//!
+//! Layering:
+//! - **L3 (this crate)**: the mixed-criticality coordinator plus every
+//!   hardware substrate the paper depends on, modelled cycle-approximately
+//!   in Rust: AXI4 interconnect, traffic shaper (TSU), partitionable LLC
+//!   (DPLLC), configurable L2 scratchpad (DCSPM), HyperRAM, DMA engines,
+//!   host/safe/secure domains, the AMR reliability cluster and the vector
+//!   cluster.
+//! - **L2/L1 (build-time Python)**: JAX model + Pallas kernels, AOT-lowered
+//!   to HLO text in `artifacts/`, loaded and executed at runtime through
+//!   the XLA PJRT CPU client (`runtime` module). Python is never on the
+//!   simulated request path.
+
+pub mod coordinator;
+pub mod experiments;
+pub mod runtime;
+pub mod soc;
+pub mod util;
+
+pub use runtime::ArtifactRuntime;

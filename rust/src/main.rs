@@ -1,0 +1,182 @@
+//! `carfield` — CLI for the Carfield-sim reproduction.
+//!
+//! Subcommands:
+//! - `boot`                — run the secure-boot chain and report timing;
+//! - `fig3c|fig5|fig6a|fig6b|fig7|fig8|micro`
+//!                         — regenerate a figure/table of the paper;
+//! - `all`                 — run every experiment in sequence;
+//! - `artifacts [--dir D]` — list AOT artifacts and smoke-execute one;
+//! - `infer [--dir D]`     — run the QNN MLP artifact through the PJRT
+//!                           runtime with deterministic inputs;
+//! - `scenario`            — run a custom mixed-criticality scenario
+//!                           (`--policy none|tsu|partition|private`).
+
+use carfield::coordinator::task::Criticality;
+use carfield::coordinator::{IsolationPolicy, McTask, Scenario, Scheduler, Workload};
+use carfield::experiments as exp;
+use carfield::runtime::ArtifactRuntime;
+use carfield::soc::amr::IntPrecision;
+use carfield::soc::dma::DmaJob;
+use carfield::soc::hostd::TctSpec;
+use carfield::soc::secd::SecureDomain;
+use carfield::soc::vector::FpFormat;
+use carfield::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand() {
+        Some("boot") => cmd_boot(),
+        Some("fig3c") => exp::fig3c::print(&exp::fig3c::run()),
+        Some("fig5") => exp::fig5::print(&exp::fig5::run()),
+        Some("fig6a") => exp::fig6a::print(&exp::fig6a::run()),
+        Some("fig6b") => exp::fig6b::print(&exp::fig6b::run()),
+        Some("fig7") => exp::fig7::print(&exp::fig7::run()),
+        Some("fig8") => exp::fig8::print(&exp::fig8::run()),
+        Some("micro") => exp::micro::print(&exp::micro::run()),
+        Some("all") => {
+            exp::fig3c::print(&exp::fig3c::run());
+            exp::fig5::print(&exp::fig5::run());
+            exp::fig6a::print(&exp::fig6a::run());
+            exp::fig6b::print(&exp::fig6b::run());
+            exp::fig7::print(&exp::fig7::run());
+            exp::fig8::print(&exp::fig8::run());
+            exp::micro::print(&exp::micro::run());
+        }
+        Some("artifacts") => cmd_artifacts(&args),
+        Some("infer") => cmd_infer(&args),
+        Some("scenario") => cmd_scenario(&args),
+        _ => {
+            eprintln!(
+                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|all|artifacts|infer|scenario> [options]"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_boot() {
+    let mut sd = SecureDomain::new();
+    let mut now = 0;
+    while !sd.booted() {
+        sd.tick(now);
+        now += 1;
+    }
+    println!(
+        "secure boot complete: {} cycles (stages: ROM hash, signature verify, firmware load)",
+        now
+    );
+}
+
+fn artifact_dir(args: &Args) -> String {
+    args.get_or("dir", "artifacts").to_string()
+}
+
+fn cmd_artifacts(args: &Args) {
+    let mut rt = match ArtifactRuntime::new(artifact_dir(args)) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot create PJRT runtime: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    println!("platform: {}", rt.platform());
+    let names = rt.available();
+    if names.is_empty() {
+        println!("no artifacts found — run `make artifacts` first");
+        return;
+    }
+    for name in &names {
+        match rt.load(name) {
+            Ok(exe) => println!("  {:<16} inputs: {:?}", name, exe.input_shapes()),
+            Err(e) => println!("  {:<16} LOAD FAILED: {e:#}", name),
+        }
+    }
+}
+
+fn cmd_infer(args: &Args) {
+    let mut rt = ArtifactRuntime::new(artifact_dir(args)).expect("PJRT runtime");
+    let exe = rt.load("qnn_mlp").expect("load qnn_mlp artifact");
+    let mut rng = carfield::util::XorShift::new(args.get_parse("seed", 7u64));
+    let bufs: Vec<Vec<f32>> = exe
+        .input_shapes()
+        .iter()
+        .map(|s| {
+            let n: usize = s.iter().product();
+            rng.fill_f32(n, 8.0).iter().map(|v| v.round()).collect()
+        })
+        .collect();
+    let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+    let t0 = std::time::Instant::now();
+    let out = exe.run_f32(&refs).expect("execute qnn_mlp");
+    let dt = t0.elapsed();
+    let logits = &out[0];
+    for b in 0..4 {
+        let row = &logits[b * 32..b * 32 + 10];
+        let arg = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        println!("sample {b}: class {arg} logits[..4]={:?}", &row[..4]);
+    }
+    println!("inference (batch 32) in {dt:?} on the PJRT CPU client");
+}
+
+fn cmd_scenario(args: &Args) {
+    let policy = match args.get_or("policy", "none") {
+        "none" => IsolationPolicy::NoIsolation,
+        "tsu" => IsolationPolicy::TsuRegulation,
+        "partition" => IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: args.get_parse("partition-pct", 50u8),
+        },
+        "private" => IsolationPolicy::PrivatePaths,
+        other => {
+            eprintln!("unknown policy {other}");
+            std::process::exit(2);
+        }
+    };
+    let mut scenario = Scenario::new("cli", policy);
+    if !args.flag("no-tct") {
+        scenario = scenario.with_task(McTask::new(
+            "tct",
+            Criticality::Hard,
+            Workload::HostTct(TctSpec::fig6a()),
+        ));
+    }
+    if !args.flag("no-dma") {
+        scenario = scenario.with_task(McTask::new(
+            "dma",
+            Criticality::BestEffort,
+            Workload::DmaCopy(DmaJob::interferer()),
+        ));
+    }
+    if args.flag("amr") {
+        scenario = scenario.with_task(McTask::new(
+            "amr",
+            Criticality::Safety,
+            Workload::AmrMatMul {
+                precision: IntPrecision::Int8,
+                m: 96,
+                k: 96,
+                n: 96,
+                tile: 8,
+            },
+        ));
+    }
+    if args.flag("vector") {
+        scenario = scenario.with_task(McTask::new(
+            "vec",
+            Criticality::BestEffort,
+            Workload::VectorMatMul {
+                format: FpFormat::Fp16,
+                m: 256,
+                k: 256,
+                n: 256,
+                tile: 32,
+            },
+        ));
+    }
+    let report = Scheduler::run(&scenario);
+    println!("{}", report.to_markdown());
+}

@@ -1,0 +1,184 @@
+//! PJRT client wrapper: one process-wide CPU client, one compiled
+//! executable per artifact, f32 in / f32 out convenience entry points.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled HLO artifact ready to execute on the PJRT CPU client.
+pub struct LoadedExecutable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    /// Shapes of the f32 input parameters, in parameter order.
+    input_shapes: Vec<Vec<usize>>,
+}
+
+impl LoadedExecutable {
+    /// Artifact name (file stem).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Declared input shapes (row-major, f32).
+    pub fn input_shapes(&self) -> &[Vec<usize>] {
+        &self.input_shapes
+    }
+
+    /// Execute with row-major f32 buffers; returns all outputs flattened
+    /// to f32 vectors. The artifact was lowered with `return_tuple=True`,
+    /// so the single result literal is a tuple we decompose.
+    pub fn run_f32(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.input_shapes.len() {
+            return Err(anyhow!(
+                "artifact `{}` expects {} inputs, got {}",
+                self.name,
+                self.input_shapes.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, shape) in inputs.iter().zip(&self.input_shapes) {
+            let expect: usize = shape.iter().product();
+            if buf.len() != expect {
+                return Err(anyhow!(
+                    "artifact `{}`: input buffer has {} elements, shape {:?} needs {}",
+                    self.name,
+                    buf.len(),
+                    shape,
+                    expect
+                ));
+            }
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(buf).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let elements = result.to_tuple()?;
+        let mut outs = Vec::with_capacity(elements.len());
+        for lit in elements {
+            outs.push(lit.to_vec::<f32>()?);
+        }
+        Ok(outs)
+    }
+}
+
+/// Process-wide artifact runtime: owns the PJRT CPU client and a cache of
+/// compiled executables keyed by artifact name.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, std::sync::Arc<LoadedExecutable>>,
+}
+
+impl ArtifactRuntime {
+    /// Create a runtime rooted at `dir` (usually `artifacts/`).
+    pub fn new<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// PJRT platform name (e.g. "cpu" / "Host").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load (or fetch from cache) the artifact `<dir>/<name>.hlo.txt`.
+    ///
+    /// Input shapes are parsed from the sidecar `<name>.meta` file written
+    /// by `aot.py` (one `dim0xdim1x...` token per input, whitespace
+    /// separated), falling back to parsing the HLO ENTRY signature.
+    pub fn load(&mut self, name: &str) -> Result<std::sync::Arc<LoadedExecutable>> {
+        if let Some(e) = self.cache.get(name) {
+            return Ok(e.clone());
+        }
+        let hlo_path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact `{name}`"))?;
+
+        let meta_path = self.dir.join(format!("{name}.meta"));
+        let input_shapes = parse_meta(&meta_path)
+            .or_else(|_| parse_entry_shapes(&hlo_path))
+            .with_context(|| format!("determining input shapes for `{name}`"))?;
+
+        let loaded = std::sync::Arc::new(LoadedExecutable {
+            name: name.to_string(),
+            exe,
+            input_shapes,
+        });
+        self.cache.insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Names of `.hlo.txt` artifacts present in the artifact directory.
+    pub fn available(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        if let Ok(rd) = std::fs::read_dir(&self.dir) {
+            for entry in rd.flatten() {
+                let fname = entry.file_name().to_string_lossy().to_string();
+                if let Some(stem) = fname.strip_suffix(".hlo.txt") {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        names
+    }
+}
+
+/// Parse the `.meta` sidecar: whitespace-separated `AxBxC` tokens.
+fn parse_meta(path: &Path) -> Result<Vec<Vec<usize>>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut shapes = Vec::new();
+    for tok in text.split_whitespace() {
+        let dims: Result<Vec<usize>, _> = tok.split('x').map(|d| d.parse::<usize>()).collect();
+        shapes.push(dims?);
+    }
+    if shapes.is_empty() {
+        return Err(anyhow!("empty meta file"));
+    }
+    Ok(shapes)
+}
+
+/// Fallback: scrape `f32[AxB]` parameter shapes from the HLO ENTRY line.
+fn parse_entry_shapes(path: &Path) -> Result<Vec<Vec<usize>>> {
+    let text = std::fs::read_to_string(path)?;
+    let entry = text
+        .lines()
+        .find(|l| l.trim_start().starts_with("ENTRY"))
+        .ok_or_else(|| anyhow!("no ENTRY line in HLO"))?;
+    let mut shapes = Vec::new();
+    let mut rest = entry;
+    while let Some(pos) = rest.find("f32[") {
+        rest = &rest[pos + 4..];
+        let end = rest.find(']').ok_or_else(|| anyhow!("unterminated shape"))?;
+        let dims: Result<Vec<usize>, _> =
+            rest[..end].split(',').map(|d| d.trim().parse::<usize>()).collect();
+        shapes.push(dims?);
+        rest = &rest[end..];
+        // Stop before the `->` result shape.
+        if let Some(arrow) = entry.find("->") {
+            let consumed = entry.len() - rest.len();
+            if consumed > arrow {
+                shapes.pop();
+                break;
+            }
+        }
+    }
+    if shapes.is_empty() {
+        return Err(anyhow!("no f32 parameter shapes found in ENTRY"));
+    }
+    Ok(shapes)
+}

@@ -1,0 +1,10 @@
+//! XLA PJRT runtime: loads AOT-compiled HLO text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! The interchange format is HLO *text* (not serialized `HloModuleProto`):
+//! jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+mod client;
+
+pub use client::{ArtifactRuntime, LoadedExecutable};

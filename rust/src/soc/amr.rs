@@ -1,0 +1,644 @@
+//! AMR cluster: 12 RV32IMFC cores with runtime-adaptive modular
+//! redundancy for mission-critical integer AI (paper §II, Fig. 3).
+//!
+//! - **INDIP**: all 12 cores MIMD — maximum performance.
+//! - **DLM** (dual lockstep): 6 main + 6 shadow cores, commit after a
+//!   checker; 1.89x performance penalty vs INDIP.
+//! - **TLM** (triple lockstep): 4 main + 8 shadow, majority vote; 2.85x
+//!   penalty.
+//!
+//! Mode switches are runtime-programmable and cost 82–183 cycles
+//! depending on the transition (Fig. 3c). On a detected fault, **HFR**
+//! (hardware fast recovery) restores the faulty core from ECC-protected
+//! recovery registers in 24 cycles — 15x faster than TLM software
+//! recovery, and it saves DLM from a full cluster reboot.
+//!
+//! Compute model: custom SIMD `sdotp` + `mac-load` reach 94% MAC-unit
+//! utilization; cluster-level MAC/cyc per precision is calibrated to the
+//! paper's Fig. 8 peaks (78.5 / 152.3 / 304.9 GOPS at 8/4/2-bit and
+//! 900MHz, with 2 OP = 1 MAC). The functional result of a task is the
+//! corresponding AOT artifact (`matmul_int*`), executed by the runtime at
+//! the coordinator level.
+
+use super::axi::{Completion, InitiatorId};
+use super::clock::Cycle;
+use super::tiles::{TileStream, TileStreamer};
+use super::tsu::Tsu;
+use crate::util::XorShift;
+
+/// Integer operand precisions (uniform and mixed), paper Fig. 5a/b.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum IntPrecision {
+    Int16,
+    Int8,
+    Int8x4,
+    Int8x2,
+    Int4,
+    Int4x2,
+    Int2,
+}
+
+impl IntPrecision {
+    pub const ALL: [IntPrecision; 7] = [
+        IntPrecision::Int16,
+        IntPrecision::Int8,
+        IntPrecision::Int8x4,
+        IntPrecision::Int8x2,
+        IntPrecision::Int4,
+        IntPrecision::Int4x2,
+        IntPrecision::Int2,
+    ];
+
+    /// Wider operand width decides SIMD lane count (paper groups mixed
+    /// formats by the wider operand: "8x(8-4-2)" all run at the 8b rate).
+    pub fn lane_width(&self) -> u32 {
+        match self {
+            IntPrecision::Int16 => 16,
+            IntPrecision::Int8 | IntPrecision::Int8x4 | IntPrecision::Int8x2 => 8,
+            IntPrecision::Int4 | IntPrecision::Int4x2 => 4,
+            IntPrecision::Int2 => 2,
+        }
+    }
+
+    /// Cluster MAC/cyc in INDIP at 94% MAC utilization (Fig. 8 peaks:
+    /// 78.5/152.3/304.9 GOPS = 43.6/84.6/169.4 MAC/cyc @900MHz; 16b is
+    /// half the 8b rate).
+    pub fn cluster_mac_per_cyc(&self) -> f64 {
+        match self.lane_width() {
+            16 => 21.8,
+            8 => 43.6,
+            4 => 84.6,
+            2 => 169.4,
+            _ => unreachable!(),
+        }
+    }
+
+    /// Matching AOT artifact name (functional model).
+    pub fn artifact(&self) -> &'static str {
+        match self {
+            IntPrecision::Int16 => "matmul_int16",
+            IntPrecision::Int8 => "matmul_int8",
+            IntPrecision::Int8x4 => "matmul_int8x4",
+            IntPrecision::Int8x2 => "matmul_int8x2",
+            IntPrecision::Int4 => "matmul_int4",
+            IntPrecision::Int4x2 => "matmul_int4x2",
+            IntPrecision::Int2 => "matmul_int2",
+        }
+    }
+}
+
+/// Redundancy modes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AmrMode {
+    Indip,
+    Dlm,
+    Tlm,
+}
+
+impl AmrMode {
+    /// Throughput penalty vs INDIP (paper Fig. 3c: 1.89x / 2.85x).
+    pub fn perf_factor(&self) -> f64 {
+        match self {
+            AmrMode::Indip => 1.0,
+            AmrMode::Dlm => 1.0 / 1.89,
+            AmrMode::Tlm => 1.0 / 2.85,
+        }
+    }
+
+    /// Cores committing architectural results.
+    pub fn active_cores(&self) -> u32 {
+        match self {
+            AmrMode::Indip => 12,
+            AmrMode::Dlm => 6,
+            AmrMode::Tlm => 4,
+        }
+    }
+
+    /// Reconfiguration cost in cycles (paper: 82–183 depending on the
+    /// transition; lockstep entry costs more than exit because recovery
+    /// registers and shadow PCs must be seeded).
+    pub fn switch_cycles(from: AmrMode, to: AmrMode) -> Cycle {
+        use AmrMode::*;
+        match (from, to) {
+            (a, b) if a == b => 0,
+            (Indip, Dlm) => 97,
+            (Dlm, Indip) => 82,
+            (Indip, Tlm) => 183,
+            (Tlm, Indip) => 124,
+            (Dlm, Tlm) => 151,
+            (Tlm, Dlm) => 96,
+            _ => unreachable!(),
+        }
+    }
+}
+
+/// Fault recovery flavours (Fig. 3a/b).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Recovery {
+    /// HFR: ECC recovery registers, cycle-accurate state restore.
+    Hfr,
+    /// Software re-execution from the last checkpoint (TLM baseline).
+    Software,
+    /// No checkpointing: a detected fault forces a cluster reboot.
+    RebootOnly,
+}
+
+/// HFR restore latency (paper: "as few as 24 clock cycles").
+pub const HFR_RESTORE_CYCLES: Cycle = 24;
+/// Software recovery is 15x slower than HFR (paper Fig. 3b).
+pub const SW_RECOVERY_CYCLES: Cycle = 15 * HFR_RESTORE_CYCLES;
+/// Cluster reboot (reset, SPM scrub, task restart overhead).
+pub const REBOOT_CYCLES: Cycle = 5_000;
+
+/// A MatMul job for the cluster.
+#[derive(Debug, Clone)]
+pub struct AmrTask {
+    pub precision: IntPrecision,
+    /// Problem size (elements): C[m,n] += A[m,k] * B[k,n].
+    pub m: u32,
+    pub k: u32,
+    pub n: u32,
+    /// Tile edge (square tiles t x t x t).
+    pub tile: u32,
+    /// L2 staging addresses (DCSPM).
+    pub src_base: u64,
+    pub dst_base: u64,
+    pub part_id: u8,
+}
+
+impl AmrTask {
+    pub fn tiles(&self) -> u32 {
+        let tm = self.m.div_ceil(self.tile);
+        let tk = self.k.div_ceil(self.tile);
+        let tn = self.n.div_ceil(self.tile);
+        tm * tk * tn
+    }
+
+    pub fn macs_per_tile(&self) -> u64 {
+        (self.tile as u64).pow(3)
+    }
+
+    /// Input beats per tile: A-slab + B-slab at the operand width
+    /// (packed SIMD sub-words), rounded to 64b beats.
+    pub fn in_beats_per_tile(&self) -> u32 {
+        let elems = 2 * (self.tile as u64 * self.tile as u64);
+        let bits = self.precision.lane_width() as u64;
+        let bytes = (elems * bits).div_ceil(8);
+        bytes.div_ceil(8).max(1) as u32
+    }
+
+    /// Output beats per tile: 32b accumulators.
+    pub fn out_beats_per_tile(&self) -> u32 {
+        ((self.tile as u64 * self.tile as u64 * 4).div_ceil(8)).max(1) as u32
+    }
+}
+
+/// Counters for Fig. 3c / Fig. 6b.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AmrStats {
+    pub compute_cycles: u64,
+    pub stall_cycles: u64,
+    pub switch_cycles: u64,
+    pub recovery_cycles: u64,
+    pub macs: u64,
+    pub tiles_done: u32,
+    pub faults_detected: u64,
+    pub faults_silent: u64,
+    pub reboots: u64,
+    pub finished_at: Cycle,
+}
+
+impl AmrStats {
+    /// Effective cluster MAC/cyc over the task's makespan.
+    pub fn effective_mac_per_cyc(&self, start: Cycle) -> f64 {
+        let span = self.finished_at.saturating_sub(start).max(1);
+        self.macs as f64 / span as f64
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum EngineState {
+    Idle,
+    Switching { until: Cycle, to: AmrMode },
+    Recovering { until: Cycle },
+    Rebooting { until: Cycle },
+    Computing { until: Cycle, tile: u32 },
+}
+
+/// The cluster simulator: a bus initiator (its DMA) + compute pipeline.
+pub struct AmrCluster {
+    pub id: InitiatorId,
+    pub mode: AmrMode,
+    pub recovery: Recovery,
+    /// Cluster-clock cycles per system cycle (PLL ratio).
+    pub freq_ratio: f64,
+    /// Fault probability per 1k compute cycles (fault-injection knob).
+    pub fault_per_kcycle: f64,
+    rng: XorShift,
+    task: Option<AmrTask>,
+    streamer: Option<TileStreamer>,
+    state: EngineState,
+    task_started: Cycle,
+    pub stats: AmrStats,
+}
+
+impl AmrCluster {
+    pub fn new(id: InitiatorId) -> Self {
+        Self {
+            id,
+            mode: AmrMode::Indip,
+            recovery: Recovery::Hfr,
+            freq_ratio: 1.0,
+            fault_per_kcycle: 0.0,
+            rng: XorShift::new(0xA31),
+            task: None,
+            streamer: None,
+            state: EngineState::Idle,
+            task_started: 0,
+            stats: AmrStats::default(),
+        }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.rng = XorShift::new(seed);
+        self
+    }
+
+    /// Request a runtime mode switch (takes effect after the FSM delay).
+    pub fn switch_mode(&mut self, to: AmrMode, now: Cycle) {
+        if to == self.mode {
+            return;
+        }
+        let cost = AmrMode::switch_cycles(self.mode, to);
+        self.stats.switch_cycles += cost;
+        self.state = EngineState::Switching {
+            until: now + cost,
+            to,
+        };
+    }
+
+    /// Submit a MatMul task; the cluster streams tiles from the DCSPM.
+    pub fn submit(&mut self, task: AmrTask, now: Cycle) {
+        let stream = TileStream {
+            tiles: task.tiles(),
+            in_beats: task.in_beats_per_tile(),
+            out_beats: task.out_beats_per_tile(),
+            src_base: task.src_base,
+            dst_base: task.dst_base,
+            part_id: task.part_id,
+            buffer_depth: 1,
+            wrap_bytes: crate::coordinator::policy::IsolationPolicy::L2_SLOT_BYTES / 2,
+        };
+        self.streamer = Some(TileStreamer::new(self.id, stream));
+        self.task = Some(task);
+        self.task_started = now;
+        self.stats = AmrStats::default();
+    }
+
+    /// Cycles to compute one tile at the current mode/precision, in
+    /// system cycles.
+    fn tile_compute_cycles(&self, task: &AmrTask) -> Cycle {
+        let rate =
+            task.precision.cluster_mac_per_cyc() * self.mode.perf_factor() * self.freq_ratio;
+        (task.macs_per_tile() as f64 / rate).ceil() as Cycle
+    }
+
+    /// Sample fault events over a compute window and return the total
+    /// recovery penalty (applied after the tile completes).
+    fn fault_penalty(&mut self, window: Cycle) -> Cycle {
+        if self.fault_per_kcycle <= 0.0 {
+            return 0;
+        }
+        let expected = self.fault_per_kcycle * window as f64 / 1000.0;
+        let mut events = expected.floor() as u64;
+        if self.rng.chance(expected - events as f64) {
+            events += 1;
+        }
+        if events == 0 {
+            return 0;
+        }
+        let mut penalty = 0;
+        for _ in 0..events {
+            match (self.mode, self.recovery) {
+                (AmrMode::Indip, _) => {
+                    // Undetected by hardware: silent corruption.
+                    self.stats.faults_silent += 1;
+                }
+                (_, Recovery::Hfr) => {
+                    self.stats.faults_detected += 1;
+                    penalty += HFR_RESTORE_CYCLES;
+                }
+                (AmrMode::Tlm, Recovery::Software) => {
+                    self.stats.faults_detected += 1;
+                    penalty += SW_RECOVERY_CYCLES;
+                }
+                // DLM cannot re-execute from a software checkpoint
+                // without knowing which replica is right; without HFR a
+                // detected divergence forces a cluster reboot.
+                (AmrMode::Dlm, Recovery::Software)
+                | (AmrMode::Dlm, Recovery::RebootOnly)
+                | (AmrMode::Tlm, Recovery::RebootOnly) => {
+                    self.stats.faults_detected += 1;
+                    self.stats.reboots += 1;
+                    penalty += REBOOT_CYCLES;
+                }
+            }
+        }
+        self.stats.recovery_cycles += penalty;
+        penalty
+    }
+
+    pub fn task_done(&self) -> bool {
+        match (&self.task, &self.streamer) {
+            (Some(_), Some(s)) => s.done() && matches!(self.state, EngineState::Idle),
+            _ => true,
+        }
+    }
+
+    /// One system cycle of the compute pipeline + DMA.
+    pub fn tick(&mut self, now: Cycle, tsu: &mut Tsu) {
+        // DMA side always advances (double buffering).
+        if let Some(s) = self.streamer.as_mut() {
+            s.tick(now, tsu);
+        }
+        match self.state {
+            EngineState::Switching { until, to } => {
+                if now >= until {
+                    self.mode = to;
+                    self.state = EngineState::Idle;
+                }
+            }
+            EngineState::Recovering { until } | EngineState::Rebooting { until } => {
+                if now >= until {
+                    self.state = EngineState::Idle;
+                }
+            }
+            EngineState::Computing { until, tile } => {
+                if now >= until {
+                    let task = self.task.clone().expect("computing without task");
+                    self.stats.macs += task.macs_per_tile();
+                    self.stats.tiles_done += 1;
+                    if let Some(s) = self.streamer.as_mut() {
+                        s.push_writeback(tile);
+                    }
+                    let penalty = self.fault_penalty(self.tile_compute_cycles(&task));
+                    self.state = if penalty >= REBOOT_CYCLES {
+                        EngineState::Rebooting {
+                            until: now + penalty,
+                        }
+                    } else if penalty > 0 {
+                        EngineState::Recovering {
+                            until: now + penalty,
+                        }
+                    } else {
+                        EngineState::Idle
+                    };
+                    self.update_finish(now);
+                }
+            }
+            EngineState::Idle => {
+                let Some(task) = self.task.clone() else {
+                    return;
+                };
+                if let Some(s) = self.streamer.as_mut() {
+                    if let Some(tile) = s.pop_ready() {
+                        let dur = self.tile_compute_cycles(&task);
+                        self.stats.compute_cycles += dur;
+                        self.state = EngineState::Computing {
+                            until: now + dur,
+                            tile,
+                        };
+                    } else if !s.fetches_done() {
+                        self.stats.stall_cycles += 1;
+                    }
+                }
+                self.update_finish(now);
+            }
+        }
+    }
+
+    fn update_finish(&mut self, now: Cycle) {
+        if let (Some(task), Some(s)) = (&self.task, &self.streamer) {
+            if s.done() && self.stats.tiles_done >= task.tiles() && self.stats.finished_at == 0 {
+                self.stats.finished_at = now;
+            }
+        }
+    }
+
+    /// Deliver a DMA completion.
+    pub fn complete(&mut self, c: Completion, now: Cycle) {
+        if let Some(s) = self.streamer.as_mut() {
+            s.complete(c, now);
+        }
+        self.update_finish(now);
+    }
+
+    /// Analytic peak GOPS at voltage `v` (Fig. 5a): 2 OP = 1 MAC.
+    pub fn peak_gops(precision: IntPrecision, mode: AmrMode, v: f64) -> f64 {
+        let f = super::power::DvfsCurve::amr().freq_mhz(v);
+        precision.cluster_mac_per_cyc() * mode.perf_factor() * 2.0 * f / 1000.0
+    }
+
+    /// Analytic energy efficiency in GOPS/W at voltage `v` (Fig. 5b).
+    pub fn efficiency_gops_w(precision: IntPrecision, mode: AmrMode, v: f64) -> f64 {
+        let gops = Self::peak_gops(precision, mode, v);
+        // Lockstep shadows burn the same dynamic power as mains: the
+        // cluster's utilization stays ~1 in every mode.
+        let p_w = super::power::DvfsCurve::amr().power_at_v(v, 1.0) / 1000.0;
+        gops / p_w
+    }
+}
+
+impl super::BusInitiator for AmrCluster {
+    fn id(&self) -> InitiatorId {
+        self.id
+    }
+    fn tick(&mut self, now: Cycle, tsu: &mut Tsu) {
+        AmrCluster::tick(self, now, tsu)
+    }
+    fn complete(&mut self, c: Completion, now: Cycle, _tsu: &mut Tsu) {
+        AmrCluster::complete(self, c, now)
+    }
+    fn finished(&self) -> bool {
+        self.task_done()
+    }
+    fn as_any(&mut self) -> &mut dyn std::any::Any {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::axi::TargetModel;
+    use crate::soc::mem::Dcspm;
+    use crate::soc::tsu::TsuConfig;
+    use crate::soc::SocSim;
+
+    fn task(precision: IntPrecision) -> AmrTask {
+        AmrTask {
+            precision,
+            m: 64,
+            k: 64,
+            n: 64,
+            tile: 32,
+            src_base: 0,
+            dst_base: 0x8_0000,
+            part_id: 0,
+        }
+    }
+
+    fn run_cluster(mut cluster: AmrCluster, t: AmrTask) -> AmrStats {
+        let mut soc = SocSim::new(1, vec![Box::new(Dcspm::new()) as Box<dyn TargetModel>]);
+        cluster.submit(t, 0);
+        soc.attach(Box::new(cluster), TsuConfig::passthrough());
+        assert!(soc.run_until_done(50_000_000), "cluster never drained");
+        let c: &mut AmrCluster = soc.initiator_mut(InitiatorId(0));
+        c.stats
+    }
+
+    #[test]
+    fn mode_switch_costs_in_paper_range() {
+        use AmrMode::*;
+        for from in [Indip, Dlm, Tlm] {
+            for to in [Indip, Dlm, Tlm] {
+                let c = AmrMode::switch_cycles(from, to);
+                if from == to {
+                    assert_eq!(c, 0);
+                } else {
+                    assert!((82..=183).contains(&c), "{from:?}->{to:?}: {c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dlm_tlm_penalties_match_paper() {
+        // 8b: INDIP 43.6 -> DLM 23.07 (paper: 23.1), TLM 15.3.
+        let dlm = IntPrecision::Int8.cluster_mac_per_cyc() * AmrMode::Dlm.perf_factor();
+        let tlm = IntPrecision::Int8.cluster_mac_per_cyc() * AmrMode::Tlm.perf_factor();
+        assert!((dlm - 23.1).abs() < 0.05, "{dlm}");
+        assert!((tlm - 15.3).abs() < 0.05, "{tlm}");
+    }
+
+    #[test]
+    fn peak_gops_match_fig8() {
+        let cases = [
+            (IntPrecision::Int8, 78.5),
+            (IntPrecision::Int4, 152.3),
+            (IntPrecision::Int2, 304.9),
+        ];
+        for (p, want) in cases {
+            let got = AmrCluster::peak_gops(p, AmrMode::Indip, 1.1);
+            assert!((got - want).abs() / want < 0.01, "{p:?}: {got} vs {want}");
+        }
+        // DLM 2b: 161.4 GOPS.
+        let dlm2 = AmrCluster::peak_gops(IntPrecision::Int2, AmrMode::Dlm, 1.1);
+        assert!((dlm2 - 161.4).abs() / 161.4 < 0.01, "{dlm2}");
+    }
+
+    #[test]
+    fn efficiency_peaks_at_min_voltage() {
+        let lo = AmrCluster::efficiency_gops_w(IntPrecision::Int2, AmrMode::Indip, 0.6);
+        let hi = AmrCluster::efficiency_gops_w(IntPrecision::Int2, AmrMode::Indip, 1.1);
+        assert!((lo - 1607.0).abs() / 1607.0 < 0.05, "{lo}");
+        assert!(lo > 3.0 * hi);
+    }
+
+    #[test]
+    fn task_runs_to_completion_indip() {
+        let stats = run_cluster(AmrCluster::new(InitiatorId(0)), task(IntPrecision::Int8));
+        assert_eq!(stats.tiles_done, 8); // (64/32)^3
+        assert_eq!(stats.macs, 8 * 32u64.pow(3));
+        assert_eq!(stats.faults_detected + stats.faults_silent, 0);
+    }
+
+    #[test]
+    fn dlm_is_slower_than_indip() {
+        let t = task(IntPrecision::Int8);
+        let s_ind = run_cluster(AmrCluster::new(InitiatorId(0)), t.clone());
+        let mut dlm = AmrCluster::new(InitiatorId(0));
+        dlm.mode = AmrMode::Dlm;
+        let s_dlm = run_cluster(dlm, t);
+        let ratio = s_dlm.finished_at as f64 / s_ind.finished_at as f64;
+        // Compute-bound here, so the makespan ratio approaches 1.89.
+        assert!((1.6..2.1).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn faults_trigger_hfr_and_cost_24_cycles_each() {
+        let mut c = AmrCluster::new(InitiatorId(0)).with_seed(7);
+        c.mode = AmrMode::Dlm;
+        c.fault_per_kcycle = 1.0;
+        let stats = run_cluster(c, task(IntPrecision::Int8));
+        assert!(stats.faults_detected > 0);
+        assert_eq!(
+            stats.recovery_cycles,
+            stats.faults_detected * HFR_RESTORE_CYCLES
+        );
+        assert_eq!(stats.reboots, 0, "HFR avoids reboots");
+    }
+
+    #[test]
+    fn tlm_software_recovery_is_15x_slower() {
+        assert_eq!(SW_RECOVERY_CYCLES, 15 * HFR_RESTORE_CYCLES);
+        let mut c = AmrCluster::new(InitiatorId(0)).with_seed(9);
+        c.mode = AmrMode::Tlm;
+        c.recovery = Recovery::Software;
+        c.fault_per_kcycle = 1.0;
+        let stats = run_cluster(c, task(IntPrecision::Int8));
+        assert!(stats.faults_detected > 0);
+        assert_eq!(
+            stats.recovery_cycles,
+            stats.faults_detected * SW_RECOVERY_CYCLES
+        );
+    }
+
+    #[test]
+    fn indip_faults_are_silent() {
+        let mut c = AmrCluster::new(InitiatorId(0)).with_seed(11);
+        c.fault_per_kcycle = 2.0;
+        let stats = run_cluster(c, task(IntPrecision::Int8));
+        assert!(stats.faults_silent > 0);
+        assert_eq!(stats.faults_detected, 0);
+        assert_eq!(stats.recovery_cycles, 0);
+    }
+
+    #[test]
+    fn dlm_without_hfr_reboots() {
+        let mut c = AmrCluster::new(InitiatorId(0)).with_seed(13);
+        c.mode = AmrMode::Dlm;
+        c.recovery = Recovery::RebootOnly;
+        c.fault_per_kcycle = 0.5;
+        let stats = run_cluster(c, task(IntPrecision::Int8));
+        assert!(stats.reboots > 0);
+        assert!(stats.recovery_cycles >= stats.reboots * REBOOT_CYCLES);
+    }
+
+    #[test]
+    fn mode_switch_applies_after_delay() {
+        let mut c = AmrCluster::new(InitiatorId(0));
+        let mut tsu = Tsu::new(TsuConfig::passthrough());
+        c.switch_mode(AmrMode::Tlm, 0);
+        assert_eq!(c.mode, AmrMode::Indip);
+        for now in 0..=200 {
+            c.tick(now, &mut tsu);
+        }
+        assert_eq!(c.mode, AmrMode::Tlm);
+        assert_eq!(c.stats.switch_cycles, 183);
+    }
+
+    #[test]
+    fn int2_is_faster_than_int8() {
+        let s8 = run_cluster(AmrCluster::new(InitiatorId(0)), task(IntPrecision::Int8));
+        let s2 = run_cluster(AmrCluster::new(InitiatorId(0)), task(IntPrecision::Int2));
+        assert!(s2.finished_at < s8.finished_at);
+    }
+
+    #[test]
+    fn artifacts_cover_all_precisions() {
+        for p in IntPrecision::ALL {
+            assert!(p.artifact().starts_with("matmul_int"));
+        }
+    }
+}

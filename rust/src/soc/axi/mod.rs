@@ -1,0 +1,198 @@
+//! AXI4 interconnect model: 64-bit data bus, burst transactions,
+//! per-target round-robin crossbar (paper §II "system interconnect is
+//! based on a 64b AXI4 bus").
+//!
+//! Granularity: the simulator tracks *bursts* (AR/AW+W groups) and
+//! *beats* (64b data transfers). Once a target grants a burst, the burst
+//! occupies that target port until its last beat — exactly the property
+//! that lets a long NCT burst delay a TCT, and that the TSU's granular
+//! burst splitter (GBS) breaks up.
+
+pub mod xbar;
+
+use crate::soc::clock::Cycle;
+
+/// Bytes per AXI data beat (64-bit bus).
+pub const BEAT_BYTES: u64 = 8;
+
+/// Max AXI4 INCR burst length in beats.
+pub const MAX_BURST_BEATS: u32 = 256;
+
+/// Identifies a bus initiator (master port).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InitiatorId(pub u8);
+
+/// Addressable targets behind the crossbar.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Target {
+    /// On-chip 1MiB L2 scratchpad (DCSPM).
+    Dcspm,
+    /// External HyperRAM, reached through the DPLLC.
+    Hyperram,
+    /// Conventional peripherals (UART, SPI, ...) — constant latency.
+    Peripheral,
+}
+
+/// One AXI burst (read or write).
+#[derive(Debug, Clone)]
+pub struct Burst {
+    pub initiator: InitiatorId,
+    pub target: Target,
+    pub addr: u64,
+    pub beats: u32,
+    pub write: bool,
+    /// DPLLC partition id, carried on AXI user signals (paper Fig. 2c).
+    pub part_id: u8,
+    /// Cycle the *original* transaction was issued by the initiator
+    /// (preserved across GBS fragmentation for latency accounting).
+    pub issued_at: Cycle,
+    /// Initiator-private tag; completions echo it.
+    pub tag: u64,
+    /// Non-zero when this burst is a GBS fragment: fragments of one
+    /// parent share the tag and count down `fragments_left`.
+    pub fragments_left: u32,
+    /// True when a TSU write buffer holds this write's data: the W
+    /// channel is released in one burst instead of dribbling at the
+    /// initiator's pace. Unbuffered writes hold the shared W channel and
+    /// stall the interconnect (the failure mode the paper's WB removes).
+    pub wb_buffered: bool,
+}
+
+impl Burst {
+    pub fn read(initiator: InitiatorId, target: Target, addr: u64, beats: u32) -> Self {
+        Self {
+            initiator,
+            target,
+            addr,
+            beats,
+            write: false,
+            part_id: 0,
+            issued_at: 0,
+            tag: 0,
+            fragments_left: 0,
+            wb_buffered: false,
+        }
+    }
+
+    pub fn write(initiator: InitiatorId, target: Target, addr: u64, beats: u32) -> Self {
+        Self {
+            write: true,
+            ..Self::read(initiator, target, addr, beats)
+        }
+    }
+
+    pub fn with_part(mut self, part_id: u8) -> Self {
+        self.part_id = part_id;
+        self
+    }
+
+    pub fn with_tag(mut self, tag: u64) -> Self {
+        self.tag = tag;
+        self
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.beats as u64 * BEAT_BYTES
+    }
+
+    pub fn end_addr(&self) -> u64 {
+        self.addr + self.bytes()
+    }
+}
+
+/// Completion event delivered back to the initiator.
+///
+/// GBS fragmentation means one logical transaction can yield several
+/// completions; fragments are served in order, so the one carrying
+/// `last_fragment == true` ends the logical transaction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Completion {
+    pub initiator: InitiatorId,
+    pub tag: u64,
+    pub write: bool,
+    /// Beats carried by this (fragment) burst.
+    pub beats: u32,
+    /// True when this completes the last fragment of the logical burst.
+    pub last_fragment: bool,
+    /// Cycle of the last beat / B response.
+    pub finished_at: Cycle,
+    /// Cycle the original transaction was issued (for latency stats).
+    pub issued_at: Cycle,
+}
+
+impl Completion {
+    /// Build the completion for `burst` finishing at `finished_at`.
+    pub fn of(burst: &Burst, finished_at: Cycle) -> Self {
+        Self {
+            initiator: burst.initiator,
+            tag: burst.tag,
+            write: burst.write,
+            beats: burst.beats,
+            last_fragment: burst.fragments_left == 0,
+            finished_at,
+            issued_at: burst.issued_at,
+        }
+    }
+
+    pub fn latency(&self) -> Cycle {
+        self.finished_at.saturating_sub(self.issued_at)
+    }
+}
+
+/// A target-side service model plugged into the crossbar.
+///
+/// Contract per system cycle: the crossbar calls `can_accept` /
+/// `start` for queued bursts, then `tick` exactly once; completions are
+/// appended to `done`.
+pub trait TargetModel {
+    /// Which target address space this model serves.
+    fn target(&self) -> Target;
+
+    /// Whether a service slot is available for this burst *this cycle*.
+    fn can_accept(&self, burst: &Burst) -> bool;
+
+    /// Begin servicing (must follow a true `can_accept`).
+    fn start(&mut self, burst: Burst, now: Cycle);
+
+    /// Advance one cycle; push finished bursts into `done`.
+    fn tick(&mut self, now: Cycle, done: &mut Vec<Completion>);
+
+    /// True if nothing is in flight (used by drain loops in tests).
+    fn idle(&self) -> bool;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_constructors() {
+        let b = Burst::read(InitiatorId(1), Target::Dcspm, 0x100, 8);
+        assert!(!b.write);
+        assert_eq!(b.bytes(), 64);
+        assert_eq!(b.end_addr(), 0x140);
+        let w = Burst::write(InitiatorId(2), Target::Hyperram, 0, 4).with_part(3).with_tag(9);
+        assert!(w.write);
+        assert_eq!(w.part_id, 3);
+        assert_eq!(w.tag, 9);
+    }
+
+    #[test]
+    fn completion_latency() {
+        let mut b = Burst::read(InitiatorId(0), Target::Dcspm, 0, 4).with_tag(1);
+        b.issued_at = 10;
+        let c = Completion::of(&b, 110);
+        assert_eq!(c.latency(), 100);
+        assert!(c.last_fragment);
+        assert_eq!(c.beats, 4);
+    }
+
+    #[test]
+    fn fragment_completion_flags() {
+        let mut b = Burst::read(InitiatorId(0), Target::Dcspm, 0, 4);
+        b.fragments_left = 2;
+        assert!(!Completion::of(&b, 5).last_fragment);
+        b.fragments_left = 0;
+        assert!(Completion::of(&b, 5).last_fragment);
+    }
+}

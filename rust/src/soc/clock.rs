@@ -1,0 +1,139 @@
+//! Clock domains and the cycle timebase.
+//!
+//! The SoC operates across three clock domains, each driven by a
+//! dedicated PLL (paper §II): the host/system domain, the vector-cluster
+//! domain and the AMR-cluster domain. The simulator steps a single
+//! *system* cycle counter; per-domain progress is derived from the
+//! domain's frequency ratio against the system clock, which is how the
+//! RTL's clock-domain crossings average out at the transaction level.
+
+/// Simulation time in system-clock cycles.
+pub type Cycle = u64;
+
+/// The three PLL-driven clock domains (paper Fig. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Domain {
+    /// Host + interconnect + memory system ("system" clock).
+    System,
+    /// Dual-RVVU vector cluster.
+    Vector,
+    /// 12-core AMR integer cluster.
+    Amr,
+}
+
+/// One clock domain's operating point.
+#[derive(Debug, Clone, Copy)]
+pub struct ClockDomain {
+    pub domain: Domain,
+    /// Current frequency in MHz.
+    pub freq_mhz: f64,
+}
+
+impl ClockDomain {
+    pub fn new(domain: Domain, freq_mhz: f64) -> Self {
+        assert!(freq_mhz > 0.0, "frequency must be positive");
+        Self { domain, freq_mhz }
+    }
+
+    /// Convert a cycle count in this domain to nanoseconds.
+    pub fn cycles_to_ns(&self, cycles: Cycle) -> f64 {
+        cycles as f64 * 1e3 / self.freq_mhz
+    }
+
+    /// Convert nanoseconds to (rounded-up) cycles in this domain.
+    pub fn ns_to_cycles(&self, ns: f64) -> Cycle {
+        (ns * self.freq_mhz / 1e3).ceil() as Cycle
+    }
+
+    /// Cycles in *this* domain elapsed while `sys_cycles` system cycles
+    /// pass at `sys` — the transaction-level CDC model.
+    pub fn from_system(&self, sys_cycles: Cycle, sys: &ClockDomain) -> Cycle {
+        (sys_cycles as f64 * self.freq_mhz / sys.freq_mhz).round() as Cycle
+    }
+
+    /// System cycles needed to cover `cycles` of this domain.
+    pub fn to_system(&self, cycles: Cycle, sys: &ClockDomain) -> Cycle {
+        (cycles as f64 * sys.freq_mhz / self.freq_mhz).ceil() as Cycle
+    }
+}
+
+/// The PLL trio with the paper's nominal frequencies.
+#[derive(Debug, Clone, Copy)]
+pub struct ClockTree {
+    pub system: ClockDomain,
+    pub vector: ClockDomain,
+    pub amr: ClockDomain,
+}
+
+impl ClockTree {
+    /// Nominal 0.8V operating point: host 1GHz-class domains scaled per
+    /// the paper's corners (CVA6 @ 1GHz max, vector 1GHz max, AMR 900MHz
+    /// max at 1.1V; nominal 0.8V runs proportionally lower).
+    pub fn nominal() -> Self {
+        Self {
+            system: ClockDomain::new(Domain::System, 640.0),
+            vector: ClockDomain::new(Domain::Vector, 550.0),
+            amr: ClockDomain::new(Domain::Amr, 540.0),
+        }
+    }
+
+    /// Max-performance point (1.1V).
+    pub fn max_perf() -> Self {
+        Self {
+            system: ClockDomain::new(Domain::System, 1000.0),
+            vector: ClockDomain::new(Domain::Vector, 1000.0),
+            amr: ClockDomain::new(Domain::Amr, 900.0),
+        }
+    }
+
+    pub fn get(&self, d: Domain) -> &ClockDomain {
+        match d {
+            Domain::System => &self.system,
+            Domain::Vector => &self.vector,
+            Domain::Amr => &self.amr,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ns_round_trip() {
+        let d = ClockDomain::new(Domain::System, 1000.0); // 1 GHz -> 1ns/cyc
+        assert_eq!(d.cycles_to_ns(1000), 1000.0);
+        assert_eq!(d.ns_to_cycles(1000.0), 1000);
+    }
+
+    #[test]
+    fn cross_domain_scaling() {
+        let sys = ClockDomain::new(Domain::System, 1000.0);
+        let amr = ClockDomain::new(Domain::Amr, 500.0);
+        // 100 system cycles at half frequency = 50 AMR cycles.
+        assert_eq!(amr.from_system(100, &sys), 50);
+        // 50 AMR cycles need 100 system cycles.
+        assert_eq!(amr.to_system(50, &sys), 100);
+    }
+
+    #[test]
+    fn to_system_rounds_up() {
+        let sys = ClockDomain::new(Domain::System, 900.0);
+        let amr = ClockDomain::new(Domain::Amr, 700.0);
+        let sys_cycles = amr.to_system(100, &sys);
+        assert!(sys_cycles as f64 * 700.0 / 900.0 >= 99.999);
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_frequency_rejected() {
+        ClockDomain::new(Domain::System, 0.0);
+    }
+
+    #[test]
+    fn nominal_tree_has_all_domains() {
+        let t = ClockTree::nominal();
+        assert_eq!(t.get(Domain::Vector).domain, Domain::Vector);
+        assert!(t.get(Domain::Amr).freq_mhz > 0.0);
+    }
+}

@@ -1,0 +1,300 @@
+//! Host domain (HOSTD): dual-core RV64GCH (Cheshire-based) running soft
+//! real-time tasks under virtualization (RTOS + GPOS guests).
+//!
+//! For the interference experiments the host core is a latency-sensitive
+//! *traffic generator*: it executes a time-critical task (TCT) that walks
+//! a HyperRAM-resident buffer with a configurable stride through its
+//! private 32KiB L1 D$ and the shared DPLLC (Fig. 6a). Each access is
+//! blocking (in-order CVA6 load), so interconnect interference shows up
+//! directly as task latency and jitter.
+//!
+//! The vCLIC model captures the paper's virtualized interrupt path:
+//! direct guest delivery without hypervisor intervention.
+
+use super::axi::{Burst, Completion, InitiatorId, Target};
+use super::clock::Cycle;
+use super::mem::dpllc::{Access, Dpllc, DpllcConfig};
+use super::tsu::Tsu;
+use crate::util::Summary;
+
+/// Private L1 data cache geometry: 32KiB, 4-way, 64B lines -> 128 sets.
+fn l1_config() -> DpllcConfig {
+    DpllcConfig {
+        ways: 4,
+        sets: 128,
+        line_bytes: 64,
+        partitions: vec![(0, 128)],
+    }
+}
+
+/// The strided TCT the paper measures in Fig. 6a.
+#[derive(Debug, Clone)]
+pub struct TctSpec {
+    /// Base address of the buffer in HyperRAM space.
+    pub base: u64,
+    /// Byte stride between consecutive loads ("contiguous stride").
+    pub stride: u64,
+    /// Loads per task iteration.
+    pub accesses: u32,
+    /// Task iterations to run (latency sample per iteration).
+    pub iterations: u32,
+    /// Think cycles between loads (address generation + compute).
+    pub think_cycles: Cycle,
+    /// DPLLC partition assigned to this task.
+    pub part_id: u8,
+}
+
+impl TctSpec {
+    /// Fig. 6a-like default: a 48KiB working set re-walked every
+    /// iteration — larger than the 32KiB L1 D$ (so the DPLLC is on the
+    /// critical path every iteration) but smaller than a >=50% DPLLC
+    /// partition (64KiB), which is exactly the regime Fig. 6a explores.
+    pub fn fig6a() -> Self {
+        Self {
+            base: 0,
+            stride: 64,
+            accesses: 768,
+            iterations: 8,
+            think_cycles: 4,
+            part_id: 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Thinking { until: Cycle },
+    WaitingBus,
+    Done,
+}
+
+/// Host-core TCT driver (one core; the second host core is modelled by
+/// the coordinator as an additional initiator when needed).
+pub struct HostCore {
+    pub id: InitiatorId,
+    l1: Dpllc,
+    spec: TctSpec,
+    state: State,
+    access_idx: u32,
+    iter_idx: u32,
+    iter_start: Cycle,
+    access_start: Cycle,
+    tag_seq: u64,
+    /// Per-iteration task latency samples (cycles).
+    pub iteration_latency: Summary,
+    /// Per-access load-to-use latency samples (cycles).
+    pub access_latency: Summary,
+    pub l1_hits: u64,
+    pub l1_misses: u64,
+    /// Cycle the task completed its final iteration (0 while running).
+    pub finished_at: u64,
+}
+
+impl HostCore {
+    pub fn new(id: InitiatorId, spec: TctSpec) -> Self {
+        Self {
+            id,
+            l1: Dpllc::new(l1_config()),
+            state: State::Thinking { until: 0 },
+            access_idx: 0,
+            iter_idx: 0,
+            iter_start: 0,
+            access_start: 0,
+            tag_seq: 0,
+            iteration_latency: Summary::new(),
+            access_latency: Summary::new(),
+            l1_hits: 0,
+            l1_misses: 0,
+            finished_at: 0,
+            spec,
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.state == State::Done
+    }
+
+    fn current_addr(&self) -> u64 {
+        self.spec.base + self.access_idx as u64 * self.spec.stride
+    }
+
+    /// Advance one cycle; may issue a line-fill burst through the TSU.
+    pub fn tick(&mut self, now: Cycle, tsu: &mut Tsu) {
+        match self.state {
+            State::Done | State::WaitingBus => {}
+            State::Thinking { until } => {
+                if now < until {
+                    return;
+                }
+                if self.access_idx == 0 {
+                    self.iter_start = now;
+                }
+                let addr = self.current_addr();
+                self.access_start = now;
+                match self.l1.access(addr, 0, false) {
+                    Access::Hit => {
+                        self.l1_hits += 1;
+                        self.access_latency.push(1.0);
+                        self.advance(now + 1);
+                    }
+                    Access::Miss { .. } => {
+                        self.l1_misses += 1;
+                        // Line fill: 64B = 8 beats from the HyperRAM path.
+                        self.tag_seq += 1;
+                        let line = addr / 64 * 64;
+                        let mut b = Burst::read(self.id, Target::Hyperram, line, 8)
+                            .with_part(self.spec.part_id)
+                            .with_tag(self.tag_seq);
+                        b.issued_at = now;
+                        tsu.submit(b, now);
+                        self.state = State::WaitingBus;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Deliver the line-fill completion.
+    pub fn complete(&mut self, c: Completion, now: Cycle) {
+        if self.state != State::WaitingBus || c.tag != self.tag_seq || !c.last_fragment {
+            return;
+        }
+        self.access_latency
+            .push((now.saturating_sub(self.access_start)) as f64);
+        self.advance(now + 1);
+    }
+
+    fn advance(&mut self, now: Cycle) {
+        self.access_idx += 1;
+        if self.access_idx >= self.spec.accesses {
+            self.iteration_latency
+                .push((now.saturating_sub(self.iter_start)) as f64);
+            self.access_idx = 0;
+            self.iter_idx += 1;
+            if self.iter_idx >= self.spec.iterations {
+                self.state = State::Done;
+                self.finished_at = now;
+                return;
+            }
+        }
+        self.state = State::Thinking {
+            until: now + self.spec.think_cycles,
+        };
+    }
+}
+
+/// vCLIC interrupt delivery model (paper Fig. 7 row "Interrupt Latency").
+///
+/// CV32RT cores take interrupts in 6 cycles; virtualized delivery to a
+/// running guest adds no hypervisor exit (direct link to the requester
+/// VG), only the vCLIC arbitration stage.
+#[derive(Debug, Clone, Copy)]
+pub struct VClic {
+    /// Hardware pipeline cycles from IRQ assert to first handler fetch.
+    pub base_latency: Cycle,
+    /// Extra cycles when the target VG is not currently scheduled
+    /// (context switch performed by hardware, not hypervisor).
+    pub vg_switch_penalty: Cycle,
+}
+
+impl VClic {
+    pub fn carfield() -> Self {
+        Self {
+            base_latency: 6,
+            vg_switch_penalty: 13,
+        }
+    }
+
+    /// Latency for an interrupt targeting `running_vg == target_vg`.
+    pub fn latency(&self, running_vg: u8, target_vg: u8) -> Cycle {
+        if running_vg == target_vg {
+            self.base_latency
+        } else {
+            self.base_latency + self.vg_switch_penalty
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::axi::xbar::Crossbar;
+    use crate::soc::axi::TargetModel;
+    use crate::soc::mem::HyperramPath;
+    use crate::soc::tsu::TsuConfig;
+
+    fn drive(core: &mut HostCore, cycles: Cycle) {
+        let mut tsu = Tsu::new(TsuConfig::passthrough());
+        let mut xbar = Crossbar::new(
+            1,
+            vec![Box::new(HyperramPath::carfield()) as Box<dyn TargetModel>],
+        );
+        let mut staged = Vec::new();
+        for now in 0..cycles {
+            core.tick(now, &mut tsu);
+            staged.clear();
+            tsu.release(now, &mut staged);
+            for b in staged.drain(..) {
+                xbar.push(b);
+            }
+            xbar.tick(now);
+            for c in xbar.take_completions() {
+                core.complete(c, now);
+            }
+            if core.done() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn tct_completes_and_collects_samples() {
+        let spec = TctSpec {
+            accesses: 32,
+            iterations: 4,
+            ..TctSpec::fig6a()
+        };
+        let mut core = HostCore::new(InitiatorId(0), spec);
+        drive(&mut core, 2_000_000);
+        assert!(core.done());
+        assert_eq!(core.iteration_latency.len(), 4);
+        assert_eq!(core.access_latency.len(), 32 * 4);
+    }
+
+    #[test]
+    fn second_iteration_hits_l1() {
+        // Working set 32 lines * 64B = 2KiB << 32KiB L1: after the first
+        // walk everything hits.
+        let spec = TctSpec {
+            accesses: 32,
+            iterations: 3,
+            ..TctSpec::fig6a()
+        };
+        let mut core = HostCore::new(InitiatorId(0), spec);
+        drive(&mut core, 2_000_000);
+        assert_eq!(core.l1_misses, 32, "only the cold walk misses");
+        assert_eq!(core.l1_hits, 64);
+        // Warm iterations are much faster than the cold one.
+        assert!(core.iteration_latency.min() * 4.0 < core.iteration_latency.max());
+    }
+
+    #[test]
+    fn stride_beyond_line_defeats_spatial_locality() {
+        let spec = TctSpec {
+            stride: 256,
+            accesses: 64,
+            iterations: 1,
+            ..TctSpec::fig6a()
+        };
+        let mut core = HostCore::new(InitiatorId(0), spec);
+        drive(&mut core, 2_000_000);
+        assert_eq!(core.l1_misses, 64);
+    }
+
+    #[test]
+    fn vclic_latencies() {
+        let v = VClic::carfield();
+        assert_eq!(v.latency(0, 0), 6);
+        assert_eq!(v.latency(0, 1), 19);
+    }
+}

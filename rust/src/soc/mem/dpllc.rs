@@ -1,0 +1,358 @@
+//! Dynamically Partitionable Last-Level Cache (DPLLC) — paper Fig. 2c.
+//!
+//! 128KiB shared LLC in front of the HyperRAM, 8-way set-associative,
+//! 64B lines (256 sets). Set-based *spatial partitions* of configurable
+//! size are isolated in hardware and assigned to tasks via `part_id`
+//! identifiers carried on AXI user signals. Selective partition flushing
+//! preserves the isolation of other partitions.
+//!
+//! A task's accesses index only the sets of its partition, so an
+//! interfering task in another partition can never evict its lines —
+//! the mechanism behind Fig. 6a's "75% of isolated performance with a
+//! >50% partition".
+
+/// Geometry + partition table.
+#[derive(Debug, Clone)]
+pub struct DpllcConfig {
+    pub ways: usize,
+    pub sets: usize,
+    pub line_bytes: u64,
+    /// `part_id -> (first_set, n_sets)`; id 0 is the default partition.
+    pub partitions: Vec<(usize, usize)>,
+}
+
+impl DpllcConfig {
+    /// Paper geometry: 128KiB, 8-way, 64B lines -> 256 sets; one default
+    /// partition spanning the whole cache.
+    pub fn carfield() -> Self {
+        Self {
+            ways: 8,
+            sets: 256,
+            line_bytes: 64,
+            partitions: vec![(0, 256)],
+        }
+    }
+
+    /// Split the sets into two partitions: `frac` of the sets for
+    /// part_id 1 (the TCT), the rest for part_id 0 (everyone else).
+    pub fn split(frac: f64) -> Self {
+        let mut cfg = Self::carfield();
+        let tct_sets = ((cfg.sets as f64 * frac).round() as usize).clamp(1, cfg.sets - 1);
+        cfg.partitions = vec![(0, cfg.sets - tct_sets), (cfg.sets - tct_sets, tct_sets)];
+        cfg
+    }
+}
+
+/// Per-partition observability counters (Fig. 6a reports DPLLC misses).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DpllcStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub writebacks: u64,
+}
+
+#[derive(Debug, Clone, Copy, Default)]
+struct Line {
+    valid: bool,
+    dirty: bool,
+    tag: u64,
+    last_used: u64,
+}
+
+/// The cache state machine (timing handled by `HyperramPath`).
+pub struct Dpllc {
+    cfg: DpllcConfig,
+    /// `sets x ways` line array.
+    lines: Vec<Line>,
+    use_clock: u64,
+    /// Stats per part_id (index-capped).
+    pub stats: Vec<DpllcStats>,
+}
+
+/// Result of a lookup+allocate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Access {
+    Hit,
+    /// Miss; `writeback` true when a dirty victim must go to memory.
+    Miss { writeback: bool },
+}
+
+impl Dpllc {
+    pub fn new(cfg: DpllcConfig) -> Self {
+        let lines = vec![Line::default(); cfg.sets * cfg.ways];
+        let n_parts = cfg.partitions.len().max(1);
+        Self {
+            cfg,
+            lines,
+            use_clock: 0,
+            stats: vec![DpllcStats::default(); n_parts],
+        }
+    }
+
+    /// Reprogram the partition table (hypervisor write to the config
+    /// registers). Contents of all sets are preserved; only indexing
+    /// changes, as in the hardware.
+    pub fn repartition(&mut self, partitions: Vec<(usize, usize)>) {
+        for &(first, n) in &partitions {
+            assert!(first + n <= self.cfg.sets, "partition out of range");
+            assert!(n > 0, "empty partition");
+        }
+        let n_parts = partitions.len();
+        self.cfg.partitions = partitions;
+        self.stats.resize(n_parts, DpllcStats::default());
+    }
+
+    fn partition(&self, part_id: u8) -> (usize, usize) {
+        *self
+            .cfg
+            .partitions
+            .get(part_id as usize)
+            .unwrap_or(&self.cfg.partitions[0])
+    }
+
+    fn set_index(&self, addr: u64, part_id: u8) -> usize {
+        let (first, n) = self.partition(part_id);
+        let line = addr / self.cfg.line_bytes;
+        first + (line as usize % n)
+    }
+
+    fn tag_of(&self, addr: u64) -> u64 {
+        addr / self.cfg.line_bytes
+    }
+
+    fn stat_mut(&mut self, part_id: u8) -> &mut DpllcStats {
+        let idx = (part_id as usize).min(self.stats.len() - 1);
+        &mut self.stats[idx]
+    }
+
+    /// Non-destructive probe: would `addr` hit right now? (No LRU or
+    /// stats update — used by the controller's hit-port admission.)
+    pub fn probe(&self, addr: u64, part_id: u8) -> bool {
+        let set = self.set_index(addr, part_id);
+        let tag = self.tag_of(addr);
+        let base = set * self.cfg.ways;
+        (0..self.cfg.ways).any(|w| {
+            let line = &self.lines[base + w];
+            line.valid && line.tag == tag
+        })
+    }
+
+    /// Look up `addr` on behalf of `part_id`; allocates on miss (reads
+    /// and writes both allocate, as in the write-back LLC).
+    pub fn access(&mut self, addr: u64, part_id: u8, write: bool) -> Access {
+        self.use_clock += 1;
+        let clock = self.use_clock;
+        let set = self.set_index(addr, part_id);
+        let tag = self.tag_of(addr);
+        let base = set * self.cfg.ways;
+        let ways = self.cfg.ways;
+
+        // Hit path.
+        for w in 0..ways {
+            let line = &mut self.lines[base + w];
+            if line.valid && line.tag == tag {
+                line.last_used = clock;
+                line.dirty |= write;
+                self.stat_mut(part_id).hits += 1;
+                return Access::Hit;
+            }
+        }
+        // Miss: pick invalid way or LRU victim.
+        let mut victim = 0;
+        let mut best = u64::MAX;
+        for w in 0..ways {
+            let line = &self.lines[base + w];
+            if !line.valid {
+                victim = w;
+                break;
+            }
+            if line.last_used < best {
+                best = line.last_used;
+                victim = w;
+            }
+        }
+        let line = &mut self.lines[base + victim];
+        let writeback = line.valid && line.dirty;
+        let evicted = line.valid;
+        *line = Line {
+            valid: true,
+            dirty: write,
+            tag,
+            last_used: clock,
+        };
+        let st = self.stat_mut(part_id);
+        st.misses += 1;
+        if evicted {
+            st.evictions += 1;
+        }
+        if writeback {
+            st.writebacks += 1;
+        }
+        Access::Miss { writeback }
+    }
+
+    /// Selective partition flush: invalidate only `part_id`'s sets,
+    /// returning the number of dirty lines written back. Other
+    /// partitions are untouched (isolation-preserving).
+    pub fn flush_partition(&mut self, part_id: u8) -> u64 {
+        let (first, n) = self.partition(part_id);
+        let mut writebacks = 0;
+        for set in first..first + n {
+            for w in 0..self.cfg.ways {
+                let line = &mut self.lines[set * self.cfg.ways + w];
+                if line.valid && line.dirty {
+                    writebacks += 1;
+                }
+                *line = Line::default();
+            }
+        }
+        writebacks
+    }
+
+    /// Fraction of valid lines within a partition (occupancy probe).
+    pub fn occupancy(&self, part_id: u8) -> f64 {
+        let (first, n) = self.partition(part_id);
+        let total = n * self.cfg.ways;
+        let valid = (first..first + n)
+            .flat_map(|s| (0..self.cfg.ways).map(move |w| s * self.cfg.ways + w))
+            .filter(|&i| self.lines[i].valid)
+            .count();
+        valid as f64 / total as f64
+    }
+
+    pub fn line_bytes(&self) -> u64 {
+        self.cfg.line_bytes
+    }
+
+    pub fn sets(&self) -> usize {
+        self.cfg.sets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_fill() {
+        let mut c = Dpllc::new(DpllcConfig::carfield());
+        assert!(matches!(c.access(0x1000, 0, false), Access::Miss { .. }));
+        assert_eq!(c.access(0x1000, 0, false), Access::Hit);
+        assert_eq!(c.access(0x1008, 0, false), Access::Hit, "same line");
+        assert!(matches!(c.access(0x1040, 0, false), Access::Miss { .. }));
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        let mut c = Dpllc::new(DpllcConfig::carfield());
+        let sets = c.sets() as u64;
+        let line = c.line_bytes();
+        // Fill all 8 ways of set 0, then one more -> evicts the first.
+        for w in 0..9u64 {
+            c.access(w * sets * line, 0, false);
+        }
+        assert!(matches!(c.access(0, 0, false), Access::Miss { .. }), "way 0 evicted");
+        assert_eq!(c.access(8 * sets * line, 0, false), Access::Hit);
+    }
+
+    #[test]
+    fn dirty_eviction_reports_writeback() {
+        let mut c = Dpllc::new(DpllcConfig::carfield());
+        let sets = c.sets() as u64;
+        let line = c.line_bytes();
+        c.access(0, 0, true); // dirty fill
+        for w in 1..9u64 {
+            let r = c.access(w * sets * line, 0, false);
+            if w == 8 {
+                assert_eq!(r, Access::Miss { writeback: true });
+            }
+        }
+    }
+
+    #[test]
+    fn partitions_are_isolated() {
+        let mut c = Dpllc::new(DpllcConfig::split(0.5));
+        // TCT (part 1) fills a working set.
+        for i in 0..64u64 {
+            c.access(i * 64, 1, false);
+        }
+        // Interferer (part 0) streams a huge footprint.
+        for i in 0..100_000u64 {
+            c.access(i * 64, 0, false);
+        }
+        // TCT still hits everything.
+        for i in 0..64u64 {
+            assert_eq!(c.access(i * 64, 1, false), Access::Hit, "line {i} evicted");
+        }
+    }
+
+    #[test]
+    fn shared_partition_thrashes() {
+        let mut c = Dpllc::new(DpllcConfig::carfield());
+        for i in 0..64u64 {
+            c.access(i * 64, 0, false);
+        }
+        // Same partition interferer evicts the working set.
+        for i in 1000..(1000 + 100_000u64) {
+            c.access(i * 64, 0, false);
+        }
+        let mut misses = 0;
+        for i in 0..64u64 {
+            if matches!(c.access(i * 64, 0, false), Access::Miss { .. }) {
+                misses += 1;
+            }
+        }
+        assert!(misses > 48, "only {misses} misses — no thrashing?");
+    }
+
+    #[test]
+    fn selective_flush_spares_other_partitions() {
+        let mut c = Dpllc::new(DpllcConfig::split(0.5));
+        for i in 0..32u64 {
+            c.access(i * 64, 0, true);
+            c.access(i * 64, 1, false);
+        }
+        let wb = c.flush_partition(0);
+        assert!(wb > 0, "dirty lines must write back");
+        assert!(c.occupancy(0) == 0.0);
+        assert!(c.occupancy(1) > 0.0);
+        // Partition 1 unaffected.
+        for i in 0..32u64 {
+            assert_eq!(c.access(i * 64, 1, false), Access::Hit);
+        }
+    }
+
+    #[test]
+    fn repartition_live() {
+        let mut c = Dpllc::new(DpllcConfig::carfield());
+        c.repartition(vec![(0, 128), (128, 128)]);
+        assert!(matches!(c.access(0, 1, false), Access::Miss { .. }));
+        assert_eq!(c.access(0, 1, false), Access::Hit);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn repartition_validates() {
+        let mut c = Dpllc::new(DpllcConfig::carfield());
+        c.repartition(vec![(0, 300)]);
+    }
+
+    #[test]
+    fn stats_track_by_partition() {
+        let mut c = Dpllc::new(DpllcConfig::split(0.25));
+        c.access(0, 1, false);
+        c.access(0, 1, false);
+        c.access(64, 0, false);
+        assert_eq!(c.stats[1].misses, 1);
+        assert_eq!(c.stats[1].hits, 1);
+        assert_eq!(c.stats[0].misses, 1);
+    }
+
+    #[test]
+    fn unknown_part_id_falls_back_to_default() {
+        let mut c = Dpllc::new(DpllcConfig::carfield());
+        assert!(matches!(c.access(0, 42, false), Access::Miss { .. }));
+        assert_eq!(c.access(0, 42, false), Access::Hit);
+    }
+}

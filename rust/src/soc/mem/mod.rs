@@ -1,0 +1,12 @@
+//! Memory endpoints: the L2 DCSPM, the DPLLC-fronted HyperRAM path and a
+//! constant-latency peripheral region.
+
+pub mod dcspm;
+pub mod dpllc;
+pub mod hyperram;
+pub mod peripheral;
+
+pub use dcspm::{Dcspm, DcspmStats, CONTIG_ALIAS_BIT};
+pub use dpllc::{Dpllc, DpllcConfig, DpllcStats};
+pub use hyperram::{HyperRamTiming, HyperramPath};
+pub use peripheral::Peripheral;

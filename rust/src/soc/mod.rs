@@ -1,0 +1,314 @@
+//! The SoC substrate: every hardware block the paper's evaluation
+//! depends on, modelled cycle-approximately.
+//!
+//! `SocSim` is the top-level harness: it owns the AXI crossbar with its
+//! target models, one TSU per initiator, and the initiator state machines
+//! (host cores, DMA engines, accelerator clusters). One call to `step()`
+//! advances the whole SoC by a single system-clock cycle:
+//!
+//! 1. initiators generate traffic into their TSUs,
+//! 2. TSUs release shaped fragments into the crossbar queues,
+//! 3. the crossbar grants bursts to targets and advances them,
+//! 4. completions route back to their initiators.
+
+pub mod amr;
+pub mod axi;
+pub mod clock;
+pub mod dma;
+pub mod hostd;
+pub mod mem;
+pub mod power;
+pub mod safed;
+pub mod secd;
+pub mod tiles;
+pub mod tsu;
+pub mod vector;
+
+use std::any::Any;
+
+use axi::{xbar::Crossbar, Burst, Completion, InitiatorId, TargetModel};
+use clock::Cycle;
+use tsu::{Tsu, TsuConfig};
+
+/// Anything that drives traffic onto the AXI fabric.
+pub trait BusInitiator: Any {
+    fn id(&self) -> InitiatorId;
+    /// Generate work for this cycle (submit bursts into `tsu`).
+    fn tick(&mut self, now: Cycle, tsu: &mut Tsu);
+    /// Receive a completion (may immediately submit follow-up bursts).
+    fn complete(&mut self, c: Completion, now: Cycle, tsu: &mut Tsu);
+    /// True when this initiator has no more work (drain condition).
+    fn finished(&self) -> bool;
+    /// Downcast hook for result extraction by experiments.
+    fn as_any(&mut self) -> &mut dyn Any;
+}
+
+impl BusInitiator for hostd::HostCore {
+    fn id(&self) -> InitiatorId {
+        self.id
+    }
+    fn tick(&mut self, now: Cycle, tsu: &mut Tsu) {
+        hostd::HostCore::tick(self, now, tsu)
+    }
+    fn complete(&mut self, c: Completion, now: Cycle, _tsu: &mut Tsu) {
+        hostd::HostCore::complete(self, c, now)
+    }
+    fn finished(&self) -> bool {
+        self.done()
+    }
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+impl BusInitiator for dma::DmaEngine {
+    fn id(&self) -> InitiatorId {
+        self.id
+    }
+    fn tick(&mut self, now: Cycle, tsu: &mut Tsu) {
+        dma::DmaEngine::tick(self, now, tsu)
+    }
+    fn complete(&mut self, c: Completion, now: Cycle, tsu: &mut Tsu) {
+        dma::DmaEngine::complete(self, c, now, tsu)
+    }
+    fn finished(&self) -> bool {
+        self.done()
+    }
+    fn as_any(&mut self) -> &mut dyn Any {
+        self
+    }
+}
+
+/// The assembled SoC.
+pub struct SocSim {
+    pub xbar: Crossbar,
+    ports: Vec<(Box<dyn BusInitiator>, Tsu)>,
+    staged: Vec<Burst>,
+    /// Reused completion scratch (avoids per-cycle reallocation).
+    comp_scratch: Vec<Completion>,
+    pub now: Cycle,
+}
+
+impl SocSim {
+    /// Standard Carfield target set: DCSPM + DPLLC/HyperRAM + peripherals.
+    pub fn carfield_targets() -> Vec<Box<dyn TargetModel>> {
+        vec![
+            Box::new(mem::Dcspm::new()),
+            Box::new(mem::HyperramPath::carfield()),
+            Box::new(mem::Peripheral::new(20)),
+        ]
+    }
+
+    /// Build with `n_initiators` port slots and the given targets.
+    pub fn new(n_initiators: usize, targets: Vec<Box<dyn TargetModel>>) -> Self {
+        Self {
+            xbar: Crossbar::new(n_initiators, targets),
+            ports: Vec::new(),
+            staged: Vec::new(),
+            comp_scratch: Vec::new(),
+            now: 0,
+        }
+    }
+
+    /// Attach an initiator with its TSU configuration. The initiator's
+    /// `InitiatorId` must match its port index.
+    pub fn attach(&mut self, init: Box<dyn BusInitiator>, cfg: TsuConfig) {
+        assert_eq!(
+            init.id().0 as usize,
+            self.ports.len(),
+            "attach order must follow InitiatorId"
+        );
+        self.ports.push((init, Tsu::new(cfg)));
+    }
+
+    /// Reprogram one initiator's TSU at runtime (the coordinator's knob).
+    pub fn reconfigure_tsu(&mut self, id: InitiatorId, cfg: TsuConfig) {
+        self.ports[id.0 as usize].1.reconfigure(cfg);
+    }
+
+    /// Borrow an attached initiator back as concrete type `T`.
+    pub fn initiator_mut<T: 'static>(&mut self, id: InitiatorId) -> &mut T {
+        self.ports[id.0 as usize]
+            .0
+            .as_any()
+            .downcast_mut::<T>()
+            .expect("initiator type mismatch")
+    }
+
+    pub fn tsu_stats(&self, id: InitiatorId) -> tsu::TsuStats {
+        self.ports[id.0 as usize].1.stats
+    }
+
+    /// Advance one system cycle.
+    pub fn step(&mut self) {
+        let now = self.now;
+        for (init, tsu) in self.ports.iter_mut() {
+            init.tick(now, tsu);
+            if tsu.queued() == 0 {
+                continue; // nothing shaped this cycle
+            }
+            self.staged.clear();
+            tsu.release(now, &mut self.staged);
+            for b in self.staged.drain(..) {
+                self.xbar.push(b);
+            }
+        }
+        self.xbar.tick(now);
+        if !self.xbar.completions.is_empty() {
+            // Swap into the reusable scratch so the crossbar keeps an
+            // allocated-but-empty buffer (hot-loop optimization, see
+            // EXPERIMENTS.md §Perf).
+            std::mem::swap(&mut self.comp_scratch, &mut self.xbar.completions);
+            for i in 0..self.comp_scratch.len() {
+                let c = self.comp_scratch[i];
+                let (init, tsu) = &mut self.ports[c.initiator.0 as usize];
+                init.complete(c, now, tsu);
+                // A completion may have queued follow-up bursts eligible
+                // this cycle; release immediately so back-to-back chains
+                // don't pay a phantom cycle.
+                self.staged.clear();
+                tsu.release(now, &mut self.staged);
+                for b in self.staged.drain(..) {
+                    self.xbar.push(b);
+                }
+            }
+            self.comp_scratch.clear();
+        }
+        self.now += 1;
+    }
+
+    /// Step until every initiator reports finished (or budget exhausted).
+    /// Returns true if drained.
+    pub fn run_until_done(&mut self, max_cycles: Cycle) -> bool {
+        let deadline = self.now + max_cycles;
+        while self.now < deadline {
+            if self.ports.iter().all(|(i, _)| i.finished()) && self.xbar.idle() {
+                return true;
+            }
+            self.step();
+        }
+        false
+    }
+
+    /// Step a fixed number of cycles.
+    pub fn run_cycles(&mut self, cycles: Cycle) {
+        for _ in 0..cycles {
+            self.step();
+        }
+    }
+
+    /// Whether a specific initiator finished.
+    pub fn finished(&self, id: InitiatorId) -> bool {
+        self.ports[id.0 as usize].0.finished()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use dma::{DmaEngine, DmaJob};
+    use hostd::{HostCore, TctSpec};
+
+    #[test]
+    fn host_tct_runs_standalone() {
+        let mut soc = SocSim::new(1, SocSim::carfield_targets());
+        let spec = TctSpec {
+            accesses: 64,
+            iterations: 4,
+            ..TctSpec::fig6a()
+        };
+        soc.attach(
+            Box::new(HostCore::new(InitiatorId(0), spec)),
+            TsuConfig::passthrough(),
+        );
+        assert!(soc.run_until_done(10_000_000));
+        let host: &mut HostCore = soc.initiator_mut(InitiatorId(0));
+        assert_eq!(host.iteration_latency.len(), 4);
+    }
+
+    #[test]
+    fn dma_interferes_with_host() {
+        // Isolated run.
+        let isolated = {
+            let mut soc = SocSim::new(1, SocSim::carfield_targets());
+            soc.attach(
+                Box::new(HostCore::new(InitiatorId(0), TctSpec::fig6a())),
+                TsuConfig::passthrough(),
+            );
+            assert!(soc.run_until_done(50_000_000));
+            let host: &mut HostCore = soc.initiator_mut(InitiatorId(0));
+            host.iteration_latency.mean()
+        };
+        // Interfered run: system DMA streams HyperRAM -> DCSPM.
+        let interfered = {
+            let mut soc = SocSim::new(2, SocSim::carfield_targets());
+            soc.attach(
+                Box::new(HostCore::new(InitiatorId(0), TctSpec::fig6a())),
+                TsuConfig::passthrough(),
+            );
+            let mut dma = DmaEngine::new(InitiatorId(1));
+            dma.program(DmaJob {
+                src: axi::Target::Hyperram,
+                src_addr: 0x10_0000,
+                dst: Some(axi::Target::Dcspm),
+                dst_addr: 0,
+                bytes: 1 << 20,
+                chunk_beats: 256,
+                outstanding: 4,
+                looping: true,
+                part_id: 0,
+            });
+            soc.attach(Box::new(dma), TsuConfig::passthrough());
+            let deadline = 100_000_000;
+            let mut cycles = 0;
+            while !soc.finished(InitiatorId(0)) && cycles < deadline {
+                soc.step();
+                cycles += 1;
+            }
+            assert!(soc.finished(InitiatorId(0)), "TCT starved forever");
+            let host: &mut HostCore = soc.initiator_mut(InitiatorId(0));
+            host.iteration_latency.mean()
+        };
+        assert!(
+            interfered > 5.0 * isolated,
+            "expected heavy interference: isolated={isolated:.0} interfered={interfered:.0}"
+        );
+    }
+
+    #[test]
+    fn tsu_regulation_restores_host_latency() {
+        let run = |dma_cfg: TsuConfig| {
+            let mut soc = SocSim::new(2, SocSim::carfield_targets());
+            soc.attach(
+                Box::new(HostCore::new(InitiatorId(0), TctSpec::fig6a())),
+                TsuConfig::passthrough(),
+            );
+            let mut dma = DmaEngine::new(InitiatorId(1));
+            dma.program(DmaJob {
+                src: axi::Target::Hyperram,
+                src_addr: 0x10_0000,
+                dst: Some(axi::Target::Dcspm),
+                dst_addr: 0,
+                bytes: 1 << 20,
+                chunk_beats: 256,
+                outstanding: 4,
+                looping: true,
+                part_id: 0,
+            });
+            soc.attach(Box::new(dma), dma_cfg);
+            let mut cycles: u64 = 0;
+            while !soc.finished(InitiatorId(0)) && cycles < 200_000_000 {
+                soc.step();
+                cycles += 1;
+            }
+            let host: &mut HostCore = soc.initiator_mut(InitiatorId(0));
+            host.iteration_latency.mean()
+        };
+        let unregulated = run(TsuConfig::passthrough());
+        let regulated = run(TsuConfig::regulated(8, 16, 512));
+        assert!(
+            regulated * 3.0 < unregulated,
+            "TSU should cut latency: unreg={unregulated:.0} reg={regulated:.0}"
+        );
+    }
+}

@@ -1,0 +1,222 @@
+//! Secure domain (SECD): the SoC's hardware root of trust — secure boot
+//! sequencing and crypto services (AES, KMAC, HMAC/SHA; paper Fig. 1 and
+//! Fig. 7 "Security Features" row).
+//!
+//! Modelled as a service-latency state machine: boot walks the
+//! measured-boot stages with deterministic per-stage cost; runtime crypto
+//! requests are served FIFO with throughput-derived latencies. This is a
+//! *substrate* model — enough to (a) account for boot-time before the
+//! coordinator starts scheduling and (b) give the comparison table's
+//! feature row a measurable artifact.
+
+use super::clock::Cycle;
+
+/// Boot stages of the HWRoT.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BootStage {
+    PowerOn,
+    RomHash,
+    VerifySignature,
+    LoadFirmware,
+    ReleaseCores,
+    Done,
+}
+
+/// Crypto service kinds with silicon-calibrated throughputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CryptoOp {
+    /// AES-256-GCM, ~1 B/cycle engine.
+    Aes { bytes: u64 },
+    /// SHA-2/HMAC, ~0.5 B/cycle.
+    Hmac { bytes: u64 },
+    /// KMAC (Keccak), ~0.75 B/cycle.
+    Kmac { bytes: u64 },
+}
+
+impl CryptoOp {
+    /// Deterministic service time (setup + streaming).
+    pub fn cycles(&self) -> Cycle {
+        match *self {
+            CryptoOp::Aes { bytes } => 40 + bytes,
+            CryptoOp::Hmac { bytes } => 60 + bytes * 2,
+            CryptoOp::Kmac { bytes } => 50 + bytes * 4 / 3,
+        }
+    }
+}
+
+/// The secure-domain controller.
+pub struct SecureDomain {
+    pub stage: BootStage,
+    stage_done_at: Cycle,
+    /// FIFO of (op, enqueue cycle).
+    queue: std::collections::VecDeque<(CryptoOp, Cycle)>,
+    busy_until: Cycle,
+    pub ops_served: u64,
+    pub boot_finished_at: Option<Cycle>,
+}
+
+/// Firmware image size used for boot-time accounting (512KiB).
+const FIRMWARE_BYTES: u64 = 512 * 1024;
+
+impl SecureDomain {
+    pub fn new() -> Self {
+        Self {
+            stage: BootStage::PowerOn,
+            stage_done_at: 0,
+            queue: Default::default(),
+            busy_until: 0,
+            ops_served: 0,
+            boot_finished_at: None,
+        }
+    }
+
+    fn stage_cost(stage: BootStage) -> Cycle {
+        match stage {
+            BootStage::PowerOn => 100,
+            BootStage::RomHash => CryptoOp::Hmac { bytes: 64 * 1024 }.cycles(),
+            BootStage::VerifySignature => 12_000, // ECDSA-P256 verify
+            BootStage::LoadFirmware => FIRMWARE_BYTES / 8, // 64b/cyc copy
+            BootStage::ReleaseCores => 16,
+            BootStage::Done => 0,
+        }
+    }
+
+    fn next_stage(stage: BootStage) -> BootStage {
+        match stage {
+            BootStage::PowerOn => BootStage::RomHash,
+            BootStage::RomHash => BootStage::VerifySignature,
+            BootStage::VerifySignature => BootStage::LoadFirmware,
+            BootStage::LoadFirmware => BootStage::ReleaseCores,
+            BootStage::ReleaseCores => BootStage::Done,
+            BootStage::Done => BootStage::Done,
+        }
+    }
+
+    /// True once the boot chain released the application cores.
+    pub fn booted(&self) -> bool {
+        self.stage == BootStage::Done
+    }
+
+    /// Enqueue a runtime crypto request; returns nothing (completion is
+    /// observable through `ops_served` / `tick`'s return).
+    pub fn request(&mut self, op: CryptoOp, now: Cycle) {
+        self.queue.push_back((op, now));
+    }
+
+    /// Advance; returns completed (op, enqueue, finish) events.
+    pub fn tick(&mut self, now: Cycle) -> Vec<(CryptoOp, Cycle, Cycle)> {
+        // Boot FSM.
+        if !self.booted() {
+            if self.stage_done_at == 0 {
+                self.stage_done_at = now + Self::stage_cost(self.stage);
+            }
+            if now >= self.stage_done_at {
+                self.stage = Self::next_stage(self.stage);
+                if self.booted() {
+                    self.boot_finished_at = Some(now);
+                    self.stage_done_at = 0;
+                } else {
+                    self.stage_done_at = now + Self::stage_cost(self.stage);
+                }
+            }
+            return Vec::new();
+        }
+        // Crypto service FIFO.
+        let mut out = Vec::new();
+        if now >= self.busy_until {
+            if let Some((op, enq)) = self.queue.pop_front() {
+                let fin = now + op.cycles();
+                self.busy_until = fin;
+                self.ops_served += 1;
+                out.push((op, enq, fin));
+            }
+        }
+        out
+    }
+
+    /// Total boot latency in cycles (sum of stage costs) — deterministic.
+    pub fn boot_cycles() -> Cycle {
+        let mut total = 0;
+        let mut s = BootStage::PowerOn;
+        while s != BootStage::Done {
+            total += Self::stage_cost(s);
+            s = Self::next_stage(s);
+        }
+        total
+    }
+}
+
+impl Default for SecureDomain {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn boot_progresses_to_done() {
+        let mut sd = SecureDomain::new();
+        let budget = SecureDomain::boot_cycles() + 10;
+        for now in 0..budget {
+            sd.tick(now);
+        }
+        assert!(sd.booted());
+        assert!(sd.boot_finished_at.is_some());
+    }
+
+    #[test]
+    fn boot_time_is_deterministic() {
+        let run = || {
+            let mut sd = SecureDomain::new();
+            let mut now = 0;
+            while !sd.booted() {
+                sd.tick(now);
+                now += 1;
+            }
+            now
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn crypto_waits_for_boot() {
+        let mut sd = SecureDomain::new();
+        sd.request(CryptoOp::Aes { bytes: 64 }, 0);
+        let done = sd.tick(0);
+        assert!(done.is_empty());
+        assert_eq!(sd.ops_served, 0);
+    }
+
+    #[test]
+    fn crypto_fifo_after_boot() {
+        let mut sd = SecureDomain::new();
+        let mut now = 0;
+        while !sd.booted() {
+            sd.tick(now);
+            now += 1;
+        }
+        sd.request(CryptoOp::Aes { bytes: 100 }, now);
+        sd.request(CryptoOp::Kmac { bytes: 99 }, now);
+        let mut served = Vec::new();
+        for _ in 0..2000 {
+            served.extend(sd.tick(now));
+            now += 1;
+        }
+        assert_eq!(served.len(), 2);
+        assert_eq!(sd.ops_served, 2);
+        // FIFO order preserved.
+        assert!(matches!(served[0].0, CryptoOp::Aes { .. }));
+        assert!(matches!(served[1].0, CryptoOp::Kmac { .. }));
+        assert!(served[1].2 > served[0].2);
+    }
+
+    #[test]
+    fn op_latencies_scale_with_bytes() {
+        assert!(CryptoOp::Aes { bytes: 1024 }.cycles() > CryptoOp::Aes { bytes: 64 }.cycles());
+        assert_eq!(CryptoOp::Aes { bytes: 64 }.cycles(), 104);
+        assert_eq!(CryptoOp::Hmac { bytes: 64 }.cycles(), 188);
+    }
+}

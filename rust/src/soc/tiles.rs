@@ -1,0 +1,292 @@
+//! Double-buffered tile streaming shared by both accelerator clusters.
+//!
+//! Both the AMR and the vector cluster move work tiles between the L2
+//! DCSPM and their private L1 SPMs through a cluster DMA, overlapping the
+//! transfer of tile i+1 with the computation of tile i (paper: "A 64b/cyc
+//! DMA enables double-buffered L2-L1 data transfers"). The streamer is
+//! the bus-facing half of that pipeline: it prefetches up to
+//! `buffer_depth` tiles ahead and writes back results.
+
+use std::collections::VecDeque;
+
+use super::axi::{Burst, Completion, InitiatorId, Target};
+use super::clock::Cycle;
+use super::tsu::Tsu;
+
+/// Description of a tiled transfer stream.
+#[derive(Debug, Clone)]
+pub struct TileStream {
+    /// Total tiles in the task.
+    pub tiles: u32,
+    /// Input beats per tile (operand slabs).
+    pub in_beats: u32,
+    /// Output beats per tile (accumulator writeback); 0 disables.
+    pub out_beats: u32,
+    /// L2 source base (DCSPM address; set the contiguous-alias bit for a
+    /// private-path configuration).
+    pub src_base: u64,
+    /// L2 destination base for writebacks.
+    pub dst_base: u64,
+    pub part_id: u8,
+    /// Prefetch depth (1 = classic double buffering).
+    pub buffer_depth: u32,
+    /// Wrap window in bytes: tile offsets wrap modulo this so the stream
+    /// stays within its L2 staging slot (0 = no wrapping).
+    pub wrap_bytes: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Flight {
+    Fetch(u32),
+    Writeback(u32),
+}
+
+/// Bus-side engine: issues fetches/writebacks, reports ready tiles.
+#[derive(Debug)]
+pub struct TileStreamer {
+    pub id: InitiatorId,
+    stream: TileStream,
+    next_fetch: u32,
+    ready: VecDeque<u32>,
+    /// Consumed-but-unfetched budget: tiles currently buffered (ready +
+    /// in-fetch) must stay <= buffer_depth + 1.
+    in_flight: Option<(u64, Flight)>,
+    pending_wb: VecDeque<u32>,
+    wb_done: u32,
+    tag_seq: u64,
+    /// Completed input beats (bandwidth accounting).
+    pub beats_in: u64,
+    pub beats_out: u64,
+    /// Cycles with a transfer outstanding.
+    pub busy_cycles: u64,
+}
+
+impl TileStreamer {
+    pub fn new(id: InitiatorId, stream: TileStream) -> Self {
+        assert!(stream.tiles > 0 && stream.in_beats > 0);
+        Self {
+            id,
+            stream,
+            next_fetch: 0,
+            ready: VecDeque::new(),
+            in_flight: None,
+            pending_wb: VecDeque::new(),
+            wb_done: 0,
+            tag_seq: 0,
+            beats_in: 0,
+            beats_out: 0,
+            busy_cycles: 0,
+        }
+    }
+
+    /// Tiles fetched and awaiting compute.
+    pub fn ready_tiles(&self) -> usize {
+        self.ready.len()
+    }
+
+    /// Pop the next compute-ready tile.
+    pub fn pop_ready(&mut self) -> Option<u32> {
+        self.ready.pop_front()
+    }
+
+    /// Queue a result tile for writeback.
+    pub fn push_writeback(&mut self, tile: u32) {
+        if self.stream.out_beats > 0 {
+            self.pending_wb.push_back(tile);
+        } else {
+            self.wb_done += 1;
+        }
+    }
+
+    /// All fetches issued and all writebacks drained?
+    pub fn done(&self) -> bool {
+        self.next_fetch >= self.stream.tiles
+            && self.ready.is_empty()
+            && self.in_flight.is_none()
+            && self.pending_wb.is_empty()
+            && self.wb_done >= self.stream.tiles
+    }
+
+    /// True when every tile's data has been fetched (compute may still run).
+    pub fn fetches_done(&self) -> bool {
+        self.next_fetch >= self.stream.tiles && self.in_flight.is_none()
+    }
+
+    fn wrap(&self, offset: u64) -> u64 {
+        if self.stream.wrap_bytes == 0 {
+            offset
+        } else {
+            offset % self.stream.wrap_bytes
+        }
+    }
+
+    fn tile_src(&self, tile: u32) -> u64 {
+        self.stream.src_base + self.wrap(tile as u64 * self.stream.in_beats as u64 * 8)
+    }
+
+    fn tile_dst(&self, tile: u32) -> u64 {
+        self.stream.dst_base + self.wrap(tile as u64 * self.stream.out_beats as u64 * 8)
+    }
+
+    /// Issue at most one transfer per cycle (single DMA channel).
+    /// Writebacks take priority (they free L1 buffers).
+    pub fn tick(&mut self, now: Cycle, tsu: &mut Tsu) {
+        if self.in_flight.is_some() {
+            self.busy_cycles += 1;
+            return;
+        }
+        if let Some(tile) = self.pending_wb.pop_front() {
+            self.tag_seq += 1;
+            let mut b = Burst::write(self.id, Target::Dcspm, self.tile_dst(tile), self.stream.out_beats)
+                .with_part(self.stream.part_id)
+                .with_tag(self.tag_seq);
+            b.issued_at = now;
+            tsu.submit(b, now);
+            self.in_flight = Some((self.tag_seq, Flight::Writeback(tile)));
+            self.busy_cycles += 1;
+            return;
+        }
+        let buffered = self.ready.len() as u32;
+        if self.next_fetch < self.stream.tiles && buffered <= self.stream.buffer_depth {
+            let tile = self.next_fetch;
+            self.tag_seq += 1;
+            let mut b = Burst::read(self.id, Target::Dcspm, self.tile_src(tile), self.stream.in_beats)
+                .with_part(self.stream.part_id)
+                .with_tag(self.tag_seq);
+            b.issued_at = now;
+            tsu.submit(b, now);
+            self.in_flight = Some((self.tag_seq, Flight::Fetch(tile)));
+            self.next_fetch += 1;
+            self.busy_cycles += 1;
+        }
+    }
+
+    /// Deliver a bus completion.
+    pub fn complete(&mut self, c: Completion, _now: Cycle) {
+        let Some((tag, flight)) = self.in_flight else {
+            return;
+        };
+        if c.tag != tag || !c.last_fragment {
+            return;
+        }
+        match flight {
+            Flight::Fetch(tile) => {
+                self.beats_in += self.stream.in_beats as u64;
+                self.ready.push_back(tile);
+            }
+            Flight::Writeback(_) => {
+                self.beats_out += self.stream.out_beats as u64;
+                self.wb_done += 1;
+            }
+        }
+        self.in_flight = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::axi::xbar::Crossbar;
+    use crate::soc::axi::TargetModel;
+    use crate::soc::mem::Dcspm;
+    use crate::soc::tsu::TsuConfig;
+
+    fn stream(tiles: u32) -> TileStream {
+        TileStream {
+            tiles,
+            in_beats: 32,
+            out_beats: 16,
+            src_base: 0,
+            dst_base: 0x4_0000,
+            part_id: 0,
+            buffer_depth: 1,
+            wrap_bytes: crate::coordinator::policy::IsolationPolicy::L2_SLOT_BYTES / 2,
+        }
+    }
+
+    /// Drive the streamer with an immediate-consume compute model.
+    fn drive(ts: &mut TileStreamer, cycles: Cycle, consume: bool) {
+        let mut tsu = Tsu::new(TsuConfig::passthrough());
+        let mut xbar = Crossbar::new(1, vec![Box::new(Dcspm::new()) as Box<dyn TargetModel>]);
+        let mut staged = Vec::new();
+        for now in 0..cycles {
+            ts.tick(now, &mut tsu);
+            staged.clear();
+            tsu.release(now, &mut staged);
+            for b in staged.drain(..) {
+                xbar.push(b);
+            }
+            xbar.tick(now);
+            for c in xbar.take_completions() {
+                ts.complete(c, now);
+            }
+            if consume {
+                if let Some(t) = ts.pop_ready() {
+                    ts.push_writeback(t);
+                }
+            }
+            if ts.done() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn streams_all_tiles_in_order() {
+        let mut ts = TileStreamer::new(InitiatorId(0), stream(4));
+        let mut tsu = Tsu::new(TsuConfig::passthrough());
+        let mut xbar = Crossbar::new(1, vec![Box::new(Dcspm::new()) as Box<dyn TargetModel>]);
+        let mut got = Vec::new();
+        let mut staged = Vec::new();
+        for now in 0..10_000 {
+            ts.tick(now, &mut tsu);
+            staged.clear();
+            tsu.release(now, &mut staged);
+            for b in staged.drain(..) {
+                xbar.push(b);
+            }
+            xbar.tick(now);
+            for c in xbar.take_completions() {
+                ts.complete(c, now);
+            }
+            while let Some(t) = ts.pop_ready() {
+                got.push(t);
+                ts.push_writeback(t);
+            }
+            if ts.done() {
+                break;
+            }
+        }
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        assert!(ts.done());
+        assert_eq!(ts.beats_in, 4 * 32);
+        assert_eq!(ts.beats_out, 4 * 16);
+    }
+
+    #[test]
+    fn respects_buffer_depth() {
+        let mut ts = TileStreamer::new(InitiatorId(0), stream(16));
+        // Never consume: fetches must stop at buffer_depth+1 tiles ready.
+        drive(&mut ts, 5000, false);
+        assert!(ts.ready_tiles() <= 2, "ready={}", ts.ready_tiles());
+        assert!(!ts.done());
+    }
+
+    #[test]
+    fn no_writeback_stream() {
+        let mut s = stream(3);
+        s.out_beats = 0;
+        let mut ts = TileStreamer::new(InitiatorId(0), s);
+        drive(&mut ts, 5000, true);
+        assert!(ts.done());
+        assert_eq!(ts.beats_out, 0);
+    }
+
+    #[test]
+    fn done_requires_writebacks() {
+        let mut ts = TileStreamer::new(InitiatorId(0), stream(2));
+        drive(&mut ts, 3000, true);
+        assert!(ts.done());
+        assert_eq!(ts.beats_out, 2 * 16);
+    }
+}

@@ -1,0 +1,66 @@
+//! Minimal `cargo bench` harness (criterion is unavailable offline).
+//!
+//! Every bench target is `harness = false` and uses [`BenchRunner`] to
+//! time named sections with warmup + repeated samples, printing
+//! mean/min/max wall-clock per iteration plus any domain metrics the
+//! experiment reports.
+
+use std::time::Instant;
+
+/// Timing collector for one bench binary.
+pub struct BenchRunner {
+    pub name: &'static str,
+    results: Vec<(String, f64, f64, f64, usize)>,
+}
+
+impl BenchRunner {
+    pub fn new(name: &'static str) -> Self {
+        println!("\n### bench: {name}");
+        Self {
+            name,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` over `iters` iterations (after 1 warmup); returns the
+    /// last iteration's output.
+    pub fn time<T>(&mut self, label: &str, iters: usize, mut f: impl FnMut() -> T) -> T {
+        let mut out = f(); // warmup (also primes caches/compilation)
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            out = f();
+            samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = samples.iter().cloned().fold(0.0f64, f64::max);
+        println!("{label:<44} {mean:>10.3} ms/iter (min {min:.3}, max {max:.3}, n={iters})");
+        self.results.push((label.to_string(), mean, min, max, iters));
+        out
+    }
+
+    /// Report a derived scalar metric (throughput, factor, ...).
+    pub fn metric(&self, label: &str, value: f64, unit: &str) {
+        println!("{label:<44} {value:>10.3} {unit}");
+    }
+
+    pub fn finish(self) {
+        println!("### bench {}: {} sections", self.name, self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_returns_output_and_records() {
+        let mut b = BenchRunner::new("self-test");
+        let v = b.time("square", 3, || 7 * 7);
+        assert_eq!(v, 49);
+        assert_eq!(b.results.len(), 1);
+        b.metric("meaning", 42.0, "units");
+        b.finish();
+    }
+}

@@ -1,0 +1,123 @@
+//! Minimal CLI argument parser (`--key value` / `--flag` / positionals).
+//!
+//! Replaces `clap` (unavailable in the offline vendor set) for the
+//! coordinator binary and the example drivers.
+
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, `--key value` options, bare flags.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — skips argv[0].
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Self {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                if let Some(eq) = key.find('=') {
+                    out.options
+                        .insert(key[..eq].to_string(), key[eq + 1..].to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let val = iter.next().unwrap();
+                    out.options.insert(key.to_string(), val);
+                } else {
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse the process command line.
+    pub fn from_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    /// Typed option with default; panics with a clear message on junk.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default,
+            Some(raw) => raw
+                .parse()
+                .unwrap_or_else(|e| panic!("--{name}={raw}: {e}")),
+        }
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse("fig6a --voltage 0.8 --mode dlm run");
+        assert_eq!(a.subcommand(), Some("fig6a"));
+        assert_eq!(a.get("voltage"), Some("0.8"));
+        assert_eq!(a.get("mode"), Some("dlm"));
+        assert_eq!(a.positional, vec!["fig6a", "run"]);
+    }
+
+    #[test]
+    fn flags_without_values() {
+        let a = parse("bench --verbose --json");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("json"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse("--period=1024 --budget=64");
+        assert_eq!(a.get_parse::<u64>("period", 0), 1024);
+        assert_eq!(a.get_parse::<u64>("budget", 0), 64);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_parse::<f64>("voltage", 0.8), 0.8);
+        assert_eq!(a.get_or("mode", "indip"), "indip");
+    }
+
+    #[test]
+    #[should_panic(expected = "--n=abc")]
+    fn junk_panics() {
+        let a = parse("--n abc");
+        let _ = a.get_parse::<u32>("n", 0);
+    }
+}

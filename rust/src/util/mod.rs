@@ -1,0 +1,15 @@
+//! Small self-contained utilities: deterministic PRNG, statistics, and a
+//! tiny CLI argument parser.
+//!
+//! The offline vendored crate set has no `rand`, `clap`, `criterion` or
+//! `proptest`, so these hand-rolled equivalents back the fault-injection
+//! campaigns, the property-style tests and the bench harness (documented
+//! in DESIGN.md "Substitutions").
+
+pub mod bench;
+pub mod cli;
+pub mod rng;
+pub mod stats;
+
+pub use rng::XorShift;
+pub use stats::Summary;

@@ -1,0 +1,191 @@
+//! Property-style sweeps over the coordinator: random task mixes must
+//! always produce complete, internally-consistent reports, and the
+//! isolation-policy ladder must order TCT latency correctly.
+
+use carfield::coordinator::task::Criticality;
+use carfield::coordinator::{IsolationPolicy, McTask, Scenario, Scheduler, Workload};
+use carfield::soc::amr::IntPrecision;
+use carfield::soc::dma::DmaJob;
+use carfield::soc::hostd::TctSpec;
+use carfield::soc::vector::FpFormat;
+use carfield::util::XorShift;
+
+fn random_task(rng: &mut XorShift, idx: usize) -> McTask {
+    let crit = match rng.below(4) {
+        0 => Criticality::Safety,
+        1 => Criticality::Hard,
+        2 => Criticality::Soft,
+        _ => Criticality::BestEffort,
+    };
+    let name = format!("t{idx}");
+    match rng.below(4) {
+        0 => McTask::new(
+            &name,
+            crit,
+            Workload::AmrMatMul {
+                precision: [IntPrecision::Int8, IntPrecision::Int4, IntPrecision::Int2]
+                    [rng.below(3) as usize],
+                m: 32 * rng.in_range(1, 3) as u32,
+                k: 32,
+                n: 32,
+                tile: 16,
+            },
+        ),
+        1 => McTask::new(
+            &name,
+            crit,
+            Workload::VectorMatMul {
+                format: [FpFormat::Fp32, FpFormat::Fp16, FpFormat::Fp8][rng.below(3) as usize],
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 32,
+            },
+        ),
+        2 => McTask::new(
+            &name,
+            crit,
+            Workload::VectorFft {
+                format: FpFormat::Fp32,
+                n: 256,
+                batch: rng.in_range(1, 8) as u32,
+            },
+        ),
+        _ => McTask::new(
+            &name,
+            Criticality::Hard,
+            Workload::HostTct(TctSpec {
+                accesses: 64 * rng.in_range(1, 4) as u32,
+                iterations: 2,
+                ..TctSpec::fig6a()
+            }),
+        ),
+    }
+}
+
+#[test]
+fn random_scenarios_always_complete_with_consistent_reports() {
+    let mut rng = XorShift::new(0xC0DE);
+    for case in 0..12 {
+        let policy = match rng.below(4) {
+            0 => IsolationPolicy::NoIsolation,
+            1 => IsolationPolicy::TsuRegulation,
+            2 => IsolationPolicy::TsuPlusLlcPartition {
+                tct_fraction_percent: rng.in_range(10, 90) as u8,
+            },
+            _ => IsolationPolicy::PrivatePaths,
+        };
+        let n_tasks = rng.in_range(1, 4) as usize;
+        let mut scenario = Scenario::new(&format!("rand{case}"), policy);
+        for i in 0..n_tasks {
+            scenario = scenario.with_task(random_task(&mut rng, i));
+        }
+        let report = Scheduler::run(&scenario);
+        assert_eq!(report.tasks.len(), n_tasks, "case {case}");
+        assert!(report.cycles < scenario.max_cycles, "case {case}: hit budget");
+        for t in &report.tasks {
+            // Every measured (non-dma) task must have finished.
+            if t.kind != "dma-copy" {
+                assert!(
+                    t.makespan > 0 || t.kind == "host-tct",
+                    "case {case}: {} never finished: {}",
+                    t.name,
+                    report.to_markdown()
+                );
+            }
+            if t.deadline == 0 {
+                assert!(t.deadline_met, "deadline-free tasks are always met");
+            }
+        }
+        // Markdown rendering never panics and contains every task.
+        let md = report.to_markdown();
+        for t in &report.tasks {
+            assert!(md.contains(&t.name));
+        }
+    }
+}
+
+#[test]
+fn policy_ladder_orders_tct_latency() {
+    let tct = || {
+        McTask::new(
+            "tct",
+            Criticality::Hard,
+            Workload::HostTct(TctSpec {
+                accesses: 512,
+                iterations: 4,
+                ..TctSpec::fig6a()
+            }),
+        )
+    };
+    let dma = || {
+        McTask::new(
+            "dma",
+            Criticality::BestEffort,
+            Workload::DmaCopy(DmaJob::interferer()),
+        )
+    };
+    let lat = |policy| {
+        let s = Scenario::new("ladder", policy).with_task(tct()).with_task(dma());
+        Scheduler::run(&s).task("tct").mean_latency
+    };
+    let none = lat(IsolationPolicy::NoIsolation);
+    let tsu = lat(IsolationPolicy::TsuRegulation);
+    let part = lat(IsolationPolicy::TsuPlusLlcPartition {
+        tct_fraction_percent: 50,
+    });
+    assert!(tsu < none, "TSU must improve: {none:.0} -> {tsu:.0}");
+    assert!(part < none, "partition must improve: {none:.0} -> {part:.0}");
+    assert!(
+        part <= tsu * 1.1,
+        "partition should not regress vs TSU alone: {tsu:.0} -> {part:.0}"
+    );
+}
+
+#[test]
+fn safety_tasks_get_lockstep_and_pay_for_it() {
+    let run = |crit| {
+        let s = Scenario::new("lockstep", IsolationPolicy::NoIsolation).with_task(McTask::new(
+            "ai",
+            crit,
+            Workload::AmrMatMul {
+                precision: IntPrecision::Int8,
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 32,
+            },
+        ));
+        Scheduler::run(&s).task("ai").makespan
+    };
+    let safety = run(Criticality::Safety); // DLM
+    let soft = run(Criticality::Soft); // INDIP
+    let ratio = safety as f64 / soft as f64;
+    assert!(
+        (1.5..2.2).contains(&ratio),
+        "DLM penalty should be ~1.89x, got {ratio:.2}"
+    );
+}
+
+#[test]
+fn reports_survive_extreme_deadlines() {
+    let mk = |deadline| {
+        let s = Scenario::new("dl", IsolationPolicy::NoIsolation).with_task(
+            McTask::new(
+                "ai",
+                Criticality::Hard,
+                Workload::AmrMatMul {
+                    precision: IntPrecision::Int2,
+                    m: 32,
+                    k: 32,
+                    n: 32,
+                    tile: 16,
+                },
+            )
+            .with_deadline(deadline),
+        );
+        Scheduler::run(&s)
+    };
+    assert!(!mk(1).all_deadlines_met());
+    assert!(mk(u64::MAX / 2).all_deadlines_met());
+}

@@ -1,0 +1,221 @@
+//! Property-style sweeps over the interference machinery (hand-rolled —
+//! proptest is unavailable offline; see DESIGN.md "Substitutions").
+//!
+//! Invariants:
+//! 1. TSU shaping conserves beats (no data lost or duplicated).
+//! 2. Tightening the TRU budget never *hurts* the TCT.
+//! 3. Shrinking GBS fragments never hurts the TCT.
+//! 4. A larger DPLLC partition never hurts the TCT.
+//! 5. Fragments arrive in order with correct addresses.
+
+use carfield::soc::axi::{Burst, InitiatorId, Target};
+use carfield::soc::dma::{DmaEngine, DmaJob};
+use carfield::soc::hostd::{HostCore, TctSpec};
+use carfield::soc::mem::dpllc::{Dpllc, DpllcConfig};
+use carfield::soc::tsu::{Tsu, TsuConfig};
+use carfield::soc::SocSim;
+use carfield::util::XorShift;
+
+#[test]
+fn tsu_conserves_beats_across_random_configs() {
+    let mut rng = XorShift::new(0xBEEF);
+    for case in 0..200 {
+        let cfg = TsuConfig {
+            gbs_max_beats: rng.below(64) as u32, // 0 disables
+            wb_enable: rng.chance(0.5),
+            wb_capacity_beats: rng.in_range(8, 256) as u32,
+            tru_budget_beats: rng.below(64) as u32,
+            tru_period: rng.in_range(16, 1024),
+        };
+        let mut tsu = Tsu::new(cfg);
+        let mut submitted = 0u64;
+        let mut released = 0u64;
+        let mut out = Vec::new();
+        let mut now = 0u64;
+        for _ in 0..rng.in_range(1, 8) {
+            let beats = rng.in_range(1, 256) as u32;
+            let write = rng.chance(0.5);
+            let b = if write {
+                Burst::write(InitiatorId(0), Target::Dcspm, rng.below(1 << 20), beats)
+            } else {
+                Burst::read(InitiatorId(0), Target::Dcspm, rng.below(1 << 20), beats)
+            };
+            submitted += beats as u64;
+            tsu.submit(b, now);
+        }
+        // Drain for long enough that every budget period elapses: worst
+        // case the TRU trickles `budget` beats per `period`.
+        let budget = cfg.tru_budget_beats.max(1) as u64;
+        let drain = (submitted / budget + 2) * cfg.tru_period.max(1) + 10_000;
+        for _ in 0..drain {
+            tsu.release(now, &mut out);
+            now += 1;
+            if tsu.queued() == 0 {
+                break;
+            }
+        }
+        released += out.iter().map(|b| b.beats as u64).sum::<u64>();
+        assert_eq!(submitted, released, "case {case}: beats not conserved ({cfg:?})");
+    }
+}
+
+#[test]
+fn fragments_are_ordered_and_contiguous() {
+    let mut rng = XorShift::new(0xF00D);
+    for _ in 0..100 {
+        let max = rng.in_range(1, 32) as u32;
+        let beats = rng.in_range(1, 256) as u32;
+        let addr = rng.below(1 << 20) & !7;
+        let mut tsu = Tsu::new(TsuConfig {
+            gbs_max_beats: max,
+            ..TsuConfig::passthrough()
+        });
+        tsu.submit(Burst::read(InitiatorId(0), Target::Dcspm, addr, beats), 0);
+        let mut out = Vec::new();
+        tsu.release(0, &mut out);
+        let mut expect_addr = addr;
+        let mut total = 0;
+        for (i, f) in out.iter().enumerate() {
+            assert_eq!(f.addr, expect_addr, "fragment {i} address");
+            assert!(f.beats <= max);
+            expect_addr += f.beats as u64 * 8;
+            total += f.beats;
+            let is_last = i == out.len() - 1;
+            assert_eq!(f.fragments_left == 0, is_last);
+        }
+        assert_eq!(total, beats);
+    }
+}
+
+fn tct_latency_with(dma_cfg: TsuConfig, seed: u64) -> f64 {
+    let mut soc = SocSim::new(2, SocSim::carfield_targets());
+    soc.attach(
+        Box::new(HostCore::new(
+            InitiatorId(0),
+            TctSpec {
+                accesses: 256,
+                iterations: 3,
+                ..TctSpec::fig6a()
+            },
+        )),
+        TsuConfig::wb_only(),
+    );
+    let mut dma = DmaEngine::new(InitiatorId(1));
+    let mut job = DmaJob::interferer();
+    job.src_addr += seed % 4096 * 64; // jitter the stream's phase
+    dma.program(job);
+    soc.attach(Box::new(dma), dma_cfg);
+    let mut guard = 0u64;
+    while !soc.finished(InitiatorId(0)) && guard < 300_000_000 {
+        soc.step();
+        guard += 1;
+    }
+    assert!(soc.finished(InitiatorId(0)), "TCT starved");
+    let host: &mut HostCore = soc.initiator_mut(InitiatorId(0));
+    host.iteration_latency.mean()
+}
+
+#[test]
+fn tighter_tru_budget_never_hurts_tct() {
+    let mut prev = f64::INFINITY;
+    for budget in [64u32, 32, 16, 8] {
+        let lat = tct_latency_with(TsuConfig::regulated(8, budget, 512), budget as u64);
+        assert!(
+            lat <= prev * 1.25,
+            "budget {budget}: latency {lat:.0} worse than looser budget {prev:.0}"
+        );
+        prev = prev.min(lat);
+    }
+}
+
+#[test]
+fn any_gbs_splitting_beats_unsplit_interferer() {
+    // Splitting is not perfectly monotone in fragment size (finer
+    // fragments arbitrate more often), but *any* splitting must beat an
+    // unsplit 256-beat interferer burst holding the endpoint.
+    let unsplit = tct_latency_with(
+        TsuConfig {
+            wb_enable: true,
+            wb_capacity_beats: 512,
+            ..TsuConfig::passthrough()
+        },
+        0,
+    );
+    for gbs in [128u32, 32, 8] {
+        let lat = tct_latency_with(
+            TsuConfig {
+                gbs_max_beats: gbs,
+                wb_enable: true,
+                wb_capacity_beats: 512,
+                ..TsuConfig::passthrough()
+            },
+            gbs as u64,
+        );
+        assert!(
+            lat < unsplit,
+            "gbs {gbs}: latency {lat:.0} not better than unsplit {unsplit:.0}"
+        );
+    }
+}
+
+#[test]
+fn larger_partition_never_hurts_partition_owner() {
+    // Direct cache-level property over random address streams.
+    let mut rng = XorShift::new(0x5EED);
+    for _ in 0..20 {
+        let working_set: Vec<u64> = (0..rng.in_range(16, 512))
+            .map(|_| rng.below(1 << 22) & !63)
+            .collect();
+        let mut prev_hits = 0u64;
+        for frac in [0.25, 0.5, 0.75] {
+            let mut llc = Dpllc::new(DpllcConfig::split(frac));
+            // Warm.
+            for &a in &working_set {
+                llc.access(a, 1, false);
+            }
+            // Interfere heavily in the other partition.
+            for i in 0..10_000u64 {
+                llc.access(i * 64, 0, false);
+            }
+            // Re-walk.
+            let before = llc.stats[1].hits;
+            for &a in &working_set {
+                llc.access(a, 1, false);
+            }
+            let hits = llc.stats[1].hits - before;
+            assert!(
+                hits + 8 >= prev_hits,
+                "partition {frac}: hits {hits} < smaller partition {prev_hits}"
+            );
+            prev_hits = prev_hits.max(hits);
+        }
+    }
+}
+
+#[test]
+fn wb_never_loses_writes_under_random_pressure() {
+    let mut rng = XorShift::new(0xCAFE);
+    for _ in 0..50 {
+        let mut tsu = Tsu::new(TsuConfig {
+            wb_enable: true,
+            wb_capacity_beats: rng.in_range(8, 64) as u32,
+            ..TsuConfig::passthrough()
+        });
+        let n = rng.in_range(1, 12);
+        let mut total = 0u64;
+        for i in 0..n {
+            let beats = rng.in_range(1, 32) as u32;
+            total += beats as u64;
+            tsu.submit(
+                Burst::write(InitiatorId(0), Target::Dcspm, i * 4096, beats),
+                0,
+            );
+        }
+        let mut out = Vec::new();
+        for now in 0..10_000 {
+            tsu.release(now, &mut out);
+        }
+        assert_eq!(out.iter().map(|b| b.beats as u64).sum::<u64>(), total);
+        assert!(out.iter().all(|b| b.wb_buffered));
+    }
+}

@@ -1,0 +1,181 @@
+//! Integration: the rust PJRT runtime loads and executes the AOT
+//! artifacts, and the numerics match host-side oracles.
+//!
+//! Requires `make artifacts` to have populated `artifacts/` — these tests
+//! are skipped (with a message) otherwise, so `cargo test` stays green on
+//! a fresh checkout.
+
+use carfield::runtime::ArtifactRuntime;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("artifacts/ missing — run `make artifacts` first; skipping");
+        None
+    }
+}
+
+/// Deterministic xorshift values in [-range, range).
+fn pseudo(n: usize, seed: u64, range: f32) -> Vec<f32> {
+    let mut s = seed | 1;
+    (0..n)
+        .map(|_| {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            ((s >> 11) as f64 / (1u64 << 53) as f64 * 2.0 - 1.0) as f32 * range
+        })
+        .collect()
+}
+
+fn quant(v: &[f32], bits: u32) -> Vec<f32> {
+    let lo = -(2f32.powi(bits as i32 - 1));
+    let hi = 2f32.powi(bits as i32 - 1) - 1.0;
+    v.iter().map(|x| x.round().clamp(lo, hi)).collect()
+}
+
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            for j in 0..n {
+                out[i * n + j] += av * b[kk * n + j];
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn int8_matmul_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::new(&dir).expect("runtime");
+    let exe = rt.load("matmul_int8").expect("load matmul_int8");
+    assert_eq!(exe.input_shapes(), &[vec![64, 64], vec![64, 64]]);
+
+    let x = pseudo(64 * 64, 0x1234, 100.0);
+    let y = pseudo(64 * 64, 0x5678, 100.0);
+    let out = exe.run_f32(&[&x, &y]).expect("execute");
+    assert_eq!(out.len(), 1);
+
+    let expect = matmul(&quant(&x, 8), &quant(&y, 8), 64, 64, 64);
+    // Integer accumulations within f32 exact range: must match bit-exactly.
+    for (i, (&got, &want)) in out[0].iter().zip(&expect).enumerate() {
+        assert_eq!(got, want, "mismatch at {i}");
+    }
+}
+
+#[test]
+fn int2_matmul_exact() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::new(&dir).expect("runtime");
+    let exe = rt.load("matmul_int2").expect("load");
+    let x = pseudo(64 * 64, 0x9999, 4.0);
+    let y = pseudo(64 * 64, 0x7777, 4.0);
+    let out = exe.run_f32(&[&x, &y]).expect("execute");
+    let expect = matmul(&quant(&x, 2), &quant(&y, 2), 64, 64, 64);
+    assert_eq!(out[0], expect);
+}
+
+#[test]
+fn fp32_matmul_close() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::new(&dir).expect("runtime");
+    let exe = rt.load("matmul_fp32").expect("load");
+    let x = pseudo(64 * 64, 0xabcd, 1.0);
+    let y = pseudo(64 * 64, 0xef01, 1.0);
+    let out = exe.run_f32(&[&x, &y]).expect("execute");
+    let expect = matmul(&x, &y, 64, 64, 64);
+    for (&got, &want) in out[0].iter().zip(&expect) {
+        assert!((got - want).abs() < 1e-3, "fp32 mismatch: {got} vs {want}");
+    }
+}
+
+#[test]
+fn qnn_mlp_runs_and_is_integral() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::new(&dir).expect("runtime");
+    let exe = rt.load("qnn_mlp").expect("load");
+    let shapes: Vec<usize> = exe.input_shapes().iter().map(|s| s.iter().product()).collect();
+    let bufs: Vec<Vec<f32>> = shapes
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| pseudo(n, 0x42 + i as u64, 8.0))
+        .collect();
+    let refs: Vec<&[f32]> = bufs.iter().map(|b| b.as_slice()).collect();
+    let out = exe.run_f32(&refs).expect("execute");
+    assert_eq!(out[0].len(), 32 * 32);
+    // Logits are integer accumulations of int8 grids.
+    for &v in &out[0] {
+        assert_eq!(v, v.round(), "logit not integral: {v}");
+        assert!(v.abs() < 1e7);
+    }
+}
+
+#[test]
+fn fft256_matches_naive_dft() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::new(&dir).expect("runtime");
+    let exe = rt.load("fft256").expect("load");
+    let n = 256usize;
+    let xr = pseudo(n, 0x1111, 1.0);
+    let xi = pseudo(n, 0x2222, 1.0);
+    let win: Vec<f32> = (0..n)
+        .map(|i| 0.5 - 0.5 * (2.0 * std::f32::consts::PI * i as f32 / n as f32).cos())
+        .collect();
+    let out = exe.run_f32(&[&xr, &xi, &win]).expect("execute");
+
+    // Naive DFT oracle in f64.
+    for k in (0..n).step_by(17) {
+        let (mut re, mut im) = (0f64, 0f64);
+        for t in 0..n {
+            let ang = -2.0 * std::f64::consts::PI * (k * t) as f64 / n as f64;
+            let (wr, wi) = (xr[t] as f64 * win[t] as f64, xi[t] as f64 * win[t] as f64);
+            re += wr * ang.cos() - wi * ang.sin();
+            im += wr * ang.sin() + wi * ang.cos();
+        }
+        let mag = (re * re + im * im).sqrt() as f32;
+        let got = out[0][k];
+        assert!(
+            (got - mag).abs() < 1e-2 * (1.0 + mag.abs()),
+            "bin {k}: got {got}, want {mag}"
+        );
+    }
+}
+
+#[test]
+fn control_step_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::new(&dir).expect("runtime");
+    let exe = rt.load("control_step").expect("load");
+    let s = 32usize;
+    let a = pseudo(s * s, 1, 0.5);
+    let b = pseudo(s * s, 2, 0.5);
+    let k = pseudo(s * s, 3, 0.5);
+    let x = pseudo(s * s, 4, 1.0);
+    let out = exe.run_f32(&[&a, &b, &k, &x]).expect("execute");
+    let u: Vec<f32> = matmul(&k, &x, s, s, s).iter().map(|v| -v).collect();
+    let ax = matmul(&a, &x, s, s, s);
+    let bu = matmul(&b, &u, s, s, s);
+    for i in 0..s * s {
+        let want = ax[i] + bu[i];
+        assert!(
+            (out[0][i] - want).abs() < 1e-3 * (1.0 + want.abs()),
+            "idx {i}: {} vs {want}",
+            out[0][i]
+        );
+    }
+}
+
+#[test]
+fn available_lists_manifest() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = ArtifactRuntime::new(&dir).expect("runtime");
+    let avail = rt.available();
+    for name in ["matmul_int8", "matmul_fp8", "qnn_mlp", "fft256", "control_step"] {
+        assert!(avail.iter().any(|a| a == name), "missing {name}");
+    }
+}

@@ -1,0 +1,217 @@
+//! Cross-module integration: whole-SoC flows that span the secure
+//! domain, the coordinator, the clusters and the memory system.
+
+use carfield::coordinator::task::Criticality;
+use carfield::coordinator::{IsolationPolicy, McTask, Scenario, Scheduler, Workload};
+use carfield::soc::amr::{AmrCluster, AmrMode, AmrTask, IntPrecision};
+use carfield::soc::axi::{InitiatorId, Target, TargetModel};
+use carfield::soc::dma::{DmaEngine, DmaJob};
+use carfield::soc::hostd::{HostCore, TctSpec};
+use carfield::soc::mem::Dcspm;
+use carfield::soc::secd::SecureDomain;
+use carfield::soc::tsu::TsuConfig;
+use carfield::soc::vector::FpFormat;
+use carfield::soc::SocSim;
+
+#[test]
+fn boot_then_schedule() {
+    // The coordinator must not place tasks before the HWRoT releases the
+    // cores; model that ordering explicitly.
+    let mut sd = SecureDomain::new();
+    let mut now = 0u64;
+    while !sd.booted() {
+        sd.tick(now);
+        now += 1;
+    }
+    assert!(now > 10_000, "boot chain is non-trivial: {now}");
+    // After boot, a normal scenario runs to completion.
+    let s = Scenario::new("post-boot", IsolationPolicy::NoIsolation).with_task(McTask::new(
+        "tct",
+        Criticality::Hard,
+        Workload::HostTct(TctSpec {
+            accesses: 64,
+            iterations: 2,
+            ..TctSpec::fig6a()
+        }),
+    ));
+    let r = Scheduler::run(&s);
+    assert!(r.task("tct").mean_latency > 0.0);
+}
+
+#[test]
+fn amr_task_under_host_and_dma_crossfire() {
+    // Three-initiator SoC: AMR tiles from DCSPM, host TCT on HyperRAM,
+    // DMA copying between both — everything completes, nothing deadlocks.
+    let mut soc = SocSim::new(3, SocSim::carfield_targets());
+    let mut amr = AmrCluster::new(InitiatorId(0));
+    amr.mode = AmrMode::Dlm;
+    amr.submit(
+        AmrTask {
+            precision: IntPrecision::Int4,
+            m: 64,
+            k: 64,
+            n: 64,
+            tile: 16,
+            src_base: 0,
+            dst_base: 0x2_0000,
+            part_id: 0,
+        },
+        0,
+    );
+    soc.attach(Box::new(amr), TsuConfig::wb_only());
+    soc.attach(
+        Box::new(HostCore::new(
+            InitiatorId(1),
+            TctSpec {
+                accesses: 128,
+                iterations: 2,
+                ..TctSpec::fig6a()
+            },
+        )),
+        TsuConfig::wb_only(),
+    );
+    let mut dma = DmaEngine::new(InitiatorId(2));
+    dma.program(DmaJob {
+        src: Target::Hyperram,
+        src_addr: 0x40_0000,
+        dst: Some(Target::Dcspm),
+        dst_addr: 0x4_0000,
+        bytes: 64 * 1024,
+        chunk_beats: 64,
+        outstanding: 2,
+        looping: false,
+        part_id: 0,
+    });
+    soc.attach(Box::new(dma), TsuConfig::regulated(8, 16, 256));
+    assert!(soc.run_until_done(100_000_000), "crossfire deadlocked");
+    let amr: &mut AmrCluster = soc.initiator_mut(InitiatorId(0));
+    assert_eq!(amr.stats.tiles_done, 64);
+    let host: &mut HostCore = soc.initiator_mut(InitiatorId(1));
+    assert_eq!(host.iteration_latency.len(), 2);
+    let dma: &mut DmaEngine = soc.initiator_mut(InitiatorId(2));
+    assert_eq!(dma.stats.bytes_moved, 64 * 1024);
+}
+
+#[test]
+fn tsu_reconfiguration_mid_run_takes_effect() {
+    // Start unregulated, reprogram the DMA's TSU mid-flight, observe its
+    // bandwidth collapse to the TRU budget — the coordinator's core move,
+    // applied live without stopping the SoC.
+    let mut soc = SocSim::new(1, SocSim::carfield_targets());
+    let mut dma = DmaEngine::new(InitiatorId(0));
+    dma.program(DmaJob::interferer());
+    soc.attach(Box::new(dma), TsuConfig::passthrough());
+
+    const PHASE: u64 = 1_000_000;
+    soc.run_cycles(PHASE);
+    let unregulated_bytes = {
+        let d: &mut DmaEngine = soc.initiator_mut(InitiatorId(0));
+        d.stats.bytes_moved
+    };
+    assert!(unregulated_bytes > 100_000, "interferer barely ran");
+
+    soc.reconfigure_tsu(InitiatorId(0), TsuConfig::regulated(8, 16, 512));
+    soc.run_cycles(PHASE);
+    let regulated_bytes = {
+        let d: &mut DmaEngine = soc.initiator_mut(InitiatorId(0));
+        d.stats.bytes_moved - unregulated_bytes
+    };
+    // TRU allows 16 beats / 512 cycles = 128 B / 512 cyc -> 250KB/Mcyc
+    // upper bound; must be far below the unregulated rate.
+    assert!(
+        regulated_bytes < unregulated_bytes / 3,
+        "reconfig had no effect: {unregulated_bytes} then {regulated_bytes}"
+    );
+    assert!(regulated_bytes > 0, "regulation must not starve the NCT");
+    // The TRU stall counter proves the shaper, not the memory, is the
+    // bottleneck now.
+    assert!(soc.tsu_stats(InitiatorId(0)).tru_stall_cycles > 0);
+}
+
+#[test]
+fn dpllc_flush_preserves_other_partition() {
+    use carfield::soc::mem::dpllc::{Access, Dpllc, DpllcConfig};
+    let mut llc = Dpllc::new(DpllcConfig::split(0.5));
+    for i in 0..128u64 {
+        llc.access(i * 64, 1, true);
+        llc.access(i * 64, 0, false);
+    }
+    let wb = llc.flush_partition(1);
+    assert!(wb > 0);
+    for i in 0..128u64 {
+        assert_eq!(llc.access(i * 64, 0, false), Access::Hit, "part 0 damaged");
+    }
+}
+
+#[test]
+fn full_mixed_scenario_deadlines_under_private_paths() {
+    let s = Scenario::new("mcs", IsolationPolicy::PrivatePaths)
+        .with_task(
+            McTask::new(
+                "qnn",
+                Criticality::Safety,
+                Workload::AmrMatMul {
+                    precision: IntPrecision::Int8,
+                    m: 64,
+                    k: 64,
+                    n: 64,
+                    tile: 8,
+                },
+            )
+            .with_deadline(200_000),
+        )
+        .with_task(McTask::new(
+            "stream",
+            Criticality::BestEffort,
+            Workload::VectorMatMul {
+                format: FpFormat::Fp16,
+                m: 128,
+                k: 128,
+                n: 128,
+                tile: 32,
+            },
+        ));
+    let r = Scheduler::run(&s);
+    assert!(r.all_deadlines_met(), "{}", r.to_markdown());
+    // Both clusters produced work.
+    assert!(r.task("qnn").extra_value("mac_per_cyc").unwrap() > 0.0);
+    assert!(r.task("stream").extra_value("flop_per_cyc").unwrap() > 0.0);
+}
+
+#[test]
+fn dcspm_private_paths_run_concurrently() {
+    // Two clusters in disjoint contiguous halves complete without
+    // deadlock and in about the time a single one needs.
+    let mut soc = SocSim::new(2, vec![Box::new(Dcspm::new()) as Box<dyn TargetModel>]);
+    let mk = |id: u8, base: u64| {
+        let mut c = AmrCluster::new(InitiatorId(id));
+        c.submit(
+            AmrTask {
+                precision: IntPrecision::Int8,
+                m: 32,
+                k: 32,
+                n: 32,
+                tile: 16,
+                src_base: base,
+                dst_base: base + (1 << 16),
+                part_id: 0,
+            },
+            0,
+        );
+        c
+    };
+    use carfield::soc::mem::dcspm::CONTIG_ALIAS_BIT;
+    soc.attach(Box::new(mk(0, CONTIG_ALIAS_BIT)), TsuConfig::wb_only());
+    soc.attach(
+        Box::new(mk(1, CONTIG_ALIAS_BIT | (1 << 19))),
+        TsuConfig::wb_only(),
+    );
+    assert!(soc.run_until_done(10_000_000));
+    let a: &mut AmrCluster = soc.initiator_mut(InitiatorId(0));
+    let fa = a.stats.finished_at;
+    let b: &mut AmrCluster = soc.initiator_mut(InitiatorId(1));
+    let fb = b.stats.finished_at;
+    // Near-simultaneous completion: private paths, no serialization.
+    let diff = fa.abs_diff(fb);
+    assert!(diff < 40, "fa={fa} fb={fb}");
+}
