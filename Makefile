@@ -1,0 +1,27 @@
+# Carfield-sim top-level targets.
+#
+# `bench` is the perf-trajectory hook: it runs the hot-path bench and
+# records machine-readable results in BENCH_perf_hotpath.json at the
+# repo root, so simulator throughput (Mcyc/s) is tracked from PR to PR.
+
+RUST_DIR := rust
+
+.PHONY: build test bench artifacts python-test
+
+build:
+	cd $(RUST_DIR) && cargo build --release
+
+test:
+	cd $(RUST_DIR) && cargo test -q
+
+bench:
+	cd $(RUST_DIR) && CARFIELD_BENCH_JSON=$(abspath BENCH_perf_hotpath.json) \
+		cargo bench --bench perf_hotpath
+
+# AOT-lower the JAX/Pallas kernels to HLO text artifacts consumed by the
+# rust PJRT runtime (requires the python toolchain).
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../$(RUST_DIR)/artifacts
+
+python-test:
+	cd python && python3 -m pytest -q tests

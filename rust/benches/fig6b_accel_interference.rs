@@ -1,12 +1,13 @@
 //! Bench: regenerate paper Fig. 6b (AMR TCT vs vector NCT on shared
-//! AXI + DCSPM, four isolation regimes).
+//! AXI + DCSPM, four isolation regimes). The five-scenario grid runs
+//! event-driven and fans out across threads.
 
 use carfield::experiments::fig6b;
 use carfield::util::bench::BenchRunner;
 
 fn main() {
     let mut b = BenchRunner::new("fig6b_accel_interference");
-    let result = b.time("fig6b four regimes", 1, fig6b::run);
+    let (result, dt) = b.time_with_mean("fig6b four regimes", 1, fig6b::run);
     fig6b::print(&result);
     let e2 = &result.regimes[1];
     let e3 = &result.regimes[2];
@@ -18,5 +19,10 @@ fn main() {
     );
     b.metric("R-E3 % of isolated (paper 95%)", e3.amr_pct_of_isolated, "%");
     b.metric("R-E4 % of isolated (paper 100%)", e4.amr_pct_of_isolated, "%");
+    b.metric(
+        "simulated throughput",
+        result.sim_cycles as f64 / dt / 1e6,
+        "Mcyc/s",
+    );
     b.finish();
 }

@@ -5,7 +5,10 @@ use crate::soc::clock::Cycle;
 use super::task::Criticality;
 
 /// Outcome of one task in a scenario run.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is bit-exact (f64 included): the equivalence tests assert
+/// that event-driven and naive stepping produce *identical* reports.
+#[derive(Debug, Clone, PartialEq)]
 pub struct TaskReport {
     pub name: String,
     pub kind: &'static str,
@@ -32,7 +35,7 @@ impl TaskReport {
 }
 
 /// Aggregated result of a scenario.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ScenarioReport {
     pub scenario: String,
     pub policy: String,

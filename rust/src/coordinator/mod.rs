@@ -11,11 +11,14 @@
 //!   concrete TSU/DPLLC/DCSPM/AMR configurations;
 //! - [`scheduler`]: admission, placement, scenario assembly and
 //!   execution on the `SocSim` substrate;
-//! - [`metrics`]: per-task reports and experiment tables.
+//! - [`metrics`]: per-task reports and experiment tables;
+//! - [`sweep`]: parallel execution of independent scenario grids across
+//!   OS threads (the experiment figures are embarrassingly parallel).
 
 pub mod metrics;
 pub mod policy;
 pub mod scheduler;
+pub mod sweep;
 pub mod task;
 
 pub use metrics::{ScenarioReport, TaskReport};

@@ -62,8 +62,20 @@ impl Scheduler {
         ]
     }
 
-    /// Execute the scenario; returns per-task reports.
+    /// Execute the scenario; returns per-task reports. Runs on the
+    /// event-driven fast path (bit-identical to naive stepping; see
+    /// `tests/event_driven_equivalence.rs`).
     pub fn run(scenario: &Scenario) -> ScenarioReport {
+        Self::execute(scenario, true)
+    }
+
+    /// Naive cycle-by-cycle reference executor, kept for the equivalence
+    /// tests and for debugging suspected fast-path divergence.
+    pub fn run_naive(scenario: &Scenario) -> ScenarioReport {
+        Self::execute(scenario, false)
+    }
+
+    fn execute(scenario: &Scenario, event_driven: bool) -> ScenarioReport {
         let policy = scenario.policy;
         let cfg = policy.resource_config();
         let mut soc = SocSim::new(scenario.tasks.len(), Self::targets(policy));
@@ -159,13 +171,12 @@ impl Scheduler {
             }
         }
 
-        // Run until all measured tasks drain.
-        while soc.now < scenario.max_cycles {
-            if measured.iter().all(|&id| soc.finished(id)) {
-                break;
-            }
-            soc.step();
-        }
+        // Run until all measured tasks drain (endless interferers keep
+        // running); the shared loop suppresses skips at the drain edge
+        // so the reported cycle count matches naive stepping exactly.
+        soc.run_until(scenario.max_cycles, event_driven, |soc| {
+            measured.iter().all(|&id| soc.finished(id))
+        });
         let cycles = soc.now;
 
         // Harvest reports.

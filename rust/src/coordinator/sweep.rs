@@ -1,0 +1,125 @@
+//! Parallel scenario sweeps.
+//!
+//! The paper's evaluation is a grid of *independent* scenario runs
+//! (Fig. 3c/5/6a/6b): each scenario owns its `SocSim` and is fully
+//! deterministic, so the grid is embarrassingly parallel. This module
+//! fans a work list out over `std::thread::scope` workers (no external
+//! dependencies) while preserving input order in the results — a
+//! parallel sweep returns exactly what the serial sweep would.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+use super::metrics::ScenarioReport;
+use super::scheduler::{Scenario, Scheduler};
+
+/// Worker count to saturate this host (>= 1).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Apply `f` to every item on up to `threads` OS threads, returning the
+/// results in input order. Work is claimed from a shared atomic cursor,
+/// so long and short items balance across workers. With `threads <= 1`
+/// (or a single item) this degenerates to a plain serial map — the
+/// baseline the bench compares against.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    let threads = threads.clamp(1, n.max(1));
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return items.iter().map(|item| f(item)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                if tx.send((i, f(&items[i]))).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx); // scope joins the workers; rx then drains fully
+    });
+    let mut slots: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        slots[i] = Some(r);
+    }
+    slots
+        .into_iter()
+        .map(|r| r.expect("every item produced a result"))
+        .collect()
+}
+
+/// Run independent scenarios across threads (order-preserving). Each
+/// scenario is deterministic, so `run_scenarios(g, 1)` and
+/// `run_scenarios(g, n)` return identical reports — only wall-clock
+/// changes.
+pub fn run_scenarios(scenarios: &[Scenario], threads: usize) -> Vec<ScenarioReport> {
+    parallel_map(scenarios, threads, Scheduler::run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::Criticality;
+    use crate::coordinator::{IsolationPolicy, McTask, Workload};
+    use crate::soc::hostd::TctSpec;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..23).collect();
+        let serial = parallel_map(&items, 1, |&x| x * x);
+        let parallel = parallel_map(&items, 4, |&x| x * x);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial[7], 49);
+    }
+
+    #[test]
+    fn parallel_map_handles_empty_and_single() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(&empty, 8, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[5u32], 8, |&x| x + 1), vec![6]);
+    }
+
+    #[test]
+    fn scenario_sweep_matches_serial() {
+        let grid: Vec<Scenario> = (0..3)
+            .map(|i| {
+                Scenario::new(&format!("s{i}"), IsolationPolicy::NoIsolation).with_task(
+                    McTask::new(
+                        "tct",
+                        Criticality::Hard,
+                        Workload::HostTct(TctSpec {
+                            accesses: 32 + 16 * i,
+                            iterations: 2,
+                            ..TctSpec::fig6a()
+                        }),
+                    ),
+                )
+            })
+            .collect();
+        let serial = run_scenarios(&grid, 1);
+        let parallel = run_scenarios(&grid, 3);
+        assert_eq!(serial, parallel);
+        assert_eq!(serial.len(), 3);
+        assert!(serial[0].task("tct").mean_latency > 0.0);
+    }
+}

@@ -42,6 +42,8 @@ pub struct Fig3cResult {
     pub switch_matrix: Vec<(AmrMode, AmrMode, u64)>,
     pub modes: Vec<ModeRow>,
     pub recovery: Vec<RecoveryRow>,
+    /// Total simulated cycles across all runs (bench throughput metric).
+    pub sim_cycles: u64,
 }
 
 fn bench_task() -> AmrTask {
@@ -70,8 +72,11 @@ fn run_mode(mode: AmrMode, recovery: Recovery, fault_rate: f64) -> crate::soc::a
     c.stats
 }
 
-/// Run the full Fig. 3c reproduction.
+/// Run the full Fig. 3c reproduction. The seven simulator runs behind
+/// the mode and recovery tables are independent, so they fan out across
+/// threads (results are identical to the serial sweep).
 pub fn run() -> Fig3cResult {
+    use crate::coordinator::sweep;
     use AmrMode::*;
     // (a) switch matrix.
     let mut switch_matrix = Vec::new();
@@ -82,19 +87,20 @@ pub fn run() -> Fig3cResult {
             }
         }
     }
+    let threads = sweep::default_threads();
     // (b) per-mode throughput on the 8b MatMul.
-    let base = run_mode(Indip, Recovery::Hfr, 0.0);
-    let base_rate = base.effective_mac_per_cyc(0);
+    let mode_list = [Indip, Dlm, Tlm];
+    let mode_stats = sweep::parallel_map(&mode_list, threads, |&mode| {
+        run_mode(mode, Recovery::Hfr, 0.0)
+    });
+    let base_rate = mode_stats[0].effective_mac_per_cyc(0);
+    let mut sim_cycles = 0;
     let mut modes = Vec::new();
-    for mode in [Indip, Dlm, Tlm] {
-        let stats = if mode == Indip {
-            base
-        } else {
-            run_mode(mode, Recovery::Hfr, 0.0)
-        };
+    for (mode, stats) in mode_list.iter().zip(&mode_stats) {
         let rate = stats.effective_mac_per_cyc(0);
+        sim_cycles += stats.finished_at;
         modes.push(ModeRow {
-            mode,
+            mode: *mode,
             mac_per_cyc_8b: rate,
             penalty_vs_indip: base_rate / rate,
             makespan: stats.finished_at,
@@ -102,8 +108,7 @@ pub fn run() -> Fig3cResult {
     }
     // (c) recovery comparison under a fixed fault rate.
     let rate = 0.5;
-    let mut recovery = Vec::new();
-    for (label, mode, rec, per_fault) in [
+    let configs = [
         ("DLM + HFR", Dlm, Recovery::Hfr, HFR_RESTORE_CYCLES),
         ("TLM + HFR", Tlm, Recovery::Hfr, HFR_RESTORE_CYCLES),
         ("TLM + SW recovery", Tlm, Recovery::Software, SW_RECOVERY_CYCLES),
@@ -113,8 +118,12 @@ pub fn run() -> Fig3cResult {
             Recovery::RebootOnly,
             crate::soc::amr::REBOOT_CYCLES,
         ),
-    ] {
-        let stats = run_mode(mode, rec, rate);
+    ];
+    let recovery_stats =
+        sweep::parallel_map(&configs, threads, |&(_, mode, rec, _)| run_mode(mode, rec, rate));
+    let mut recovery = Vec::new();
+    for (&(label, mode, rec, per_fault), stats) in configs.iter().zip(&recovery_stats) {
+        sim_cycles += stats.finished_at;
         recovery.push(RecoveryRow {
             label,
             mode,
@@ -128,6 +137,7 @@ pub fn run() -> Fig3cResult {
         switch_matrix,
         modes,
         recovery,
+        sim_cycles,
     }
 }
 

@@ -48,42 +48,49 @@ pub fn voltages() -> Vec<f64> {
     (0..=10).map(|i| 0.6 + i as f64 * 0.05).collect()
 }
 
+/// One grid point: both clusters evaluated at voltage `v`.
+fn point(v: f64, amr_curve: &DvfsCurve, vec_curve: &DvfsCurve) -> (AmrPoint, VectorPoint) {
+    let amr = AmrPoint {
+        v,
+        freq_mhz: amr_curve.freq_mhz(v),
+        power_mw: amr_curve.power_at_v(v, 1.0),
+        gops_indip: IntPrecision::ALL
+            .iter()
+            .map(|&p| AmrCluster::peak_gops(p, AmrMode::Indip, v))
+            .collect(),
+        gops_dlm: IntPrecision::ALL
+            .iter()
+            .map(|&p| AmrCluster::peak_gops(p, AmrMode::Dlm, v))
+            .collect(),
+        eff_2b_indip: AmrCluster::efficiency_gops_w(IntPrecision::Int2, AmrMode::Indip, v),
+        eff_2b_dlm: AmrCluster::efficiency_gops_w(IntPrecision::Int2, AmrMode::Dlm, v),
+    };
+    let vector = VectorPoint {
+        v,
+        freq_mhz: vec_curve.freq_mhz(v),
+        power_mw: vec_curve.power_at_v(v, 1.0),
+        gflops: FpFormat::ALL
+            .iter()
+            .map(|&f| VectorCluster::peak_gflops(f, v))
+            .collect(),
+        fft_gflops_fp32: VectorCluster::peak_gflops(FpFormat::Fp32, v)
+            * crate::soc::vector::FFT_UTIL,
+        eff_fp8: VectorCluster::efficiency_gflops_w(FpFormat::Fp8, v),
+    };
+    (amr, vector)
+}
+
 pub fn run() -> Fig5Result {
+    use crate::coordinator::sweep;
     let amr_curve = DvfsCurve::amr();
     let vec_curve = DvfsCurve::vector();
-    let mut amr = Vec::new();
-    let mut vector = Vec::new();
-    for v in voltages() {
-        let p_amr = amr_curve.power_at_v(v, 1.0);
-        amr.push(AmrPoint {
-            v,
-            freq_mhz: amr_curve.freq_mhz(v),
-            power_mw: p_amr,
-            gops_indip: IntPrecision::ALL
-                .iter()
-                .map(|&p| AmrCluster::peak_gops(p, AmrMode::Indip, v))
-                .collect(),
-            gops_dlm: IntPrecision::ALL
-                .iter()
-                .map(|&p| AmrCluster::peak_gops(p, AmrMode::Dlm, v))
-                .collect(),
-            eff_2b_indip: AmrCluster::efficiency_gops_w(IntPrecision::Int2, AmrMode::Indip, v),
-            eff_2b_dlm: AmrCluster::efficiency_gops_w(IntPrecision::Int2, AmrMode::Dlm, v),
-        });
-        let p_vec = vec_curve.power_at_v(v, 1.0);
-        vector.push(VectorPoint {
-            v,
-            freq_mhz: vec_curve.freq_mhz(v),
-            power_mw: p_vec,
-            gflops: FpFormat::ALL
-                .iter()
-                .map(|&f| VectorCluster::peak_gflops(f, v))
-                .collect(),
-            fft_gflops_fp32: VectorCluster::peak_gflops(FpFormat::Fp32, v)
-                * crate::soc::vector::FFT_UTIL,
-            eff_fp8: VectorCluster::efficiency_gflops_w(FpFormat::Fp8, v),
-        });
-    }
+    // The grid is independent points like the other figures, but each
+    // point is a handful of closed-form float ops — thread fan-out would
+    // cost more than the work, so this sweep stays on the serial path
+    // (threads = 1 short-circuits to a plain in-order map).
+    let vs = voltages();
+    let points = sweep::parallel_map(&vs, 1, |&v| point(v, &amr_curve, &vec_curve));
+    let (amr, vector): (Vec<AmrPoint>, Vec<VectorPoint>) = points.into_iter().unzip();
     Fig5Result { amr, vector }
 }
 

@@ -8,8 +8,9 @@
 //!   performance;
 //! - the TSU write buffer adds at most 1 cycle.
 
-use crate::coordinator::{IsolationPolicy, McTask, Scenario, Scheduler, Workload};
 use crate::coordinator::task::Criticality;
+use crate::coordinator::{sweep, IsolationPolicy, McTask, Scenario, Workload};
+use crate::soc::clock::Cycle;
 use crate::soc::dma::DmaJob;
 use crate::soc::hostd::TctSpec;
 
@@ -30,6 +31,9 @@ pub struct Fig6aResult {
     pub regimes: Vec<Regime>,
     /// (partition %, latency, % of isolated performance).
     pub partition_sweep: Vec<(u8, f64, f64)>,
+    /// Total simulated cycles across the whole grid (throughput metric
+    /// for the bench drivers: simulated Mcyc per wall-clock second).
+    pub sim_cycles: Cycle,
 }
 
 fn tct() -> McTask {
@@ -48,24 +52,59 @@ fn dma() -> McTask {
     )
 }
 
-fn run_regime(name: &str, policy: IsolationPolicy, with_dma: bool) -> (f64, f64, f64) {
-    let mut s = Scenario::new(name, policy).with_task(tct());
-    if with_dma {
-        s = s.with_task(dma());
+/// DPLLC partition points swept by the figure.
+pub const PARTITION_POINTS: [u8; 4] = [12, 25, 50, 75];
+
+/// The figure's full scenario grid, in fixed order: isolated,
+/// unregulated, TSU-regulated, then one TSU+partition scenario per
+/// partition point. Exposed so the sweep bench and the equivalence tests
+/// can run exactly the grid the figure runs.
+pub fn scenario_grid() -> Vec<Scenario> {
+    let mut grid = vec![
+        Scenario::new("isolated", IsolationPolicy::NoIsolation).with_task(tct()),
+        Scenario::new("unregulated", IsolationPolicy::NoIsolation)
+            .with_task(tct())
+            .with_task(dma()),
+        Scenario::new("tsu-regulated", IsolationPolicy::TsuRegulation)
+            .with_task(tct())
+            .with_task(dma()),
+    ];
+    for pct in PARTITION_POINTS {
+        grid.push(
+            Scenario::new(
+                &format!("tsu+partition-{pct}"),
+                IsolationPolicy::TsuPlusLlcPartition {
+                    tct_fraction_percent: pct,
+                },
+            )
+            .with_task(tct())
+            .with_task(dma()),
+        );
     }
-    let r = Scheduler::run(&s);
-    let t = r.task("tct");
-    (
-        t.mean_latency,
-        t.jitter,
-        t.extra_value("l1_misses").unwrap_or(0.0),
-    )
+    grid
 }
 
 pub fn run() -> Fig6aResult {
-    let (iso, iso_j, iso_m) = run_regime("isolated", IsolationPolicy::NoIsolation, false);
-    let (unreg, unreg_j, unreg_m) = run_regime("unregulated", IsolationPolicy::NoIsolation, true);
-    let (reg, reg_j, reg_m) = run_regime("tsu-regulated", IsolationPolicy::TsuRegulation, true);
+    run_with_threads(sweep::default_threads())
+}
+
+/// Run the whole grid, fanning the independent scenarios across up to
+/// `threads` workers. Results are identical for any thread count.
+pub fn run_with_threads(threads: usize) -> Fig6aResult {
+    let grid = scenario_grid();
+    let reports = sweep::run_scenarios(&grid, threads);
+    let sim_cycles = reports.iter().map(|r| r.cycles).sum();
+    let pick = |idx: usize| {
+        let t = reports[idx].task("tct");
+        (
+            t.mean_latency,
+            t.jitter,
+            t.extra_value("l1_misses").unwrap_or(0.0),
+        )
+    };
+    let (iso, iso_j, iso_m) = pick(0);
+    let (unreg, unreg_j, unreg_m) = pick(1);
+    let (reg, reg_j, reg_m) = pick(2);
     let mut regimes = vec![
         Regime {
             label: "isolated (no interference)".into(),
@@ -90,14 +129,8 @@ pub fn run() -> Fig6aResult {
         },
     ];
     let mut partition_sweep = Vec::new();
-    for pct in [12u8, 25, 50, 75] {
-        let (lat, j, m) = run_regime(
-            "tsu+partition",
-            IsolationPolicy::TsuPlusLlcPartition {
-                tct_fraction_percent: pct,
-            },
-            true,
-        );
+    for (k, &pct) in PARTITION_POINTS.iter().enumerate() {
+        let (lat, j, m) = pick(3 + k);
         partition_sweep.push((pct, lat, iso / lat * 100.0));
         if pct == 50 {
             regimes.push(Regime {
@@ -112,6 +145,7 @@ pub fn run() -> Fig6aResult {
     Fig6aResult {
         regimes,
         partition_sweep,
+        sim_cycles,
     }
 }
 

@@ -9,8 +9,9 @@
 //!   zero overhead.
 
 use crate::coordinator::task::Criticality;
-use crate::coordinator::{IsolationPolicy, McTask, Scenario, Scheduler, Workload};
+use crate::coordinator::{sweep, IsolationPolicy, McTask, Scenario, Workload};
 use crate::soc::amr::IntPrecision;
+use crate::soc::clock::Cycle;
 use crate::soc::vector::FpFormat;
 
 #[derive(Debug, Clone)]
@@ -28,6 +29,8 @@ pub struct Regime {
 #[derive(Debug, Clone)]
 pub struct Fig6bResult {
     pub regimes: Vec<Regime>,
+    /// Total simulated cycles across the grid (bench throughput metric).
+    pub sim_cycles: Cycle,
 }
 
 /// The AMR TCT: DLM (reliable mode), low arithmetic intensity so the
@@ -61,32 +64,41 @@ fn vector_task() -> McTask {
     )
 }
 
-fn run_pair(policy: IsolationPolicy, with_vector: bool) -> (f64, f64) {
-    let mut s = Scenario::new("fig6b", policy).with_task(amr_task());
-    if with_vector {
-        s = s.with_task(vector_task());
-    }
-    let r = Scheduler::run(&s);
-    let amr = r.task("amr-tct").extra_value("mac_per_cyc").unwrap();
-    let vec = if with_vector {
-        r.task("vec-nct").extra_value("flop_per_cyc").unwrap()
-    } else {
-        0.0
-    };
-    (amr, vec)
+/// The figure's scenario grid, in fixed order: the two isolated
+/// baselines, then the three sharing regimes.
+pub fn scenario_grid() -> Vec<Scenario> {
+    vec![
+        Scenario::new("amr-isolated", IsolationPolicy::NoIsolation).with_task(amr_task()),
+        Scenario::new("vec-isolated", IsolationPolicy::NoIsolation).with_task(vector_task()),
+        Scenario::new("r-e2-unregulated", IsolationPolicy::NoIsolation)
+            .with_task(amr_task())
+            .with_task(vector_task()),
+        Scenario::new("r-e3-tsu", IsolationPolicy::TsuRegulation)
+            .with_task(amr_task())
+            .with_task(vector_task()),
+        Scenario::new("r-e4-private-paths", IsolationPolicy::PrivatePaths)
+            .with_task(amr_task())
+            .with_task(vector_task()),
+    ]
 }
 
 pub fn run() -> Fig6bResult {
-    let (amr_iso, _) = run_pair(IsolationPolicy::NoIsolation, false);
-    // Vector isolated baseline (for NCT degradation accounting).
-    let vec_iso = {
-        let s = Scenario::new("vec-iso", IsolationPolicy::NoIsolation).with_task(vector_task());
-        let r = Scheduler::run(&s);
-        r.task("vec-nct").extra_value("flop_per_cyc").unwrap()
-    };
-    let (amr_e2, vec_e2) = run_pair(IsolationPolicy::NoIsolation, true);
-    let (amr_e3, vec_e3) = run_pair(IsolationPolicy::TsuRegulation, true);
-    let (amr_e4, vec_e4) = run_pair(IsolationPolicy::PrivatePaths, true);
+    run_with_threads(sweep::default_threads())
+}
+
+/// Run the grid across up to `threads` workers (identical results for
+/// any thread count).
+pub fn run_with_threads(threads: usize) -> Fig6bResult {
+    let grid = scenario_grid();
+    let reports = sweep::run_scenarios(&grid, threads);
+    let sim_cycles = reports.iter().map(|r| r.cycles).sum();
+    let amr_of = |idx: usize| reports[idx].task("amr-tct").extra_value("mac_per_cyc").unwrap();
+    let vec_of = |idx: usize| reports[idx].task("vec-nct").extra_value("flop_per_cyc").unwrap();
+    let amr_iso = amr_of(0);
+    let vec_iso = vec_of(1);
+    let (amr_e2, vec_e2) = (amr_of(2), vec_of(2));
+    let (amr_e3, vec_e3) = (amr_of(3), vec_of(3));
+    let (amr_e4, vec_e4) = (amr_of(4), vec_of(4));
     let mk = |label, amr: f64, vec: f64| Regime {
         label,
         amr_mac_per_cyc: amr,
@@ -101,6 +113,7 @@ pub fn run() -> Fig6bResult {
             mk("R-E3 TSU favours AMR", amr_e3, vec_e3),
             mk("R-E4 DCSPM private paths", amr_e4, vec_e4),
         ],
+        sim_cycles,
     }
 }
 

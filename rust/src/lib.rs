@@ -13,6 +13,26 @@
 //!   to HLO text in `artifacts/`, loaded and executed at runtime through
 //!   the XLA PJRT CPU client (`runtime` module). Python is never on the
 //!   simulated request path.
+//!
+//! Execution model (two regimes, bit-identical by construction):
+//! - **Naive stepping** — `SocSim::step` ticks every initiator, TSU and
+//!   target each system cycle; the cycle-accurate reference.
+//! - **Event-driven stepping** — the default for `run_until_done`,
+//!   `Scheduler::run` and the experiment drivers. Every component
+//!   exposes `next_event(now)` (TSU release times, HyperRAM line edges,
+//!   compute-FSM completion times, ...); when the crossbar is idle,
+//!   `SocSim::step_fast` jumps `now` straight to the earliest pending
+//!   event and replays per-cycle counters through `fast_forward` hooks.
+//!   `tests/event_driven_equivalence.rs` asserts bit-identical
+//!   `ScenarioReport`s against naive stepping, and
+//!   `SocSim::validate_skips` cross-checks every skip window at runtime.
+//! - **Parallel sweeps** — `coordinator::sweep` fans independent
+//!   scenario grids (Fig. 3c/5/6a/6b) across `std::thread::scope`
+//!   workers, order-preserving and deterministic.
+//!
+//! Perf target (tracked by `make bench` → `BENCH_perf_hotpath.json`):
+//! >= 60 simulated Mcyc/s on the Fig. 6a TCT+DMA topology via the
+//! event-driven path (>= 3x the naive 20 Mcyc/s target it replaces).
 
 pub mod coordinator;
 pub mod experiments;

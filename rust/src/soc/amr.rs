@@ -355,6 +355,48 @@ impl AmrCluster {
         }
     }
 
+    /// Event-driven hook: min of the tile-DMA side (issue-ready) and the
+    /// compute FSM (switch/recovery/compute completion times). `None`
+    /// while everything waits on bus completions or the task is done.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        let mut earliest = self.streamer.as_ref().and_then(|s| s.next_event(now));
+        let engine = match self.state {
+            EngineState::Idle => {
+                if self.task.is_some()
+                    && self.streamer.as_ref().is_some_and(|s| s.ready_tiles() > 0)
+                {
+                    Some(now) // a tile is ready: compute starts this cycle
+                } else {
+                    None
+                }
+            }
+            EngineState::Switching { until, .. }
+            | EngineState::Recovering { until }
+            | EngineState::Rebooting { until }
+            | EngineState::Computing { until, .. } => Some(until.max(now)),
+        };
+        if let Some(t) = engine {
+            earliest = super::clock::merge_event(earliest, t);
+        }
+        earliest
+    }
+
+    /// Replay per-cycle accounting over a skipped window `[from, to)`:
+    /// streamer busy cycles plus the compute pipeline's data-starvation
+    /// stall counter (one per naive idle tick without a ready tile).
+    pub fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        if let Some(s) = self.streamer.as_mut() {
+            s.fast_forward(from, to);
+        }
+        if matches!(self.state, EngineState::Idle) && self.task.is_some() {
+            if let Some(s) = &self.streamer {
+                if s.ready_tiles() == 0 && !s.fetches_done() {
+                    self.stats.stall_cycles += to - from;
+                }
+            }
+        }
+    }
+
     /// One system cycle of the compute pipeline + DMA.
     pub fn tick(&mut self, now: Cycle, tsu: &mut Tsu) {
         // DMA side always advances (double buffering).
@@ -461,6 +503,12 @@ impl super::BusInitiator for AmrCluster {
     }
     fn finished(&self) -> bool {
         self.task_done()
+    }
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        AmrCluster::next_event(self, now)
+    }
+    fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        AmrCluster::fast_forward(self, from, to)
     }
     fn as_any(&mut self) -> &mut dyn std::any::Any {
         self

@@ -159,6 +159,28 @@ pub trait TargetModel {
 
     /// True if nothing is in flight (used by drain loops in tests).
     fn idle(&self) -> bool;
+
+    /// Event-driven hook: the earliest cycle `>= now` at which ticking
+    /// this target has an *observable* effect (a completion, a service
+    /// transition), assuming no new burst is granted in between; `None`
+    /// when the target is drained and dormant.
+    ///
+    /// Contract: every tick in `now..event` must either be a no-op or
+    /// have its per-cycle effects exactly reproduced by
+    /// [`TargetModel::fast_forward`] over the same window. The default is
+    /// maximally conservative (an event every cycle), which disables
+    /// cycle skipping for targets that do not opt in.
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        Some(now)
+    }
+
+    /// Account for a skipped quiescent window `[from, to)`: replay any
+    /// per-cycle bookkeeping (beats served, busy counters) a naive
+    /// cycle-by-cycle run would have accumulated. Must leave the target
+    /// in exactly the state a naive run would reach at `to`.
+    fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        let _ = (from, to);
+    }
 }
 
 #[cfg(test)]

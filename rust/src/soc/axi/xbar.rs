@@ -20,6 +20,10 @@ struct InputQueue {
 /// The crossbar fabric: N initiator queues in front of M target models.
 pub struct Crossbar {
     queues: Vec<InputQueue>,
+    /// Total bursts across all input queues, maintained on push/pop so
+    /// the per-cycle idle check is O(1) instead of re-scanning every
+    /// queue (hot-loop bookkeeping for the fast path below).
+    queued: usize,
     /// Round-robin pointer per target (indexed by target order).
     rr: Vec<usize>,
     targets: Vec<Box<dyn TargetModel>>,
@@ -44,6 +48,7 @@ impl Crossbar {
         let n_targets = targets.len();
         Self {
             queues: (0..n_initiators).map(|_| InputQueue::default()).collect(),
+            queued: 0,
             rr: vec![0; n_targets],
             targets,
             completions: Vec::new(),
@@ -57,6 +62,12 @@ impl Crossbar {
     /// Enqueue a shaped burst from an initiator's TSU.
     pub fn push(&mut self, burst: Burst) {
         self.queues[burst.initiator.0 as usize].fifo.push_back(burst);
+        self.queued += 1;
+    }
+
+    /// Bursts waiting across all input queues (O(1)).
+    pub fn queued_bursts(&self) -> usize {
+        self.queued
     }
 
     /// Number of bursts waiting for an initiator (TSU backpressure).
@@ -86,8 +97,9 @@ impl Crossbar {
         let n_init = self.queues.len();
         // Fast path: nothing queued anywhere — skip the grant scan and
         // only advance the targets (hot-loop optimization; see
-        // EXPERIMENTS.md §Perf).
-        if self.queues.iter().all(|q| q.fifo.is_empty()) {
+        // EXPERIMENTS.md §Perf). The queued-burst counter makes this an
+        // O(1) check instead of an O(n_initiators) scan per cycle.
+        if self.queued == 0 {
             for target in self.targets.iter_mut() {
                 target.tick(now, &mut self.completions);
             }
@@ -119,6 +131,7 @@ impl Crossbar {
                         continue;
                     }
                     let burst = self.queues[i].fifo.pop_front().unwrap();
+                    self.queued -= 1;
                     self.granted_beats[i] += burst.beats as u64;
                     let holds_w = burst.write && !burst.wb_buffered;
                     let beats = burst.beats as Cycle;
@@ -148,8 +161,34 @@ impl Crossbar {
 
     /// True when all queues and targets are empty/idle.
     pub fn idle(&self) -> bool {
-        self.queues.iter().all(|q| q.fifo.is_empty())
-            && self.targets.iter().all(|t| t.idle())
+        self.queued == 0 && self.targets.iter().all(|t| t.idle())
+    }
+
+    /// Earliest pending event across the fabric: `Some(now)` while any
+    /// burst is queued (the grant scan must run every cycle), otherwise
+    /// the minimum of the targets' own next events. `None` when queues
+    /// and targets are all dormant.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        if self.queued > 0 {
+            return Some(now);
+        }
+        let mut earliest: Option<Cycle> = None;
+        for target in &self.targets {
+            if let Some(t) = target.next_event(now) {
+                earliest = crate::soc::clock::merge_event(earliest, t);
+                if t <= now {
+                    break; // cannot get earlier than "this cycle"
+                }
+            }
+        }
+        earliest
+    }
+
+    /// Replay a skipped quiescent window on every target model.
+    pub fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        for target in self.targets.iter_mut() {
+            target.fast_forward(from, to);
+        }
     }
 }
 

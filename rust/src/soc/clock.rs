@@ -10,6 +10,15 @@
 /// Simulation time in system-clock cycles.
 pub type Cycle = u64;
 
+/// Merge a pending event time into an accumulator, keeping the earliest
+/// (shared by the event-driven `next_event` implementations).
+pub fn merge_event(earliest: Option<Cycle>, t: Cycle) -> Option<Cycle> {
+    Some(match earliest {
+        None => t,
+        Some(e) => e.min(t),
+    })
+}
+
 /// The three PLL-driven clock domains (paper Fig. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Domain {
@@ -98,6 +107,13 @@ impl ClockTree {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn merge_event_keeps_earliest() {
+        assert_eq!(merge_event(None, 7), Some(7));
+        assert_eq!(merge_event(Some(3), 7), Some(3));
+        assert_eq!(merge_event(Some(9), 7), Some(7));
+    }
 
     #[test]
     fn ns_round_trip() {

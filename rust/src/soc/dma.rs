@@ -139,6 +139,28 @@ impl DmaEngine {
         job.chunk_beats.min(beats_left)
     }
 
+    /// Event-driven hook: `Some(now)` while the engine can issue a new
+    /// chunk this cycle (pipeline not full, bytes left); `None` while it
+    /// is drained or waiting on completions to free pipeline slots.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        let job = self.job.as_ref()?;
+        if (self.in_flight.len() as u32) < job.outstanding
+            && (self.next_offset < job.bytes || job.looping)
+        {
+            return Some(now);
+        }
+        None
+    }
+
+    /// Replay per-cycle busy accounting over a skipped window `[from,
+    /// to)`: a naive run ticks every cycle and counts one busy cycle per
+    /// tick with transfers outstanding.
+    pub fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        if self.job.is_some() && !self.in_flight.is_empty() {
+            self.stats.busy_cycles += to - from;
+        }
+    }
+
     /// Issue work into this engine's TSU; call once per cycle.
     pub fn tick(&mut self, now: Cycle, tsu: &mut Tsu) {
         let Some(job) = self.job.clone() else {

@@ -114,6 +114,16 @@ impl HostCore {
         self.state == State::Done
     }
 
+    /// Event-driven hook: the cycle the core next does anything on its
+    /// own. While waiting on a line fill it is woken by the completion
+    /// (`None`); while thinking it acts exactly at `until`.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        match self.state {
+            State::Done | State::WaitingBus => None,
+            State::Thinking { until } => Some(until.max(now)),
+        }
+    }
+
     fn current_addr(&self) -> u64 {
         self.spec.base + self.access_idx as u64 * self.spec.stride
     }

@@ -159,6 +159,35 @@ impl TargetModel for Dcspm {
     fn idle(&self) -> bool {
         self.ports.iter().all(|p| p.is_none())
     }
+
+    /// With a single busy port there is no bank contention: service is
+    /// exactly one beat per cycle and the completion tick is knowable, so
+    /// the window up to it can be skipped (beats are replayed by
+    /// `fast_forward`). With both ports busy, conflicts depend on
+    /// per-cycle bank positions — stay cycle-accurate.
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        let mut busy = self.ports.iter().flatten();
+        let first = busy.next()?;
+        if busy.next().is_some() {
+            return Some(now); // two streams: possible bank conflicts
+        }
+        let remaining = (first.burst.beats - first.beats_done) as Cycle;
+        Some(now + remaining - 1)
+    }
+
+    /// Replay the beats a naive run would have served in `[from, to)`.
+    /// Only reachable with at most one busy port (see `next_event`), so
+    /// the one-beat-per-cycle rate is exact.
+    fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        let delta = to - from;
+        let mut served = 0u64;
+        for inflight in self.ports.iter_mut().flatten() {
+            debug_assert!(delta < (inflight.burst.beats - inflight.beats_done) as Cycle);
+            inflight.beats_done += delta as u32;
+            served += delta;
+        }
+        self.stats.beats_served += served;
+    }
 }
 
 #[cfg(test)]

@@ -260,6 +260,30 @@ impl TargetModel for HyperramPath {
     fn idle(&self) -> bool {
         self.current.is_none() && self.queue.is_empty() && self.hit_port.is_none()
     }
+
+    /// The channel's timing is fully deterministic: the next observable
+    /// tick is the hit-port completion or the in-flight line's last
+    /// cycle (`tick` acts when `now + 1 >= done_at`, i.e. at `done_at -
+    /// 1`). Every earlier tick is a no-op, so the window is skippable
+    /// with no replay needed.
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        use super::super::clock::merge_event;
+        let mut earliest: Option<Cycle> = None;
+        if let Some((_, done_at)) = &self.hit_port {
+            earliest = merge_event(earliest, done_at.saturating_sub(1).max(now));
+        }
+        match &self.current {
+            Some(cur) if cur.line_active => {
+                earliest = merge_event(earliest, cur.line_done_at.saturating_sub(1).max(now));
+            }
+            // A current burst with no scheduled line, or a queued burst
+            // with the channel free: the very next tick makes progress.
+            Some(_) => earliest = merge_event(earliest, now),
+            None if !self.queue.is_empty() => earliest = merge_event(earliest, now),
+            None => {}
+        }
+        earliest
+    }
 }
 
 #[cfg(test)]

@@ -49,6 +49,13 @@ impl TargetModel for Peripheral {
     fn idle(&self) -> bool {
         self.current.is_none()
     }
+
+    /// Fixed-latency service: nothing happens until the completion tick.
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        self.current
+            .as_ref()
+            .map(|(_, done_at)| done_at.saturating_sub(1).max(now))
+    }
 }
 
 #[cfg(test)]

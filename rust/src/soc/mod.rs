@@ -39,6 +39,23 @@ pub trait BusInitiator: Any {
     fn complete(&mut self, c: Completion, now: Cycle, tsu: &mut Tsu);
     /// True when this initiator has no more work (drain condition).
     fn finished(&self) -> bool;
+    /// Event-driven hook: the earliest cycle `>= now` at which ticking
+    /// this initiator does anything on its own (issue a burst, finish a
+    /// compute phase), assuming no completion arrives in between; `None`
+    /// while it is dormant until a completion wakes it.
+    ///
+    /// Contract: ticks in `now..event` must be no-ops except for
+    /// per-cycle counters, which [`BusInitiator::fast_forward`] replays
+    /// exactly. The default (an event every cycle) disables skipping for
+    /// initiators that do not opt in.
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        Some(now)
+    }
+    /// Replay per-cycle bookkeeping for a skipped window `[from, to)` so
+    /// a skipped run stays bit-identical to naive stepping.
+    fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        let _ = (from, to);
+    }
     /// Downcast hook for result extraction by experiments.
     fn as_any(&mut self) -> &mut dyn Any;
 }
@@ -55,6 +72,9 @@ impl BusInitiator for hostd::HostCore {
     }
     fn finished(&self) -> bool {
         self.done()
+    }
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        hostd::HostCore::next_event(self, now)
     }
     fn as_any(&mut self) -> &mut dyn Any {
         self
@@ -74,12 +94,29 @@ impl BusInitiator for dma::DmaEngine {
     fn finished(&self) -> bool {
         self.done()
     }
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        dma::DmaEngine::next_event(self, now)
+    }
+    fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        dma::DmaEngine::fast_forward(self, from, to)
+    }
     fn as_any(&mut self) -> &mut dyn Any {
         self
     }
 }
 
 /// The assembled SoC.
+///
+/// Two stepping regimes share one cycle-accurate semantics:
+///
+/// - [`SocSim::step`] — naive: every component ticks every cycle;
+/// - [`SocSim::step_fast`] — event-driven: after a normal step, if the
+///   crossbar is idle, `now` jumps straight to the earliest pending
+///   event (TSU release times, compute/service completion times) and
+///   per-cycle counters are replayed via the `fast_forward` hooks. The
+///   two regimes produce bit-identical results (enforced by
+///   `tests/event_driven_equivalence.rs`, and cross-checkable at runtime
+///   with [`SocSim::validate_skips`]).
 pub struct SocSim {
     pub xbar: Crossbar,
     ports: Vec<(Box<dyn BusInitiator>, Tsu)>,
@@ -87,6 +124,17 @@ pub struct SocSim {
     /// Reused completion scratch (avoids per-cycle reallocation).
     comp_scratch: Vec<Completion>,
     pub now: Cycle,
+    /// Whether `run_until_done` uses the event-driven fast path.
+    pub event_driven: bool,
+    /// Debug cross-check: instead of jumping over a quiescent window,
+    /// step through it naively and assert that it really was quiescent
+    /// (no grants, no completions). Keeps naive state; catches wrong
+    /// `next_event` implementations.
+    pub validate_skips: bool,
+    /// Cycles elided by the fast path (observability).
+    pub skipped_cycles: u64,
+    /// Completions delivered to initiators so far (skip validation).
+    pub completions_delivered: u64,
 }
 
 impl SocSim {
@@ -107,6 +155,10 @@ impl SocSim {
             staged: Vec::new(),
             comp_scratch: Vec::new(),
             now: 0,
+            event_driven: true,
+            validate_skips: false,
+            skipped_cycles: 0,
+            completions_delivered: 0,
         }
     }
 
@@ -159,6 +211,7 @@ impl SocSim {
             // allocated-but-empty buffer (hot-loop optimization, see
             // EXPERIMENTS.md §Perf).
             std::mem::swap(&mut self.comp_scratch, &mut self.xbar.completions);
+            self.completions_delivered += self.comp_scratch.len() as u64;
             for i in 0..self.comp_scratch.len() {
                 let c = self.comp_scratch[i];
                 let (init, tsu) = &mut self.ports[c.initiator.0 as usize];
@@ -177,24 +230,142 @@ impl SocSim {
         self.now += 1;
     }
 
-    /// Step until every initiator reports finished (or budget exhausted).
-    /// Returns true if drained.
-    pub fn run_until_done(&mut self, max_cycles: Cycle) -> bool {
-        let deadline = self.now + max_cycles;
+    /// All initiators drained and the fabric empty.
+    pub fn drained(&self) -> bool {
+        self.ports.iter().all(|(i, _)| i.finished()) && self.xbar.idle()
+    }
+
+    /// The earliest cycle `>= self.now` at which *anything* in the SoC
+    /// can act: a queued burst (grant scan), a target's service edge, an
+    /// initiator's own event, or a TSU release. `None` when the whole
+    /// fabric is dormant until the simulation budget runs out.
+    fn next_event_cycle(&self) -> Option<Cycle> {
+        let now = self.now;
+        let mut earliest = self.xbar.next_event(now);
+        if earliest == Some(now) {
+            return earliest;
+        }
+        for (init, tsu) in &self.ports {
+            for ev in [init.next_event(now), tsu.next_release_at(now)] {
+                if let Some(t) = ev {
+                    let t = t.max(now);
+                    earliest = clock::merge_event(earliest, t);
+                    if t == now {
+                        return earliest;
+                    }
+                }
+            }
+        }
+        earliest
+    }
+
+    /// Jump `now` to the earliest pending event (clamped to `deadline`),
+    /// replaying per-cycle counters through the `fast_forward` hooks.
+    /// With nothing pending at all, jumps to `deadline` so budget-bound
+    /// loops terminate without spinning. No-op when something can act
+    /// this very cycle.
+    pub fn skip_to_next_event(&mut self, deadline: Cycle) {
+        let target = match self.next_event_cycle() {
+            Some(t) => t.min(deadline),
+            None => deadline,
+        };
+        if target <= self.now {
+            return;
+        }
+        if self.validate_skips {
+            self.validate_quiescent(target);
+        } else {
+            let (from, to) = (self.now, target);
+            for (init, tsu) in self.ports.iter_mut() {
+                init.fast_forward(from, to);
+                tsu.fast_forward(from, to);
+            }
+            self.xbar.fast_forward(from, to);
+            self.skipped_cycles += to - from;
+            self.now = target;
+        }
+    }
+
+    /// Debug cross-check for the event computation: instead of jumping,
+    /// step the window naively and assert it is quiescent — no bursts
+    /// granted, no completions delivered, nothing new queued. State ends
+    /// up exactly as a naive run's (per-cycle counters included).
+    fn validate_quiescent(&mut self, target: Cycle) {
+        while self.now < target {
+            let granted: u64 = self.xbar.granted_beats.iter().sum();
+            let delivered = self.completions_delivered;
+            let at = self.now;
+            self.step();
+            assert_eq!(
+                self.xbar.queued_bursts(),
+                0,
+                "skip window not quiescent: burst queued at cycle {at}"
+            );
+            let granted_after: u64 = self.xbar.granted_beats.iter().sum();
+            assert_eq!(
+                granted, granted_after,
+                "skip window not quiescent: grant at cycle {at}"
+            );
+            assert_eq!(
+                delivered, self.completions_delivered,
+                "skip window not quiescent: completion at cycle {at}"
+            );
+        }
+    }
+
+    /// One event-driven step: a normal cycle, then (if the fabric is
+    /// quiescent) a jump to the next event, clamped to `deadline`.
+    pub fn step_fast(&mut self, deadline: Cycle) {
+        self.step();
+        if self.now < deadline {
+            self.skip_to_next_event(deadline);
+        }
+    }
+
+    /// The shared run loop: step (with event skipping when
+    /// `event_driven`) until `done` holds or `deadline` is reached.
+    /// The skip is suppressed the moment `done` holds so the cycle
+    /// count callers observe matches naive stepping exactly. Returns
+    /// true when `done` held before the deadline.
+    pub fn run_until(
+        &mut self,
+        deadline: Cycle,
+        event_driven: bool,
+        mut done: impl FnMut(&SocSim) -> bool,
+    ) -> bool {
         while self.now < deadline {
-            if self.ports.iter().all(|(i, _)| i.finished()) && self.xbar.idle() {
+            if done(self) {
                 return true;
             }
             self.step();
+            if event_driven && !done(self) {
+                self.skip_to_next_event(deadline);
+            }
         }
         false
     }
 
-    /// Step a fixed number of cycles.
+    /// Step until every initiator reports finished (or budget exhausted).
+    /// Returns true if drained. Uses the event-driven fast path unless
+    /// [`SocSim::event_driven`] is cleared; both paths are bit-identical.
+    pub fn run_until_done(&mut self, max_cycles: Cycle) -> bool {
+        let deadline = self.now + max_cycles;
+        let fast = self.event_driven;
+        self.run_until(deadline, fast, |soc| soc.drained())
+    }
+
+    /// Step a fixed number of cycles, one at a time (naive reference).
     pub fn run_cycles(&mut self, cycles: Cycle) {
         for _ in 0..cycles {
             self.step();
         }
+    }
+
+    /// Advance a fixed number of simulated cycles on the event-driven
+    /// path (the bench's fast counterpart to [`SocSim::run_cycles`]).
+    pub fn run_cycles_fast(&mut self, cycles: Cycle) {
+        let deadline = self.now + cycles;
+        self.run_until(deadline, true, |_| false);
     }
 
     /// Whether a specific initiator finished.
@@ -273,6 +444,68 @@ mod tests {
             interfered > 5.0 * isolated,
             "expected heavy interference: isolated={isolated:.0} interfered={interfered:.0}"
         );
+    }
+
+    /// The fig6a-shaped topology on all three stepping regimes: the fast
+    /// path must actually skip cycles yet land bit-identical to naive
+    /// stepping, and the validate mode must accept every skip window.
+    #[test]
+    fn fast_path_skips_and_matches_naive() {
+        let build = || {
+            let mut soc = SocSim::new(2, SocSim::carfield_targets());
+            soc.attach(
+                Box::new(HostCore::new(
+                    InitiatorId(0),
+                    TctSpec {
+                        accesses: 64,
+                        iterations: 2,
+                        ..TctSpec::fig6a()
+                    },
+                )),
+                TsuConfig::passthrough(),
+            );
+            let mut dma = DmaEngine::new(InitiatorId(1));
+            dma.program(DmaJob {
+                src: axi::Target::Hyperram,
+                src_addr: 0x10_0000,
+                dst: Some(axi::Target::Dcspm),
+                dst_addr: 0,
+                bytes: 1 << 16,
+                chunk_beats: 64,
+                outstanding: 2,
+                looping: false,
+                part_id: 0,
+            });
+            soc.attach(Box::new(dma), TsuConfig::regulated(8, 16, 512));
+            soc
+        };
+        let mut naive = build();
+        naive.event_driven = false;
+        assert!(naive.run_until_done(50_000_000));
+
+        let mut fast = build();
+        assert!(fast.run_until_done(50_000_000));
+        assert!(fast.skipped_cycles > 0, "fast path never skipped");
+        assert_eq!(fast.now, naive.now, "drain cycle diverged");
+        assert_eq!(
+            fast.tsu_stats(InitiatorId(1)).tru_stall_cycles,
+            naive.tsu_stats(InitiatorId(1)).tru_stall_cycles,
+            "TRU stall accounting diverged"
+        );
+        let (f_mean, f_misses) = {
+            let h: &mut HostCore = fast.initiator_mut(InitiatorId(0));
+            (h.iteration_latency.mean(), h.l1_misses)
+        };
+        let h: &mut HostCore = naive.initiator_mut(InitiatorId(0));
+        assert_eq!(f_mean, h.iteration_latency.mean());
+        assert_eq!(f_misses, h.l1_misses);
+
+        // Validate mode: every proposed skip window is stepped naively
+        // and asserted quiescent.
+        let mut checked = build();
+        checked.validate_skips = true;
+        assert!(checked.run_until_done(50_000_000));
+        assert_eq!(checked.now, naive.now);
     }
 
     #[test]

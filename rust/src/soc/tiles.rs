@@ -128,6 +128,32 @@ impl TileStreamer {
         self.stream.dst_base + self.wrap(tile as u64 * self.stream.out_beats as u64 * 8)
     }
 
+    /// Event-driven hook: `Some(now)` while the streamer can issue a
+    /// transfer this cycle; `None` while its single channel waits on a
+    /// completion or there is nothing left to move.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        if self.in_flight.is_some() {
+            return None; // woken by the bus completion
+        }
+        if !self.pending_wb.is_empty() {
+            return Some(now);
+        }
+        if self.next_fetch < self.stream.tiles
+            && (self.ready.len() as u32) <= self.stream.buffer_depth
+        {
+            return Some(now);
+        }
+        None
+    }
+
+    /// Replay per-cycle busy accounting over a skipped window `[from,
+    /// to)` (one busy cycle per naive tick with a transfer outstanding).
+    pub fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        if self.in_flight.is_some() {
+            self.busy_cycles += to - from;
+        }
+    }
+
     /// Issue at most one transfer per cycle (single DMA channel).
     /// Writebacks take priority (they free L1 buffers).
     pub fn tick(&mut self, now: Cycle, tsu: &mut Tsu) {

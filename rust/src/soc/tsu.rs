@@ -181,6 +181,62 @@ impl Tsu {
         self.pending.len()
     }
 
+    /// Event-driven hook: the earliest cycle `>= now` at which
+    /// [`Tsu::release`] can make progress (release a fragment) — the
+    /// head fragment's WB-eligibility time, or the next TRU period
+    /// boundary when the head is budget-blocked. `None` when the shaper
+    /// is empty or blocked forever (budget enabled with period 0).
+    ///
+    /// Release calls in `now..event` are no-ops apart from the per-cycle
+    /// TRU stall accounting, which [`Tsu::fast_forward`] replays.
+    pub fn next_release_at(&self, now: Cycle) -> Option<Cycle> {
+        let head = self.pending.front()?;
+        if head.eligible_at > now {
+            return Some(head.eligible_at);
+        }
+        if self.head_blocked() {
+            if self.config.tru_period == 0 {
+                return None; // budget never refills: dormant forever
+            }
+            // `release` ran last cycle (the shaper is non-empty), so
+            // `period_start` is caught up and the budget refills at
+            // exactly the next boundary.
+            return Some((self.period_start + self.config.tru_period).max(now));
+        }
+        Some(now)
+    }
+
+    /// Replay the per-cycle accounting of a skipped quiescent window
+    /// `[from, to)`: a naive run calls `release` once per cycle, which
+    /// counts one TRU stall per cycle while the head fragment is
+    /// eligible but over budget.
+    pub fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        let Some(head) = self.pending.front() else {
+            return;
+        };
+        if head.eligible_at <= from && self.head_blocked() {
+            self.stats.tru_stall_cycles += to - from;
+        }
+    }
+
+    /// The single TRU blocking predicate shared by [`Tsu::release`],
+    /// [`Tsu::next_release_at`] and [`Tsu::fast_forward`]: the head
+    /// fragment exceeds the remaining budget AND is not the oversize
+    /// exception (a fragment larger than the whole per-period budget
+    /// passes when the budget is untouched — regulators must not
+    /// deadlock oversize transactions).
+    fn head_blocked(&self) -> bool {
+        let Some(head) = self.pending.front() else {
+            return false;
+        };
+        if self.config.tru_budget_beats == 0 || head.burst.beats <= self.budget_left {
+            return false;
+        }
+        let oversize = head.burst.beats > self.config.tru_budget_beats
+            && self.budget_left == self.config.tru_budget_beats;
+        !oversize
+    }
+
     /// Release eligible fragments for this cycle, respecting the TRU
     /// budget. Returned bursts go straight into the crossbar queue.
     pub fn release(&mut self, now: Cycle, out: &mut Vec<Burst>) {
@@ -196,16 +252,11 @@ impl Tsu {
             }
             if self.config.tru_budget_beats > 0 {
                 if head.burst.beats > self.budget_left {
-                    // A fragment larger than the whole per-period budget
-                    // passes when the budget is untouched (otherwise it
-                    // could never be served — regulators must not
-                    // deadlock oversize transactions).
-                    let oversize = head.burst.beats > self.config.tru_budget_beats
-                        && self.budget_left == self.config.tru_budget_beats;
-                    if !oversize {
+                    if self.head_blocked() {
                         self.stats.tru_stall_cycles += 1;
                         break;
                     }
+                    // Oversize fragment passing on an untouched budget.
                     self.budget_left = 0;
                 } else {
                     self.budget_left -= head.burst.beats;

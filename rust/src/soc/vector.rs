@@ -247,6 +247,42 @@ impl VectorCluster {
         }
     }
 
+    /// Event-driven hook: min of the tile-DMA side and the compute
+    /// completion time; `None` while waiting on bus completions or done.
+    pub fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        let mut earliest = self.streamer.as_ref().and_then(|s| s.next_event(now));
+        let engine = match self.state {
+            State::Idle => {
+                if self.task.is_some()
+                    && self.streamer.as_ref().is_some_and(|s| s.ready_tiles() > 0)
+                {
+                    Some(now)
+                } else {
+                    None
+                }
+            }
+            State::Computing { until, .. } => Some(until.max(now)),
+        };
+        if let Some(t) = engine {
+            earliest = super::clock::merge_event(earliest, t);
+        }
+        earliest
+    }
+
+    /// Replay per-cycle accounting over a skipped window `[from, to)`.
+    pub fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        if let Some(s) = self.streamer.as_mut() {
+            s.fast_forward(from, to);
+        }
+        if self.state == State::Idle && self.task.is_some() {
+            if let Some(s) = &self.streamer {
+                if s.ready_tiles() == 0 && !s.fetches_done() {
+                    self.stats.stall_cycles += to - from;
+                }
+            }
+        }
+    }
+
     pub fn tick(&mut self, now: Cycle, tsu: &mut Tsu) {
         if let Some(s) = self.streamer.as_mut() {
             s.tick(now, tsu);
@@ -337,6 +373,12 @@ impl super::BusInitiator for VectorCluster {
     }
     fn finished(&self) -> bool {
         self.task_done()
+    }
+    fn next_event(&self, now: Cycle) -> Option<Cycle> {
+        VectorCluster::next_event(self, now)
+    }
+    fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        VectorCluster::fast_forward(self, from, to)
     }
     fn as_any(&mut self) -> &mut dyn std::any::Any {
         self

@@ -4,6 +4,12 @@
 //! time named sections with warmup + repeated samples, printing
 //! mean/min/max wall-clock per iteration plus any domain metrics the
 //! experiment reports.
+//!
+//! Perf trajectory: when the `CARFIELD_BENCH_JSON` environment variable
+//! names a file, `finish()` additionally writes every timed section and
+//! metric there as JSON (hand-rolled — no serde offline), so CI can
+//! track numbers like the simulator's Mcyc/s across PRs (`make bench`
+//! records `BENCH_perf_hotpath.json` at the repo root).
 
 use std::time::Instant;
 
@@ -11,6 +17,7 @@ use std::time::Instant;
 pub struct BenchRunner {
     pub name: &'static str,
     results: Vec<(String, f64, f64, f64, usize)>,
+    metrics: Vec<(String, f64, String)>,
 }
 
 impl BenchRunner {
@@ -19,6 +26,7 @@ impl BenchRunner {
         Self {
             name,
             results: Vec::new(),
+            metrics: Vec::new(),
         }
     }
 
@@ -40,13 +48,83 @@ impl BenchRunner {
         out
     }
 
+    /// Like [`BenchRunner::time`], additionally returning the mean
+    /// wall-clock seconds per iteration of the section just timed — for
+    /// derived throughput metrics (Mcyc/s, speedups) without callers
+    /// re-measuring with their own `Instant`.
+    pub fn time_with_mean<T>(
+        &mut self,
+        label: &str,
+        iters: usize,
+        f: impl FnMut() -> T,
+    ) -> (T, f64) {
+        let out = self.time(label, iters, f);
+        let mean_ms = self.results.last().map(|r| r.1).unwrap_or(0.0);
+        (out, mean_ms / 1e3)
+    }
+
     /// Report a derived scalar metric (throughput, factor, ...).
-    pub fn metric(&self, label: &str, value: f64, unit: &str) {
+    pub fn metric(&mut self, label: &str, value: f64, unit: &str) {
         println!("{label:<44} {value:>10.3} {unit}");
+        self.metrics
+            .push((label.to_string(), value, unit.to_string()));
+    }
+
+    /// Render everything recorded so far as a JSON document.
+    fn to_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        fn num(v: f64) -> String {
+            if v.is_finite() {
+                format!("{v}")
+            } else {
+                "null".to_string()
+            }
+        }
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", esc(self.name)));
+        out.push_str("  \"sections\": [\n");
+        for (i, (label, mean, min, max, iters)) in self.results.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{}\", \"mean_ms\": {}, \"min_ms\": {}, \"max_ms\": {}, \"iters\": {}}}{}\n",
+                esc(label),
+                num(*mean),
+                num(*min),
+                num(*max),
+                iters,
+                if i + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n  \"metrics\": [\n");
+        for (i, (label, value, unit)) in self.metrics.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{}\", \"value\": {}, \"unit\": \"{}\"}}{}\n",
+                esc(label),
+                num(*value),
+                esc(unit),
+                if i + 1 < self.metrics.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
     }
 
     pub fn finish(self) {
-        println!("### bench {}: {} sections", self.name, self.results.len());
+        if let Ok(path) = std::env::var("CARFIELD_BENCH_JSON") {
+            if !path.is_empty() {
+                match std::fs::write(&path, self.to_json()) {
+                    Ok(()) => println!("bench results written to {path}"),
+                    Err(e) => eprintln!("could not write {path}: {e}"),
+                }
+            }
+        }
+        println!(
+            "### bench {}: {} sections, {} metrics",
+            self.name,
+            self.results.len(),
+            self.metrics.len()
+        );
     }
 }
 
@@ -62,5 +140,19 @@ mod tests {
         assert_eq!(b.results.len(), 1);
         b.metric("meaning", 42.0, "units");
         b.finish();
+    }
+
+    #[test]
+    fn json_is_well_formed_enough() {
+        let mut b = BenchRunner::new("json-test");
+        b.time("noop", 1, || ());
+        b.metric("simulated cycles/sec", 61.5, "Mcyc/s (target >= 60)");
+        let j = b.to_json();
+        assert!(j.contains("\"bench\": \"json-test\""));
+        assert!(j.contains("\"label\": \"noop\""));
+        assert!(j.contains("\"unit\": \"Mcyc/s (target >= 60)\""));
+        // Balanced braces/brackets (cheap structural sanity check).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
     }
 }

@@ -1,0 +1,149 @@
+//! Equivalence property: the event-driven cycle-skipping simulator core
+//! must be *bit-identical* to naive per-cycle stepping — same drain
+//! cycles, same latency samples, same per-cycle counters — for the
+//! scenarios the paper's figures sweep. `ScenarioReport` equality is
+//! exact (f64 included), so any divergence in timing, accounting or RNG
+//! draw order fails loudly.
+
+use carfield::coordinator::task::Criticality;
+use carfield::coordinator::{IsolationPolicy, McTask, Scenario, Scheduler, Workload};
+use carfield::experiments::fig6a;
+use carfield::soc::amr::IntPrecision;
+use carfield::soc::dma::DmaJob;
+use carfield::soc::hostd::TctSpec;
+use carfield::soc::vector::FpFormat;
+
+fn assert_equivalent(scenario: &Scenario) {
+    let fast = Scheduler::run(scenario);
+    let naive = Scheduler::run_naive(scenario);
+    assert_eq!(
+        fast, naive,
+        "event-driven vs naive diverged for scenario `{}`",
+        scenario.name
+    );
+}
+
+/// Fig. 6a-shaped scenarios (host TCT vs system DMA on the HyperRAM
+/// path) across the whole isolation-policy ladder. The TCT is scaled
+/// down from the figure's full working set to keep the naive reference
+/// runs fast; the traffic shape (L1 misses, line fills, DMA pipeline,
+/// TSU regulation, DPLLC partitioning) is identical.
+#[test]
+fn fig6a_topology_reports_bit_identical() {
+    let tct = || {
+        McTask::new(
+            "tct",
+            Criticality::Hard,
+            Workload::HostTct(TctSpec {
+                accesses: 256,
+                iterations: 3,
+                ..TctSpec::fig6a()
+            }),
+        )
+    };
+    let dma = || {
+        McTask::new(
+            "sys-dma",
+            Criticality::BestEffort,
+            Workload::DmaCopy(DmaJob::interferer()),
+        )
+    };
+    let policies = [
+        IsolationPolicy::NoIsolation,
+        IsolationPolicy::TsuRegulation,
+        IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 50,
+        },
+        IsolationPolicy::PrivatePaths,
+    ];
+    assert_equivalent(&Scenario::new("isolated", IsolationPolicy::NoIsolation).with_task(tct()));
+    for (i, policy) in policies.into_iter().enumerate() {
+        assert_equivalent(
+            &Scenario::new(&format!("fig6a-{i}"), policy)
+                .with_task(tct())
+                .with_task(dma()),
+        );
+    }
+}
+
+/// The full-size isolated regime from the actual figure grid (no
+/// interferer, so the naive reference stays cheap at full scale).
+#[test]
+fn fig6a_full_scale_isolated_is_bit_identical() {
+    let grid = fig6a::scenario_grid();
+    assert_eq!(grid[0].name, "isolated");
+    assert_equivalent(&grid[0]);
+}
+
+/// Cluster-pair scenario: AMR lockstep TCT + vector NCT sharing AXI and
+/// the DCSPM — both tile streamers, both compute FSMs, stall and busy
+/// accounting, under sharing and under private paths.
+#[test]
+fn cluster_pair_reports_bit_identical() {
+    let amr = || {
+        McTask::new(
+            "amr",
+            Criticality::Safety,
+            Workload::AmrMatMul {
+                precision: IntPrecision::Int8,
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 16,
+            },
+        )
+    };
+    let vec = || {
+        McTask::new(
+            "vec",
+            Criticality::BestEffort,
+            Workload::VectorMatMul {
+                format: FpFormat::Fp16,
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 32,
+            },
+        )
+    };
+    for policy in [IsolationPolicy::NoIsolation, IsolationPolicy::PrivatePaths] {
+        assert_equivalent(
+            &Scenario::new("cluster-pair", policy)
+                .with_task(amr())
+                .with_task(vec()),
+        );
+    }
+}
+
+/// The three-task mix (host + AMR + endless DMA): exercises completion
+/// routing to different initiator types inside skip windows.
+#[test]
+fn mixed_three_way_reports_bit_identical() {
+    let s = Scenario::new("mixed", IsolationPolicy::TsuRegulation)
+        .with_task(McTask::new(
+            "tct",
+            Criticality::Hard,
+            Workload::HostTct(TctSpec {
+                accesses: 128,
+                iterations: 2,
+                ..TctSpec::fig6a()
+            }),
+        ))
+        .with_task(McTask::new(
+            "amr",
+            Criticality::Safety,
+            Workload::AmrMatMul {
+                precision: IntPrecision::Int4,
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 16,
+            },
+        ))
+        .with_task(McTask::new(
+            "dma",
+            Criticality::BestEffort,
+            Workload::DmaCopy(DmaJob::interferer()),
+        ));
+    assert_equivalent(&s);
+}

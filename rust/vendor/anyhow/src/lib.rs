@@ -1,0 +1,149 @@
+//! Minimal offline stand-in for the `anyhow` crate (see DESIGN.md
+//! "Substitutions"): a string-chaining error type, the `Result` alias,
+//! the `anyhow!`/`bail!`/`ensure!` macros and the `Context` extension
+//! trait. API-compatible with the subset this repository uses, so the
+//! real crate can be dropped in without source changes.
+
+use std::fmt;
+
+/// A chain of error messages (outermost context first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build from a single message.
+    pub fn msg<M: fmt::Display>(msg: M) -> Self {
+        Self {
+            chain: vec![msg.to_string()],
+        }
+    }
+
+    /// Prepend a context layer (what `Context::context` does).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `{}` prints the outermost message, `{:#}` the whole chain —
+        // mirroring anyhow's alternate formatting.
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.join(": "))
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        // Flatten the source chain into messages.
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// `anyhow::Result<T>`: a `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context-attaching extension for `Result` (and, transitively, for
+/// anything whose error converts into [`Error`]).
+pub trait Context<T>: Sized {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        Err(anyhow!("inner {}", 7))
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: inner 7");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let r: Result<i32> = "zzz".parse::<i32>().map_err(Into::into);
+        assert!(format!("{:#}", r.unwrap_err()).contains("invalid digit"));
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn guard(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            if x > 100 {
+                bail!("too big");
+            }
+            Ok(x)
+        }
+        assert!(guard(5).is_ok());
+        assert!(guard(-1).is_err());
+        assert!(guard(200).is_err());
+    }
+}
