@@ -6,7 +6,7 @@
 
 RUST_DIR := rust
 
-.PHONY: build test bench artifacts python-test
+.PHONY: build test bench wcet artifacts python-test
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -17,6 +17,10 @@ test:
 bench:
 	cd $(RUST_DIR) && CARFIELD_BENCH_JSON=$(abspath BENCH_perf_hotpath.json) \
 		cargo bench --bench perf_hotpath
+
+# Analytical WCET bounds vs measured worst case (fig6a/fig6b grids).
+wcet: build
+	$(RUST_DIR)/target/release/carfield wcet
 
 # AOT-lower the JAX/Pallas kernels to HLO text artifacts consumed by the
 # rust PJRT runtime (requires the python toolchain).

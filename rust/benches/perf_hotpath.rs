@@ -1,6 +1,7 @@
 //! Bench: L3 hot paths — simulator cycle throughput (naive vs the
 //! event-driven cycle-skipping core), parallel scenario-sweep speedup,
-//! coordinator dispatch, and PJRT artifact execution overhead.
+//! WCET analysis throughput + bound tightness, coordinator dispatch,
+//! and PJRT artifact execution overhead.
 //!
 //! Targets (see lib.rs layering docs): >= 60 simulated Mcyc/s on the
 //! Fig. 6a topology via the event-driven path (>= 3x naive), raised from
@@ -105,6 +106,34 @@ fn sweep_throughput(b: &mut BenchRunner) {
     );
 }
 
+/// WCET analysis throughput + bound tightness: the analytical engine
+/// must be orders of magnitude cheaper than simulating (that is the
+/// point of admission control), and its bounds must stay tight where
+/// regulation makes tightness possible.
+fn wcet_overhead(b: &mut BenchRunner) {
+    use carfield::experiments::bounds;
+    use carfield::wcet::analyze;
+    let grid = bounds::scenario_grid();
+    let n = grid.len();
+    let (reports, dt) = b.time_with_mean(&format!("wcet analyze {n} grid scenarios"), 200, || {
+        grid.iter().map(analyze).collect::<Vec<_>>()
+    });
+    assert!(reports.iter().any(|r| !r.bounds.is_empty()));
+    b.metric(
+        "wcet analysis throughput",
+        n as f64 / dt,
+        "scenarios bounded/sec",
+    );
+    let r = bounds::run_with_threads(sweep::default_threads());
+    b.metric(
+        "wcet mean tightness (mem bound / measured worst)",
+        r.mean_tightness,
+        "x (sound >= 1; regulated rows <= 2)",
+    );
+    let sound = r.rows.iter().all(|x| x.mem_sound() && x.completion_sound());
+    b.metric("wcet soundness violations", if sound { 0.0 } else { 1.0 }, "(must be 0)");
+}
+
 /// Coordinator scenario-assembly + teardown overhead.
 fn dispatch_overhead(b: &mut BenchRunner) {
     b.time("Scheduler::run tiny scenario", 5, || {
@@ -157,6 +186,7 @@ fn main() {
     let mut b = BenchRunner::new("perf_hotpath");
     sim_throughput(&mut b);
     sweep_throughput(&mut b);
+    wcet_overhead(&mut b);
     dispatch_overhead(&mut b);
     artifact_overhead(&mut b);
     b.finish();

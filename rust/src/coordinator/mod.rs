@@ -10,7 +10,9 @@
 //! - [`policy`]: isolation profiles mapping criticality mixes onto
 //!   concrete TSU/DPLLC/DCSPM/AMR configurations;
 //! - [`scheduler`]: admission, placement, scenario assembly and
-//!   execution on the `SocSim` substrate;
+//!   execution on the `SocSim` substrate — including bound-aware
+//!   admission control ([`Scheduler::admit`]) backed by the analytical
+//!   WCET engine in [`crate::wcet`];
 //! - [`metrics`]: per-task reports and experiment tables;
 //! - [`sweep`]: parallel execution of independent scenario grids across
 //!   OS threads (the experiment figures are embarrassingly parallel).
@@ -23,5 +25,5 @@ pub mod task;
 
 pub use metrics::{ScenarioReport, TaskReport};
 pub use policy::{IsolationPolicy, ResourceConfig};
-pub use scheduler::{Scenario, Scheduler};
+pub use scheduler::{AdmissionDecision, Rejection, Scenario, Scheduler};
 pub use task::{Criticality, McTask, Workload};

@@ -19,6 +19,7 @@ use crate::soc::SocSim;
 use super::metrics::{ScenarioReport, TaskReport};
 use super::policy::{tsu_for, IsolationPolicy};
 use super::task::{McTask, Workload};
+use crate::wcet::{self, Resource, WcetReport};
 
 /// A bundle of tasks to run concurrently under one policy.
 #[derive(Debug, Clone)]
@@ -46,10 +47,105 @@ impl Scenario {
     }
 }
 
+/// One rejected task in an admission decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Rejection {
+    pub task: String,
+    pub deadline: Cycle,
+    /// The computed completion bound (`None` = unbounded/endless).
+    pub bound: Option<Cycle>,
+    /// The resource the bound is dominated by — what to reconfigure.
+    pub binding: Resource,
+}
+
+/// Bound-aware admission verdict for a scenario (pure function of the
+/// scenario — deterministic across thread counts and call sites).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdmissionDecision {
+    pub admitted: bool,
+    /// The full feasibility report (bounds for every critical task).
+    pub report: WcetReport,
+    pub rejections: Vec<Rejection>,
+}
+
+impl AdmissionDecision {
+    /// Human-readable feasibility summary.
+    pub fn summary(&self) -> String {
+        if self.admitted {
+            format!(
+                "ADMIT {}: every critical-task completion bound fits its deadline",
+                self.report.scenario
+            )
+        } else {
+            let mut s = format!("REJECT {}:", self.report.scenario);
+            for r in &self.rejections {
+                match r.bound {
+                    Some(b) => s.push_str(&format!(
+                        " [{}: bound {} > deadline {} — binding resource: {}]",
+                        r.task,
+                        b,
+                        r.deadline,
+                        r.binding.describe()
+                    )),
+                    None => s.push_str(&format!(
+                        " [{}: no completion bound ({}) but deadline {}]",
+                        r.task,
+                        r.binding.describe(),
+                        r.deadline
+                    )),
+                }
+            }
+            s
+        }
+    }
+}
+
 /// Stateless scenario executor.
 pub struct Scheduler;
 
 impl Scheduler {
+    /// Bound-aware admission control: compute the analytical WCET
+    /// bounds for the mix and reject it when any critical task's
+    /// completion bound exceeds its deadline (or cannot be bounded at
+    /// all), naming the binding resource. Tasks without a deadline
+    /// (`deadline == 0`) are always admissible.
+    pub fn admit(scenario: &Scenario) -> AdmissionDecision {
+        let report = wcet::analyze(scenario);
+        let mut rejections = Vec::new();
+        for task in &scenario.tasks {
+            if !task.criticality.is_time_critical() || task.deadline == 0 {
+                continue;
+            }
+            let b = report.bound_for(&task.name);
+            let feasible = matches!(b.completion_bound, Some(c) if c <= task.deadline);
+            if !feasible {
+                rejections.push(Rejection {
+                    task: task.name.clone(),
+                    deadline: task.deadline,
+                    bound: b.completion_bound,
+                    binding: b.completion_binding,
+                });
+            }
+        }
+        AdmissionDecision {
+            admitted: rejections.is_empty(),
+            report,
+            rejections,
+        }
+    }
+
+    /// Admission-gated execution: run the scenario only if the bound
+    /// engine proves every deadline feasible; otherwise return the
+    /// feasibility report for the caller to act on.
+    pub fn run_admitted(scenario: &Scenario) -> Result<ScenarioReport, Box<AdmissionDecision>> {
+        let decision = Self::admit(scenario);
+        if decision.admitted {
+            Ok(Self::run(scenario))
+        } else {
+            Err(Box::new(decision))
+        }
+    }
+
     /// Build the target set with the policy's DPLLC partitioning.
     fn targets(policy: IsolationPolicy) -> Vec<Box<dyn TargetModel>> {
         let cfg = policy.resource_config();
@@ -58,7 +154,7 @@ impl Scheduler {
         vec![
             Box::new(Dcspm::new()),
             Box::new(HyperramPath::new(dpllc, HyperRamTiming::carfield())),
-            Box::new(Peripheral::new(20)),
+            Box::new(Peripheral::new(Peripheral::DEFAULT_LATENCY)),
         ]
     }
 
@@ -212,6 +308,7 @@ impl Scheduler {
                 extra.push(("stall_cycles".into(), c.stats.stall_cycles as f64));
                 extra.push(("faults".into(), c.stats.faults_detected as f64));
                 extra.push(("recovery_cycles".into(), c.stats.recovery_cycles as f64));
+                extra.push(("mem_max".into(), c.mem_latency_max() as f64));
             }
             Workload::VectorMatMul { .. } | Workload::VectorFft { .. } => {
                 let c: &mut VectorCluster = soc.initiator_mut(id);
@@ -219,6 +316,7 @@ impl Scheduler {
                 mean_latency = c.stats.effective_flop_per_cyc(0);
                 extra.push(("flop_per_cyc".into(), c.stats.effective_flop_per_cyc(0)));
                 extra.push(("stall_cycles".into(), c.stats.stall_cycles as f64));
+                extra.push(("mem_max".into(), c.mem_latency_max() as f64));
             }
             Workload::HostTct(_) => {
                 let h: &mut HostCore = soc.initiator_mut(id);
@@ -227,6 +325,8 @@ impl Scheduler {
                 jitter = h.iteration_latency.jitter();
                 extra.push(("l1_misses".into(), h.l1_misses as f64));
                 extra.push(("access_mean".into(), h.access_latency.mean()));
+                extra.push(("access_max".into(), h.access_latency.max().max(0.0)));
+                extra.push(("iter_max".into(), h.iteration_latency.max().max(0.0)));
             }
             Workload::DmaCopy(_) => {
                 let d: &mut DmaEngine = soc.initiator_mut(id);
@@ -360,6 +460,46 @@ mod tests {
         let r = Scheduler::run(&s);
         assert!(!r.task("tct").deadline_met, "1-cycle deadline is impossible");
         assert!(!r.all_deadlines_met());
+    }
+
+    #[test]
+    fn admission_accepts_feasible_and_rejects_infeasible() {
+        let tct = || {
+            McTask::new(
+                "tct",
+                Criticality::Hard,
+                Workload::HostTct(TctSpec::fig6a()),
+            )
+        };
+        // The regulated mix's completion bound converges (~1.1M cycles):
+        // a generous deadline admits, a tight one rejects and names the
+        // binding resource.
+        let ok = Scenario::new("ok", IsolationPolicy::TsuRegulation)
+            .with_task(tct().with_deadline(5_000_000))
+            .with_task(dma_interferer());
+        let d = Scheduler::admit(&ok);
+        assert!(d.admitted, "{}", d.summary());
+        assert!(d.rejections.is_empty());
+
+        let bad = Scenario::new("bad", IsolationPolicy::TsuRegulation)
+            .with_task(tct().with_deadline(100_000))
+            .with_task(dma_interferer());
+        let d = Scheduler::admit(&bad);
+        assert!(!d.admitted);
+        assert_eq!(d.rejections.len(), 1);
+        assert_eq!(d.rejections[0].task, "tct");
+        assert!(d.summary().contains("REJECT"), "{}", d.summary());
+        assert!(Scheduler::run_admitted(&bad).is_err());
+    }
+
+    #[test]
+    fn admission_ignores_tasks_without_deadlines() {
+        let s = Scenario::new("no-deadline", IsolationPolicy::NoIsolation)
+            .with_task(tct_task())
+            .with_task(dma_interferer());
+        let d = Scheduler::admit(&s);
+        assert!(d.admitted, "deadline-free mixes always admissible");
+        assert_eq!(d.report.bounds.len(), 1, "one critical task bounded");
     }
 
     #[test]

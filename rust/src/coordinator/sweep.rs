@@ -13,8 +13,22 @@ use std::sync::mpsc;
 use super::metrics::ScenarioReport;
 use super::scheduler::{Scenario, Scheduler};
 
-/// Worker count to saturate this host (>= 1).
+/// Worker count to saturate this host (>= 1). The `CARFIELD_THREADS`
+/// environment variable overrides it (clamped to >= 1) so CI and
+/// benchmarks can pin parallelism for reproducible wall-clock numbers.
 pub fn default_threads() -> usize {
+    threads_from(std::env::var("CARFIELD_THREADS").ok().as_deref())
+}
+
+/// Resolve a thread-count override string (the testable core of
+/// [`default_threads`]): a parseable value is clamped to >= 1; anything
+/// else falls back to the host's available parallelism.
+pub fn threads_from(raw: Option<&str>) -> usize {
+    if let Some(raw) = raw {
+        if let Ok(n) = raw.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
@@ -82,6 +96,15 @@ mod tests {
     use crate::coordinator::task::Criticality;
     use crate::coordinator::{IsolationPolicy, McTask, Workload};
     use crate::soc::hostd::TctSpec;
+
+    #[test]
+    fn threads_override_parses_and_clamps() {
+        assert_eq!(threads_from(Some("3")), 3);
+        assert_eq!(threads_from(Some(" 8 ")), 8);
+        assert_eq!(threads_from(Some("0")), 1, "clamped to >= 1");
+        assert!(threads_from(Some("not-a-number")) >= 1, "junk falls back");
+        assert!(threads_from(None) >= 1);
+    }
 
     #[test]
     fn parallel_map_preserves_order() {

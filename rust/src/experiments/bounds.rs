@@ -1,0 +1,254 @@
+//! Bound-vs-measured validation table (`carfield wcet`).
+//!
+//! Runs the Fig. 6a and Fig. 6b scenario grids, computes the analytical
+//! WCET bounds for every critical task, and reports measured worst case
+//! vs bound for both the memory-latency and the completion-time bound.
+//! Acceptance: every bound is *sound* (measured <= bound) and the
+//! memory-latency bounds on the TSU-regulated rows are *tight*
+//! (bound <= 2x the measured worst case). Completion bounds are
+//! cache-cold worst cases: tight for the transfer-dominated cluster
+//! rows, deliberately pessimistic for the host TCT whose warm
+//! iterations hit the DPLLC (a sound static analysis cannot assume
+//! cache hits in a shared partition).
+
+use crate::coordinator::{sweep, IsolationPolicy, Scenario, Scheduler};
+use crate::experiments::{fig6a, fig6b};
+use crate::soc::clock::Cycle;
+use crate::wcet::{analyze, Resource};
+
+/// One critical task in one grid scenario.
+#[derive(Debug, Clone)]
+pub struct BoundRow {
+    pub scenario: String,
+    pub task: String,
+    /// Policy regulates NCT arrival (TSU or TSU+partition rows) — the
+    /// rows the tightness criterion applies to.
+    pub regulated_policy: bool,
+    /// Measured worst single-transaction latency.
+    pub measured_worst_mem: f64,
+    pub mem_bound: Cycle,
+    pub measured_makespan: Cycle,
+    pub completion_bound: Option<Cycle>,
+    pub binding: Resource,
+}
+
+impl BoundRow {
+    pub fn mem_sound(&self) -> bool {
+        self.measured_worst_mem <= self.mem_bound as f64
+    }
+
+    pub fn completion_sound(&self) -> bool {
+        match self.completion_bound {
+            Some(b) => self.measured_makespan <= b,
+            None => true,
+        }
+    }
+
+    /// Bound over measured worst (1.0 = exact, <= 2.0 = tight).
+    pub fn mem_tightness(&self) -> f64 {
+        self.mem_bound as f64 / self.measured_worst_mem.max(1.0)
+    }
+
+    pub fn completion_tightness(&self) -> f64 {
+        match self.completion_bound {
+            Some(b) => b as f64 / (self.measured_makespan.max(1)) as f64,
+            None => f64::INFINITY,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BoundsResult {
+    pub rows: Vec<BoundRow>,
+    /// Total simulated cycles for the measured side (bench metric).
+    pub sim_cycles: Cycle,
+    /// Mean memory-latency tightness across all rows.
+    pub mean_tightness: f64,
+}
+
+/// The combined fig6a + fig6b scenario grid the table is computed over.
+pub fn scenario_grid() -> Vec<Scenario> {
+    fig6a::scenario_grid()
+        .into_iter()
+        .chain(fig6b::scenario_grid())
+        .collect()
+}
+
+pub fn run() -> BoundsResult {
+    run_with_threads(sweep::default_threads())
+}
+
+/// Measure the grids (parallel sweep) and bound them analytically.
+pub fn run_with_threads(threads: usize) -> BoundsResult {
+    let grid = scenario_grid();
+    let reports = sweep::run_scenarios(&grid, threads);
+    let sim_cycles = reports.iter().map(|r| r.cycles).sum();
+    let mut rows = Vec::new();
+    for (scenario, report) in grid.iter().zip(&reports) {
+        let wr = analyze(scenario);
+        for tb in &wr.bounds {
+            let t = report.task(&tb.task);
+            let measured = t
+                .extra_value("access_max")
+                .or_else(|| t.extra_value("mem_max"))
+                .unwrap_or(0.0);
+            let regulated_policy = matches!(
+                scenario.policy,
+                IsolationPolicy::TsuRegulation | IsolationPolicy::TsuPlusLlcPartition { .. }
+            );
+            rows.push(BoundRow {
+                scenario: scenario.name.clone(),
+                task: tb.task.clone(),
+                regulated_policy,
+                measured_worst_mem: measured,
+                mem_bound: tb.mem_bound,
+                measured_makespan: t.makespan,
+                completion_bound: tb.completion_bound,
+                binding: tb.mem_binding,
+            });
+        }
+    }
+    let ratios: Vec<f64> = rows
+        .iter()
+        .filter(|r| r.measured_worst_mem > 0.0)
+        .map(|r| r.mem_tightness())
+        .collect();
+    let mean_tightness = if ratios.is_empty() {
+        0.0
+    } else {
+        ratios.iter().sum::<f64>() / ratios.len() as f64
+    };
+    BoundsResult {
+        rows,
+        sim_cycles,
+        mean_tightness,
+    }
+}
+
+pub fn print(r: &BoundsResult) {
+    use crate::coordinator::metrics::print_table;
+    print_table(
+        "WCET bounds vs measured (fig6a + fig6b grids; sound: measured <= bound; tight on regulated rows: bound <= 2x measured)",
+        &[
+            "scenario", "task", "mem worst", "mem bound", "ratio", "makespan",
+            "completion bound", "ratio", "binding resource",
+        ],
+        &r.rows
+            .iter()
+            .map(|row| {
+                vec![
+                    row.scenario.clone(),
+                    row.task.clone(),
+                    format!("{:.0}", row.measured_worst_mem),
+                    row.mem_bound.to_string(),
+                    format!(
+                        "{:.2}x{}",
+                        row.mem_tightness(),
+                        if row.mem_sound() { "" } else { " UNSOUND" }
+                    ),
+                    row.measured_makespan.to_string(),
+                    row.completion_bound
+                        .map_or("endless".to_string(), |b| b.to_string()),
+                    match row.completion_bound {
+                        Some(_) => format!(
+                            "{:.2}x{}",
+                            row.completion_tightness(),
+                            if row.completion_sound() { "" } else { " UNSOUND" }
+                        ),
+                        None => "-".to_string(),
+                    },
+                    format!("{:?}", row.binding),
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!(
+        "\nmean memory-latency tightness: {:.2}x over {} rows ({} simulated cycles)",
+        r.mean_tightness,
+        r.rows.len(),
+        r.sim_cycles
+    );
+
+    // Admission-control demo: the same deadline is feasible under TSU
+    // regulation and provably infeasible unregulated.
+    let (admit_ok, admit_bad) = admission_demo_scenarios();
+    println!(
+        "\n== bound-aware admission (deadline {} cycles)",
+        admit_ok.tasks[0].deadline
+    );
+    println!("  {}", Scheduler::admit(&admit_ok).summary());
+    println!("  {}", Scheduler::admit(&admit_bad).summary());
+}
+
+/// The fig6a "tsu-regulated" and "unregulated" scenarios with a deadline
+/// the bound engine can prove feasible for the former only.
+pub fn admission_demo_scenarios() -> (Scenario, Scenario) {
+    const DEADLINE: u64 = 2_000_000;
+    let mut grid = fig6a::scenario_grid();
+    let mut take = |name: &str| {
+        let idx = grid
+            .iter()
+            .position(|s| s.name == name)
+            .unwrap_or_else(|| panic!("fig6a grid lost the `{name}` scenario"));
+        let mut s = grid.swap_remove(idx);
+        s.tasks[0].deadline = DEADLINE;
+        s
+    };
+    (take("tsu-regulated"), take("unregulated"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_bounds_sound_everywhere_and_tight_on_regulated_rows() {
+        let r = run();
+        assert!(r.rows.len() >= 10, "expected a row per critical task");
+        for row in &r.rows {
+            assert!(
+                row.mem_sound(),
+                "{}::{} mem UNSOUND: measured {} > bound {}",
+                row.scenario,
+                row.task,
+                row.measured_worst_mem,
+                row.mem_bound
+            );
+            assert!(
+                row.completion_sound(),
+                "{}::{} completion UNSOUND: makespan {} > bound {:?}",
+                row.scenario,
+                row.task,
+                row.measured_makespan,
+                row.completion_bound
+            );
+            assert!(row.measured_makespan > 0, "{} task drained", row.scenario);
+        }
+        for row in r.rows.iter().filter(|r| r.regulated_policy) {
+            assert!(
+                row.measured_worst_mem > 0.0,
+                "{} has latency samples",
+                row.scenario
+            );
+            assert!(
+                row.mem_tightness() <= 2.0,
+                "{}::{} NOT TIGHT: bound {} > 2x measured {}",
+                row.scenario,
+                row.task,
+                row.mem_bound,
+                row.measured_worst_mem
+            );
+        }
+        assert!(r.mean_tightness >= 1.0);
+        assert!(r.sim_cycles > 0);
+    }
+
+    #[test]
+    fn admission_demo_scenarios_disagree() {
+        let (ok, bad) = admission_demo_scenarios();
+        assert_eq!(ok.name, "tsu-regulated");
+        assert_eq!(bad.name, "unregulated");
+        assert!(Scheduler::admit(&ok).admitted);
+        assert!(!Scheduler::admit(&bad).admitted);
+    }
+}

@@ -4,8 +4,10 @@
 //! the simulator and returns structured results (so tests and benches can
 //! assert the *shape*: who wins, by roughly what factor, where crossovers
 //! fall). `cargo bench` targets print them; `carfield fig*` runs them
-//! from the CLI.
+//! from the CLI. `bounds` is the WCET validation table (`carfield
+//! wcet`): analytical bound vs measured worst case on the Fig. 6 grids.
 
+pub mod bounds;
 pub mod fig3c;
 pub mod fig5;
 pub mod fig6a;

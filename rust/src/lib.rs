@@ -28,7 +28,14 @@
 //!   `SocSim::validate_skips` cross-checks every skip window at runtime.
 //! - **Parallel sweeps** — `coordinator::sweep` fans independent
 //!   scenario grids (Fig. 3c/5/6a/6b) across `std::thread::scope`
-//!   workers, order-preserving and deterministic.
+//!   workers, order-preserving and deterministic (`CARFIELD_THREADS`
+//!   pins the worker count).
+//! - **Analytical WCET bounds** — the `wcet` module derives per-task
+//!   upper bounds on memory latency and completion time *without
+//!   simulating* (TSU arrival curves x crossbar arbitration x per-target
+//!   worst-case service models); `Scheduler::admit` turns them into
+//!   bound-aware admission control, and `experiments::bounds` /
+//!   `carfield wcet` validate bound-vs-measured on the Fig. 6 grids.
 //!
 //! Perf target (tracked by `make bench` → `BENCH_perf_hotpath.json`):
 //! >= 60 simulated Mcyc/s on the Fig. 6a TCT+DMA topology via the
@@ -39,5 +46,6 @@ pub mod experiments;
 pub mod runtime;
 pub mod soc;
 pub mod util;
+pub mod wcet;
 
 pub use runtime::ArtifactRuntime;

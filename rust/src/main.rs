@@ -4,6 +4,10 @@
 //! - `boot`                — run the secure-boot chain and report timing;
 //! - `fig3c|fig5|fig6a|fig6b|fig7|fig8|micro`
 //!                         — regenerate a figure/table of the paper;
+//! - `wcet`                — analytical WCET bounds vs measured worst
+//!                           case on the fig6a/fig6b grids, plus a
+//!                           bound-aware admission demo
+//!                           (`--threads N` pins the sweep width);
 //! - `all`                 — run every experiment in sequence;
 //! - `artifacts [--dir D]` — list AOT artifacts and smoke-execute one;
 //! - `infer [--dir D]`     — run the QNN MLP artifact through the PJRT
@@ -33,6 +37,7 @@ fn main() {
         Some("fig7") => exp::fig7::print(&exp::fig7::run()),
         Some("fig8") => exp::fig8::print(&exp::fig8::run()),
         Some("micro") => exp::micro::print(&exp::micro::run()),
+        Some("wcet") => cmd_wcet(&args),
         Some("all") => {
             exp::fig3c::print(&exp::fig3c::run());
             exp::fig5::print(&exp::fig5::run());
@@ -41,17 +46,23 @@ fn main() {
             exp::fig7::print(&exp::fig7::run());
             exp::fig8::print(&exp::fig8::run());
             exp::micro::print(&exp::micro::run());
+            exp::bounds::print(&exp::bounds::run());
         }
         Some("artifacts") => cmd_artifacts(&args),
         Some("infer") => cmd_infer(&args),
         Some("scenario") => cmd_scenario(&args),
         _ => {
             eprintln!(
-                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|all|artifacts|infer|scenario> [options]"
+                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|all|artifacts|infer|scenario> [options]"
             );
             std::process::exit(2);
         }
     }
+}
+
+fn cmd_wcet(args: &Args) {
+    let threads = args.get_parse("threads", carfield::coordinator::sweep::default_threads());
+    exp::bounds::print(&exp::bounds::run_with_threads(threads));
 }
 
 fn cmd_boot() {

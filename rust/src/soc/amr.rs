@@ -286,7 +286,7 @@ impl AmrCluster {
             src_base: task.src_base,
             dst_base: task.dst_base,
             part_id: task.part_id,
-            buffer_depth: 1,
+            buffer_depth: super::tiles::CLUSTER_BUFFER_DEPTH,
             wrap_bytes: crate::coordinator::policy::IsolationPolicy::L2_SLOT_BYTES / 2,
         };
         self.streamer = Some(TileStreamer::new(self.id, stream));
@@ -298,9 +298,21 @@ impl AmrCluster {
     /// Cycles to compute one tile at the current mode/precision, in
     /// system cycles.
     fn tile_compute_cycles(&self, task: &AmrTask) -> Cycle {
-        let rate =
-            task.precision.cluster_mac_per_cyc() * self.mode.perf_factor() * self.freq_ratio;
+        Self::tile_compute_bound(task, self.mode, self.freq_ratio)
+    }
+
+    /// Deterministic per-tile compute time for `task` under `mode` — the
+    /// exact duration the FSM uses, exposed so the WCET engine composes
+    /// the same number instead of re-deriving it (fault-free; recovery
+    /// penalties are a reliability budget, not a timing one).
+    pub fn tile_compute_bound(task: &AmrTask, mode: AmrMode, freq_ratio: f64) -> Cycle {
+        let rate = task.precision.cluster_mac_per_cyc() * mode.perf_factor() * freq_ratio;
         (task.macs_per_tile() as f64 / rate).ceil() as Cycle
+    }
+
+    /// Worst observed L2 transfer latency (WCET measured counterpart).
+    pub fn mem_latency_max(&self) -> Cycle {
+        self.streamer.as_ref().map_or(0, |s| s.max_latency)
     }
 
     /// Sample fault events over a compute window and return the total

@@ -160,6 +160,20 @@ pub trait TargetModel {
     /// True if nothing is in flight (used by drain loops in tests).
     fn idle(&self) -> bool;
 
+    /// Independent arbitration lanes (subordinate ports) this target
+    /// exposes. The crossbar keeps one round-robin pointer per lane so
+    /// contention on one port can never skew arbitration on another —
+    /// the per-port fairness the WCET bound engine's `1 + competitors`
+    /// interference term relies on.
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    /// Which lane `burst` must be granted on (`< lanes()`).
+    fn lane_of(&self, _burst: &Burst) -> usize {
+        0
+    }
+
     /// Event-driven hook: the earliest cycle `>= now` at which ticking
     /// this target has an *observable* effect (a completion, a service
     /// transition), assuming no new burst is granted in between; `None`

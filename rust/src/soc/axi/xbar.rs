@@ -24,8 +24,12 @@ pub struct Crossbar {
     /// the per-cycle idle check is O(1) instead of re-scanning every
     /// queue (hot-loop bookkeeping for the fast path below).
     queued: usize,
-    /// Round-robin pointer per target (indexed by target order).
-    rr: Vec<usize>,
+    /// Round-robin pointer per target *lane* (subordinate port). A
+    /// single shared pointer would let grants on one port re-park the
+    /// pointer and starve a contender on the other (multi-ported DCSPM);
+    /// per-lane pointers give the per-port fairness real AXI subordinate
+    /// arbiters have — and that the WCET analysis assumes.
+    rr: Vec<Vec<usize>>,
     targets: Vec<Box<dyn TargetModel>>,
     /// Completed bursts this cycle (drained by the SoC).
     pub completions: Vec<Completion>,
@@ -45,11 +49,11 @@ pub struct Crossbar {
 
 impl Crossbar {
     pub fn new(n_initiators: usize, targets: Vec<Box<dyn TargetModel>>) -> Self {
-        let n_targets = targets.len();
+        let rr = targets.iter().map(|t| vec![0; t.lanes().max(1)]).collect();
         Self {
             queues: (0..n_initiators).map(|_| InputQueue::default()).collect(),
             queued: 0,
-            rr: vec![0; n_targets],
+            rr,
             targets,
             completions: Vec::new(),
             granted_beats: vec![0; n_initiators],
@@ -120,30 +124,36 @@ impl Crossbar {
         } else {
             'targets: for (t_idx, target) in self.targets.iter_mut().enumerate() {
                 let twhich = target.target();
-                let start = self.rr[t_idx];
-                let mut granted_any = false;
-                for off in 0..n_init {
-                    let i = (start + off) % n_init;
-                    let Some(head) = self.queues[i].fifo.front() else {
-                        continue;
-                    };
-                    if head.target != twhich || !target.can_accept(head) {
-                        continue;
-                    }
-                    let burst = self.queues[i].fifo.pop_front().unwrap();
-                    self.queued -= 1;
-                    self.granted_beats[i] += burst.beats as u64;
-                    let holds_w = burst.write && !burst.wb_buffered;
-                    let beats = burst.beats as Cycle;
-                    target.start(burst, now);
-                    if !granted_any {
-                        // Advance RR past the first grantee for fairness.
-                        self.rr[t_idx] = (i + 1) % n_init;
-                        granted_any = true;
-                    }
-                    if holds_w {
-                        self.w_hold_until = now + beats;
-                        break 'targets;
+                for lane in 0..self.rr[t_idx].len() {
+                    let start = self.rr[t_idx][lane];
+                    let mut granted_any = false;
+                    for off in 0..n_init {
+                        let i = (start + off) % n_init;
+                        let Some(head) = self.queues[i].fifo.front() else {
+                            continue;
+                        };
+                        if head.target != twhich
+                            || target.lane_of(head) != lane
+                            || !target.can_accept(head)
+                        {
+                            continue;
+                        }
+                        let burst = self.queues[i].fifo.pop_front().unwrap();
+                        self.queued -= 1;
+                        self.granted_beats[i] += burst.beats as u64;
+                        let holds_w = burst.write && !burst.wb_buffered;
+                        let beats = burst.beats as Cycle;
+                        target.start(burst, now);
+                        if !granted_any {
+                            // Advance this lane's RR past the first
+                            // grantee for fairness.
+                            self.rr[t_idx][lane] = (i + 1) % n_init;
+                            granted_any = true;
+                        }
+                        if holds_w {
+                            self.w_hold_until = now + beats;
+                            break 'targets;
+                        }
                     }
                 }
             }
@@ -188,6 +198,19 @@ impl Crossbar {
     pub fn fast_forward(&mut self, from: Cycle, to: Cycle) {
         for target in self.targets.iter_mut() {
             target.fast_forward(from, to);
+        }
+    }
+
+    /// WCET hook: with per-lane round-robin arbitration, an upper bound
+    /// on how many bursts can be serviced before a newly queued burst on
+    /// a lane with `competitors` other initiators and `queue_slots`
+    /// admission slots behind the grant point: the burst in service, a
+    /// full admission queue, and one RR turn per competitor.
+    pub fn worst_bursts_ahead(competitors: usize, queue_slots: usize) -> u64 {
+        if competitors == 0 {
+            0
+        } else {
+            1 + queue_slots as u64 + competitors as u64
         }
     }
 }
@@ -292,6 +315,90 @@ mod tests {
         let tct = done.iter().find(|c| c.tag == 2).unwrap();
         // TCT had to wait out the entire 200-beat burst.
         assert!(tct.finished_at > 200, "finished_at={}", tct.finished_at);
+    }
+
+    /// Dual-port target (DCSPM-like): two independent single-slot lanes
+    /// selected by address bit 20.
+    struct TwoLaneStub {
+        slots: [Option<(Burst, Cycle)>; 2],
+    }
+
+    impl TargetModel for TwoLaneStub {
+        fn target(&self) -> Target {
+            Target::Dcspm
+        }
+        fn lanes(&self) -> usize {
+            2
+        }
+        fn lane_of(&self, b: &Burst) -> usize {
+            ((b.addr >> 20) & 1) as usize
+        }
+        fn can_accept(&self, b: &Burst) -> bool {
+            self.slots[self.lane_of(b)].is_none()
+        }
+        fn start(&mut self, b: Burst, now: Cycle) {
+            let lane = self.lane_of(&b);
+            let until = now + b.beats as Cycle;
+            self.slots[lane] = Some((b, until));
+        }
+        fn tick(&mut self, now: Cycle, done: &mut Vec<Completion>) {
+            for slot in self.slots.iter_mut() {
+                if let Some((b, t)) = slot {
+                    if now + 1 >= *t {
+                        done.push(Completion::of(b, *t));
+                        *slot = None;
+                    }
+                }
+            }
+        }
+        fn idle(&self) -> bool {
+            self.slots.iter().all(|s| s.is_none())
+        }
+    }
+
+    #[test]
+    fn lane_grants_do_not_skew_other_lane_arbitration() {
+        // Regression for the shared-RR starvation pathology: initiator 2
+        // streams long bursts on lane 0, initiator 1 hammers lane 1 with
+        // short bursts (each grant used to re-park the shared pointer
+        // right on initiator 2), and initiator 0 queues one short lane-0
+        // burst. With per-lane pointers initiator 0 waits out at most
+        // one long burst plus one RR turn.
+        let mut x = Crossbar::new(3, vec![Box::new(TwoLaneStub { slots: [None, None] })]);
+        let lane1 = 1u64 << 20;
+        x.push(Burst::read(InitiatorId(2), Target::Dcspm, 0, 100).with_tag(90));
+        x.tick(0);
+        x.push(Burst::read(InitiatorId(0), Target::Dcspm, 0, 4).with_tag(7));
+        let mut victim_done = 0;
+        for c in 1..1000 {
+            // Keep both aggressors' queues non-empty.
+            if x.backlog(InitiatorId(2)) == 0 {
+                x.push(Burst::read(InitiatorId(2), Target::Dcspm, 0, 100));
+            }
+            if x.backlog(InitiatorId(1)) == 0 {
+                x.push(Burst::read(InitiatorId(1), Target::Dcspm, lane1, 2));
+            }
+            x.tick(c);
+            for comp in x.take_completions() {
+                if comp.tag == 7 {
+                    victim_done = comp.finished_at;
+                }
+            }
+            if victim_done > 0 {
+                break;
+            }
+        }
+        assert!(
+            victim_done > 0 && victim_done <= 250,
+            "victim starved on lane 0: finished_at={victim_done}"
+        );
+    }
+
+    #[test]
+    fn worst_bursts_ahead_formula() {
+        assert_eq!(Crossbar::worst_bursts_ahead(0, 4), 0);
+        assert_eq!(Crossbar::worst_bursts_ahead(1, 4), 6);
+        assert_eq!(Crossbar::worst_bursts_ahead(2, 0), 3);
     }
 
     #[test]

@@ -88,11 +88,38 @@ impl Dcspm {
     /// half is its own subordinate port: disjoint buffers get disjoint
     /// ports + banks — the interference-free private path (R-E4).
     fn required_port(burst: &Burst) -> Option<usize> {
-        if Self::is_contiguous(burst.addr) {
-            Some((Self::offset(burst.addr) / (CAPACITY / 2)) as usize)
+        Some(Self::port_of_addr(burst.addr))
+    }
+
+    /// Subordinate port serving `addr` (WCET hook: streams on the same
+    /// port serialize; streams on different ports only interact through
+    /// bank conflicts).
+    pub fn port_of_addr(addr: u64) -> usize {
+        if Self::is_contiguous(addr) {
+            (Self::offset(addr) / (CAPACITY / 2)) as usize
         } else {
-            Some(0)
+            0
         }
+    }
+
+    /// The contiguous-alias half `addr` is pinned to, or `None` for the
+    /// interleaved alias (which spreads across every bank). Two streams
+    /// can bank-conflict only when their spans overlap (WCET hook).
+    pub fn bank_half_of_addr(addr: u64) -> Option<u64> {
+        if Self::is_contiguous(addr) {
+            Some(Self::offset(addr) / (CAPACITY / 2))
+        } else {
+            None
+        }
+    }
+
+    /// WCET service model: port cycles for a burst of `beats`, one beat
+    /// per cycle plus the response edge; a conflicting stream on the
+    /// other port can steal every other beat slot (priority alternates
+    /// by cycle parity), doubling the worst case.
+    pub fn worst_burst_cycles(beats: u32, conflict_possible: bool) -> Cycle {
+        let b = beats as Cycle;
+        (if conflict_possible { 2 * b } else { b }) + 1
     }
 }
 
@@ -105,6 +132,16 @@ impl Default for Dcspm {
 impl TargetModel for Dcspm {
     fn target(&self) -> Target {
         Target::Dcspm
+    }
+
+    /// One arbitration lane per subordinate port, so contention on one
+    /// port never skews round-robin fairness on the other.
+    fn lanes(&self) -> usize {
+        2
+    }
+
+    fn lane_of(&self, burst: &Burst) -> usize {
+        Self::port_of_addr(burst.addr)
     }
 
     fn can_accept(&self, burst: &Burst) -> bool {
@@ -223,6 +260,30 @@ mod tests {
         assert_eq!(done.len(), 1);
         // 8 beats starting at cycle 0 -> last beat at cycle 7, +1 resp.
         assert_eq!(done[0].finished_at, 8);
+    }
+
+    #[test]
+    fn port_and_bank_wcet_helpers() {
+        use crate::soc::axi::TargetModel;
+        // Interleaved alias: always port 0, spans every bank.
+        assert_eq!(Dcspm::port_of_addr(0x1000), 0);
+        assert_eq!(Dcspm::bank_half_of_addr(0x1000), None);
+        // Contiguous halves map to their own port + bank half.
+        assert_eq!(Dcspm::port_of_addr(CONTIG_ALIAS_BIT), 0);
+        assert_eq!(Dcspm::bank_half_of_addr(CONTIG_ALIAS_BIT), Some(0));
+        assert_eq!(Dcspm::port_of_addr(CONTIG_ALIAS_BIT + CAPACITY / 2), 1);
+        assert_eq!(
+            Dcspm::bank_half_of_addr(CONTIG_ALIAS_BIT + CAPACITY / 2),
+            Some(1)
+        );
+        // Service model: one beat per cycle + response; conflicts double.
+        assert_eq!(Dcspm::worst_burst_cycles(16, false), 17);
+        assert_eq!(Dcspm::worst_burst_cycles(16, true), 33);
+        // One arbitration lane per port.
+        let d = Dcspm::new();
+        assert_eq!(d.lanes(), 2);
+        assert_eq!(d.lane_of(&read(CONTIG_ALIAS_BIT + CAPACITY / 2, 8, 0)), 1);
+        assert_eq!(d.lane_of(&read(0, 8, 0)), 0);
     }
 
     #[test]

@@ -43,6 +43,44 @@ impl HyperRamTiming {
             llc_hit: 4,
         }
     }
+
+    /// Channel cycles to stream one `line_bytes` cache line (excluding
+    /// the row open).
+    pub fn line_stream_cycles(&self, line_bytes: u64) -> Cycle {
+        (line_bytes / 8) * self.beat_cycles
+    }
+
+    /// Worst-case number of distinct rows `lines` sequentially-addressed
+    /// lines can span (worst alignment against the row boundaries).
+    pub fn worst_rows_of(&self, lines: u64, line_bytes: u64) -> u64 {
+        if lines <= 1 {
+            return lines;
+        }
+        let per_row = (self.row_bytes / line_bytes).max(1);
+        1 + (lines - 1).div_ceil(per_row)
+    }
+
+    /// WCET service model: the most channel cycles `lines` sequential
+    /// line fetches served back to back can take — the first line of
+    /// each spanned row pays the full row open, the rest row-hit. With
+    /// `dirty_possible` every fill may additionally drain a dirty victim
+    /// (a symmetric write, paper-deterministic like the fill itself).
+    ///
+    /// This is the per-target worst-case characterization the `wcet`
+    /// bound engine composes with TSU arrival curves and crossbar
+    /// arbitration bounds.
+    pub fn worst_lines_cost(&self, lines: u64, line_bytes: u64, dirty_possible: bool) -> Cycle {
+        if lines == 0 {
+            return 0;
+        }
+        let rows = self.worst_rows_of(lines, line_bytes);
+        let stream = self.line_stream_cycles(line_bytes);
+        let mut cost = lines * stream + rows * self.t_row_miss + (lines - rows) * self.t_row_hit;
+        if dirty_possible {
+            cost += lines * (self.t_row_miss + stream);
+        }
+        cost
+    }
 }
 
 /// Per-path counters.
@@ -66,6 +104,10 @@ struct Serving {
     /// Whether the current line op has been scheduled.
     line_active: bool,
 }
+
+/// Command-queue depth of the memory controller (bursts admitted behind
+/// the one in service) — part of the WCET structural interference bound.
+pub const QUEUE_DEPTH: usize = 4;
 
 /// DPLLC + HyperBUS channel as one crossbar target.
 ///
@@ -99,7 +141,7 @@ impl HyperramPath {
             timing,
             current: None,
             queue: Default::default(),
-            queue_depth: 4,
+            queue_depth: QUEUE_DEPTH,
             hit_port: None,
             last_row: None,
             stats: PathStats::default(),
@@ -190,6 +232,28 @@ impl HyperramPath {
 impl TargetModel for HyperramPath {
     fn target(&self) -> Target {
         Target::Hyperram
+    }
+
+    /// Two arbitration lanes: the parallel LLC hit port and the channel
+    /// command queue. Without the split, continuous hit-port grants
+    /// would re-park a shared round-robin pointer and let one initiator
+    /// monopolize the command queue (unbounded — and unanalyzable —
+    /// queueing delay for everyone else).
+    ///
+    /// `lane_of` depends on the hit port's occupancy, so when two
+    /// all-hit bursts contend in one cycle the loser re-routes to the
+    /// queue lane on the *next* grant cycle (one extra cycle, inside the
+    /// WCET engine's per-transaction edges budget).
+    fn lanes(&self) -> usize {
+        2
+    }
+
+    fn lane_of(&self, burst: &Burst) -> usize {
+        if self.hit_port.is_none() && self.all_hit(burst) {
+            1
+        } else {
+            0
+        }
     }
 
     fn can_accept(&self, burst: &Burst) -> bool {
@@ -306,6 +370,41 @@ mod tests {
             assert!(now < start + 1_000_000, "no completion");
         }
         done[0]
+    }
+
+    #[test]
+    fn worst_case_service_model_brackets_observed_timing() {
+        let t = HyperRamTiming::carfield();
+        // Single line, worst case: full row open + 8 beats x 2 cycles.
+        assert_eq!(t.worst_lines_cost(1, 64, false), 40);
+        // Sequential lines amortize the row open: 12 lines span at most
+        // 2 rows under worst alignment.
+        assert_eq!(t.worst_rows_of(12, 64), 2);
+        assert_eq!(t.worst_lines_cost(12, 64, false), 12 * 16 + 2 * 24 + 10 * 8);
+        // 32 lines (a 256-beat fragment) span at most 3 rows.
+        assert_eq!(t.worst_lines_cost(32, 64, false), 32 * 16 + 3 * 24 + 29 * 8);
+        // Dirty victims double the channel time per fill.
+        assert_eq!(
+            t.worst_lines_cost(1, 64, true),
+            40 + t.t_row_miss + t.line_stream_cycles(64)
+        );
+        // The model upper-bounds the measured single-line fetch (40
+        // cycles at most, see cold_line_pays_row_miss_plus_stream).
+        let mut p = HyperramPath::carfield();
+        let c = run_one(&mut p, read(0, 8).with_tag(1), 0);
+        assert!(c.finished_at <= t.worst_lines_cost(1, 64, false) + 2);
+    }
+
+    #[test]
+    fn hit_port_and_queue_are_separate_lanes() {
+        use crate::soc::axi::TargetModel;
+        let mut p = HyperramPath::carfield();
+        let miss = read(0, 8);
+        assert_eq!(p.lanes(), 2);
+        assert_eq!(p.lane_of(&miss), 0, "cold burst goes to the queue lane");
+        run_one(&mut p, read(0, 8), 0); // warm the line
+        let hit = read(0, 8);
+        assert_eq!(p.lane_of(&hit), 1, "warm burst rides the hit-port lane");
     }
 
     #[test]

@@ -13,12 +13,22 @@ pub struct Peripheral {
 }
 
 impl Peripheral {
+    /// Register-file access latency the coordinator programs
+    /// (`Scheduler::targets`, `SocSim::carfield_targets`) — also the
+    /// value the WCET engine composes with.
+    pub const DEFAULT_LATENCY: Cycle = 20;
+
     pub fn new(latency: Cycle) -> Self {
         Self {
             latency,
             current: None,
             accesses: 0,
         }
+    }
+
+    /// WCET service model: fixed access latency plus one cycle per beat.
+    pub fn worst_burst_cycles(&self, beats: u32) -> Cycle {
+        self.latency + beats as Cycle
     }
 }
 
@@ -62,6 +72,19 @@ impl TargetModel for Peripheral {
 mod tests {
     use super::*;
     use crate::soc::axi::InitiatorId;
+
+    #[test]
+    fn wcet_service_model_matches_observed_latency() {
+        let mut p = Peripheral::new(Peripheral::DEFAULT_LATENCY);
+        assert_eq!(p.worst_burst_cycles(1), 21);
+        let b = Burst::read(InitiatorId(0), Target::Peripheral, 0, 1);
+        p.start(b, 0);
+        let mut done = Vec::new();
+        for now in 0..30 {
+            p.tick(now, &mut done);
+        }
+        assert_eq!(done[0].finished_at, p.worst_burst_cycles(1));
+    }
 
     #[test]
     fn fixed_latency_access() {

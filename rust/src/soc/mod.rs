@@ -143,7 +143,7 @@ impl SocSim {
         vec![
             Box::new(mem::Dcspm::new()),
             Box::new(mem::HyperramPath::carfield()),
-            Box::new(mem::Peripheral::new(20)),
+            Box::new(mem::Peripheral::new(mem::Peripheral::DEFAULT_LATENCY)),
         ]
     }
 

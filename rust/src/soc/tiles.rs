@@ -13,6 +13,11 @@ use super::axi::{Burst, Completion, InitiatorId, Target};
 use super::clock::Cycle;
 use super::tsu::Tsu;
 
+/// Prefetch depth both accelerator clusters program (classic double
+/// buffering). Shared so the WCET traffic model provably matches the
+/// streamers the scheduler actually builds.
+pub const CLUSTER_BUFFER_DEPTH: u32 = 1;
+
 /// Description of a tiled transfer stream.
 #[derive(Debug, Clone)]
 pub struct TileStream {
@@ -59,6 +64,9 @@ pub struct TileStreamer {
     pub beats_out: u64,
     /// Cycles with a transfer outstanding.
     pub busy_cycles: u64,
+    /// Worst observed transfer latency (issue to last beat) — the
+    /// measured counterpart of the WCET memory-latency bound.
+    pub max_latency: Cycle,
 }
 
 impl TileStreamer {
@@ -76,7 +84,18 @@ impl TileStreamer {
             beats_in: 0,
             beats_out: 0,
             busy_cycles: 0,
+            max_latency: 0,
         }
+    }
+
+    /// Max write bursts a streamer with `buffer_depth` prefetch slots
+    /// can emit back to back without an intervening fetch: pending
+    /// writebacks are fed by computes, which drain the
+    /// `buffer_depth + 1` prefetched tiles plus the one in the pipe;
+    /// writeback priority blocks refills meanwhile (WCET hook for the
+    /// W-channel hold-chain bound, used by `wcet::model`).
+    pub fn worst_write_chain(buffer_depth: u32) -> u64 {
+        buffer_depth as u64 + 3
     }
 
     /// Tiles fetched and awaiting compute.
@@ -195,6 +214,7 @@ impl TileStreamer {
         if c.tag != tag || !c.last_fragment {
             return;
         }
+        self.max_latency = self.max_latency.max(c.latency());
         match flight {
             Flight::Fetch(tile) => {
                 self.beats_in += self.stream.in_beats as u64;

@@ -73,6 +73,40 @@ impl TsuConfig {
             tru_period: period,
         }
     }
+
+    /// Whether the TRU actually regulates (a budget with a refill
+    /// period). A budget with `tru_period == 0` would never refill and
+    /// silently starve the initiator; [`Tsu::new`] rejects it.
+    pub fn is_tru_regulated(&self) -> bool {
+        self.tru_budget_beats > 0 && self.tru_period > 0
+    }
+
+    /// GBS fragment size for a logical burst of `beats`.
+    pub fn fragment_beats(&self, beats: u32) -> u32 {
+        if self.gbs_max_beats == 0 {
+            beats
+        } else {
+            self.gbs_max_beats.min(beats).max(1)
+        }
+    }
+
+    /// TRU arrival curve: the most beats this shaper can release into
+    /// the crossbar in *any* window of `window` cycles. A window can
+    /// straddle partial periods at *both* ends — an initiator that sat
+    /// on an untouched budget can drain it in the last cycle of one
+    /// period and drain the refilled budget right after the boundary —
+    /// so the sound count is `floor(window/period) + 2` budgets, not
+    /// `+1`. `None` when unregulated — the arrival is unbounded and
+    /// only structural (queue-depth) interference bounds apply.
+    ///
+    /// This is the compositional hook the `wcet` bound engine builds its
+    /// busy-window analysis on.
+    pub fn max_beats_in_window(&self, window: Cycle) -> Option<u64> {
+        if !self.is_tru_regulated() {
+            return None;
+        }
+        Some(self.tru_budget_beats as u64 * (window / self.tru_period + 2))
+    }
 }
 
 /// Counters exposed for observability (the paper stresses observability
@@ -107,7 +141,23 @@ struct PendingFragment {
 }
 
 impl Tsu {
+    /// A TRU budget whose period never elapses (`tru_period == 0`) can
+    /// never refill: after the first budget's worth of beats the shaper
+    /// would silently starve its initiator forever. That is a
+    /// misconfiguration, not a regulation profile — reject it loudly at
+    /// programming time instead of deadlocking at runtime.
+    fn check(config: &TsuConfig) {
+        assert!(
+            config.tru_budget_beats == 0 || config.tru_period > 0,
+            "TSU misconfiguration: TRU budget {} with period 0 never \
+             refills and starves the initiator; use budget 0 \
+             (unregulated) or a nonzero period",
+            config.tru_budget_beats
+        );
+    }
+
     pub fn new(config: TsuConfig) -> Self {
+        Self::check(&config);
         Self {
             budget_left: config.tru_budget_beats,
             period_start: 0,
@@ -118,7 +168,11 @@ impl Tsu {
     }
 
     /// Reprogram at runtime (zero-cost, like the memory-mapped regs).
+    /// Fragments already buffered inside the shaper are preserved — a
+    /// reconfiguration must never drop beats in flight; only the
+    /// regulation applied to them changes.
     pub fn reconfigure(&mut self, config: TsuConfig) {
+        Self::check(&config);
         self.config = config;
         self.budget_left = config.tru_budget_beats;
     }
@@ -424,6 +478,119 @@ mod tests {
         tsu.release(1, &mut out2);
         assert!(out2.iter().all(|b| b.beats <= 16));
         assert!(out2.iter().map(|b| b.beats).sum::<u32>() <= 32);
+    }
+
+    #[test]
+    fn tru_budget_equal_to_burst_passes_each_period_boundary() {
+        // Budget exactly equal to the burst's beats: one burst passes
+        // per period, released exactly at the refill boundary.
+        let cfg = TsuConfig {
+            tru_budget_beats: 16,
+            tru_period: 64,
+            ..TsuConfig::passthrough()
+        };
+        let mut tsu = Tsu::new(cfg);
+        for _ in 0..3 {
+            tsu.submit(burst(16), 0);
+        }
+        let mut out = Vec::new();
+        tsu.release(0, &mut out);
+        assert_eq!(out.len(), 1, "first budget-exact burst passes at once");
+        tsu.release(63, &mut out);
+        assert_eq!(out.len(), 1, "no release one cycle before the boundary");
+        tsu.release(64, &mut out);
+        assert_eq!(out.len(), 2, "refill exactly at period_start + period");
+        tsu.release(128, &mut out);
+        assert_eq!(out.len(), 3);
+        assert_eq!(out.iter().map(|b| b.beats).sum::<u32>(), 48);
+    }
+
+    #[test]
+    #[should_panic(expected = "starves the initiator")]
+    fn tru_budget_without_period_is_rejected() {
+        // A budget that never refills would silently starve a TCT; the
+        // shaper must reject the configuration explicitly.
+        Tsu::new(TsuConfig {
+            tru_budget_beats: 8,
+            tru_period: 0,
+            ..TsuConfig::passthrough()
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "starves the initiator")]
+    fn tru_budget_without_period_rejected_on_reconfigure() {
+        let mut tsu = Tsu::new(TsuConfig::passthrough());
+        tsu.reconfigure(TsuConfig {
+            tru_budget_beats: 8,
+            tru_period: 0,
+            ..TsuConfig::passthrough()
+        });
+    }
+
+    #[test]
+    fn reconfigure_preserves_buffered_beats() {
+        // Fragments buffered inside the shaper survive a mid-flight
+        // reconfiguration — no beat is ever dropped.
+        let mut tsu = Tsu::new(TsuConfig::regulated(8, 8, 1000));
+        tsu.submit(burst(64), 0); // 8 fragments; only 1 passes this period
+        let mut out = Vec::new();
+        tsu.release(0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(tsu.queued(), 7, "seven fragments buffered");
+        tsu.reconfigure(TsuConfig::passthrough());
+        tsu.release(1, &mut out);
+        assert_eq!(tsu.queued(), 0, "reconfigure kept every buffered beat");
+        assert_eq!(out.iter().map(|b| b.beats).sum::<u32>(), 64);
+    }
+
+    #[test]
+    fn reconfigure_preserves_wb_buffered_write() {
+        let mut tsu = Tsu::new(TsuConfig::wb_only());
+        let w = Burst::write(InitiatorId(0), Target::Dcspm, 0, 16);
+        tsu.submit(w, 0); // eligible at cycle 1 (WB fill)
+        tsu.reconfigure(TsuConfig::regulated(8, 96, 512));
+        let mut out = Vec::new();
+        tsu.release(1, &mut out);
+        assert_eq!(out.iter().map(|b| b.beats).sum::<u32>(), 16);
+    }
+
+    #[test]
+    fn arrival_curve_covers_boundary_straddling_windows() {
+        let cfg = TsuConfig::regulated(8, 96, 512);
+        assert!(cfg.is_tru_regulated());
+        // A window shorter than a period can still see two full budgets:
+        // one drained just before a refill boundary, one just after.
+        assert_eq!(cfg.max_beats_in_window(2), Some(192));
+        assert_eq!(cfg.max_beats_in_window(511), Some(192));
+        assert_eq!(cfg.max_beats_in_window(512), Some(288));
+        assert_eq!(cfg.max_beats_in_window(5 * 512), Some(7 * 96));
+        assert_eq!(TsuConfig::passthrough().max_beats_in_window(1000), None);
+        assert_eq!(cfg.fragment_beats(100), 8);
+        assert_eq!(cfg.fragment_beats(3), 3);
+        assert_eq!(TsuConfig::passthrough().fragment_beats(100), 100);
+    }
+
+    #[test]
+    fn release_can_straddle_a_refill_boundary_with_two_budgets() {
+        // The reachable worst case behind the `+2` in the arrival curve.
+        let cfg = TsuConfig {
+            tru_budget_beats: 16,
+            tru_period: 100,
+            ..TsuConfig::passthrough()
+        };
+        let mut tsu = Tsu::new(cfg);
+        // Idle (untouched budget) until the last cycle of the period.
+        for _ in 0..4 {
+            tsu.submit(burst(8), 99);
+        }
+        let mut out = Vec::new();
+        tsu.release(99, &mut out);
+        assert_eq!(out.len(), 2, "full budget drained at cycle 99");
+        tsu.release(100, &mut out);
+        assert_eq!(out.len(), 4, "refilled budget drained at cycle 100");
+        // 32 beats released within a 2-cycle window = 2x budget.
+        assert_eq!(out.iter().map(|b| b.beats).sum::<u32>(), 32);
     }
 
     #[test]

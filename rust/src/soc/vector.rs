@@ -223,7 +223,7 @@ impl VectorCluster {
                 src_base: task.src_base,
                 dst_base: task.dst_base,
                 part_id: task.part_id,
-                buffer_depth: 1,
+                buffer_depth: super::tiles::CLUSTER_BUFFER_DEPTH,
                 wrap_bytes: crate::coordinator::policy::IsolationPolicy::L2_SLOT_BYTES / 2,
             },
         ));
@@ -236,8 +236,20 @@ impl VectorCluster {
 
     fn tile_cycles(&self) -> Cycle {
         let task = self.task.as_ref().expect("no task");
-        let rate = task.flop_per_cyc() * self.freq_ratio;
-        (self.flops_per_tile as f64 / rate).ceil() as Cycle
+        Self::tile_compute_bound(task, self.freq_ratio)
+    }
+
+    /// Deterministic per-tile compute time — the exact duration the FSM
+    /// uses, exposed for the WCET engine.
+    pub fn tile_compute_bound(task: &VectorTask, freq_ratio: f64) -> Cycle {
+        let (_, flops, _, _) = task.tiling();
+        let rate = task.flop_per_cyc() * freq_ratio;
+        (flops as f64 / rate).ceil() as Cycle
+    }
+
+    /// Worst observed L2 transfer latency (WCET measured counterpart).
+    pub fn mem_latency_max(&self) -> Cycle {
+        self.streamer.as_ref().map_or(0, |s| s.max_latency)
     }
 
     pub fn task_done(&self) -> bool {

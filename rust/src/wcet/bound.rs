@@ -1,0 +1,579 @@
+//! The compositional bound computation (see the module docs in
+//! [`crate::wcet`] for the model). Transliterated 1:1 from the
+//! empirically-validated prototype: every formula here was checked for
+//! soundness (`measured <= bound`) against 1200 randomized mixes and
+//! the fig6a/fig6b grids, and for tightness (`bound <= 2x measured`) on
+//! the TSU-regulated rows.
+
+use crate::coordinator::Scenario;
+use crate::soc::axi::xbar::Crossbar;
+use crate::soc::axi::{Target, BEAT_BYTES};
+use crate::soc::clock::Cycle;
+use crate::soc::mem::dcspm::Dcspm;
+use crate::soc::mem::hyperram;
+use crate::soc::mem::peripheral::Peripheral;
+use crate::soc::mem::HyperRamTiming;
+
+use super::model::{models_of, InitiatorModel, StreamModel, TaskShape};
+
+/// Pipeline edges budget per transaction: issue, grant, service start
+/// and response delivery each cost at most one cycle.
+pub const EDGES: Cycle = 4;
+/// DPLLC / L1 line size (bytes) — constant across the Carfield models
+/// (asserted against `DpllcConfig::carfield()` in [`analyze`]).
+const LINE_BYTES: u64 = 64;
+/// Busy-window divergence cap: beyond this the fixed point will not
+/// converge and the structural bound is used instead.
+const WINDOW_CAP: f64 = 1e12;
+
+/// The shared resource a bound is dominated by (feasibility reports name
+/// it so the coordinator knows which knob to turn).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Resource {
+    /// The single HyperBUS channel behind the DPLLC.
+    HyperramChannel,
+    /// A DCSPM subordinate port (or cross-port bank conflicts).
+    DcspmPort,
+    /// The constant-latency peripheral region.
+    Peripheral,
+    /// The shared W channel, held by unbuffered writes.
+    WChannel,
+    /// The task's own TSU shaping (GBS/TRU/WB fill).
+    TsuShaping,
+    /// The cluster's own compute pipeline.
+    Compute,
+    /// An endless stream — no completion bound exists.
+    Endless,
+}
+
+impl Resource {
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Resource::HyperramChannel => "HyperRAM channel contention",
+            Resource::DcspmPort => "DCSPM port contention",
+            Resource::Peripheral => "peripheral access latency",
+            Resource::WChannel => "W-channel holds by unbuffered writers",
+            Resource::TsuShaping => "own TSU shaping",
+            Resource::Compute => "compute pipeline",
+            Resource::Endless => "endless workload (no completion bound)",
+        }
+    }
+}
+
+/// Bounds for one time-critical task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskBound {
+    pub task: String,
+    /// Worst-case latency of a single memory transaction.
+    pub mem_bound: Cycle,
+    pub mem_binding: Resource,
+    /// Worst-case completion time (`None` for endless workloads).
+    pub completion_bound: Option<Cycle>,
+    pub completion_binding: Resource,
+}
+
+/// The analysis result for a scenario: one entry per critical task.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WcetReport {
+    pub scenario: String,
+    pub policy: String,
+    pub bounds: Vec<TaskBound>,
+}
+
+impl WcetReport {
+    pub fn bound_for(&self, task: &str) -> &TaskBound {
+        self.bounds
+            .iter()
+            .find(|b| b.task == task)
+            .unwrap_or_else(|| panic!("no bound for critical task {task}"))
+    }
+}
+
+/// Analyze a scenario: derive bounds for every time-critical task
+/// without simulating. Pure and deterministic — identical output for
+/// identical scenarios, regardless of thread count or call order.
+pub fn analyze(scenario: &Scenario) -> WcetReport {
+    // Tie the engine's geometry constants to the simulator's: if the
+    // cache/bus geometry ever drifts, fail loudly (release builds
+    // included — `carfield wcet` and admission control must never emit
+    // silently unsound bounds).
+    assert_eq!(
+        crate::soc::mem::dpllc::DpllcConfig::carfield().line_bytes,
+        LINE_BYTES,
+        "WCET engine geometry drifted from DpllcConfig::carfield()"
+    );
+    let models = models_of(scenario);
+    let timing = HyperRamTiming::carfield();
+    let bounds = (0..models.len())
+        .filter(|&i| models[i].critical)
+        .map(|i| analyze_model(i, &models, &timing))
+        .collect();
+    WcetReport {
+        scenario: scenario.name.clone(),
+        policy: format!("{:?}", scenario.policy),
+        bounds,
+    }
+}
+
+fn ceil_div(a: u64, b: u64) -> u64 {
+    a.div_ceil(b.max(1))
+}
+
+/// Lines a fragment of `beats` beats touches (streams are line-aligned).
+fn lines_of_fragment(beats: u32) -> u64 {
+    ceil_div(beats as u64 * BEAT_BYTES, LINE_BYTES).max(1)
+}
+
+/// Any stream in the scenario writing the HyperRAM space can leave dirty
+/// LLC lines, so every fill may additionally drain a victim.
+fn dirty_possible(models: &[InitiatorModel]) -> bool {
+    models
+        .iter()
+        .any(|m| m.streams.iter().any(|s| s.write && s.target == Target::Hyperram))
+}
+
+fn banks_overlap(a: Option<u64>, b: Option<u64>) -> bool {
+    match (a, b) {
+        (None, _) | (_, None) => true, // interleaved spans every bank
+        (Some(x), Some(y)) => x == y,
+    }
+}
+
+/// Can a stream on the *other* DCSPM port steal beat slots from `s`
+/// through bank conflicts?
+fn stream_conflict(models: &[InitiatorModel], owner: usize, s: &StreamModel) -> bool {
+    if s.target != Target::Dcspm {
+        return false;
+    }
+    let port = Dcspm::port_of_addr(s.addr);
+    let banks = Dcspm::bank_half_of_addr(s.addr);
+    models.iter().enumerate().any(|(i, m)| {
+        i != owner
+            && m.streams.iter().any(|o| {
+                o.target == Target::Dcspm
+                    && Dcspm::port_of_addr(o.addr) != port
+                    && banks_overlap(banks, Dcspm::bank_half_of_addr(o.addr))
+            })
+    })
+}
+
+/// Worst service time of one shaped fragment of initiator `owner`'s
+/// stream `s`.
+fn fragment_cost(
+    models: &[InitiatorModel],
+    owner: usize,
+    s: &StreamModel,
+    timing: &HyperRamTiming,
+    dirty: bool,
+) -> Cycle {
+    let frag = models[owner].tsu.fragment_beats(s.beats);
+    match s.target {
+        Target::Hyperram => timing.worst_lines_cost(lines_of_fragment(frag), LINE_BYTES, dirty),
+        Target::Dcspm => Dcspm::worst_burst_cycles(frag, stream_conflict(models, owner, s)),
+        Target::Peripheral => Peripheral::new(Peripheral::DEFAULT_LATENCY).worst_burst_cycles(frag),
+    }
+}
+
+/// Worst shaping delay of the task's own TSU for one logical burst.
+fn own_tsu_delay(me: &InitiatorModel, s: &StreamModel) -> Cycle {
+    let tsu = &me.tsu;
+    let mut d: Cycle = 0;
+    if s.write && tsu.wb_enable {
+        d += if s.beats > tsu.wb_capacity_beats {
+            s.beats as Cycle
+        } else {
+            1
+        };
+    }
+    if tsu.is_tru_regulated() {
+        let frag = tsu.fragment_beats(s.beats);
+        let n_frags = ceil_div(s.beats as u64, frag as u64);
+        let per_period = ((tsu.tru_budget_beats / frag).max(1)) as u64;
+        d += ceil_div(n_frags, per_period) * tsu.tru_period;
+    }
+    d
+}
+
+/// Per-stream structural bound components.
+struct StreamBound {
+    total: Cycle,
+    own: Cycle,
+    w_term: Cycle,
+    endless: bool,
+}
+
+fn analyze_model(my_idx: usize, models: &[InitiatorModel], timing: &HyperRamTiming) -> TaskBound {
+    let me = &models[my_idx];
+    let dirty = dirty_possible(models);
+
+    // W-channel holds: worst unbuffered-write fragment anywhere else and
+    // the total back-to-back chain those writers can sustain.
+    let mut w_frag: u32 = 0;
+    let mut w_chain: u64 = 0;
+    for (i, m) in models.iter().enumerate() {
+        if i == my_idx {
+            continue;
+        }
+        let mut writes = false;
+        for s in &m.streams {
+            if s.write && s.unbuffered_write {
+                w_frag = w_frag.max(m.tsu.fragment_beats(s.beats));
+                writes = true;
+            }
+        }
+        if writes {
+            w_chain += m.write_chain_cap;
+        }
+    }
+
+    let mut per_stream: Vec<StreamBound> = Vec::new();
+    let mut mem_bound: Cycle = 0;
+    let mut mem_binding = Resource::HyperramChannel;
+    for s in &me.streams {
+        let own_frag = me.tsu.fragment_beats(s.beats);
+        let n_frags = ceil_div(s.beats as u64, own_frag as u64);
+        let own = n_frags * fragment_cost(models, my_idx, s, timing, dirty);
+        let own_resource = match s.target {
+            Target::Hyperram => Resource::HyperramChannel,
+            Target::Dcspm => Resource::DcspmPort,
+            Target::Peripheral => Resource::Peripheral,
+        };
+        let queue = match s.target {
+            Target::Hyperram => hyperram::QUEUE_DEPTH,
+            _ => 0,
+        };
+        // Competing streams: same target, and for the DCSPM the same
+        // subordinate port (per-lane arbitration).
+        let my_port = Dcspm::port_of_addr(s.addr);
+        let competitors: Vec<(usize, &StreamModel)> = models
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != my_idx)
+            .flat_map(|(i, m)| m.streams.iter().map(move |c| (i, c)))
+            .filter(|&(_, c)| {
+                c.target == s.target
+                    && (s.target != Target::Dcspm || Dcspm::port_of_addr(c.addr) == my_port)
+            })
+            .collect();
+        let n_comp_inits = {
+            let mut ids: Vec<usize> = competitors.iter().map(|&(i, _)| i).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            ids.len()
+        };
+        let ahead = Crossbar::worst_bursts_ahead(n_comp_inits, queue);
+        let worst_comp = competitors
+            .iter()
+            .map(|&(i, c)| fragment_cost(models, i, c, timing, dirty))
+            .max()
+            .unwrap_or(0);
+        // Every own fragment can wait out a full arbitration round; each
+        // serviced burst ahead may additionally be preceded by one
+        // W-channel hold, plus each writer's provable back-to-back chain.
+        let interference = n_frags * ahead * worst_comp;
+        let w_term = if w_frag > 0 {
+            (ahead + 1 + w_chain) * w_frag as Cycle
+        } else {
+            0
+        };
+        let tsu_d = own_tsu_delay(me, s);
+        let total = tsu_d + interference + w_term + own + EDGES;
+        if total > mem_bound {
+            mem_bound = total;
+            mem_binding = if interference >= own.max(w_term).max(tsu_d) {
+                own_resource
+            } else if w_term > own.max(tsu_d) {
+                Resource::WChannel
+            } else if tsu_d > own {
+                Resource::TsuShaping
+            } else {
+                own_resource
+            };
+        }
+        per_stream.push(StreamBound {
+            total,
+            own,
+            w_term,
+            endless: s.count.is_none(),
+        });
+    }
+
+    let (completion, completion_binding) =
+        completion_of(my_idx, models, &per_stream, timing, dirty, w_frag, mem_binding);
+    TaskBound {
+        task: me.name.clone(),
+        mem_bound,
+        mem_binding,
+        completion_bound: completion,
+        completion_binding,
+    }
+}
+
+/// Are all competitors on `target` TRU-regulated (bounded arrival)?
+fn competitors_regulated(models: &[InitiatorModel], my_idx: usize, target: Target) -> bool {
+    models.iter().enumerate().all(|(i, m)| {
+        i == my_idx
+            || !m.streams.iter().any(|s| s.target == target)
+            || m.tsu.is_tru_regulated()
+    })
+}
+
+/// Worst service time competitors' arrivals (TRU curves) plus carried-in
+/// backlog can consume on `target` within `window` cycles. Only called
+/// when every competitor on `target` is regulated.
+fn window_interference(
+    models: &[InitiatorModel],
+    my_idx: usize,
+    target: Target,
+    window: f64,
+    timing: &HyperRamTiming,
+    dirty: bool,
+) -> f64 {
+    let mut total = 0.0;
+    for (i, m) in models.iter().enumerate() {
+        if i == my_idx {
+            continue;
+        }
+        let streams: Vec<&StreamModel> =
+            m.streams.iter().filter(|s| s.target == target).collect();
+        if streams.is_empty() {
+            continue;
+        }
+        let tsu = &m.tsu;
+        let frag = streams
+            .iter()
+            .map(|s| tsu.fragment_beats(s.beats))
+            .max()
+            .unwrap();
+        let (per_period_frags, per_period_beats) = if frag >= tsu.tru_budget_beats {
+            (1u64, frag) // an oversize fragment passes once per period
+        } else {
+            let full = (tsu.tru_budget_beats / frag) as u64;
+            // A burst whose length is not a multiple of the GBS size
+            // ends in a sub-fragment tail that can squeeze through
+            // leftover budget — one extra service activation per burst
+            // startable in the period (plus one straddling its start).
+            let min_beats = streams.iter().map(|s| s.beats.max(1)).min().unwrap();
+            let has_tail = streams
+                .iter()
+                .any(|s| s.beats % tsu.fragment_beats(s.beats) != 0);
+            let tails = if has_tail {
+                (tsu.tru_budget_beats as u64).div_ceil(min_beats as u64) + 1
+            } else {
+                0
+            };
+            (full + tails, tsu.tru_budget_beats)
+        };
+        // Periods derive from the TSU's own arrival curve (which covers
+        // windows straddling a partial period at both ends).
+        let max_beats = tsu
+            .max_beats_in_window(window as Cycle)
+            .expect("caller guarantees regulated competitors");
+        let periods = (max_beats / tsu.tru_budget_beats as u64) as f64;
+        let carry_frags: u64 = m.inflight_cap
+            * streams
+                .iter()
+                .map(|s| ceil_div(s.beats as u64, tsu.fragment_beats(s.beats) as u64))
+                .max()
+                .unwrap();
+        if target == Target::Hyperram {
+            let lines = per_period_frags * lines_of_fragment(frag);
+            total += periods * timing.worst_lines_cost(lines, LINE_BYTES, dirty) as f64;
+            total += timing.worst_lines_cost(
+                carry_frags * lines_of_fragment(frag),
+                LINE_BYTES,
+                dirty,
+            ) as f64;
+        } else {
+            let conflict = streams.iter().any(|s| stream_conflict(models, i, s));
+            let per = Dcspm::worst_burst_cycles(per_period_beats, conflict) + per_period_frags;
+            total += periods * per as f64;
+            total += carry_frags as f64 * Dcspm::worst_burst_cycles(frag, conflict) as f64;
+        }
+    }
+    total
+}
+
+fn completion_of(
+    my_idx: usize,
+    models: &[InitiatorModel],
+    per_stream: &[StreamBound],
+    timing: &HyperRamTiming,
+    dirty: bool,
+    w_frag: u32,
+    mem_binding: Resource,
+) -> (Option<Cycle>, Resource) {
+    let me = &models[my_idx];
+    if per_stream.iter().any(|s| s.endless) {
+        return (None, Resource::Endless);
+    }
+    // ---- structural path (always finite, always sound) ----
+    let (structural, structural_binding, base, target) = match me.shape {
+        TaskShape::HostTct { think, accesses } => {
+            let structural = accesses * (think + 2 + per_stream[0].total);
+            let has_comp = models.iter().enumerate().any(|(i, m)| {
+                i != my_idx && m.streams.iter().any(|s| s.target == Target::Hyperram)
+            });
+            // Competitor interleaving destroys the walker's row
+            // locality: charge one extra row open per access.
+            let reopen = if has_comp {
+                timing.t_row_miss - timing.t_row_hit
+            } else {
+                0
+            };
+            let base = accesses
+                * (think + EDGES + timing.worst_lines_cost(1, LINE_BYTES, dirty) + reopen);
+            (structural, mem_binding, base, Target::Hyperram)
+        }
+        TaskShape::Cluster {
+            tiles,
+            compute_per_tile,
+        } => {
+            let per_tile: Cycle = per_stream.iter().map(|s| s.total).sum();
+            let structural = tiles * (per_tile + compute_per_tile + 4);
+            let binding = if compute_per_tile + 4 > per_tile {
+                Resource::Compute
+            } else {
+                mem_binding
+            };
+            let own: Cycle =
+                per_stream.iter().map(|s| s.own + s.w_term).sum::<Cycle>() + 2 * EDGES;
+            let base = tiles * (own + compute_per_tile + 4);
+            (structural, binding, base, Target::Dcspm)
+        }
+        TaskShape::Dma { chunks } => {
+            let chunks = chunks.unwrap_or(0); // endless handled above
+            let structural = chunks * (per_stream.iter().map(|s| s.total).sum::<Cycle>() + 2);
+            return (Some(structural), mem_binding);
+        }
+    };
+    // ---- busy-window path (tighter; needs regulated competitors and no
+    // unbuffered writers — W-channel holds stall every grant and are not
+    // captured by per-target arrival curves) ----
+    let mut best = structural;
+    let mut binding = structural_binding;
+    if competitors_regulated(models, my_idx, target) && w_frag == 0 {
+        let base_f = base as f64;
+        let mut t = base_f;
+        let mut converged = false;
+        for _ in 0..200 {
+            let nxt = base_f + window_interference(models, my_idx, target, t, timing, dirty);
+            if nxt > WINDOW_CAP {
+                break;
+            }
+            if nxt - t <= 1.0 {
+                t = nxt;
+                converged = true;
+                break;
+            }
+            t = nxt;
+        }
+        if converged && (t.ceil() as Cycle) < best {
+            best = t.ceil() as Cycle;
+            binding = match target {
+                Target::Hyperram => Resource::HyperramChannel,
+                _ => Resource::DcspmPort,
+            };
+        }
+    }
+    (Some(best), binding)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::Criticality;
+    use crate::coordinator::{IsolationPolicy, McTask, Workload};
+    use crate::soc::dma::DmaJob;
+    use crate::soc::hostd::TctSpec;
+
+    fn fig6a_scenario(policy: IsolationPolicy) -> Scenario {
+        Scenario::new("s", policy)
+            .with_task(McTask::new(
+                "tct",
+                Criticality::Hard,
+                Workload::HostTct(TctSpec::fig6a()),
+            ))
+            .with_task(McTask::new(
+                "dma",
+                Criticality::BestEffort,
+                Workload::DmaCopy(DmaJob::interferer()),
+            ))
+    }
+
+    #[test]
+    fn isolated_tct_bound_is_own_service_plus_edges() {
+        let s = Scenario::new("iso", IsolationPolicy::NoIsolation).with_task(McTask::new(
+            "tct",
+            Criticality::Hard,
+            Workload::HostTct(TctSpec::fig6a()),
+        ));
+        let r = analyze(&s);
+        let b = r.bound_for("tct");
+        // One 64B line: row miss (24) + 8 beats x 2 cycles + 4 edges.
+        assert_eq!(b.mem_bound, 44);
+        assert!(b.completion_bound.is_some());
+    }
+
+    #[test]
+    fn regulated_interference_composes_queue_and_arbitration() {
+        let r = analyze(&fig6a_scenario(IsolationPolicy::TsuRegulation));
+        let b = r.bound_for("tct");
+        // own 40 + edges 4 + (1 in service + 4 queue + 1 RR turn) x 40.
+        assert_eq!(b.mem_bound, 284);
+        assert_eq!(b.mem_binding, Resource::HyperramChannel);
+        // The busy window converges: the regulated DMA leaves headroom.
+        let c = b.completion_bound.expect("finite");
+        assert!(c < 2_000_000, "busy window diverged: {c}");
+    }
+
+    #[test]
+    fn unregulated_interference_is_finite_but_far_larger() {
+        let reg = analyze(&fig6a_scenario(IsolationPolicy::TsuRegulation));
+        let unreg = analyze(&fig6a_scenario(IsolationPolicy::NoIsolation));
+        let b_reg = reg.bound_for("tct");
+        let b_unreg = unreg.bound_for("tct");
+        // Unsplit 256-beat bursts + W-channel holds blow the bound up by
+        // over an order of magnitude — the Fig. 6a story, analytically.
+        assert!(b_unreg.mem_bound > 10 * b_reg.mem_bound);
+        assert!(
+            b_unreg.completion_bound.unwrap() > 10 * b_reg.completion_bound.unwrap(),
+            "unreg {:?} vs reg {:?}",
+            b_unreg.completion_bound,
+            b_reg.completion_bound
+        );
+    }
+
+    #[test]
+    fn endless_critical_task_has_no_completion_bound() {
+        let job = DmaJob::interferer();
+        let s = Scenario::new("endless", IsolationPolicy::TsuRegulation).with_task(
+            McTask::new("dma", Criticality::Hard, Workload::DmaCopy(job)),
+        );
+        let r = analyze(&s);
+        let b = r.bound_for("dma");
+        assert_eq!(b.completion_bound, None);
+        assert_eq!(b.completion_binding, Resource::Endless);
+    }
+
+    #[test]
+    fn analyze_is_deterministic() {
+        let s = fig6a_scenario(IsolationPolicy::TsuRegulation);
+        assert_eq!(analyze(&s), analyze(&s));
+    }
+
+    #[test]
+    fn resource_descriptions_cover_all_variants() {
+        for r in [
+            Resource::HyperramChannel,
+            Resource::DcspmPort,
+            Resource::Peripheral,
+            Resource::WChannel,
+            Resource::TsuShaping,
+            Resource::Compute,
+            Resource::Endless,
+        ] {
+            assert!(!r.describe().is_empty());
+        }
+    }
+}

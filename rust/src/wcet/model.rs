@@ -1,0 +1,314 @@
+//! Scenario -> analyzable traffic model.
+//!
+//! Mirrors the coordinator's placement (`Scheduler::execute`): one
+//! initiator slot per task in declaration order, TSU programs from the
+//! policy, L2 staging bases from [`IsolationPolicy::l2_base`]. Each
+//! initiator becomes a set of [`StreamModel`]s (the bursts it puts on
+//! the bus) plus a [`TaskShape`] describing how transactions compose
+//! into a completion time.
+
+use crate::coordinator::policy::tsu_for;
+use crate::coordinator::task::Workload;
+use crate::coordinator::{McTask, Scenario};
+use crate::soc::amr::{AmrCluster, AmrTask};
+use crate::soc::axi::{Target, BEAT_BYTES};
+use crate::soc::clock::Cycle;
+use crate::soc::tiles::{TileStreamer, CLUSTER_BUFFER_DEPTH};
+use crate::soc::tsu::TsuConfig;
+use crate::soc::vector::{VectorCluster, VectorTask, VectorWork};
+
+/// One traffic stream an initiator puts on the fabric.
+#[derive(Debug, Clone)]
+pub struct StreamModel {
+    pub target: Target,
+    /// Logical burst size in beats (pre-GBS).
+    pub beats: u32,
+    pub write: bool,
+    /// Representative address (decides DCSPM port / bank half).
+    pub addr: u64,
+    /// Logical bursts over the task's lifetime; `None` = endless.
+    pub count: Option<u64>,
+    /// Write issued without a write buffer: holds the shared W channel
+    /// while its data dribbles through.
+    pub unbuffered_write: bool,
+}
+
+/// How an initiator's transactions compose into a completion time.
+#[derive(Debug, Clone)]
+pub enum TaskShape {
+    /// Blocking strided walker: `accesses` line fills with `think`
+    /// cycles of address generation between them (every access assumed
+    /// an L1 + LLC miss — the cache-cold worst case).
+    HostTct { think: Cycle, accesses: u64 },
+    /// Double-buffered tile pipeline: fetch + compute + writeback per
+    /// tile, fully serialized in the worst case.
+    Cluster { tiles: u64, compute_per_tile: Cycle },
+    /// Pipelined chunk copy (`None` chunks = endless interferer).
+    Dma { chunks: Option<u64> },
+}
+
+/// The analyzable model of one bus initiator.
+#[derive(Debug, Clone)]
+pub struct InitiatorModel {
+    pub name: String,
+    pub critical: bool,
+    pub tsu: TsuConfig,
+    /// Max logical bursts kept in flight simultaneously.
+    pub inflight_cap: u64,
+    /// Max back-to-back unbuffered writes without an intervening read of
+    /// its own (bounds W-channel hold chains; see
+    /// `TileStreamer::worst_write_chain`).
+    pub write_chain_cap: u64,
+    pub shape: TaskShape,
+    pub streams: Vec<StreamModel>,
+}
+
+/// Derive the per-initiator traffic models for a scenario.
+pub fn models_of(scenario: &Scenario) -> Vec<InitiatorModel> {
+    scenario
+        .tasks
+        .iter()
+        .enumerate()
+        .map(|(slot, task)| model_of(scenario, slot, task))
+        .collect()
+}
+
+fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
+    let policy = scenario.policy;
+    let critical = task.criticality.is_time_critical();
+    let tsu = tsu_for(policy, critical);
+    let wb = tsu.wb_enable;
+    match &task.workload {
+        Workload::HostTct(spec) => {
+            let accesses = spec.accesses as u64 * spec.iterations as u64;
+            InitiatorModel {
+                name: task.name.clone(),
+                critical,
+                tsu,
+                inflight_cap: 1,
+                write_chain_cap: 0,
+                shape: TaskShape::HostTct {
+                    think: spec.think_cycles,
+                    accesses,
+                },
+                streams: vec![StreamModel {
+                    target: Target::Hyperram,
+                    beats: 8, // one 64B line fill
+                    write: false,
+                    addr: spec.base,
+                    count: Some(accesses),
+                    unbuffered_write: false,
+                }],
+            }
+        }
+        Workload::DmaCopy(job) => {
+            let chunks = if job.looping {
+                None
+            } else {
+                Some(job.bytes.div_ceil(job.chunk_beats as u64 * BEAT_BYTES))
+            };
+            let mut streams = vec![StreamModel {
+                target: job.src,
+                beats: job.chunk_beats,
+                write: false,
+                addr: job.src_addr,
+                count: chunks,
+                unbuffered_write: false,
+            }];
+            if let Some(dst) = job.dst {
+                streams.push(StreamModel {
+                    target: dst,
+                    beats: job.chunk_beats,
+                    write: true,
+                    addr: job.dst_addr,
+                    count: chunks,
+                    unbuffered_write: !wb,
+                });
+            }
+            InitiatorModel {
+                name: task.name.clone(),
+                critical,
+                tsu,
+                inflight_cap: job.outstanding as u64,
+                write_chain_cap: job.outstanding as u64,
+                shape: TaskShape::Dma { chunks },
+                streams,
+            }
+        }
+        Workload::AmrMatMul {
+            precision,
+            m,
+            k,
+            n,
+            tile,
+        } => {
+            let amr = AmrTask {
+                precision: *precision,
+                m: *m,
+                k: *k,
+                n: *n,
+                tile: *tile,
+                src_base: policy.l2_base(slot),
+                dst_base: policy.l2_base(slot) + (1 << 17),
+                part_id: 0,
+            };
+            let tiles = amr.tiles() as u64;
+            let compute = AmrCluster::tile_compute_bound(&amr, task.required_amr_mode(), 1.0);
+            cluster_model(
+                task,
+                critical,
+                tsu,
+                tiles,
+                compute,
+                amr.in_beats_per_tile(),
+                amr.out_beats_per_tile(),
+                amr.src_base,
+                amr.dst_base,
+            )
+        }
+        Workload::VectorMatMul { format, m, k, n, tile } => {
+            let vt = VectorTask {
+                format: *format,
+                work: VectorWork::MatMul {
+                    m: *m,
+                    k: *k,
+                    n: *n,
+                    tile: *tile,
+                },
+                src_base: policy.l2_base(slot),
+                dst_base: policy.l2_base(slot) + (1 << 17),
+                part_id: 0,
+            };
+            vector_model(task, critical, tsu, &vt)
+        }
+        Workload::VectorFft { format, n, batch } => {
+            let vt = VectorTask {
+                format: *format,
+                work: VectorWork::Fft { n: *n, batch: *batch },
+                src_base: policy.l2_base(slot),
+                dst_base: policy.l2_base(slot) + (1 << 17),
+                part_id: 0,
+            };
+            vector_model(task, critical, tsu, &vt)
+        }
+    }
+}
+
+fn vector_model(
+    task: &McTask,
+    critical: bool,
+    tsu: TsuConfig,
+    vt: &VectorTask,
+) -> InitiatorModel {
+    let (tiles, _, in_beats, out_beats) = vt.tiling();
+    let compute = VectorCluster::tile_compute_bound(vt, 1.0);
+    cluster_model(
+        task,
+        critical,
+        tsu,
+        tiles as u64,
+        compute,
+        in_beats,
+        out_beats,
+        vt.src_base,
+        vt.dst_base,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn cluster_model(
+    task: &McTask,
+    critical: bool,
+    tsu: TsuConfig,
+    tiles: u64,
+    compute_per_tile: Cycle,
+    in_beats: u32,
+    out_beats: u32,
+    src_base: u64,
+    dst_base: u64,
+) -> InitiatorModel {
+    let wb = tsu.wb_enable;
+    let mut streams = vec![StreamModel {
+        target: Target::Dcspm,
+        beats: in_beats,
+        write: false,
+        addr: src_base,
+        count: Some(tiles),
+        unbuffered_write: false,
+    }];
+    if out_beats > 0 {
+        streams.push(StreamModel {
+            target: Target::Dcspm,
+            beats: out_beats,
+            write: true,
+            addr: dst_base,
+            count: Some(tiles),
+            unbuffered_write: !wb,
+        });
+    }
+    InitiatorModel {
+        name: task.name.clone(),
+        critical,
+        tsu,
+        inflight_cap: 1,
+        write_chain_cap: TileStreamer::worst_write_chain(CLUSTER_BUFFER_DEPTH),
+        shape: TaskShape::Cluster {
+            tiles,
+            compute_per_tile,
+        },
+        streams,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::task::Criticality;
+    use crate::coordinator::IsolationPolicy;
+    use crate::soc::dma::DmaJob;
+    use crate::soc::hostd::TctSpec;
+
+    #[test]
+    fn tct_model_counts_total_accesses() {
+        let s = Scenario::new("m", IsolationPolicy::TsuRegulation).with_task(McTask::new(
+            "tct",
+            Criticality::Hard,
+            Workload::HostTct(TctSpec::fig6a()),
+        ));
+        let m = models_of(&s);
+        assert_eq!(m.len(), 1);
+        assert!(m[0].critical);
+        assert_eq!(m[0].streams.len(), 1);
+        assert_eq!(m[0].streams[0].count, Some(768 * 8));
+        assert!(!m[0].tsu.is_tru_regulated(), "TCTs are never throttled");
+    }
+
+    #[test]
+    fn looping_dma_is_endless_and_regulated_under_tsu_policy() {
+        let s = Scenario::new("m", IsolationPolicy::TsuRegulation).with_task(McTask::new(
+            "dma",
+            Criticality::BestEffort,
+            Workload::DmaCopy(DmaJob::interferer()),
+        ));
+        let m = models_of(&s);
+        assert!(m[0].tsu.is_tru_regulated());
+        assert_eq!(m[0].streams.len(), 2, "read + write sides");
+        assert!(m[0].streams.iter().all(|st| st.count.is_none()));
+        assert!(
+            !m[0].streams[1].unbuffered_write,
+            "regulated profile write-buffers the DMA"
+        );
+    }
+
+    #[test]
+    fn unregulated_dma_write_holds_w_channel() {
+        let s = Scenario::new("m", IsolationPolicy::NoIsolation).with_task(McTask::new(
+            "dma",
+            Criticality::BestEffort,
+            Workload::DmaCopy(DmaJob::interferer()),
+        ));
+        let m = models_of(&s);
+        assert!(m[0].streams[1].unbuffered_write);
+        assert_eq!(m[0].write_chain_cap, 4);
+    }
+}

@@ -1,0 +1,107 @@
+//! The soundness invariant of the analytical WCET engine, fuzzed:
+//! `measured <= bound` must hold for every critical task of every
+//! randomly generated mix, on both the memory-latency and the
+//! completion-time bound — and admission decisions must be byte-stable
+//! across thread counts (the analysis is pure arithmetic; nothing about
+//! parallel execution may leak into it).
+
+use carfield::coordinator::{sweep, Scenario, Scheduler};
+use carfield::wcet::{analyze, fuzz};
+
+/// Mixes per campaign. The generator space was validated offline on
+/// 1200 seeds; this keeps the in-tree run a few seconds while still
+/// covering hundreds of mixes across every policy.
+const FUZZ_MIXES: u64 = 200;
+
+fn fuzz_grid(n: u64) -> Vec<Scenario> {
+    (1..=n).map(fuzz::random_scenario).collect()
+}
+
+#[test]
+fn fuzzed_mixes_measured_never_exceeds_bound() {
+    let grid = fuzz_grid(FUZZ_MIXES);
+    let reports = sweep::run_scenarios(&grid, sweep::default_threads());
+    let mut checked = 0usize;
+    for (scenario, report) in grid.iter().zip(&reports) {
+        let wr = analyze(scenario);
+        for tb in &wr.bounds {
+            let t = report.task(&tb.task);
+            let measured_mem = t
+                .extra_value("access_max")
+                .or_else(|| t.extra_value("mem_max"))
+                .unwrap_or(0.0);
+            assert!(
+                measured_mem <= tb.mem_bound as f64,
+                "{}::{} memory latency UNSOUND: measured {} > bound {} \
+                 (reproduce with wcet::fuzz::random_scenario)",
+                scenario.name,
+                tb.task,
+                measured_mem,
+                tb.mem_bound
+            );
+            if let Some(cb) = tb.completion_bound {
+                assert!(
+                    t.makespan > 0,
+                    "{}::{} never drained within the cycle budget",
+                    scenario.name,
+                    tb.task
+                );
+                assert!(
+                    t.makespan <= cb,
+                    "{}::{} completion UNSOUND: makespan {} > bound {}",
+                    scenario.name,
+                    tb.task,
+                    t.makespan,
+                    cb
+                );
+            }
+            checked += 1;
+        }
+    }
+    assert!(
+        checked >= FUZZ_MIXES as usize,
+        "only {checked} critical tasks checked — generator degenerated?"
+    );
+}
+
+#[test]
+fn admission_decisions_deterministic_across_thread_counts() {
+    // Give every critical task a deadline so admission actually has to
+    // compare bounds (some mixes admit, some reject).
+    let grid: Vec<Scenario> = fuzz_grid(64)
+        .into_iter()
+        .map(|mut s| {
+            for t in s.tasks.iter_mut() {
+                if t.criticality.is_time_critical() {
+                    t.deadline = 400_000;
+                }
+            }
+            s
+        })
+        .collect();
+    let reference: Vec<_> = grid.iter().map(Scheduler::admit).collect();
+    assert!(
+        reference.iter().any(|d| d.admitted) && reference.iter().any(|d| !d.admitted),
+        "fuzz deadlines should split the grid into admitted and rejected"
+    );
+    for threads in [1usize, 2, 4, 8] {
+        let parallel = sweep::parallel_map(&grid, threads, Scheduler::admit);
+        assert_eq!(
+            parallel, reference,
+            "admission decisions diverged at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn bounds_depend_only_on_scenario_not_on_execution() {
+    // analyze() before and after running the simulation must agree —
+    // the engine reads no simulator state.
+    for seed in [3u64, 17, 99] {
+        let scenario = fuzz::random_scenario(seed);
+        let before = analyze(&scenario);
+        let _ = Scheduler::run(&scenario);
+        let after = analyze(&scenario);
+        assert_eq!(before, after);
+    }
+}
