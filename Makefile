@@ -6,7 +6,7 @@
 
 RUST_DIR := rust
 
-.PHONY: build test bench wcet artifacts python-test
+.PHONY: build test bench wcet autotune artifacts python-test
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -21,6 +21,11 @@ bench:
 # Analytical WCET bounds vs measured worst case (fig6a/fig6b grids).
 wcet: build
 	$(RUST_DIR)/target/release/carfield wcet
+
+# Bound-driven tuning-space search: mixes admitted by the fixed
+# four-policy ladder vs the auto-tuner, with validating simulations.
+autotune: build
+	$(RUST_DIR)/target/release/carfield autotune
 
 # AOT-lower the JAX/Pallas kernels to HLO text artifacts consumed by the
 # rust PJRT runtime (requires the python toolchain).

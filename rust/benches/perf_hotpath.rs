@@ -1,7 +1,8 @@
 //! Bench: L3 hot paths — simulator cycle throughput (naive vs the
 //! event-driven cycle-skipping core), parallel scenario-sweep speedup,
-//! WCET analysis throughput + bound tightness, coordinator dispatch,
-//! and PJRT artifact execution overhead.
+//! WCET analysis throughput + bound tightness, bound-driven autotune
+//! search throughput, coordinator dispatch, and PJRT artifact execution
+//! overhead.
 //!
 //! Targets (see lib.rs layering docs): >= 60 simulated Mcyc/s on the
 //! Fig. 6a topology via the event-driven path (>= 3x naive), raised from
@@ -134,6 +135,38 @@ fn wcet_overhead(b: &mut BenchRunner) {
     b.metric("wcet soundness violations", if sound { 0.0 } else { 1.0 }, "(must be 0)");
 }
 
+/// Bound-driven autotune: raw analytic evaluation throughput (the unit
+/// the search spends), full-search latency on the reference mix the
+/// whole fixed ladder rejects, and the grid's ladder-vs-tuner verdict.
+fn autotune_overhead(b: &mut BenchRunner) {
+    use carfield::coordinator::autotune;
+    use carfield::experiments::autotune as grid;
+
+    let scenario = grid::reference_mix(800_000);
+    let (_, dt) = b.time_with_mean("admission evaluation (fig6a mix)", 500, || {
+        Scheduler::admit(&scenario)
+    });
+    b.metric("autotune analytic evaluations/sec", 1.0 / dt.max(1e-12), "admit() calls/s");
+    let (outcome, dt_search) = b.time_with_mean("autotune search (deadline 800k)", 200, || {
+        autotune::autotune(&scenario).expect("reference mix is tunable")
+    });
+    b.metric("autotune search latency", dt_search * 1e6, "us to an admissible tuning");
+    let r = grid::run();
+    b.metric("autotune mean knob-search iterations", r.mean_iterations, "evals to admission");
+    b.metric(
+        "autotune mixes admitted (tuner vs ladder)",
+        r.tuned_admitted as f64 - r.ladder_admitted as f64,
+        &format!(
+            "additional mixes ({} vs {} of {})",
+            r.tuned_admitted,
+            r.ladder_admitted,
+            r.rows.len()
+        ),
+    );
+    b.metric("autotune grid search throughput", r.evals_per_sec, "evals/s");
+    assert_eq!(outcome.evaluations, 6, "descent length drifted");
+}
+
 /// Coordinator scenario-assembly + teardown overhead.
 fn dispatch_overhead(b: &mut BenchRunner) {
     b.time("Scheduler::run tiny scenario", 5, || {
@@ -187,6 +220,7 @@ fn main() {
     sim_throughput(&mut b);
     sweep_throughput(&mut b);
     wcet_overhead(&mut b);
+    autotune_overhead(&mut b);
     dispatch_overhead(&mut b);
     artifact_overhead(&mut b);
     b.finish();

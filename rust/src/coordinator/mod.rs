@@ -7,23 +7,29 @@
 //!
 //! - [`task`]: the mixed-criticality task model (criticality levels,
 //!   deadlines, workload kinds);
-//! - [`policy`]: isolation profiles mapping criticality mixes onto
-//!   concrete TSU/DPLLC/DCSPM/AMR configurations;
+//! - [`policy`]: the [`SocTuning`] isolation-configuration space (TSU
+//!   knobs, DPLLC partition split, DCSPM aliasing) with the four legacy
+//!   [`IsolationPolicy`] regimes as named points;
 //! - [`scheduler`]: admission, placement, scenario assembly and
 //!   execution on the `SocSim` substrate — including bound-aware
 //!   admission control ([`Scheduler::admit`]) backed by the analytical
 //!   WCET engine in [`crate::wcet`];
+//! - [`autotune`]: the bound-driven search that turns a rejected
+//!   admission's binding resource into the least-restrictive tuning
+//!   whose bounds admit the mix;
 //! - [`metrics`]: per-task reports and experiment tables;
 //! - [`sweep`]: parallel execution of independent scenario grids across
 //!   OS threads (the experiment figures are embarrassingly parallel).
 
+pub mod autotune;
 pub mod metrics;
 pub mod policy;
 pub mod scheduler;
 pub mod sweep;
 pub mod task;
 
+pub use autotune::{autotune, Autotuner, SearchStrategy, TuneError, TuneOutcome};
 pub use metrics::{ScenarioReport, TaskReport};
-pub use policy::{IsolationPolicy, ResourceConfig};
+pub use policy::{IsolationPolicy, ResourceConfig, SocTuning, TsuKnobs, TuningError};
 pub use scheduler::{AdmissionDecision, Rejection, Scenario, Scheduler};
 pub use task::{Criticality, McTask, Workload};

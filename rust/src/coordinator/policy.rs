@@ -1,7 +1,16 @@
-//! Isolation policies: how the coordinator programs the hardware IPs for
+//! Isolation tuning: how the coordinator programs the hardware IPs for
 //! a given criticality mix.
 //!
-//! These mirror the four regimes of Fig. 6:
+//! The paper's point is that the isolation IPs are *software-
+//! configurable*: TSU budgets, DPLLC partitions and DCSPM aliasing are
+//! registers, not fixed circuits. [`SocTuning`] is that register space —
+//! a parameterized point the coordinator (and the bound-driven
+//! auto-tuner in [`crate::coordinator::autotune`]) can place anywhere,
+//! not just on the four regimes of Fig. 6.
+//!
+//! The legacy [`IsolationPolicy`] ladder survives as *named points* in
+//! the space (kept as constructors for backward compatibility and proven
+//! register-identical by `tests/legacy_policy_equivalence.rs`):
 //!
 //! - `NoIsolation` — reset state, everything unregulated (R-E2 /
 //!   "unregulated interference");
@@ -15,9 +24,377 @@
 
 use crate::soc::clock::Cycle;
 use crate::soc::mem::dcspm::CONTIG_ALIAS_BIT;
+use crate::soc::mem::dpllc;
 use crate::soc::tsu::TsuConfig;
 
-/// Coordinator-selectable isolation level.
+/// A misconfigured tuning point. Degenerate register settings (an empty
+/// or over-full partition, a splitter coarser than the regulation
+/// budget, a budget that never refills) are rejected loudly instead of
+/// silently producing a useless configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TuningError {
+    /// `TsuPlusLlcPartition` fraction outside 1..=100.
+    PartitionPercentOutOfRange { percent: u8 },
+    /// `tct_sets` would leave the shared partition empty (or is larger
+    /// than the cache).
+    PartitionTooLarge { tct_sets: usize, total_sets: usize },
+    /// GBS fragments larger than the TRU budget can never pass without
+    /// the oversize exception — the regulation is self-defeating.
+    GbsExceedsBudget { gbs: u32, budget: u32 },
+    /// A TRU budget with no refill period starves the initiator.
+    BudgetWithoutPeriod { budget: u32 },
+}
+
+impl std::fmt::Display for TuningError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            TuningError::PartitionPercentOutOfRange { percent } => write!(
+                f,
+                "TCT partition fraction {percent}% is outside 1..=100: the \
+                 DPLLC cannot grant more than every set (or fewer than one)"
+            ),
+            TuningError::PartitionTooLarge {
+                tct_sets,
+                total_sets,
+            } => write!(
+                f,
+                "TCT partition of {tct_sets} sets does not fit a \
+                 {total_sets}-set DPLLC while leaving the shared partition \
+                 at least one set"
+            ),
+            TuningError::GbsExceedsBudget { gbs, budget } => write!(
+                f,
+                "GBS fragment size {gbs} beats exceeds the TRU budget \
+                 {budget} beats/period: every fragment would need the \
+                 oversize exception and the regulation is meaningless"
+            ),
+            TuningError::BudgetWithoutPeriod { budget } => write!(
+                f,
+                "TRU budget {budget} beats with period 0 never refills and \
+                 starves the initiator; use budget 0 (unregulated) or a \
+                 nonzero period"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TuningError {}
+
+/// One initiator class's TSU knobs — the software-visible shaper
+/// registers, pre-validation (maps 1:1 onto [`TsuConfig`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct TsuKnobs {
+    /// GBS: max beats per fragment; 0 disables splitting.
+    pub gbs_beats: u32,
+    /// TRU: beats allowed per period; 0 disables regulation.
+    pub budget_beats: u32,
+    /// TRU: communication period in cycles.
+    pub period: Cycle,
+    /// WB: buffer writes so they never hold the W channel.
+    pub write_buffer: bool,
+}
+
+impl TsuKnobs {
+    /// Transparent shaper (reset state).
+    pub const fn passthrough() -> Self {
+        Self {
+            gbs_beats: 0,
+            budget_beats: 0,
+            period: 0,
+            write_buffer: false,
+        }
+    }
+
+    /// Write buffering only — no splitting or rate limiting.
+    pub const fn wb_only() -> Self {
+        Self {
+            gbs_beats: 0,
+            budget_beats: 0,
+            period: 0,
+            write_buffer: true,
+        }
+    }
+
+    /// GBS + TRU + WB throttling profile.
+    pub const fn regulated(gbs_beats: u32, budget_beats: u32, period: Cycle) -> Self {
+        Self {
+            gbs_beats,
+            budget_beats,
+            period,
+            write_buffer: true,
+        }
+    }
+
+    /// Whether the TRU actually regulates (budget with a refill period).
+    pub fn is_regulated(&self) -> bool {
+        self.budget_beats > 0 && self.period > 0
+    }
+
+    pub fn validate(&self) -> Result<(), TuningError> {
+        if self.budget_beats > 0 && self.period == 0 {
+            return Err(TuningError::BudgetWithoutPeriod {
+                budget: self.budget_beats,
+            });
+        }
+        if self.budget_beats > 0 && self.gbs_beats > self.budget_beats {
+            return Err(TuningError::GbsExceedsBudget {
+                gbs: self.gbs_beats,
+                budget: self.budget_beats,
+            });
+        }
+        Ok(())
+    }
+
+    /// The concrete shaper registers. Reproduces the seed's
+    /// `TsuConfig` constructors bit-for-bit on the named points
+    /// (`passthrough`/`wb_only`/`regulated`).
+    pub fn config(&self) -> TsuConfig {
+        if !self.write_buffer {
+            TsuConfig {
+                gbs_max_beats: self.gbs_beats,
+                wb_enable: false,
+                wb_capacity_beats: 0,
+                tru_budget_beats: self.budget_beats,
+                tru_period: self.period,
+            }
+        } else if self.gbs_beats == 0 {
+            // No splitter: keep the full wb_only-sized buffer (the
+            // regulated profile sizes its buffer off the GBS fragment —
+            // with gbs 0 that would shrink to 16 beats and silently
+            // reintroduce multi-cycle write fills on long bursts).
+            TsuConfig {
+                tru_budget_beats: self.budget_beats,
+                tru_period: self.period,
+                ..TsuConfig::wb_only()
+            }
+        } else {
+            TsuConfig::regulated(self.gbs_beats, self.budget_beats, self.period)
+        }
+    }
+
+    /// Compact human-readable form for reports.
+    pub fn describe(&self) -> String {
+        let mut parts = Vec::new();
+        if self.gbs_beats > 0 {
+            parts.push(format!("gbs={}", self.gbs_beats));
+        }
+        if self.budget_beats > 0 {
+            parts.push(format!("tru={}/{}", self.budget_beats, self.period));
+        }
+        if self.write_buffer {
+            parts.push("wb".to_string());
+        }
+        if parts.is_empty() {
+            "passthrough".to_string()
+        } else {
+            parts.join("+")
+        }
+    }
+}
+
+/// A point in the SoC's isolation-configuration space: the registers the
+/// coordinator programs before launching a mix. Unlike the closed
+/// [`IsolationPolicy`] ladder, every knob is free — which is what the
+/// bound-driven auto-tuner searches over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SocTuning {
+    /// TSU program for initiators running best-effort work.
+    pub nct_tsu: TsuKnobs,
+    /// TSU program for time-critical initiators (never TRU-throttled by
+    /// any named point; the knob exists because the space is open).
+    pub tct_tsu: TsuKnobs,
+    /// DPLLC sets granted to an exclusive TCT partition; 0 keeps one
+    /// shared partition spanning the whole cache.
+    pub tct_sets: usize,
+    /// Whether cluster L2 buffers use the contiguous alias window
+    /// (disjoint DCSPM banks/ports per slot).
+    pub dcspm_private_paths: bool,
+}
+
+impl SocTuning {
+    /// TRU parameters used across the Fig. 6 experiments: NCTs may move
+    /// `budget` beats every `period` cycles in fragments of `gbs` beats.
+    /// The budget leaves the NCT enough bandwidth to keep polluting a
+    /// *shared* DPLLC (which is why the partition still matters — paper
+    /// Fig. 6a), while bounding its interconnect occupancy.
+    pub const NCT_GBS_BEATS: u32 = 8;
+    pub const NCT_BUDGET_BEATS: u32 = 96;
+    pub const NCT_PERIOD: Cycle = 512;
+
+    /// Bytes of L2 each slot may touch (streams wrap within this window
+    /// so private-path slots never spill onto the other port).
+    pub const L2_SLOT_BYTES: u64 = 1 << 18; // 256 KiB
+
+    /// Reset state: everything unregulated, one shared partition.
+    pub const fn no_isolation() -> Self {
+        Self {
+            nct_tsu: TsuKnobs::passthrough(),
+            tct_tsu: TsuKnobs::passthrough(),
+            tct_sets: 0,
+            dcspm_private_paths: false,
+        }
+    }
+
+    /// The Fig. 6 GBS+TRU throttle on every best-effort initiator; TCTs
+    /// keep the (always-on) write buffer but are never rate-limited.
+    pub const fn tsu_regulation() -> Self {
+        Self {
+            nct_tsu: TsuKnobs::regulated(
+                Self::NCT_GBS_BEATS,
+                Self::NCT_BUDGET_BEATS,
+                Self::NCT_PERIOD,
+            ),
+            tct_tsu: TsuKnobs::wb_only(),
+            tct_sets: 0,
+            dcspm_private_paths: false,
+        }
+    }
+
+    /// TSU regulation plus an exclusive DPLLC partition of
+    /// `tct_fraction_percent` of the sets for the TCT. Panics
+    /// (descriptively) outside 1..=100 — same loudness as the legacy
+    /// enum path; 100% clamps to the seed's 99% behaviour.
+    pub fn tsu_plus_llc_partition(tct_fraction_percent: u8) -> Self {
+        if tct_fraction_percent == 0 || tct_fraction_percent > 100 {
+            let e = TuningError::PartitionPercentOutOfRange {
+                percent: tct_fraction_percent,
+            };
+            panic!("invalid SocTuning: {e}");
+        }
+        let total = dpllc::TOTAL_SETS;
+        let frac = (tct_fraction_percent as usize).clamp(1, 99);
+        Self {
+            tct_sets: (total * frac / 100).clamp(1, total - 1),
+            ..Self::tsu_regulation()
+        }
+    }
+
+    /// Disjoint DCSPM banks/ports per cluster plus a half-cache DPLLC
+    /// partition; no rate limiting needed — paths are disjoint.
+    pub const fn private_paths() -> Self {
+        Self {
+            nct_tsu: TsuKnobs::wb_only(),
+            tct_tsu: TsuKnobs::wb_only(),
+            tct_sets: dpllc::TOTAL_SETS / 2,
+            dcspm_private_paths: true,
+        }
+    }
+
+    /// Validate every knob, returning the first violation.
+    pub fn validate(&self) -> Result<(), TuningError> {
+        self.nct_tsu.validate()?;
+        self.tct_tsu.validate()?;
+        if self.tct_sets >= dpllc::TOTAL_SETS {
+            return Err(TuningError::PartitionTooLarge {
+                tct_sets: self.tct_sets,
+                total_sets: dpllc::TOTAL_SETS,
+            });
+        }
+        Ok(())
+    }
+
+    /// `self` if valid, the violation otherwise.
+    pub fn validated(self) -> Result<Self, TuningError> {
+        self.validate().map(|()| self)
+    }
+
+    /// Concrete register-level settings. Panics (descriptively) on an
+    /// invalid tuning — admission control and the auto-tuner must never
+    /// program degenerate registers silently.
+    pub fn resource_config(&self) -> ResourceConfig {
+        if let Err(e) = self.validate() {
+            panic!("invalid SocTuning: {e}");
+        }
+        let total = dpllc::TOTAL_SETS;
+        let (dpllc_partitions, tct_part_id) = if self.tct_sets == 0 {
+            (vec![(0, total)], 0)
+        } else {
+            // part 0: everyone else; part 1: the TCT.
+            (
+                vec![
+                    (0, total - self.tct_sets),
+                    (total - self.tct_sets, self.tct_sets),
+                ],
+                1,
+            )
+        };
+        ResourceConfig {
+            nct_tsu: self.nct_tsu.config(),
+            tct_tsu: self.tct_tsu.config(),
+            dpllc_partitions,
+            tct_part_id,
+            dcspm_private_paths: self.dcspm_private_paths,
+        }
+    }
+
+    /// L2 staging base for the initiator with index `slot`, honouring the
+    /// private-path aliasing. Slots alternate between the two DCSPM port
+    /// halves (low/high 512KiB) so that in contiguous mode adjacent slots
+    /// land on *different* ports and disjoint banks — the private paths
+    /// of Fig. 6b R-E4.
+    pub fn l2_base(&self, slot: usize) -> u64 {
+        let s = slot as u64 % 4;
+        let base = (s % 2) * (1 << 19) + (s / 2) * (1 << 18);
+        if self.dcspm_private_paths {
+            CONTIG_ALIAS_BIT | base
+        } else {
+            base
+        }
+    }
+
+    /// TSU program for one initiator class.
+    pub fn tsu_config(&self, time_critical: bool) -> TsuConfig {
+        if time_critical {
+            self.tct_tsu.config()
+        } else {
+            self.nct_tsu.config()
+        }
+    }
+
+    /// Human-readable form; names the legacy ladder points.
+    pub fn describe(&self) -> String {
+        if *self == Self::no_isolation() {
+            return "NoIsolation".to_string();
+        }
+        if *self == Self::tsu_regulation() {
+            return "TsuRegulation".to_string();
+        }
+        if *self == Self::private_paths() {
+            return "PrivatePaths".to_string();
+        }
+        if self.nct_tsu == Self::tsu_regulation().nct_tsu
+            && self.tct_tsu == TsuKnobs::wb_only()
+            && self.tct_sets > 0
+            && !self.dcspm_private_paths
+        {
+            return format!("TsuPlusLlcPartition({} sets)", self.tct_sets);
+        }
+        format!(
+            "SocTuning(nct[{}] tct[{}] llc[{}] dcspm[{}])",
+            self.nct_tsu.describe(),
+            self.tct_tsu.describe(),
+            if self.tct_sets == 0 {
+                "shared".to_string()
+            } else {
+                format!("{} TCT sets", self.tct_sets)
+            },
+            if self.dcspm_private_paths {
+                "private"
+            } else {
+                "interleaved"
+            }
+        )
+    }
+}
+
+impl From<IsolationPolicy> for SocTuning {
+    fn from(policy: IsolationPolicy) -> Self {
+        policy.tuning()
+    }
+}
+
+/// Legacy coordinator-selectable isolation level — the four named points
+/// of the Fig. 6 ladder, kept as constructors into [`SocTuning`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum IsolationPolicy {
     NoIsolation,
@@ -29,13 +406,55 @@ pub enum IsolationPolicy {
     PrivatePaths,
 }
 
-/// Concrete register-level settings derived from a policy.
-#[derive(Debug, Clone)]
+impl IsolationPolicy {
+    /// Validate the ladder point (the partition fraction is the only
+    /// free parameter).
+    pub fn validate(&self) -> Result<(), TuningError> {
+        if let IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent,
+        } = *self
+        {
+            if tct_fraction_percent == 0 || tct_fraction_percent > 100 {
+                return Err(TuningError::PartitionPercentOutOfRange {
+                    percent: tct_fraction_percent,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// The tuning-space point this ladder policy names. Panics
+    /// (descriptively) on an out-of-range partition fraction.
+    pub fn tuning(&self) -> SocTuning {
+        if let Err(e) = self.validate() {
+            panic!("invalid isolation policy: {e}");
+        }
+        match *self {
+            IsolationPolicy::NoIsolation => SocTuning::no_isolation(),
+            IsolationPolicy::TsuRegulation => SocTuning::tsu_regulation(),
+            IsolationPolicy::TsuPlusLlcPartition {
+                tct_fraction_percent,
+            } => SocTuning::tsu_plus_llc_partition(tct_fraction_percent),
+            IsolationPolicy::PrivatePaths => SocTuning::private_paths(),
+        }
+    }
+
+    pub fn resource_config(&self) -> ResourceConfig {
+        self.tuning().resource_config()
+    }
+
+    pub fn l2_base(&self, slot: usize) -> u64 {
+        self.tuning().l2_base(slot)
+    }
+}
+
+/// Concrete register-level settings derived from a tuning point.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ResourceConfig {
     /// TSU program for initiators running best-effort work.
     pub nct_tsu: TsuConfig,
-    /// TSU program for time-critical initiators (always passthrough —
-    /// TCTs are never throttled).
+    /// TSU program for time-critical initiators (always passthrough or
+    /// WB-only on the named points — TCTs are never throttled).
     pub tct_tsu: TsuConfig,
     /// DPLLC set partitioning: `(first_set, n_sets)` per part_id.
     pub dpllc_partitions: Vec<(usize, usize)>,
@@ -45,102 +464,11 @@ pub struct ResourceConfig {
     pub dcspm_private_paths: bool,
 }
 
-impl IsolationPolicy {
-    /// TRU parameters used across the Fig. 6 experiments: NCTs may move
-    /// `budget` beats every `period` cycles in fragments of `gbs` beats.
-    /// The budget leaves the NCT enough bandwidth to keep polluting a
-    /// *shared* DPLLC (which is why the partition still matters — paper
-    /// Fig. 6a), while bounding its interconnect occupancy.
-    pub const NCT_GBS_BEATS: u32 = 8;
-    pub const NCT_BUDGET_BEATS: u32 = 96;
-    pub const NCT_PERIOD: Cycle = 512;
-
-    pub fn resource_config(&self) -> ResourceConfig {
-        let total_sets = 256;
-        match *self {
-            IsolationPolicy::NoIsolation => ResourceConfig {
-                nct_tsu: TsuConfig::passthrough(),
-                tct_tsu: TsuConfig::passthrough(),
-                dpllc_partitions: vec![(0, total_sets)],
-                tct_part_id: 0,
-                dcspm_private_paths: false,
-            },
-            IsolationPolicy::TsuRegulation => ResourceConfig {
-                nct_tsu: TsuConfig::regulated(
-                    Self::NCT_GBS_BEATS,
-                    Self::NCT_BUDGET_BEATS,
-                    Self::NCT_PERIOD,
-                ),
-                // TCTs keep the WB (always-on TSU hardware) but are never
-                // split or rate-limited.
-                tct_tsu: TsuConfig::wb_only(),
-                dpllc_partitions: vec![(0, total_sets)],
-                tct_part_id: 0,
-                dcspm_private_paths: false,
-            },
-            IsolationPolicy::TsuPlusLlcPartition {
-                tct_fraction_percent,
-            } => {
-                let frac = (tct_fraction_percent as usize).clamp(1, 99);
-                let tct_sets = (total_sets * frac / 100).clamp(1, total_sets - 1);
-                ResourceConfig {
-                    nct_tsu: TsuConfig::regulated(
-                        Self::NCT_GBS_BEATS,
-                        Self::NCT_BUDGET_BEATS,
-                        Self::NCT_PERIOD,
-                    ),
-                    tct_tsu: TsuConfig::wb_only(),
-                    // part 0: everyone else; part 1: the TCT.
-                    dpllc_partitions: vec![
-                        (0, total_sets - tct_sets),
-                        (total_sets - tct_sets, tct_sets),
-                    ],
-                    tct_part_id: 1,
-                    dcspm_private_paths: false,
-                }
-            }
-            IsolationPolicy::PrivatePaths => ResourceConfig {
-                // No rate limiting needed — paths are disjoint. WB stays
-                // on (it is always-on TSU hardware, <=1 cycle).
-                nct_tsu: TsuConfig::wb_only(),
-                tct_tsu: TsuConfig::wb_only(),
-                dpllc_partitions: vec![(0, total_sets / 2), (total_sets / 2, total_sets / 2)],
-                tct_part_id: 1,
-                dcspm_private_paths: true,
-            },
-        }
-    }
-
-    /// L2 staging base for the initiator with index `slot`, honouring the
-    /// private-path aliasing. Slots alternate between the two DCSPM port
-    /// halves (low/high 512KiB) so that in contiguous mode adjacent slots
-    /// land on *different* ports and disjoint banks — the private paths
-    /// of Fig. 6b R-E4.
-    pub fn l2_base(&self, slot: usize) -> u64 {
-        let cfg = self.resource_config();
-        let s = slot as u64 % 4;
-        let base = (s % 2) * (1 << 19) + (s / 2) * (1 << 18);
-        if cfg.dcspm_private_paths {
-            CONTIG_ALIAS_BIT | base
-        } else {
-            base
-        }
-    }
-
-    /// Bytes of L2 each slot may touch (streams wrap within this window
-    /// so private-path slots never spill onto the other port).
-    pub const L2_SLOT_BYTES: u64 = 1 << 18; // 256 KiB
-}
-
-/// TSU program for a given initiator under a policy (helper used by the
-/// scheduler when wiring a scenario).
-pub fn tsu_for(policy: IsolationPolicy, time_critical: bool) -> TsuConfig {
-    let cfg = policy.resource_config();
-    if time_critical {
-        cfg.tct_tsu
-    } else {
-        cfg.nct_tsu
-    }
+/// TSU program for a given initiator under a tuning. Legacy seed API
+/// kept for compatibility — the scheduler and the WCET traffic models
+/// now read [`SocTuning::tsu_config`] directly.
+pub fn tsu_for(tuning: impl Into<SocTuning>, time_critical: bool) -> TsuConfig {
+    tuning.into().tsu_config(time_critical)
 }
 
 #[cfg(test)]
@@ -205,5 +533,135 @@ mod tests {
         let p = IsolationPolicy::TsuRegulation;
         assert_eq!(tsu_for(p, true).tru_budget_beats, 0);
         assert!(tsu_for(p, false).tru_budget_beats > 0);
+    }
+
+    #[test]
+    fn knobs_reproduce_tsu_config_constructors() {
+        assert_eq!(TsuKnobs::passthrough().config(), TsuConfig::passthrough());
+        assert_eq!(TsuKnobs::wb_only().config(), TsuConfig::wb_only());
+        assert_eq!(
+            TsuKnobs::regulated(8, 96, 512).config(),
+            TsuConfig::regulated(8, 96, 512)
+        );
+        assert_eq!(
+            TsuKnobs::regulated(32, 192, 512).config(),
+            TsuConfig::regulated(32, 192, 512)
+        );
+        // Budget-only regulation (no splitter) keeps the full write
+        // buffer rather than the GBS-derived 16-beat one.
+        let budget_only = TsuKnobs::regulated(0, 96, 512).config();
+        assert_eq!(budget_only.wb_capacity_beats, 512);
+        assert_eq!(budget_only.tru_budget_beats, 96);
+        assert!(budget_only.is_tru_regulated());
+    }
+
+    #[test]
+    fn partition_percent_out_of_range_is_a_descriptive_error() {
+        let over = IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 120,
+        };
+        let err = over.validate().unwrap_err();
+        assert_eq!(err, TuningError::PartitionPercentOutOfRange { percent: 120 });
+        assert!(err.to_string().contains("120%"), "{err}");
+        let zero = IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 0,
+        };
+        assert!(zero.validate().is_err());
+        // 100% is in range and clamps to the seed's 99% behaviour.
+        let full = IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 100,
+        };
+        assert!(full.validate().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 1..=100")]
+    fn out_of_range_partition_panics_loudly_at_programming_time() {
+        let _ = IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 130,
+        }
+        .resource_config();
+    }
+
+    #[test]
+    #[should_panic(expected = "outside 1..=100")]
+    fn out_of_range_partition_panics_on_the_tuning_constructor_too() {
+        let _ = SocTuning::tsu_plus_llc_partition(120);
+    }
+
+    #[test]
+    fn tuning_knobs_validated_loudly() {
+        let gbs_over = SocTuning {
+            nct_tsu: TsuKnobs::regulated(64, 8, 512),
+            ..SocTuning::tsu_regulation()
+        };
+        let err = gbs_over.validate().unwrap_err();
+        assert_eq!(err, TuningError::GbsExceedsBudget { gbs: 64, budget: 8 });
+        assert!(err.to_string().contains("oversize"), "{err}");
+
+        let no_refill = SocTuning {
+            nct_tsu: TsuKnobs {
+                period: 0,
+                ..TsuKnobs::regulated(8, 96, 512)
+            },
+            ..SocTuning::tsu_regulation()
+        };
+        assert_eq!(
+            no_refill.validate().unwrap_err(),
+            TuningError::BudgetWithoutPeriod { budget: 96 }
+        );
+
+        let cache_hog = SocTuning {
+            tct_sets: 256,
+            ..SocTuning::tsu_regulation()
+        };
+        assert_eq!(
+            cache_hog.validate().unwrap_err(),
+            TuningError::PartitionTooLarge {
+                tct_sets: 256,
+                total_sets: 256,
+            }
+        );
+        assert!(SocTuning::tsu_regulation().validated().is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid SocTuning")]
+    fn invalid_tuning_cannot_program_registers() {
+        let bad = SocTuning {
+            nct_tsu: TsuKnobs::regulated(64, 8, 512),
+            ..SocTuning::tsu_regulation()
+        };
+        let _ = bad.resource_config();
+    }
+
+    #[test]
+    fn describe_names_the_ladder_points() {
+        assert_eq!(SocTuning::no_isolation().describe(), "NoIsolation");
+        assert_eq!(SocTuning::tsu_regulation().describe(), "TsuRegulation");
+        assert_eq!(SocTuning::private_paths().describe(), "PrivatePaths");
+        assert_eq!(
+            SocTuning::tsu_plus_llc_partition(50).describe(),
+            "TsuPlusLlcPartition(128 sets)"
+        );
+        let custom = SocTuning {
+            nct_tsu: TsuKnobs::regulated(8, 64, 512),
+            ..SocTuning::tsu_regulation()
+        };
+        let d = custom.describe();
+        assert!(d.contains("tru=64/512"), "{d}");
+    }
+
+    #[test]
+    fn partition_math_sourced_from_dpllc_geometry() {
+        // The 256 in the partition formulas is the DPLLC's, not a local
+        // literal: if the cache geometry changes, the policy follows.
+        assert_eq!(
+            dpllc::TOTAL_SETS,
+            crate::soc::mem::dpllc::DpllcConfig::carfield().sets
+        );
+        let cfg = SocTuning::tsu_plus_llc_partition(50).resource_config();
+        let total: usize = cfg.dpllc_partitions.iter().map(|&(_, n)| n).sum();
+        assert_eq!(total, dpllc::TOTAL_SETS);
     }
 }

@@ -1,7 +1,7 @@
 //! Scenario assembly + execution: the coordinator's run loop.
 //!
 //! `Scheduler::run` takes a [`Scenario`] (a set of mixed-criticality
-//! tasks + an isolation policy), programs the hardware IPs accordingly
+//! tasks + an isolation tuning), programs the hardware IPs accordingly
 //! (TSUs per initiator, DPLLC partitions, DCSPM aliasing, AMR mode),
 //! executes the assembled `SocSim` until every *measured* task drains
 //! (endless interferers keep running), and returns per-task reports.
@@ -17,25 +17,27 @@ use crate::soc::vector::{VectorCluster, VectorTask};
 use crate::soc::SocSim;
 
 use super::metrics::{ScenarioReport, TaskReport};
-use super::policy::{tsu_for, IsolationPolicy};
+use super::policy::SocTuning;
 use super::task::{McTask, Workload};
 use crate::wcet::{self, Resource, WcetReport};
 
-/// A bundle of tasks to run concurrently under one policy.
+/// A bundle of tasks to run concurrently under one isolation tuning.
 #[derive(Debug, Clone)]
 pub struct Scenario {
     pub name: String,
-    pub policy: IsolationPolicy,
+    /// The isolation-configuration point programmed before launch; the
+    /// four legacy `IsolationPolicy` values convert implicitly.
+    pub tuning: SocTuning,
     pub tasks: Vec<McTask>,
     /// Simulation budget (guards against starvation bugs).
     pub max_cycles: Cycle,
 }
 
 impl Scenario {
-    pub fn new(name: &str, policy: IsolationPolicy) -> Self {
+    pub fn new(name: &str, tuning: impl Into<SocTuning>) -> Self {
         Self {
             name: name.to_string(),
-            policy,
+            tuning: tuning.into(),
             tasks: Vec::new(),
             max_cycles: 200_000_000,
         }
@@ -43,6 +45,13 @@ impl Scenario {
 
     pub fn with_task(mut self, task: McTask) -> Self {
         self.tasks.push(task);
+        self
+    }
+
+    /// The same mix under a different tuning point (the auto-tuner's
+    /// re-evaluation hook).
+    pub fn with_tuning(mut self, tuning: impl Into<SocTuning>) -> Self {
+        self.tuning = tuning.into();
         self
     }
 }
@@ -146,9 +155,9 @@ impl Scheduler {
         }
     }
 
-    /// Build the target set with the policy's DPLLC partitioning.
-    fn targets(policy: IsolationPolicy) -> Vec<Box<dyn TargetModel>> {
-        let cfg = policy.resource_config();
+    /// Build the target set with the tuning's DPLLC partitioning.
+    fn targets(tuning: SocTuning) -> Vec<Box<dyn TargetModel>> {
+        let cfg = tuning.resource_config();
         let mut dpllc = DpllcConfig::carfield();
         dpllc.partitions = cfg.dpllc_partitions;
         vec![
@@ -172,16 +181,16 @@ impl Scheduler {
     }
 
     fn execute(scenario: &Scenario, event_driven: bool) -> ScenarioReport {
-        let policy = scenario.policy;
-        let cfg = policy.resource_config();
-        let mut soc = SocSim::new(scenario.tasks.len(), Self::targets(policy));
+        let tuning = scenario.tuning;
+        let cfg = tuning.resource_config();
+        let mut soc = SocSim::new(scenario.tasks.len(), Self::targets(tuning));
 
         // Placement: one initiator slot per task, in declaration order.
         let mut measured: Vec<InitiatorId> = Vec::new();
         for (slot, task) in scenario.tasks.iter().enumerate() {
             let id = InitiatorId(slot as u8);
             let tc = task.criticality.is_time_critical();
-            let tsu = tsu_for(policy, tc);
+            let tsu = tuning.tsu_config(tc);
             let part_id = if tc { cfg.tct_part_id } else { 0 };
             match &task.workload {
                 Workload::AmrMatMul {
@@ -200,8 +209,8 @@ impl Scheduler {
                             k: *k,
                             n: *n,
                             tile: *tile,
-                            src_base: policy.l2_base(slot),
-                            dst_base: policy.l2_base(slot) + (1 << 17),
+                            src_base: tuning.l2_base(slot),
+                            dst_base: tuning.l2_base(slot) + (1 << 17),
                             part_id,
                         },
                         0,
@@ -220,8 +229,8 @@ impl Scheduler {
                                 n: *n,
                                 tile: *tile,
                             },
-                            src_base: policy.l2_base(slot),
-                            dst_base: policy.l2_base(slot) + (1 << 17),
+                            src_base: tuning.l2_base(slot),
+                            dst_base: tuning.l2_base(slot) + (1 << 17),
                             part_id,
                         },
                         0,
@@ -238,8 +247,8 @@ impl Scheduler {
                                 n: *n,
                                 batch: *batch,
                             },
-                            src_base: policy.l2_base(slot),
-                            dst_base: policy.l2_base(slot) + (1 << 17),
+                            src_base: tuning.l2_base(slot),
+                            dst_base: tuning.l2_base(slot) + (1 << 17),
                             part_id,
                         },
                         0,
@@ -283,7 +292,7 @@ impl Scheduler {
         }
         ScenarioReport {
             scenario: scenario.name.clone(),
-            policy: format!("{policy:?}"),
+            policy: tuning.describe(),
             cycles,
             tasks: reports,
         }
@@ -353,6 +362,7 @@ impl Scheduler {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::policy::IsolationPolicy;
     use super::super::task::Criticality;
     use crate::soc::amr::IntPrecision;
     use crate::soc::dma::DmaJob;

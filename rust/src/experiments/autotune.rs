@@ -1,0 +1,344 @@
+//! Autotune grid (`carfield autotune`): mixes admitted by the fixed
+//! four-policy ladder vs the bound-driven tuner.
+//!
+//! Reference mixes are the Fig. 6 interference scenarios with deadlines
+//! swept across the achievable range: loose deadlines are feasible on
+//! the ladder itself, mid-range deadlines are rejected by *all four*
+//! fixed policies yet admitted by a tighter throttle point the tuner
+//! finds, and deadlines below the knob space's floor exhaust the search
+//! with a documented best-effort report. Every admitted tuning is
+//! confirmed by one real simulation (measured <= bound, deadline met).
+
+use crate::coordinator::autotune::{self, TuneError, TuneOutcome, TuneValidation};
+use crate::coordinator::task::Criticality;
+use crate::coordinator::{IsolationPolicy, McTask, Scenario, Scheduler, SocTuning, Workload};
+use crate::soc::amr::IntPrecision;
+use crate::soc::clock::Cycle;
+use crate::soc::dma::DmaJob;
+use crate::soc::hostd::TctSpec;
+use crate::soc::vector::FpFormat;
+
+/// The four fixed regimes the tuner competes against.
+pub const LADDER: [IsolationPolicy; 4] = [
+    IsolationPolicy::NoIsolation,
+    IsolationPolicy::TsuRegulation,
+    IsolationPolicy::TsuPlusLlcPartition {
+        tct_fraction_percent: 50,
+    },
+    IsolationPolicy::PrivatePaths,
+];
+
+/// Deadlines swept for the fig6a host mix (cycles).
+pub const HOST_DEADLINES: [Cycle; 6] = [350_000, 450_000, 550_000, 800_000, 1_200_000, 2_500_000];
+
+/// Deadline for the fig6b cluster mix (cycles).
+pub const CLUSTER_DEADLINE: Cycle = 170_000;
+
+/// The fig6a reference mix: a hard TCT with `deadline` against the
+/// endless system-DMA interferer, starting from the ladder's strongest
+/// throttle point.
+pub fn reference_mix(deadline: Cycle) -> Scenario {
+    Scenario::new("fig6a-mix", SocTuning::tsu_regulation())
+        .with_task(
+            McTask::new(
+                "tct",
+                Criticality::Hard,
+                Workload::HostTct(TctSpec::fig6a()),
+            )
+            .with_deadline(deadline),
+        )
+        .with_task(McTask::new(
+            "dma",
+            Criticality::BestEffort,
+            Workload::DmaCopy(DmaJob::interferer()),
+        ))
+}
+
+/// The fig6b cluster mix: the safety AMR TCT sharing AXI + DCSPM with
+/// the best-effort vector cluster.
+pub fn cluster_mix(deadline: Cycle) -> Scenario {
+    Scenario::new("fig6b-mix", SocTuning::tsu_regulation())
+        .with_task(
+            McTask::new(
+                "amr-tct",
+                Criticality::Safety,
+                Workload::AmrMatMul {
+                    precision: IntPrecision::Int8,
+                    m: 96,
+                    k: 96,
+                    n: 96,
+                    tile: 8,
+                },
+            )
+            .with_deadline(deadline),
+        )
+        .with_task(McTask::new(
+            "vec-nct",
+            Criticality::BestEffort,
+            Workload::VectorMatMul {
+                format: FpFormat::Fp16,
+                m: 256,
+                k: 256,
+                n: 256,
+                tile: 32,
+            },
+        ))
+}
+
+/// One mix's ladder-vs-tuner comparison.
+pub struct AutotuneRow {
+    pub mix: String,
+    pub deadline: Cycle,
+    /// How many of the four fixed policies admit the mix.
+    pub ladder_admits: usize,
+    pub outcome: Result<TuneOutcome, TuneError>,
+    /// Simulation-backed confirmation of an admitted tuning.
+    pub validation: Option<TuneValidation>,
+}
+
+pub struct AutotuneResult {
+    pub rows: Vec<AutotuneRow>,
+    /// Mixes at least one fixed policy admits.
+    pub ladder_admitted: usize,
+    /// Mixes the tuner admits.
+    pub tuned_admitted: usize,
+    /// Analytic evaluations across every search.
+    pub total_evaluations: u64,
+    /// Mean evaluations per successfully tuned mix.
+    pub mean_iterations: f64,
+    /// Wall-clock of the analytic searches only (no simulation).
+    pub search_seconds: f64,
+    pub evals_per_sec: f64,
+    /// Validation-simulation cycles (bench throughput metric).
+    pub sim_cycles: Cycle,
+}
+
+/// The grid's scenario list.
+fn grid() -> Vec<Scenario> {
+    let mut mixes: Vec<Scenario> = HOST_DEADLINES.iter().map(|&d| reference_mix(d)).collect();
+    mixes.push(cluster_mix(CLUSTER_DEADLINE));
+    mixes
+}
+
+pub fn run() -> AutotuneResult {
+    let mut rows = Vec::new();
+    let mut total_evaluations = 0u64;
+    let mut tuned_admitted = 0usize;
+    let mut ladder_admitted = 0usize;
+    let mut sim_cycles = 0;
+    let mut search_seconds = 0.0f64;
+    for scenario in grid() {
+        let ladder_admits = LADDER
+            .iter()
+            .filter(|&&p| Scheduler::admit(&scenario.clone().with_tuning(p)).admitted)
+            .count();
+        if ladder_admits > 0 {
+            ladder_admitted += 1;
+        }
+        // Time only the analytic search; the validating simulation below
+        // is accounted separately (sim_cycles).
+        let t0 = std::time::Instant::now();
+        let outcome = autotune::autotune(&scenario);
+        search_seconds += t0.elapsed().as_secs_f64();
+        let deadline = scenario
+            .tasks
+            .iter()
+            .map(|t| t.deadline)
+            .find(|&d| d > 0)
+            .unwrap_or(0);
+        let validation = match &outcome {
+            Ok(o) => {
+                total_evaluations += o.evaluations;
+                tuned_admitted += 1;
+                let v = autotune::validate(&scenario, o);
+                sim_cycles += v.report.cycles;
+                Some(v)
+            }
+            Err(e) => {
+                total_evaluations += e.evaluations;
+                None
+            }
+        };
+        rows.push(AutotuneRow {
+            mix: scenario.name.clone(),
+            deadline,
+            ladder_admits,
+            outcome,
+            validation,
+        });
+    }
+    let mean_iterations = if tuned_admitted > 0 {
+        rows.iter()
+            .filter_map(|r| r.outcome.as_ref().ok())
+            .map(|o| o.evaluations as f64)
+            .sum::<f64>()
+            / tuned_admitted as f64
+    } else {
+        0.0
+    };
+    let evals_per_sec = total_evaluations as f64 / search_seconds.max(1e-9);
+    AutotuneResult {
+        rows,
+        ladder_admitted,
+        tuned_admitted,
+        total_evaluations,
+        mean_iterations,
+        search_seconds,
+        evals_per_sec,
+        sim_cycles,
+    }
+}
+
+pub fn print(r: &AutotuneResult) {
+    use crate::coordinator::metrics::print_table;
+    print_table(
+        "Autotune: fixed four-policy ladder vs bound-driven tuning (per mix: policies admitting / tuner verdict / sim confirmation)",
+        &[
+            "mix", "deadline", "ladder", "tuner", "tuning", "relaxed resource", "evals",
+            "sim: measured <= bound",
+        ],
+        &r.rows
+            .iter()
+            .map(|row| {
+                let (tuner, tuning, relaxed, evals) = match &row.outcome {
+                    Ok(o) => (
+                        format!("{:?}", o.strategy),
+                        o.tuning.describe(),
+                        o.relaxed.map_or("-".to_string(), |b| b.describe().to_string()),
+                        o.evaluations.to_string(),
+                    ),
+                    Err(e) => (
+                        "EXHAUSTED".to_string(),
+                        format!(
+                            "best bound {}",
+                            e.best_bound.map_or("none".to_string(), |b| b.to_string())
+                        ),
+                        e.binding.describe().to_string(),
+                        e.evaluations.to_string(),
+                    ),
+                };
+                let sim = match &row.validation {
+                    Some(v) => v
+                        .checks
+                        .iter()
+                        .map(|(task, measured, bound)| {
+                            format!(
+                                "{task}: {measured} <= {bound}{}",
+                                if *measured <= *bound { "" } else { " VIOLATED" }
+                            )
+                        })
+                        .collect::<Vec<_>>()
+                        .join("; "),
+                    None => "-".to_string(),
+                };
+                vec![
+                    row.mix.clone(),
+                    row.deadline.to_string(),
+                    format!("{}/4", row.ladder_admits),
+                    tuner,
+                    tuning,
+                    relaxed,
+                    evals,
+                    sim,
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!(
+        "\nmixes admitted: ladder {}/{} vs tuner {}/{}; {} analytic evaluations in {:.1} ms \
+         ({:.0} evals/sec, mean {:.1} iterations to admission)",
+        r.ladder_admitted,
+        r.rows.len(),
+        r.tuned_admitted,
+        r.rows.len(),
+        r.total_evaluations,
+        r.search_seconds * 1e3,
+        r.evals_per_sec,
+        r.mean_iterations
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::autotune::SearchStrategy;
+    use crate::coordinator::TsuKnobs;
+    use crate::wcet::Resource;
+
+    /// One grid execution, three property groups (the grid is
+    /// deterministic and each run() re-simulates every validation, so
+    /// the groups share one result instead of re-running it).
+    #[test]
+    fn tuner_admits_mixes_the_whole_ladder_rejects() {
+        let r = run();
+        assert!(
+            r.tuned_admitted > r.ladder_admitted,
+            "tuner {} vs ladder {}",
+            r.tuned_admitted,
+            r.ladder_admitted
+        );
+        assert!(r.total_evaluations > 0);
+        assert!(r.mean_iterations >= 1.0);
+
+        // The showcase mix: rejected by all four fixed policies, admitted
+        // by the descent, which names the formerly binding resource and
+        // lands on the least-restrictive feasible throttle; the
+        // validating simulation confirms measured <= bound.
+        let row = r
+            .rows
+            .iter()
+            .find(|row| row.mix == "fig6a-mix" && row.deadline == 800_000)
+            .expect("showcase row");
+        assert_eq!(row.ladder_admits, 0, "every fixed policy must reject");
+        let o = row.outcome.as_ref().expect("tunable");
+        assert_eq!(o.strategy, SearchStrategy::CoordinateDescent);
+        assert_eq!(o.relaxed, Some(Resource::HyperramChannel));
+        assert_eq!(o.tuning.nct_tsu, TsuKnobs::regulated(8, 64, 512));
+        let v = row.validation.as_ref().expect("validated");
+        assert!(v.sound, "measured exceeded bound: {:?}", v.checks);
+        assert!(v.deadlines_met);
+
+        // The cluster mix relaxes the DCSPM port via the free aliasing
+        // flip rather than by throttling anyone.
+        let row = r
+            .rows
+            .iter()
+            .find(|row| row.mix == "fig6b-mix")
+            .expect("cluster row");
+        let o = row.outcome.as_ref().expect("tunable");
+        assert_eq!(o.relaxed, Some(Resource::DcspmPort));
+        assert!(o.tuning.dcspm_private_paths, "aliasing flip expected");
+        assert_eq!(o.strategy, SearchStrategy::CoordinateDescent);
+        let v = row.validation.as_ref().expect("validated");
+        assert!(v.confirmed(), "{:?}", v.checks);
+
+        // A deadline below the knob-space floor exhausts the search with
+        // a best-effort report and no validation simulation.
+        let row = r
+            .rows
+            .iter()
+            .find(|row| row.deadline == 350_000)
+            .expect("floor row");
+        assert_eq!(row.ladder_admits, 0);
+        let e = row.outcome.as_ref().expect_err("below the knob floor");
+        assert!(e.best_bound.is_some());
+        assert!(row.validation.is_none());
+    }
+
+    #[test]
+    fn grid_is_deterministic() {
+        let a = run();
+        let b = run();
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            match (&x.outcome, &y.outcome) {
+                (Ok(ox), Ok(oy)) => {
+                    assert_eq!(ox.tuning, oy.tuning);
+                    assert_eq!(ox.evaluations, oy.evaluations);
+                }
+                (Err(ex), Err(ey)) => assert_eq!(ex.evaluations, ey.evaluations),
+                _ => panic!("verdict flipped between runs"),
+            }
+        }
+        assert_eq!(a.total_evaluations, b.total_evaluations);
+    }
+}

@@ -11,7 +11,7 @@
 //! iterations hit the DPLLC (a sound static analysis cannot assume
 //! cache hits in a shared partition).
 
-use crate::coordinator::{sweep, IsolationPolicy, Scenario, Scheduler};
+use crate::coordinator::{sweep, Scenario, Scheduler};
 use crate::experiments::{fig6a, fig6b};
 use crate::soc::clock::Cycle;
 use crate::wcet::{analyze, Resource};
@@ -92,10 +92,7 @@ pub fn run_with_threads(threads: usize) -> BoundsResult {
                 .extra_value("access_max")
                 .or_else(|| t.extra_value("mem_max"))
                 .unwrap_or(0.0);
-            let regulated_policy = matches!(
-                scenario.policy,
-                IsolationPolicy::TsuRegulation | IsolationPolicy::TsuPlusLlcPartition { .. }
-            );
+            let regulated_policy = scenario.tuning.nct_tsu.is_regulated();
             rows.push(BoundRow {
                 scenario: scenario.name.clone(),
                 task: tb.task.clone(),

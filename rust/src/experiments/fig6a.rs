@@ -9,7 +9,7 @@
 //! - the TSU write buffer adds at most 1 cycle.
 
 use crate::coordinator::task::Criticality;
-use crate::coordinator::{sweep, IsolationPolicy, McTask, Scenario, Workload};
+use crate::coordinator::{sweep, McTask, Scenario, SocTuning, Workload};
 use crate::soc::clock::Cycle;
 use crate::soc::dma::DmaJob;
 use crate::soc::hostd::TctSpec;
@@ -61,11 +61,11 @@ pub const PARTITION_POINTS: [u8; 4] = [12, 25, 50, 75];
 /// can run exactly the grid the figure runs.
 pub fn scenario_grid() -> Vec<Scenario> {
     let mut grid = vec![
-        Scenario::new("isolated", IsolationPolicy::NoIsolation).with_task(tct()),
-        Scenario::new("unregulated", IsolationPolicy::NoIsolation)
+        Scenario::new("isolated", SocTuning::no_isolation()).with_task(tct()),
+        Scenario::new("unregulated", SocTuning::no_isolation())
             .with_task(tct())
             .with_task(dma()),
-        Scenario::new("tsu-regulated", IsolationPolicy::TsuRegulation)
+        Scenario::new("tsu-regulated", SocTuning::tsu_regulation())
             .with_task(tct())
             .with_task(dma()),
     ];
@@ -73,9 +73,7 @@ pub fn scenario_grid() -> Vec<Scenario> {
         grid.push(
             Scenario::new(
                 &format!("tsu+partition-{pct}"),
-                IsolationPolicy::TsuPlusLlcPartition {
-                    tct_fraction_percent: pct,
-                },
+                SocTuning::tsu_plus_llc_partition(pct),
             )
             .with_task(tct())
             .with_task(dma()),

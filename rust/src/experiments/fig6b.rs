@@ -9,7 +9,7 @@
 //!   zero overhead.
 
 use crate::coordinator::task::Criticality;
-use crate::coordinator::{sweep, IsolationPolicy, McTask, Scenario, Workload};
+use crate::coordinator::{sweep, McTask, Scenario, SocTuning, Workload};
 use crate::soc::amr::IntPrecision;
 use crate::soc::clock::Cycle;
 use crate::soc::vector::FpFormat;
@@ -68,15 +68,15 @@ fn vector_task() -> McTask {
 /// baselines, then the three sharing regimes.
 pub fn scenario_grid() -> Vec<Scenario> {
     vec![
-        Scenario::new("amr-isolated", IsolationPolicy::NoIsolation).with_task(amr_task()),
-        Scenario::new("vec-isolated", IsolationPolicy::NoIsolation).with_task(vector_task()),
-        Scenario::new("r-e2-unregulated", IsolationPolicy::NoIsolation)
+        Scenario::new("amr-isolated", SocTuning::no_isolation()).with_task(amr_task()),
+        Scenario::new("vec-isolated", SocTuning::no_isolation()).with_task(vector_task()),
+        Scenario::new("r-e2-unregulated", SocTuning::no_isolation())
             .with_task(amr_task())
             .with_task(vector_task()),
-        Scenario::new("r-e3-tsu", IsolationPolicy::TsuRegulation)
+        Scenario::new("r-e3-tsu", SocTuning::tsu_regulation())
             .with_task(amr_task())
             .with_task(vector_task()),
-        Scenario::new("r-e4-private-paths", IsolationPolicy::PrivatePaths)
+        Scenario::new("r-e4-private-paths", SocTuning::private_paths())
             .with_task(amr_task())
             .with_task(vector_task()),
     ]

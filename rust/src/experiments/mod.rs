@@ -6,7 +6,10 @@
 //! fall). `cargo bench` targets print them; `carfield fig*` runs them
 //! from the CLI. `bounds` is the WCET validation table (`carfield
 //! wcet`): analytical bound vs measured worst case on the Fig. 6 grids.
+//! `autotune` is the ladder-vs-tuner comparison (`carfield autotune`):
+//! mixes admitted by the fixed four policies vs the bound-driven search.
 
+pub mod autotune;
 pub mod bounds;
 pub mod fig3c;
 pub mod fig5;

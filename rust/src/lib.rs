@@ -36,6 +36,15 @@
 //!   worst-case service models); `Scheduler::admit` turns them into
 //!   bound-aware admission control, and `experiments::bounds` /
 //!   `carfield wcet` validate bound-vs-measured on the Fig. 6 grids.
+//! - **Bound-driven auto-tuning** — `coordinator::policy::SocTuning`
+//!   opens the isolation registers (TSU knobs, DPLLC partition split,
+//!   DCSPM aliasing) into a searchable space with the legacy four-policy
+//!   ladder as named points; `coordinator::autotune` searches it on a
+//!   rejected admission (coordinate descent over the binding resource's
+//!   knob, coarse-lattice fallback) for the least-restrictive tuning
+//!   whose bounds admit the mix — `experiments::autotune` / `carfield
+//!   autotune` compare mixes-admitted against the fixed ladder and
+//!   validate every winner with one simulation.
 //!
 //! Perf target (tracked by `make bench` → `BENCH_perf_hotpath.json`):
 //! >= 60 simulated Mcyc/s on the Fig. 6a TCT+DMA topology via the

@@ -8,6 +8,11 @@
 //!                           case on the fig6a/fig6b grids, plus a
 //!                           bound-aware admission demo
 //!                           (`--threads N` pins the sweep width);
+//! - `autotune`            — bound-driven tuning-space search: mixes
+//!                           admitted by the fixed four-policy ladder vs
+//!                           the auto-tuner (`--deadline N` tunes the
+//!                           fig6a reference mix for one deadline and
+//!                           prints the winner + validating simulation);
 //! - `all`                 — run every experiment in sequence;
 //! - `artifacts [--dir D]` — list AOT artifacts and smoke-execute one;
 //! - `infer [--dir D]`     — run the QNN MLP artifact through the PJRT
@@ -38,6 +43,7 @@ fn main() {
         Some("fig8") => exp::fig8::print(&exp::fig8::run()),
         Some("micro") => exp::micro::print(&exp::micro::run()),
         Some("wcet") => cmd_wcet(&args),
+        Some("autotune") => cmd_autotune(&args),
         Some("all") => {
             exp::fig3c::print(&exp::fig3c::run());
             exp::fig5::print(&exp::fig5::run());
@@ -47,13 +53,14 @@ fn main() {
             exp::fig8::print(&exp::fig8::run());
             exp::micro::print(&exp::micro::run());
             exp::bounds::print(&exp::bounds::run());
+            exp::autotune::print(&exp::autotune::run());
         }
         Some("artifacts") => cmd_artifacts(&args),
         Some("infer") => cmd_infer(&args),
         Some("scenario") => cmd_scenario(&args),
         _ => {
             eprintln!(
-                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|all|artifacts|infer|scenario> [options]"
+                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|autotune|all|artifacts|infer|scenario> [options]"
             );
             std::process::exit(2);
         }
@@ -63,6 +70,75 @@ fn main() {
 fn cmd_wcet(args: &Args) {
     let threads = args.get_parse("threads", carfield::coordinator::sweep::default_threads());
     exp::bounds::print(&exp::bounds::run_with_threads(threads));
+}
+
+fn cmd_autotune(args: &Args) {
+    use carfield::coordinator::autotune;
+    if args.get("deadline").is_none() {
+        let r = exp::autotune::run();
+        exp::autotune::print(&r);
+        // The smoke gate: every validating simulation must confirm its
+        // winner, and the tuner must actually beat the fixed ladder
+        // (otherwise a bound-engine regression that exhausts every
+        // search would pass vacuously with zero validations).
+        let unsound = r
+            .rows
+            .iter()
+            .filter_map(|row| row.validation.as_ref())
+            .any(|v| !v.confirmed());
+        if unsound {
+            eprintln!("autotune validation failed: a winning tuning missed its bound or deadline");
+            std::process::exit(1);
+        }
+        if r.tuned_admitted <= r.ladder_admitted {
+            eprintln!(
+                "autotune regression: tuner admitted {} mixes vs the ladder's {}",
+                r.tuned_admitted, r.ladder_admitted
+            );
+            std::process::exit(1);
+        }
+        return;
+    }
+    let deadline = args.get_parse("deadline", 800_000u64);
+    let scenario = exp::autotune::reference_mix(deadline);
+    println!(
+        "tuning the fig6a reference mix (hard TCT deadline {deadline} cycles vs the endless \
+         system-DMA interferer), starting from {}",
+        scenario.tuning.describe()
+    );
+    match autotune::autotune(&scenario) {
+        Ok(outcome) => {
+            let relaxed = outcome.relaxed.map_or(String::new(), |r| {
+                format!(" (relaxed binding resource: {})", r.describe())
+            });
+            println!(
+                "{:?} found {} after {} analytic evaluations{}",
+                outcome.strategy,
+                outcome.tuning.describe(),
+                outcome.evaluations,
+                relaxed
+            );
+            println!("{}", outcome.decision.summary());
+            let v = autotune::validate(&scenario, &outcome);
+            for (task, measured, bound) in &v.checks {
+                println!(
+                    "validating simulation: {task} measured {measured} <= bound {bound}{}",
+                    if measured <= bound { "" } else { "  ** VIOLATED **" }
+                );
+            }
+            println!(
+                "validation {}",
+                if v.confirmed() { "CONFIRMED" } else { "FAILED" }
+            );
+            if !v.confirmed() {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("autotune failed: {e}");
+            std::process::exit(1);
+        }
+    }
 }
 
 fn cmd_boot() {
@@ -147,6 +223,10 @@ fn cmd_scenario(args: &Args) {
             std::process::exit(2);
         }
     };
+    if let Err(e) = policy.validate() {
+        eprintln!("invalid policy: {e}");
+        std::process::exit(2);
+    }
     let mut scenario = Scenario::new("cli", policy);
     if !args.flag("no-tct") {
         scenario = scenario.with_task(McTask::new(

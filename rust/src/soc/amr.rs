@@ -287,7 +287,7 @@ impl AmrCluster {
             dst_base: task.dst_base,
             part_id: task.part_id,
             buffer_depth: super::tiles::CLUSTER_BUFFER_DEPTH,
-            wrap_bytes: crate::coordinator::policy::IsolationPolicy::L2_SLOT_BYTES / 2,
+            wrap_bytes: crate::coordinator::policy::SocTuning::L2_SLOT_BYTES / 2,
         };
         self.streamer = Some(TileStreamer::new(self.id, stream));
         self.task = Some(task);

@@ -11,6 +11,12 @@
 //! the mechanism behind Fig. 6a's "75% of isolated performance with a
 //! >50% partition".
 
+/// Paper geometry: 128KiB / 8 ways / 64B lines -> 256 sets. The single
+/// source of truth for every partition-math consumer (the coordinator's
+/// tuning space and the WCET engine both derive from it, so partition
+/// arithmetic can never drift from the cache model).
+pub const TOTAL_SETS: usize = 256;
+
 /// Geometry + partition table.
 #[derive(Debug, Clone)]
 pub struct DpllcConfig {
@@ -27,9 +33,9 @@ impl DpllcConfig {
     pub fn carfield() -> Self {
         Self {
             ways: 8,
-            sets: 256,
+            sets: TOTAL_SETS,
             line_bytes: 64,
-            partitions: vec![(0, 256)],
+            partitions: vec![(0, TOTAL_SETS)],
         }
     }
 

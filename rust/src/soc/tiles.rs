@@ -246,7 +246,7 @@ mod tests {
             dst_base: 0x4_0000,
             part_id: 0,
             buffer_depth: 1,
-            wrap_bytes: crate::coordinator::policy::IsolationPolicy::L2_SLOT_BYTES / 2,
+            wrap_bytes: crate::coordinator::policy::SocTuning::L2_SLOT_BYTES / 2,
         }
     }
 

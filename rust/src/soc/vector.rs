@@ -224,7 +224,7 @@ impl VectorCluster {
                 dst_base: task.dst_base,
                 part_id: task.part_id,
                 buffer_depth: super::tiles::CLUSTER_BUFFER_DEPTH,
-                wrap_bytes: crate::coordinator::policy::IsolationPolicy::L2_SLOT_BYTES / 2,
+                wrap_bytes: crate::coordinator::policy::SocTuning::L2_SLOT_BYTES / 2,
             },
         ));
         self.flops_per_tile = flops;

@@ -110,7 +110,7 @@ pub fn analyze(scenario: &Scenario) -> WcetReport {
         .collect();
     WcetReport {
         scenario: scenario.name.clone(),
-        policy: format!("{:?}", scenario.policy),
+        policy: scenario.tuning.describe(),
         bounds,
     }
 }

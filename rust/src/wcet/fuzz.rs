@@ -179,7 +179,7 @@ mod tests {
             let a = random_scenario(seed);
             let b = random_scenario(seed);
             assert_eq!(a.tasks.len(), b.tasks.len());
-            assert_eq!(a.policy, b.policy);
+            assert_eq!(a.tuning, b.tuning);
             for (x, y) in a.tasks.iter().zip(&b.tasks) {
                 assert_eq!(x.name, y.name);
                 assert_eq!(x.criticality, y.criticality);
@@ -195,7 +195,7 @@ mod tests {
         let mut has_crit = true;
         for seed in 1..200 {
             let s = random_scenario(seed);
-            policies.insert(format!("{:?}", s.policy));
+            policies.insert(s.tuning.describe());
             max_tasks = max_tasks.max(s.tasks.len());
             has_crit &= s.tasks.iter().any(|t| t.criticality.is_time_critical());
         }

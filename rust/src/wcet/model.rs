@@ -1,13 +1,15 @@
 //! Scenario -> analyzable traffic model.
 //!
 //! Mirrors the coordinator's placement (`Scheduler::execute`): one
-//! initiator slot per task in declaration order, TSU programs from the
-//! policy, L2 staging bases from [`IsolationPolicy::l2_base`]. Each
-//! initiator becomes a set of [`StreamModel`]s (the bursts it puts on
-//! the bus) plus a [`TaskShape`] describing how transactions compose
-//! into a completion time.
+//! initiator slot per task in declaration order, TSU programs and L2
+//! staging bases from the scenario's [`SocTuning`] point (arrival curves
+//! and service bounds therefore follow *any* knob setting, not just the
+//! legacy policy ladder). Each initiator becomes a set of
+//! [`StreamModel`]s (the bursts it puts on the bus) plus a [`TaskShape`]
+//! describing how transactions compose into a completion time.
+//!
+//! [`SocTuning`]: crate::coordinator::SocTuning
 
-use crate::coordinator::policy::tsu_for;
 use crate::coordinator::task::Workload;
 use crate::coordinator::{McTask, Scenario};
 use crate::soc::amr::{AmrCluster, AmrTask};
@@ -74,9 +76,9 @@ pub fn models_of(scenario: &Scenario) -> Vec<InitiatorModel> {
 }
 
 fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
-    let policy = scenario.policy;
+    let tuning = scenario.tuning;
     let critical = task.criticality.is_time_critical();
-    let tsu = tsu_for(policy, critical);
+    let tsu = tuning.tsu_config(critical);
     let wb = tsu.wb_enable;
     match &task.workload {
         Workload::HostTct(spec) => {
@@ -148,8 +150,8 @@ fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
                 k: *k,
                 n: *n,
                 tile: *tile,
-                src_base: policy.l2_base(slot),
-                dst_base: policy.l2_base(slot) + (1 << 17),
+                src_base: tuning.l2_base(slot),
+                dst_base: tuning.l2_base(slot) + (1 << 17),
                 part_id: 0,
             };
             let tiles = amr.tiles() as u64;
@@ -175,8 +177,8 @@ fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
                     n: *n,
                     tile: *tile,
                 },
-                src_base: policy.l2_base(slot),
-                dst_base: policy.l2_base(slot) + (1 << 17),
+                src_base: tuning.l2_base(slot),
+                dst_base: tuning.l2_base(slot) + (1 << 17),
                 part_id: 0,
             };
             vector_model(task, critical, tsu, &vt)
@@ -185,8 +187,8 @@ fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
             let vt = VectorTask {
                 format: *format,
                 work: VectorWork::Fft { n: *n, batch: *batch },
-                src_base: policy.l2_base(slot),
-                dst_base: policy.l2_base(slot) + (1 << 17),
+                src_base: tuning.l2_base(slot),
+                dst_base: tuning.l2_base(slot) + (1 << 17),
                 part_id: 0,
             };
             vector_model(task, critical, tsu, &vt)

@@ -1,0 +1,169 @@
+//! The four legacy `IsolationPolicy` presets must be *exactly* the named
+//! points of the new `SocTuning` space: bit-identical register-level
+//! `ResourceConfig`s (frozen against the seed's values, not just against
+//! each other) and identical fig6a/fig6b sweep results whether a grid is
+//! built from the enum or from the tuning constructors.
+
+use carfield::coordinator::task::Criticality;
+use carfield::coordinator::{
+    sweep, IsolationPolicy, McTask, Scenario, Scheduler, SocTuning, Workload,
+};
+use carfield::experiments::{fig6a, fig6b};
+use carfield::soc::dma::DmaJob;
+use carfield::soc::hostd::TctSpec;
+use carfield::soc::tsu::TsuConfig;
+
+/// Every preset, its tuning-space point, and the partition fractions the
+/// seed experiments exercised.
+fn presets() -> Vec<(IsolationPolicy, SocTuning)> {
+    let mut pairs = vec![
+        (IsolationPolicy::NoIsolation, SocTuning::no_isolation()),
+        (IsolationPolicy::TsuRegulation, SocTuning::tsu_regulation()),
+        (IsolationPolicy::PrivatePaths, SocTuning::private_paths()),
+    ];
+    for pct in [12u8, 25, 50, 75, 100] {
+        pairs.push((
+            IsolationPolicy::TsuPlusLlcPartition {
+                tct_fraction_percent: pct,
+            },
+            SocTuning::tsu_plus_llc_partition(pct),
+        ));
+    }
+    pairs
+}
+
+#[test]
+fn presets_produce_bit_identical_resource_configs() {
+    for (policy, tuning) in presets() {
+        let legacy = policy.resource_config();
+        let tuned = tuning.resource_config();
+        assert_eq!(legacy, tuned, "{policy:?} drifted from its tuning point");
+        // And the L2 staging map agrees on every slot.
+        for slot in 0..8 {
+            assert_eq!(policy.l2_base(slot), tuning.l2_base(slot), "{policy:?}");
+        }
+    }
+}
+
+/// Freeze the seed's register values so a change to either path (enum or
+/// tuning constructors) trips this test rather than silently moving both.
+#[test]
+fn resource_configs_match_the_seed_exactly() {
+    let no = IsolationPolicy::NoIsolation.resource_config();
+    assert_eq!(no.nct_tsu, TsuConfig::passthrough());
+    assert_eq!(no.tct_tsu, TsuConfig::passthrough());
+    assert_eq!(no.dpllc_partitions, vec![(0, 256)]);
+    assert_eq!(no.tct_part_id, 0);
+    assert!(!no.dcspm_private_paths);
+
+    let tsu = IsolationPolicy::TsuRegulation.resource_config();
+    assert_eq!(tsu.nct_tsu, TsuConfig::regulated(8, 96, 512));
+    assert_eq!(tsu.nct_tsu.wb_capacity_beats, 16);
+    assert_eq!(tsu.tct_tsu, TsuConfig::wb_only());
+    assert_eq!(tsu.dpllc_partitions, vec![(0, 256)]);
+    assert_eq!(tsu.tct_part_id, 0);
+
+    let part = IsolationPolicy::TsuPlusLlcPartition {
+        tct_fraction_percent: 50,
+    }
+    .resource_config();
+    assert_eq!(part.nct_tsu, TsuConfig::regulated(8, 96, 512));
+    assert_eq!(part.dpllc_partitions, vec![(0, 128), (128, 128)]);
+    assert_eq!(part.tct_part_id, 1);
+    assert!(!part.dcspm_private_paths);
+
+    let part12 = IsolationPolicy::TsuPlusLlcPartition {
+        tct_fraction_percent: 12,
+    }
+    .resource_config();
+    assert_eq!(part12.dpllc_partitions, vec![(0, 226), (226, 30)]);
+
+    let priv_ = IsolationPolicy::PrivatePaths.resource_config();
+    assert_eq!(priv_.nct_tsu, TsuConfig::wb_only());
+    assert_eq!(priv_.tct_tsu, TsuConfig::wb_only());
+    assert_eq!(priv_.dpllc_partitions, vec![(0, 128), (128, 128)]);
+    assert_eq!(priv_.tct_part_id, 1);
+    assert!(priv_.dcspm_private_paths);
+}
+
+/// A scenario built from the enum and the same scenario built from the
+/// tuning point must simulate identically (full `ScenarioReport`
+/// equality, f64s included).
+#[test]
+fn enum_and_tuning_scenarios_simulate_identically() {
+    let mix = |tuning: SocTuning| {
+        Scenario::new("eq", tuning)
+            .with_task(McTask::new(
+                "tct",
+                Criticality::Hard,
+                Workload::HostTct(TctSpec {
+                    accesses: 128,
+                    iterations: 2,
+                    ..TctSpec::fig6a()
+                }),
+            ))
+            .with_task(McTask::new(
+                "dma",
+                Criticality::BestEffort,
+                Workload::DmaCopy(DmaJob {
+                    bytes: 1 << 16,
+                    looping: false,
+                    ..DmaJob::interferer()
+                }),
+            ))
+    };
+    for (policy, tuning) in presets() {
+        let from_enum = Scheduler::run(&mix(policy.into()));
+        let from_tuning = Scheduler::run(&mix(tuning));
+        assert_eq!(from_enum, from_tuning, "{policy:?}");
+    }
+}
+
+/// The fig6a and fig6b grids (which now construct their scenarios from
+/// tuning points) still express exactly the legacy ladder: rebuilding
+/// every grid scenario from the legacy enum sweeps to identical reports.
+#[test]
+fn fig6_grids_match_their_legacy_policy_expression() {
+    let legacy_fig6a: Vec<IsolationPolicy> = vec![
+        IsolationPolicy::NoIsolation,
+        IsolationPolicy::NoIsolation,
+        IsolationPolicy::TsuRegulation,
+        IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 12,
+        },
+        IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 25,
+        },
+        IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 50,
+        },
+        IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 75,
+        },
+    ];
+    let legacy_fig6b: Vec<IsolationPolicy> = vec![
+        IsolationPolicy::NoIsolation,
+        IsolationPolicy::NoIsolation,
+        IsolationPolicy::NoIsolation,
+        IsolationPolicy::TsuRegulation,
+        IsolationPolicy::PrivatePaths,
+    ];
+    for (grid, legacy) in [
+        (fig6a::scenario_grid(), legacy_fig6a),
+        (fig6b::scenario_grid(), legacy_fig6b),
+    ] {
+        assert_eq!(grid.len(), legacy.len(), "grid shape changed");
+        let as_enum: Vec<Scenario> = grid
+            .iter()
+            .zip(&legacy)
+            .map(|(s, &p)| {
+                assert_eq!(s.tuning, p.tuning(), "{}: tuning is not {p:?}", s.name);
+                s.clone().with_tuning(p)
+            })
+            .collect();
+        let threads = sweep::default_threads();
+        let tuned_reports = sweep::run_scenarios(&grid, threads);
+        let enum_reports = sweep::run_scenarios(&as_enum, threads);
+        assert_eq!(tuned_reports, enum_reports);
+    }
+}
