@@ -6,7 +6,7 @@
 
 RUST_DIR := rust
 
-.PHONY: build test bench wcet autotune artifacts python-test
+.PHONY: build test bench wcet autotune dvfs artifacts python-test
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -26,6 +26,12 @@ wcet: build
 # four-policy ladder vs the auto-tuner, with validating simulations.
 autotune: build
 	$(RUST_DIR)/target/release/carfield autotune
+
+# Bound-driven DVFS governor: fig6a/fig6b deadline grids searched for
+# energy-minimal provably-safe operating points, with validating
+# simulations and measured energy columns.
+dvfs: build
+	$(RUST_DIR)/target/release/carfield dvfs
 
 # AOT-lower the JAX/Pallas kernels to HLO text artifacts consumed by the
 # rust PJRT runtime (requires the python toolchain).

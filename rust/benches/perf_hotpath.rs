@@ -1,8 +1,8 @@
 //! Bench: L3 hot paths — simulator cycle throughput (naive vs the
 //! event-driven cycle-skipping core), parallel scenario-sweep speedup,
 //! WCET analysis throughput + bound tightness, bound-driven autotune
-//! search throughput, coordinator dispatch, and PJRT artifact execution
-//! overhead.
+//! search throughput, DVFS governor search latency + energy saving,
+//! coordinator dispatch, and PJRT artifact execution overhead.
 //!
 //! Targets (see lib.rs layering docs): >= 60 simulated Mcyc/s on the
 //! Fig. 6a topology via the event-driven path (>= 3x naive), raised from
@@ -167,6 +167,40 @@ fn autotune_overhead(b: &mut BenchRunner) {
     assert_eq!(outcome.evaluations, 6, "descent length drifted");
 }
 
+/// Bound-driven DVFS governor: full-search latency on the slack-rich
+/// fig6a mix (grid x autotune product), voltage-point throughput, and
+/// the modeled energy saving the winner buys vs max_perf.
+fn governor_overhead(b: &mut BenchRunner) {
+    use carfield::experiments::energy as grid;
+    use carfield::power::governor;
+
+    let scenario = grid::reference_mix_ns(2_500_000.0);
+    let (choice, dt) = b.time_with_mean("dvfs govern (fig6a mix, 2.5ms deadline)", 50, || {
+        governor::govern(&scenario).expect("slack-rich mix is governable")
+    });
+    b.metric(
+        "governor search latency",
+        dt * 1e3,
+        "ms to an energy-minimal admissible point",
+    );
+    b.metric(
+        "governor voltage points evaluated/sec",
+        choice.points_evaluated as f64 / dt.max(1e-12),
+        "V/f candidates/s (tuning re-searched per point)",
+    );
+    b.metric(
+        "governor analytic evaluations/sec",
+        choice.evaluations as f64 / dt.max(1e-12),
+        "admit() calls/s",
+    );
+    b.metric(
+        "governor energy saved vs max_perf",
+        choice.energy_saved_pct().expect("baseline exists"),
+        "% modeled (fig6a 2.5ms mix)",
+    );
+    assert_eq!(choice.op.v_system, 0.6, "slack-rich winner drifted");
+}
+
 /// Coordinator scenario-assembly + teardown overhead.
 fn dispatch_overhead(b: &mut BenchRunner) {
     b.time("Scheduler::run tiny scenario", 5, || {
@@ -221,6 +255,7 @@ fn main() {
     sweep_throughput(&mut b);
     wcet_overhead(&mut b);
     autotune_overhead(&mut b);
+    governor_overhead(&mut b);
     dispatch_overhead(&mut b);
     artifact_overhead(&mut b);
     b.finish();

@@ -22,7 +22,12 @@
 //! Every evaluation is *analytic* — one `Scheduler::admit` call
 //! (microseconds) — so a full search costs less than a millisecond of
 //! wall clock; no simulation runs until [`validate`] confirms the winner
-//! with one real execution. The search is a pure function of the
+//! with one real execution. That cheapness is what lets the DVFS
+//! governor ([`crate::power::governor`]) re-run this whole search at
+//! every voltage candidate of its grid — the "tuning x DVFS
+//! composition" the PR 3 follow-ons called for: admission deadlines
+//! resolve through the probe scenario's operating point, so the same
+//! search finds the least-restrictive tuning per V/f point. The search is a pure function of the
 //! scenario: same mix in, same tuning out, regardless of thread count,
 //! call order or wall clock. A handful of points are deliberately
 //! re-evaluated (the base tuning can reappear on its axis, and the

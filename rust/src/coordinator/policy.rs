@@ -195,7 +195,10 @@ impl TsuKnobs {
 /// A point in the SoC's isolation-configuration space: the registers the
 /// coordinator programs before launching a mix. Unlike the closed
 /// [`IsolationPolicy`] ladder, every knob is free — which is what the
-/// bound-driven auto-tuner searches over.
+/// bound-driven auto-tuner searches over, and what the DVFS governor
+/// ([`crate::power::governor`]) pairs with an
+/// [`OperatingPoint`](crate::power::OperatingPoint) when it searches the
+/// (voltage x tuning) product for the energy-minimal admissible pair.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct SocTuning {
     /// TSU program for initiators running best-effort work.

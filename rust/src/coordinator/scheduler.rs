@@ -6,9 +6,10 @@
 //! executes the assembled `SocSim` until every *measured* task drains
 //! (endless interferers keep running), and returns per-task reports.
 
+use crate::power::OperatingPoint;
 use crate::soc::amr::{AmrCluster, AmrTask};
 use crate::soc::axi::{InitiatorId, TargetModel};
-use crate::soc::clock::Cycle;
+use crate::soc::clock::{ClockTree, Cycle, Domain};
 use crate::soc::dma::DmaEngine;
 use crate::soc::hostd::HostCore;
 use crate::soc::mem::dpllc::DpllcConfig;
@@ -28,6 +29,11 @@ pub struct Scenario {
     /// The isolation-configuration point programmed before launch; the
     /// four legacy `IsolationPolicy` values convert implicitly.
     pub tuning: SocTuning,
+    /// The DVFS operating point the mix runs at. `None` keeps the
+    /// seed's lock-step timebase — every domain on the system clock
+    /// (PLL ratio 1.0) and deadlines only expressible in cycles; the
+    /// governor always pins `Some` point.
+    pub op_point: Option<OperatingPoint>,
     pub tasks: Vec<McTask>,
     /// Simulation budget (guards against starvation bugs).
     pub max_cycles: Cycle,
@@ -38,6 +44,7 @@ impl Scenario {
         Self {
             name: name.to_string(),
             tuning: tuning.into(),
+            op_point: None,
             tasks: Vec::new(),
             max_cycles: 200_000_000,
         }
@@ -54,12 +61,37 @@ impl Scenario {
         self.tuning = tuning.into();
         self
     }
+
+    /// The same mix at a DVFS operating point (the governor's
+    /// re-evaluation hook).
+    pub fn with_op_point(mut self, op: OperatingPoint) -> Self {
+        self.op_point = Some(op);
+        self
+    }
+
+    /// The PLL tree the operating point programs, if one is pinned.
+    pub fn clocks(&self) -> Option<ClockTree> {
+        self.op_point.map(|p| p.clock_tree())
+    }
+
+    /// Cluster cycles per system cycle for `domain` — 1.0 on the legacy
+    /// lock-step timebase, the PLL ratio at a pinned operating point.
+    /// Consumed identically by the simulator's cluster FSMs and the WCET
+    /// compute bounds, so soundness is preserved by construction.
+    pub fn freq_ratio(&self, domain: Domain) -> f64 {
+        match self.clocks() {
+            Some(t) => t.ratio_to_system(domain),
+            None => 1.0,
+        }
+    }
 }
 
 /// One rejected task in an admission decision.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Rejection {
     pub task: String,
+    /// Effective deadline in system cycles (nanosecond deadlines are
+    /// resolved through the scenario's operating point).
     pub deadline: Cycle,
     /// The computed completion bound (`None` = unbounded/endless).
     pub bound: Option<Cycle>,
@@ -120,17 +152,22 @@ impl Scheduler {
     /// (`deadline == 0`) are always admissible.
     pub fn admit(scenario: &Scenario) -> AdmissionDecision {
         let report = wcet::analyze(scenario);
+        let clocks = scenario.clocks();
         let mut rejections = Vec::new();
         for task in &scenario.tasks {
-            if !task.criticality.is_time_critical() || task.deadline == 0 {
+            if !task.criticality.is_time_critical() {
+                continue;
+            }
+            let deadline = task.deadline_cycles(clocks.as_ref());
+            if deadline == 0 {
                 continue;
             }
             let b = report.bound_for(&task.name);
-            let feasible = matches!(b.completion_bound, Some(c) if c <= task.deadline);
+            let feasible = matches!(b.completion_bound, Some(c) if c <= deadline);
             if !feasible {
                 rejections.push(Rejection {
                     task: task.name.clone(),
-                    deadline: task.deadline,
+                    deadline,
                     bound: b.completion_bound,
                     binding: b.completion_binding,
                 });
@@ -202,6 +239,7 @@ impl Scheduler {
                 } => {
                     let mut cluster = AmrCluster::new(id);
                     cluster.mode = task.required_amr_mode();
+                    cluster.freq_ratio = scenario.freq_ratio(Domain::Amr);
                     cluster.submit(
                         AmrTask {
                             precision: *precision,
@@ -220,6 +258,7 @@ impl Scheduler {
                 }
                 Workload::VectorMatMul { format, m, k, n, tile } => {
                     let mut cluster = VectorCluster::new(id);
+                    cluster.freq_ratio = scenario.freq_ratio(Domain::Vector);
                     cluster.submit(
                         VectorTask {
                             format: *format,
@@ -240,6 +279,7 @@ impl Scheduler {
                 }
                 Workload::VectorFft { format, n, batch } => {
                     let mut cluster = VectorCluster::new(id);
+                    cluster.freq_ratio = scenario.freq_ratio(Domain::Vector);
                     cluster.submit(
                         VectorTask {
                             format: *format,
@@ -284,11 +324,14 @@ impl Scheduler {
         });
         let cycles = soc.now;
 
-        // Harvest reports.
+        // Harvest reports (nanosecond deadlines resolve through the
+        // scenario's operating point).
+        let clocks = scenario.clocks();
         let mut reports = Vec::new();
         for (slot, task) in scenario.tasks.iter().enumerate() {
             let id = InitiatorId(slot as u8);
-            reports.push(Self::report_for(&mut soc, id, task, cycles));
+            let deadline = task.deadline_cycles(clocks.as_ref());
+            reports.push(Self::report_for(&mut soc, id, task, deadline, cycles));
         }
         ScenarioReport {
             scenario: scenario.name.clone(),
@@ -302,6 +345,7 @@ impl Scheduler {
         soc: &mut SocSim,
         id: InitiatorId,
         task: &McTask,
+        deadline: Cycle,
         total_cycles: Cycle,
     ) -> TaskReport {
         let mut makespan = 0;
@@ -344,13 +388,13 @@ impl Scheduler {
                 mean_latency = d.stats.bytes_moved as f64 / total_cycles.max(1) as f64;
             }
         }
-        let deadline_met = task.deadline == 0 || (makespan > 0 && makespan <= task.deadline);
+        let deadline_met = deadline == 0 || (makespan > 0 && makespan <= deadline);
         TaskReport {
             name: task.name.clone(),
             kind: task.workload.kind(),
             criticality: task.criticality,
             makespan,
-            deadline: task.deadline,
+            deadline,
             deadline_met,
             mean_latency,
             jitter,
@@ -510,6 +554,59 @@ mod tests {
         let d = Scheduler::admit(&s);
         assert!(d.admitted, "deadline-free mixes always admissible");
         assert_eq!(d.report.bounds.len(), 1, "one critical task bounded");
+    }
+
+    #[test]
+    fn ns_deadlines_resolve_through_the_operating_point() {
+        use crate::power::OperatingPoint;
+        let mix = |op: OperatingPoint| {
+            Scenario::new("ns", IsolationPolicy::TsuRegulation)
+                .with_task(
+                    McTask::new(
+                        "tct",
+                        Criticality::Hard,
+                        Workload::HostTct(TctSpec::fig6a()),
+                    )
+                    .with_deadline_ns(2_000_000.0),
+                )
+                .with_task(dma_interferer())
+                .with_op_point(op)
+        };
+        // 2ms of wall clock fits the regulated bound at 1GHz but not at
+        // 350MHz: the same mix flips verdict purely on the point.
+        let fast = Scheduler::admit(&mix(OperatingPoint::max_perf()));
+        assert!(fast.admitted, "{}", fast.summary());
+        let slow = Scheduler::admit(&mix(OperatingPoint::uniform(0.6).unwrap()));
+        assert!(!slow.admitted, "{}", slow.summary());
+        assert_eq!(slow.rejections[0].deadline, 700_000, "2ms at 350MHz");
+    }
+
+    #[test]
+    fn cluster_compute_scales_with_the_domain_ratio() {
+        use crate::power::OperatingPoint;
+        let amr = || {
+            Scenario::new("amr", IsolationPolicy::PrivatePaths).with_task(McTask::new(
+                "amr",
+                Criticality::Safety,
+                Workload::AmrMatMul {
+                    precision: IntPrecision::Int8,
+                    m: 64,
+                    k: 64,
+                    n: 64,
+                    tile: 16,
+                },
+            ))
+        };
+        let lockstep = Scheduler::run(&amr()).task("amr").makespan;
+        // max_perf runs the AMR PLL at 0.9x the system clock: the same
+        // task takes more *system* cycles (but less wall clock).
+        let scaled = Scheduler::run(&amr().with_op_point(OperatingPoint::max_perf()))
+            .task("amr")
+            .makespan;
+        assert!(
+            scaled > lockstep,
+            "0.9x AMR clock must stretch system-cycle makespan: {lockstep} -> {scaled}"
+        );
     }
 
     #[test]

@@ -7,7 +7,7 @@
 //! execution (AMR lockstep modes).
 
 use crate::soc::amr::{AmrMode, IntPrecision};
-use crate::soc::clock::Cycle;
+use crate::soc::clock::{ClockTree, Cycle};
 use crate::soc::dma::DmaJob;
 use crate::soc::hostd::TctSpec;
 use crate::soc::vector::FpFormat;
@@ -86,8 +86,14 @@ impl Workload {
 pub struct McTask {
     pub name: String,
     pub criticality: Criticality,
-    /// Relative deadline in system cycles (0 = none).
+    /// Relative deadline in system cycles (0 = none). Cycle deadlines
+    /// are clock-invariant budgets (the seed's timebase).
     pub deadline: Cycle,
+    /// Relative deadline in wall-clock nanoseconds (0 = none). The real
+    /// currency of the DVFS governor: its cycle equivalent depends on
+    /// the scenario's operating point and is resolved by
+    /// [`McTask::deadline_cycles`].
+    pub deadline_ns: f64,
     pub workload: Workload,
 }
 
@@ -97,6 +103,7 @@ impl McTask {
             name: name.to_string(),
             criticality,
             deadline: 0,
+            deadline_ns: 0.0,
             workload,
         }
     }
@@ -104,6 +111,45 @@ impl McTask {
     pub fn with_deadline(mut self, deadline: Cycle) -> Self {
         self.deadline = deadline;
         self
+    }
+
+    /// Deadline in wall-clock nanoseconds — requires the scenario to run
+    /// at an explicit operating point so the conversion has a clock.
+    pub fn with_deadline_ns(mut self, deadline_ns: f64) -> Self {
+        assert!(
+            deadline_ns.is_finite() && deadline_ns >= 0.0,
+            "nanosecond deadline must be finite and non-negative"
+        );
+        self.deadline_ns = deadline_ns;
+        self
+    }
+
+    /// The effective deadline in system cycles at `clocks`. An explicit
+    /// cycle deadline wins (clock-invariant budget); a nanosecond
+    /// deadline converts through the system clock, rounded *down* so
+    /// meeting the cycle budget provably meets the wall-clock one — but
+    /// never below 1 cycle: a positive wall-clock deadline shorter than
+    /// one clock period is an (infeasible) 1-cycle budget, not an
+    /// absent deadline (0 means "none" downstream, which would admit
+    /// the task vacuously). Panics (descriptively) when a nanosecond
+    /// deadline is used without an operating point — there is no clock
+    /// to convert with.
+    pub fn deadline_cycles(&self, clocks: Option<&ClockTree>) -> Cycle {
+        if self.deadline > 0 {
+            return self.deadline;
+        }
+        if self.deadline_ns > 0.0 {
+            let clocks = clocks.unwrap_or_else(|| {
+                panic!(
+                    "task {}: a nanosecond deadline needs an operating point \
+                     (Scenario::with_op_point) to fix the clock",
+                    self.name
+                )
+            });
+            let cycles = (self.deadline_ns * clocks.system.freq_mhz / 1e3).floor() as Cycle;
+            return cycles.max(1);
+        }
+        0
     }
 
     /// The AMR mode a task of this criticality requires.
@@ -169,5 +215,39 @@ mod tests {
         let spec = TctSpec::fig6a();
         let t = McTask::new("tct", Criticality::Hard, Workload::HostTct(spec)).with_deadline(1000);
         assert_eq!(t.deadline, 1000);
+        assert_eq!(t.deadline_cycles(None), 1000, "cycle deadlines need no clock");
+    }
+
+    #[test]
+    fn ns_deadline_converts_through_the_system_clock() {
+        let t = McTask::new("tct", Criticality::Hard, Workload::HostTct(TctSpec::fig6a()))
+            .with_deadline_ns(1_000_000.0);
+        let max = ClockTree::max_perf(); // 1GHz system: 1 cycle = 1ns
+        assert_eq!(t.deadline_cycles(Some(&max)), 1_000_000);
+        let low = ClockTree::at_voltages(0.6, 0.6, 0.6); // 350MHz
+        assert_eq!(t.deadline_cycles(Some(&low)), 350_000);
+        // An explicit cycle budget wins over the wall-clock one.
+        let both = t.clone().with_deadline(42);
+        assert_eq!(both.deadline_cycles(Some(&max)), 42);
+        // A positive deadline shorter than one clock period is an
+        // infeasible 1-cycle budget, never a silent "no deadline".
+        let tiny = McTask::new("t", Criticality::Hard, Workload::HostTct(TctSpec::fig6a()))
+            .with_deadline_ns(2.0);
+        assert_eq!(tiny.deadline_cycles(Some(&low)), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs an operating point")]
+    fn ns_deadline_without_a_clock_panics_loudly() {
+        let t = McTask::new("tct", Criticality::Hard, Workload::HostTct(TctSpec::fig6a()))
+            .with_deadline_ns(1000.0);
+        let _ = t.deadline_cycles(None);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn invalid_ns_deadline_rejected_at_the_builder() {
+        let _ = McTask::new("tct", Criticality::Hard, Workload::HostTct(TctSpec::fig6a()))
+            .with_deadline_ns(f64::NAN);
     }
 }

@@ -8,9 +8,12 @@
 //! wcet`): analytical bound vs measured worst case on the Fig. 6 grids.
 //! `autotune` is the ladder-vs-tuner comparison (`carfield autotune`):
 //! mixes admitted by the fixed four policies vs the bound-driven search.
+//! `energy` is the DVFS governor grid (`carfield dvfs`): deadline grids
+//! through the energy-minimal provably-safe operating-point search.
 
 pub mod autotune;
 pub mod bounds;
+pub mod energy;
 pub mod fig3c;
 pub mod fig5;
 pub mod fig6a;

@@ -45,6 +45,17 @@
 //!   whose bounds admit the mix — `experiments::autotune` / `carfield
 //!   autotune` compare mixes-admitted against the fixed ladder and
 //!   validate every winner with one simulation.
+//! - **Bound-driven DVFS** — `power::OperatingPoint` carries per-domain
+//!   supply voltages whose clock trees derive from the published
+//!   `DvfsCurve`s; scenarios carry an optional operating point (the
+//!   timebase refactor: cluster compute scales by the PLL ratio in both
+//!   the simulator and the WCET compute bounds, deadlines become
+//!   expressible in nanoseconds and convert through the point's system
+//!   clock). `power::governor` searches the (operating point x tuning)
+//!   product — autotune re-run per voltage candidate — for the
+//!   energy-minimal pair whose recomputed bounds meet every deadline
+//!   inside the 1.2W envelope; `experiments::energy` / `carfield dvfs`
+//!   sweep the Fig. 6 deadline grids through it.
 //!
 //! Perf target (tracked by `make bench` → `BENCH_perf_hotpath.json`):
 //! >= 60 simulated Mcyc/s on the Fig. 6a TCT+DMA topology via the
@@ -52,6 +63,7 @@
 
 pub mod coordinator;
 pub mod experiments;
+pub mod power;
 pub mod runtime;
 pub mod soc;
 pub mod util;

@@ -13,6 +13,11 @@
 //!                           the auto-tuner (`--deadline N` tunes the
 //!                           fig6a reference mix for one deadline and
 //!                           prints the winner + validating simulation);
+//! - `dvfs`                — bound-driven DVFS governor: the fig6a/fig6b
+//!                           deadline grids searched for energy-minimal
+//!                           provably-safe operating points
+//!                           (`--deadline-ns N` governs the fig6a mix
+//!                           for one wall-clock deadline);
 //! - `all`                 — run every experiment in sequence;
 //! - `artifacts [--dir D]` — list AOT artifacts and smoke-execute one;
 //! - `infer [--dir D]`     — run the QNN MLP artifact through the PJRT
@@ -44,6 +49,7 @@ fn main() {
         Some("micro") => exp::micro::print(&exp::micro::run()),
         Some("wcet") => cmd_wcet(&args),
         Some("autotune") => cmd_autotune(&args),
+        Some("dvfs") => cmd_dvfs(&args),
         Some("all") => {
             exp::fig3c::print(&exp::fig3c::run());
             exp::fig5::print(&exp::fig5::run());
@@ -54,13 +60,14 @@ fn main() {
             exp::micro::print(&exp::micro::run());
             exp::bounds::print(&exp::bounds::run());
             exp::autotune::print(&exp::autotune::run());
+            exp::energy::print(&exp::energy::run());
         }
         Some("artifacts") => cmd_artifacts(&args),
         Some("infer") => cmd_infer(&args),
         Some("scenario") => cmd_scenario(&args),
         _ => {
             eprintln!(
-                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|autotune|all|artifacts|infer|scenario> [options]"
+                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|autotune|dvfs|all|artifacts|infer|scenario> [options]"
             );
             std::process::exit(2);
         }
@@ -136,6 +143,94 @@ fn cmd_autotune(args: &Args) {
         }
         Err(e) => {
             eprintln!("autotune failed: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn cmd_dvfs(args: &Args) {
+    use carfield::power::governor;
+    if args.get("deadline-ns").is_none() {
+        let r = exp::energy::run();
+        exp::energy::print(&r);
+        // The smoke gate: every governed winner must be confirmed by its
+        // validating simulation inside the power envelope, and the grid
+        // must actually demonstrate a sub-nominal point with a real
+        // energy saving (else a regression that pins everything to 1.1V
+        // would pass vacuously).
+        if !r.all_confirmed() {
+            eprintln!(
+                "dvfs validation failed: a governed point missed its bound, \
+                 deadline or the 1.2W envelope"
+            );
+            std::process::exit(1);
+        }
+        if r.governed == 0 {
+            eprintln!("dvfs regression: no mix was governable");
+            std::process::exit(1);
+        }
+        match r.best_sub_nominal_saving() {
+            Some((saving, _)) if saving >= 30.0 => {}
+            other => {
+                eprintln!(
+                    "dvfs regression: no sub-nominal winner with >=30% energy \
+                     saving (best: {other:?})"
+                );
+                std::process::exit(1);
+            }
+        }
+        return;
+    }
+    let deadline_ns = args.get_parse("deadline-ns", 2_500_000.0f64);
+    let scenario = exp::energy::reference_mix_ns(deadline_ns);
+    println!(
+        "governing the fig6a reference mix (hard TCT deadline {deadline_ns} ns vs the endless \
+         system-DMA interferer)"
+    );
+    match governor::govern(&scenario) {
+        Ok(choice) => {
+            println!(
+                "selected {} with {} ({:?}; {} voltage points, {} analytic evaluations)",
+                choice.op.describe(),
+                choice.tuning.describe(),
+                choice.strategy,
+                choice.points_evaluated,
+                choice.evaluations
+            );
+            for (task, bound_ns, deadline_ns) in &choice.checks_ns {
+                println!("  {task}: completion bound {bound_ns:.0}ns <= deadline {deadline_ns:.0}ns");
+            }
+            println!(
+                "modeled: {:.1}mW / {:.4}mJ over the bound window{}",
+                choice.modeled.total_power_mw,
+                choice.modeled.total_energy_mj,
+                choice
+                    .energy_saved_pct()
+                    .map_or(String::new(), |s| format!(" ({s:.0}% saved vs max_perf)"))
+            );
+            let v = governor::validate(&scenario, &choice);
+            for (task, measured, bound) in &v.checks {
+                println!(
+                    "validating simulation: {task} measured {measured} <= bound {bound}{}",
+                    if measured <= bound { "" } else { "  ** VIOLATED **" }
+                );
+            }
+            println!(
+                "measured power {:.1}mW ({} envelope); validation {}",
+                v.measured.total_power_mw,
+                if v.measured.within_envelope() {
+                    "within"
+                } else {
+                    "OVER"
+                },
+                if v.confirmed() { "CONFIRMED" } else { "FAILED" }
+            );
+            if !v.confirmed() {
+                std::process::exit(1);
+            }
+        }
+        Err(e) => {
+            eprintln!("dvfs governor failed: {e}");
             std::process::exit(1);
         }
     }

@@ -1,0 +1,515 @@
+//! The bound-driven DVFS governor: energy-minimal, provably-safe
+//! operating points.
+//!
+//! Closes the loop the ROADMAP asked for: the WCET engine's completion
+//! bounds are recomputed analytically (microseconds per candidate) at
+//! every voltage point of the grid, so the governor can search the
+//! (operating point x `SocTuning`) product — reusing
+//! [`coordinator::autotune`] for the isolation half at each voltage —
+//! and return the lowest-energy pair whose recomputed bound still meets
+//! every nanosecond deadline *and* whose worst-case modeled power stays
+//! inside the 1.2W envelope. No simulation runs during the search;
+//! [`validate`] confirms the winner with one real execution (measured <=
+//! bound, deadlines met, measured power within the envelope).
+//!
+//! Search order (deterministic): one candidate point per grid voltage,
+//! ascending. The candidate runs the system domain and every cluster
+//! domain hosting time-critical work at the grid voltage, and parks the
+//! rest — cluster domains hosting only best-effort work (their TSU
+//! arrival curves are frequency-invariant, so no admitted bound can
+//! depend on their clock; the autotune at the actual candidate point
+//! re-proves it anyway) and idle domains — at the grid floor. Flooring
+//! *before* the envelope gate matters: a mix whose critical path needs
+//! a high voltage must not be reported infeasible just because the
+//! *uniform* high-voltage point would bust the envelope when the
+//! best-effort domain it would never run fast was the power hog. A
+//! candidate is skipped when its worst-case modeled power still exceeds
+//! the envelope, rejected when no tuning admits its cycle budgets, and
+//! the winner is the modeled-energy argmin among the admitted (energy
+//! per unit work grows ~V^alpha, so ties resolve to the lower voltage
+//! by the ascending scan).
+//!
+//! [`coordinator::autotune`]: crate::coordinator::autotune
+
+use crate::coordinator::autotune::{self, SearchStrategy, TuneOutcome};
+use crate::coordinator::{
+    AdmissionDecision, McTask, Scenario, ScenarioReport, Scheduler, SocTuning,
+};
+use crate::power::energy::{self, DomainUtilization, EnergyReport, SOC_ENVELOPE_MW};
+use crate::power::op_point::{OperatingPoint, VOLTAGE_GRID};
+use crate::soc::clock::{Cycle, Domain};
+
+/// The deterministic bound-driven DVFS search.
+pub struct Governor {
+    /// Voltage candidates for the critical domains, ascending (defaults
+    /// to the paper's 0.6–1.1V ladder).
+    pub grid: Vec<f64>,
+    /// Park cluster domains hosting only best-effort (or no) work at
+    /// the grid floor instead of the candidate voltage.
+    pub refine_nct_domains: bool,
+}
+
+impl Default for Governor {
+    fn default() -> Self {
+        Self {
+            grid: VOLTAGE_GRID.to_vec(),
+            refine_nct_domains: true,
+        }
+    }
+}
+
+/// Why the governor could not pick a point.
+#[derive(Debug, Clone)]
+pub enum GovernError {
+    /// No time-critical task carries a deadline — nothing to govern
+    /// against (run at whatever point you like; there is no proof
+    /// obligation).
+    NoDeadline,
+    /// Every grid point was envelope-blocked or tuning-exhausted.
+    Exhausted {
+        /// Voltage points whose tuning space was searched.
+        points_evaluated: u64,
+        /// Analytic admission evaluations spent across all searches.
+        evaluations: u64,
+        /// Grid points skipped because worst-case modeled power exceeds
+        /// the 1.2W envelope.
+        envelope_blocked: u64,
+        /// Closest miss seen anywhere: `(voltage, bound, cycle budget)`.
+        best: Option<(f64, Cycle, Cycle)>,
+    },
+}
+
+impl std::fmt::Display for GovernError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GovernError::NoDeadline => write!(
+                f,
+                "no time-critical task carries a deadline: the governor \
+                 has no bound to prove and nothing to optimize against"
+            ),
+            GovernError::Exhausted {
+                points_evaluated,
+                evaluations,
+                envelope_blocked,
+                best,
+            } => {
+                write!(
+                    f,
+                    "no operating point admits the mix: {points_evaluated} \
+                     voltage points searched ({evaluations} analytic \
+                     evaluations), {envelope_blocked} envelope-blocked"
+                )?;
+                if let Some((v, bound, budget)) = best {
+                    write!(
+                        f,
+                        "; closest miss at {v:.2}V: bound {bound} > cycle \
+                         budget {budget}"
+                    )?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::error::Error for GovernError {}
+
+/// The energy reference the winner is compared against: the same mix at
+/// the 1.1V max-performance corner with its own autotuned isolation.
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    pub tuning: SocTuning,
+    pub modeled: EnergyReport,
+}
+
+/// A governed operating point: provably admissible, energy-minimal over
+/// the searched space.
+#[derive(Debug, Clone)]
+pub struct GovernorChoice {
+    pub op: OperatingPoint,
+    pub tuning: SocTuning,
+    /// How the isolation half of the pair was found at the winning point.
+    pub strategy: SearchStrategy,
+    /// The admitting decision at `(op, tuning)` — carries every bound.
+    pub decision: AdmissionDecision,
+    /// `(task, completion bound ns, deadline ns)` per deadline task.
+    pub checks_ns: Vec<(String, f64, f64)>,
+    /// Worst completion bound among deadline tasks (system cycles): the
+    /// execution window the modeled energy integrates over.
+    pub bound_cycles: Cycle,
+    /// Modeled power/energy at the winner (worst-case utilization).
+    pub modeled: EnergyReport,
+    pub baseline: Option<Baseline>,
+    /// Voltage points whose tuning space was actually searched.
+    pub points_evaluated: u64,
+    /// Analytic admission evaluations across every autotune run.
+    pub evaluations: u64,
+}
+
+impl GovernorChoice {
+    /// Modeled energy saved vs the max-performance baseline, percent.
+    pub fn energy_saved_pct(&self) -> Option<f64> {
+        self.baseline.as_ref().map(|b| {
+            (1.0 - self.modeled.total_energy_mj / b.modeled.total_energy_mj) * 100.0
+        })
+    }
+}
+
+/// One admissible `(point, tuning)` candidate during the search.
+struct Candidate {
+    op: OperatingPoint,
+    outcome: TuneOutcome,
+    modeled: EnergyReport,
+    bound_cycles: Cycle,
+}
+
+impl Governor {
+    /// Search the (operating point x tuning) space for the lowest-energy
+    /// pair whose recomputed bounds meet every deadline within the power
+    /// envelope. Purely analytic — validate the winner with [`validate`].
+    pub fn govern(&self, scenario: &Scenario) -> Result<GovernorChoice, GovernError> {
+        let governed: Vec<&McTask> = scenario
+            .tasks
+            .iter()
+            .filter(|t| {
+                t.criticality.is_time_critical() && (t.deadline > 0 || t.deadline_ns > 0.0)
+            })
+            .collect();
+        if governed.is_empty() {
+            return Err(GovernError::NoDeadline);
+        }
+        let utils = DomainUtilization::analytic(scenario);
+        let mut points_evaluated = 0u64;
+        let mut evaluations = 0u64;
+        let mut envelope_blocked = 0u64;
+        // Closest miss in *wall-clock* terms: gaps at different points
+        // run at different clocks, so raw cycle gaps do not compare.
+        let mut near_miss: Option<(f64, Cycle, Cycle)> = None;
+        let mut near_gap_ns = f64::INFINITY;
+        let mut best: Option<Candidate> = None;
+
+        for &v in &self.grid {
+            let op = self.candidate_op(scenario, v);
+            // Envelope gate before any search: a point whose worst-case
+            // modeled power busts the budget is inadmissible outright.
+            if energy::modeled_power_mw(&op, utils) > SOC_ENVELOPE_MW {
+                envelope_blocked += 1;
+                continue;
+            }
+            points_evaluated += 1;
+            let probe = scenario.clone().with_op_point(op);
+            match autotune::autotune(&probe) {
+                Ok(outcome) => {
+                    evaluations += outcome.evaluations;
+                    let candidate = self.candidate(scenario, op, outcome, utils);
+                    let better = match &best {
+                        None => true,
+                        Some(b) => {
+                            candidate.modeled.total_energy_mj < b.modeled.total_energy_mj
+                        }
+                    };
+                    if better {
+                        best = Some(candidate);
+                    }
+                }
+                Err(e) => {
+                    evaluations += e.evaluations;
+                    if let Some(bound) = e.best_bound {
+                        let gap_ns = op
+                            .clock_tree()
+                            .system
+                            .cycles_to_ns(bound.saturating_sub(e.deadline));
+                        if gap_ns < near_gap_ns {
+                            near_gap_ns = gap_ns;
+                            near_miss = Some((v, bound, e.deadline));
+                        }
+                    }
+                }
+            }
+        }
+
+        let Some(winner) = best else {
+            return Err(GovernError::Exhausted {
+                points_evaluated,
+                evaluations,
+                envelope_blocked,
+                best: near_miss,
+            });
+        };
+
+        // Reference energy: the same mix at max_perf with its own
+        // autotuned isolation (no envelope gate — it is a yardstick, not
+        // a candidate).
+        let base_op = OperatingPoint::max_perf();
+        let baseline = match autotune::autotune(&scenario.clone().with_op_point(base_op)) {
+            Ok(o) => {
+                evaluations += o.evaluations;
+                let bound = worst_bound_cycles(scenario, &base_op, &o);
+                Some(Baseline {
+                    tuning: o.tuning,
+                    modeled: energy::model(&base_op, utils, bound),
+                })
+            }
+            Err(e) => {
+                evaluations += e.evaluations;
+                None
+            }
+        };
+
+        let clocks = winner.op.clock_tree();
+        let checks_ns = governed
+            .iter()
+            .map(|t| {
+                let dl = t.deadline_cycles(Some(&clocks));
+                let bound = winner
+                    .outcome
+                    .decision
+                    .report
+                    .bound_for(&t.name)
+                    .completion_bound
+                    .expect("admitted deadline task has a finite bound");
+                (
+                    t.name.clone(),
+                    clocks.system.cycles_to_ns(bound),
+                    clocks.system.cycles_to_ns(dl),
+                )
+            })
+            .collect();
+        Ok(GovernorChoice {
+            op: winner.op,
+            tuning: winner.outcome.tuning,
+            strategy: winner.outcome.strategy,
+            decision: winner.outcome.decision,
+            checks_ns,
+            bound_cycles: winner.bound_cycles,
+            modeled: winner.modeled,
+            baseline,
+            points_evaluated,
+            evaluations,
+        })
+    }
+
+    /// The candidate point for grid voltage `v`: the system domain and
+    /// every cluster domain hosting time-critical work run at `v`;
+    /// cluster domains hosting only best-effort work — whose TSU
+    /// arrival curves are frequency-invariant, so no critical bound can
+    /// depend on their clock (the autotune at the candidate point
+    /// re-proves admissibility regardless) — and idle domains park at
+    /// the grid floor (retention). Flooring happens *before* the
+    /// envelope gate so a high-voltage critical path stays reachable
+    /// even when the uniform point would bust the power budget.
+    fn candidate_op(&self, scenario: &Scenario, v: f64) -> OperatingPoint {
+        let mut op = OperatingPoint::uniform(v).expect("grid voltage on every curve");
+        if !self.refine_nct_domains {
+            return op;
+        }
+        // The true grid minimum — not `first()`, which would silently
+        // park domains at peak voltage on an unsorted custom grid.
+        let floor = self.grid.iter().copied().fold(v, f64::min);
+        for d in [Domain::Vector, Domain::Amr] {
+            let hosts_critical = scenario.tasks.iter().any(|t| {
+                t.criticality.is_time_critical() && energy::domain_of(&t.workload) == d
+            });
+            if hosts_critical {
+                continue; // never slow a domain on the critical path
+            }
+            if let Ok(parked) = op.with_voltage(d, floor) {
+                op = parked;
+            }
+        }
+        op
+    }
+
+    fn candidate(
+        &self,
+        scenario: &Scenario,
+        op: OperatingPoint,
+        outcome: TuneOutcome,
+        utils: DomainUtilization,
+    ) -> Candidate {
+        let bound_cycles = worst_bound_cycles(scenario, &op, &outcome);
+        let modeled = energy::model(&op, utils, bound_cycles);
+        Candidate {
+            op,
+            outcome,
+            modeled,
+            bound_cycles,
+        }
+    }
+}
+
+/// Worst completion bound among deadline-carrying tasks, in system
+/// cycles — the execution window modeled energy integrates over.
+fn worst_bound_cycles(scenario: &Scenario, op: &OperatingPoint, outcome: &TuneOutcome) -> Cycle {
+    let clocks = op.clock_tree();
+    scenario
+        .tasks
+        .iter()
+        .filter(|t| t.criticality.is_time_critical() && t.deadline_cycles(Some(&clocks)) > 0)
+        .filter_map(|t| {
+            outcome
+                .decision
+                .report
+                .bound_for(&t.name)
+                .completion_bound
+        })
+        .max()
+        .unwrap_or(0)
+}
+
+/// Convenience entry point with the default grid.
+pub fn govern(scenario: &Scenario) -> Result<GovernorChoice, GovernError> {
+    Governor::default().govern(scenario)
+}
+
+/// Simulation-backed confirmation of a governed point: one real run at
+/// `(op, tuning)` — every bounded critical task must measure within its
+/// completion bound, every deadline must hold, and the *measured*
+/// (activity-counter-derived) power must sit inside the envelope.
+#[derive(Debug, Clone)]
+pub struct GovernorValidation {
+    pub report: ScenarioReport,
+    /// `(task, measured makespan, completion bound)` per bounded task.
+    pub checks: Vec<(String, Cycle, Cycle)>,
+    pub sound: bool,
+    pub deadlines_met: bool,
+    /// Measured power/energy of the validating run.
+    pub measured: EnergyReport,
+}
+
+impl GovernorValidation {
+    pub fn confirmed(&self) -> bool {
+        self.sound && self.deadlines_met && self.measured.within_envelope()
+    }
+}
+
+pub fn validate(scenario: &Scenario, choice: &GovernorChoice) -> GovernorValidation {
+    let s = scenario
+        .clone()
+        .with_tuning(choice.tuning)
+        .with_op_point(choice.op);
+    let report = Scheduler::run(&s);
+    let mut checks = Vec::new();
+    let mut sound = true;
+    for b in &choice.decision.report.bounds {
+        if let Some(bound) = b.completion_bound {
+            let t = report.task(&b.task);
+            sound &= t.makespan > 0 && t.makespan <= bound;
+            checks.push((b.task.clone(), t.makespan, bound));
+        }
+    }
+    let deadlines_met = report.all_deadlines_met();
+    let measured = energy::measure(&s, &report, &choice.op);
+    GovernorValidation {
+        report,
+        checks,
+        sound,
+        deadlines_met,
+        measured,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::energy::{cluster_mix_ns, reference_mix_ns};
+
+    #[test]
+    fn slack_rich_deadline_lands_on_the_lowest_voltage() {
+        // 2.5ms of slack on the fig6a mix: the governor throttles the
+        // DMA harder in exchange for 0.6V — provably admissible, at a
+        // large modeled energy saving vs max_perf.
+        let s = reference_mix_ns(2_500_000.0);
+        let c = govern(&s).expect("slack-rich mix is governable");
+        assert_eq!(c.op.v_system, 0.6, "{}", c.op.describe());
+        assert!(c.decision.admitted);
+        assert!(c.modeled.within_envelope());
+        let saved = c.energy_saved_pct().expect("baseline exists");
+        assert!(saved >= 30.0, "only {saved:.1}% saved");
+        for (task, bound_ns, deadline_ns) in &c.checks_ns {
+            assert!(bound_ns <= deadline_ns, "{task}: {bound_ns} > {deadline_ns}");
+        }
+        let v = validate(&s, &c);
+        assert!(v.confirmed(), "sim refuted the winner: {:?}", v.checks);
+    }
+
+    #[test]
+    fn tight_deadline_pins_to_peak_voltage() {
+        // 430us leaves no slack below 1.1V (the tightest admitting
+        // tuning's bound is ~413k cycles): the governor must pin to the
+        // peak point and still prove admissibility.
+        let s = reference_mix_ns(430_000.0);
+        let c = govern(&s).expect("feasible at peak voltage");
+        assert_eq!(c.op.v_system, 1.1, "{}", c.op.describe());
+        assert!(c.modeled.within_envelope());
+        let v = validate(&s, &c);
+        assert!(v.confirmed(), "{:?}", v.checks);
+    }
+
+    #[test]
+    fn impossible_deadline_reports_the_closest_miss() {
+        let s = reference_mix_ns(350_000.0);
+        let e = govern(&s).expect_err("350us is below the bound floor");
+        assert!(e.to_string().contains("closest miss"), "{e}");
+        match e {
+            GovernError::Exhausted {
+                points_evaluated,
+                best,
+                ..
+            } => {
+                assert!(points_evaluated > 0);
+                let (v, bound, budget) = best.expect("finite bounds were seen");
+                assert_eq!(v, 1.1, "closest miss is at the fastest point");
+                assert!(bound > budget);
+            }
+            other => panic!("expected Exhausted, got {other}"),
+        }
+    }
+
+    #[test]
+    fn deadline_free_mixes_are_rejected_loudly() {
+        let mut s = reference_mix_ns(800_000.0);
+        for t in s.tasks.iter_mut() {
+            t.deadline = 0;
+            t.deadline_ns = 0.0;
+        }
+        assert!(matches!(govern(&s), Err(GovernError::NoDeadline)));
+    }
+
+    #[test]
+    fn governor_is_deterministic() {
+        let s = reference_mix_ns(800_000.0);
+        let a = govern(&s).expect("governable");
+        let b = govern(&s).expect("governable");
+        assert_eq!(a.op, b.op);
+        assert_eq!(a.tuning, b.tuning);
+        assert_eq!(a.evaluations, b.evaluations);
+        assert_eq!(a.modeled.total_energy_mj, b.modeled.total_energy_mj);
+    }
+
+    #[test]
+    fn cluster_mix_floors_the_nct_vector_domain() {
+        // fig6b: the AMR TCT is critical, the vector matmul is best
+        // effort — its arrival curve does not depend on its clock, so
+        // every candidate parks the vector domain at the grid floor
+        // while the critical AMR domain rides the grid voltage. (The
+        // flooring is also what keeps high-voltage candidates inside
+        // the envelope: uniform 1.1V would model 747mW AMR + 600mW
+        // vector and bust 1.2W.)
+        let s = cluster_mix_ns(400_000.0);
+        let c = govern(&s).expect("cluster mix governable");
+        assert_eq!(c.op.v_vector, 0.6, "{}", c.op.describe());
+        assert_eq!(
+            c.op.v_amr, c.op.v_system,
+            "the critical AMR domain must ride the candidate voltage"
+        );
+        assert!(
+            c.op.v_system < 0.8,
+            "slack at 400us should land sub-nominal: {}",
+            c.op.describe()
+        );
+        assert!(c.modeled.within_envelope());
+        let v = validate(&s, &c);
+        assert!(v.confirmed(), "{:?}", v.checks);
+    }
+}

@@ -1,0 +1,32 @@
+//! Bound-driven DVFS: the energy half of the coordinator.
+//!
+//! The paper's headline constraint is the sub-2W (1.2W achieved) power
+//! envelope; this module closes the loop between the Fig. 5/8 power
+//! substrate ([`crate::soc::power`]) and the time-predictability stack:
+//!
+//! - [`op_point`]: per-domain supply voltages whose clock trees are
+//!   *derived* from the published DVFS curves (no stored frequencies);
+//! - [`energy`]: per-domain utilization (analytic worst case, or
+//!   measured from `SocSim` activity counters) feeding the
+//!   [`EnergyMeter`](crate::soc::power::EnergyMeter), plus the 1.2W
+//!   envelope predicate;
+//! - [`governor`]: the search over the (operating point x
+//!   [`SocTuning`](crate::coordinator::SocTuning)) product — WCET bounds
+//!   recomputed analytically at every V/f candidate, isolation re-tuned
+//!   per point via [`coordinator::autotune`], winner = lowest modeled
+//!   energy that provably meets every deadline inside the envelope, and
+//!   confirmed by one real simulation.
+//!
+//! `experiments::energy` / `carfield dvfs` sweep the Fig. 6 deadline
+//! grids through the governor; `tests/governor_soundness.rs` fuzzes the
+//! soundness of every governed point.
+//!
+//! [`coordinator::autotune`]: crate::coordinator::autotune
+
+pub mod energy;
+pub mod governor;
+pub mod op_point;
+
+pub use energy::{DomainPower, DomainUtilization, EnergyReport, SOC_ENVELOPE_MW};
+pub use governor::{govern, validate, GovernError, Governor, GovernorChoice, GovernorValidation};
+pub use op_point::{OperatingPoint, VOLTAGE_GRID};

@@ -1,0 +1,157 @@
+//! DVFS operating points: per-domain supply voltages with curve-derived
+//! clock trees.
+//!
+//! An [`OperatingPoint`] is the governor's search atom: one supply
+//! voltage per PLL domain (system/host, vector cluster, AMR cluster).
+//! Frequencies are never stored — they are *derived* from the published
+//! [`DvfsCurve`]s through [`ClockTree::at_voltages`], so an operating
+//! point can never carry a voltage/frequency pair the silicon model does
+//! not support. Construction validates every voltage against its curve
+//! (NaN and out-of-range rejected loudly, in the [`DvfsError`] style).
+
+use crate::soc::clock::{ClockTree, Domain};
+use crate::soc::power::{DvfsCurve, DvfsError, MAX_V, NOMINAL_V};
+
+/// The governor's voltage ladder: the paper's 0.6–1.1V sweep in 50mV
+/// steps (exact literals — no float accumulation).
+pub const VOLTAGE_GRID: [f64; 11] = [
+    0.60, 0.65, 0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 1.00, 1.05, 1.10,
+];
+
+/// One DVFS operating point: a supply voltage per clock domain.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    pub v_system: f64,
+    pub v_vector: f64,
+    pub v_amr: f64,
+}
+
+impl OperatingPoint {
+    /// The curve a domain's voltage is validated against and its
+    /// frequency/power derived from.
+    pub fn curve(d: Domain) -> DvfsCurve {
+        match d {
+            Domain::System => DvfsCurve::host(),
+            Domain::Vector => DvfsCurve::vector(),
+            Domain::Amr => DvfsCurve::amr(),
+        }
+    }
+
+    /// Build a point from per-domain voltages, validating each against
+    /// its domain's curve.
+    pub fn new(v_system: f64, v_vector: f64, v_amr: f64) -> Result<Self, DvfsError> {
+        Ok(Self {
+            v_system: Self::curve(Domain::System).validate_voltage(v_system)?,
+            v_vector: Self::curve(Domain::Vector).validate_voltage(v_vector)?,
+            v_amr: Self::curve(Domain::Amr).validate_voltage(v_amr)?,
+        })
+    }
+
+    /// Every domain at the same supply voltage.
+    pub fn uniform(v: f64) -> Result<Self, DvfsError> {
+        Self::new(v, v, v)
+    }
+
+    /// The paper's balanced 0.8V point.
+    pub fn nominal() -> Self {
+        Self::uniform(NOMINAL_V).expect("nominal voltage is on every curve")
+    }
+
+    /// The 1.1V max-performance corner (1000/1000/900MHz).
+    pub fn max_perf() -> Self {
+        Self::uniform(MAX_V).expect("peak voltage is on every curve")
+    }
+
+    pub fn voltage(&self, d: Domain) -> f64 {
+        match d {
+            Domain::System => self.v_system,
+            Domain::Vector => self.v_vector,
+            Domain::Amr => self.v_amr,
+        }
+    }
+
+    /// Replace one domain's voltage (validated).
+    pub fn with_voltage(mut self, d: Domain, v: f64) -> Result<Self, DvfsError> {
+        let v = Self::curve(d).validate_voltage(v)?;
+        match d {
+            Domain::System => self.v_system = v,
+            Domain::Vector => self.v_vector = v,
+            Domain::Amr => self.v_amr = v,
+        }
+        Ok(self)
+    }
+
+    /// The PLL tree this point programs (curve-derived frequencies).
+    /// All cycle/nanosecond conversion goes through this tree
+    /// (`ClockDomain::cycles_to_ns`, `McTask::deadline_cycles`) — one
+    /// implementation of the sound-direction rounding, not two.
+    pub fn clock_tree(&self) -> ClockTree {
+        ClockTree::at_voltages(self.v_system, self.v_vector, self.v_amr)
+    }
+
+    /// Compact human-readable form for reports.
+    pub fn describe(&self) -> String {
+        if self.v_system == self.v_vector && self.v_system == self.v_amr {
+            format!("{:.2}V", self.v_system)
+        } else {
+            format!(
+                "sys {:.2}V / vec {:.2}V / amr {:.2}V",
+                self.v_system, self.v_vector, self.v_amr
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_points_are_all_valid_and_ascending() {
+        for w in VOLTAGE_GRID.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        for &v in &VOLTAGE_GRID {
+            let op = OperatingPoint::uniform(v).expect("grid voltage valid");
+            let t = op.clock_tree();
+            assert!(t.system.freq_mhz >= 350.0 && t.system.freq_mhz <= 1000.0);
+        }
+    }
+
+    #[test]
+    fn named_points_derive_the_published_trees() {
+        let m = OperatingPoint::max_perf().clock_tree();
+        assert_eq!(m.system.freq_mhz, 1000.0);
+        assert_eq!(m.amr.freq_mhz, 900.0);
+        let n = OperatingPoint::nominal().clock_tree();
+        assert!((n.vector.freq_mhz - 550.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn invalid_voltages_are_rejected_per_domain() {
+        assert!(OperatingPoint::new(0.8, 0.8, 1.3).is_err());
+        assert!(OperatingPoint::uniform(f64::NAN).is_err());
+        let op = OperatingPoint::nominal();
+        assert!(op.with_voltage(Domain::Vector, 0.2).is_err());
+        let low = op.with_voltage(Domain::Vector, 0.6).unwrap();
+        assert_eq!(low.v_vector, 0.6);
+        assert_eq!(low.v_system, NOMINAL_V);
+    }
+
+    #[test]
+    fn clock_tree_prices_cycles_per_point() {
+        // 1GHz system clock at max_perf: 1 cycle = 1ns, exactly.
+        let fast = OperatingPoint::max_perf().clock_tree();
+        assert_eq!(fast.system.cycles_to_ns(430_000), 430_000.0);
+        // At 0.6V (350MHz) the same cycle count spans more wall clock.
+        let slow = OperatingPoint::uniform(0.6).unwrap().clock_tree();
+        assert!(slow.system.cycles_to_ns(430_000) > 1_200_000.0);
+    }
+
+    #[test]
+    fn describe_is_compact() {
+        assert_eq!(OperatingPoint::nominal().describe(), "0.80V");
+        let mixed = OperatingPoint::new(0.9, 0.6, 0.9).unwrap();
+        assert_eq!(mixed.describe(), "sys 0.90V / vec 0.60V / amr 0.90V");
+    }
+}

@@ -75,24 +75,36 @@ pub struct ClockTree {
 }
 
 impl ClockTree {
-    /// Nominal 0.8V operating point: host 1GHz-class domains scaled per
-    /// the paper's corners (CVA6 @ 1GHz max, vector 1GHz max, AMR 900MHz
-    /// max at 1.1V; nominal 0.8V runs proportionally lower).
-    pub fn nominal() -> Self {
+    /// Derive the PLL trio from the published DVFS curves at per-domain
+    /// supply voltages — the single source of truth for every operating
+    /// point (the governor's [`OperatingPoint`] builds its tree here).
+    ///
+    /// [`OperatingPoint`]: crate::power::OperatingPoint
+    pub fn at_voltages(v_system: f64, v_vector: f64, v_amr: f64) -> Self {
+        use crate::soc::power::DvfsCurve;
         Self {
-            system: ClockDomain::new(Domain::System, 640.0),
-            vector: ClockDomain::new(Domain::Vector, 550.0),
-            amr: ClockDomain::new(Domain::Amr, 540.0),
+            system: ClockDomain::new(Domain::System, DvfsCurve::host().freq_mhz(v_system)),
+            vector: ClockDomain::new(Domain::Vector, DvfsCurve::vector().freq_mhz(v_vector)),
+            amr: ClockDomain::new(Domain::Amr, DvfsCurve::amr().freq_mhz(v_amr)),
         }
     }
 
-    /// Max-performance point (1.1V).
+    /// Nominal 0.8V operating point, curve-sourced: vector 550MHz and
+    /// AMR 540MHz exactly as before; the system domain moves from the
+    /// previously hardcoded 640MHz to the host curve's 610MHz at 0.8V
+    /// (the old value corresponded to ~0.82V on the published corners —
+    /// a documented delta, not a behaviour change: nothing in the
+    /// simulator consumed the constant).
+    pub fn nominal() -> Self {
+        use crate::soc::power::NOMINAL_V;
+        Self::at_voltages(NOMINAL_V, NOMINAL_V, NOMINAL_V)
+    }
+
+    /// Max-performance point (1.1V): 1000/1000/900MHz, bit-identical to
+    /// the previously hardcoded values — now read off the curve corners.
     pub fn max_perf() -> Self {
-        Self {
-            system: ClockDomain::new(Domain::System, 1000.0),
-            vector: ClockDomain::new(Domain::Vector, 1000.0),
-            amr: ClockDomain::new(Domain::Amr, 900.0),
-        }
+        use crate::soc::power::MAX_V;
+        Self::at_voltages(MAX_V, MAX_V, MAX_V)
     }
 
     pub fn get(&self, d: Domain) -> &ClockDomain {
@@ -101,6 +113,13 @@ impl ClockTree {
             Domain::Vector => &self.vector,
             Domain::Amr => &self.amr,
         }
+    }
+
+    /// Domain frequency over system frequency — the `freq_ratio` the
+    /// cluster FSMs and the WCET compute bounds both consume (cluster
+    /// cycles elapsed per system cycle).
+    pub fn ratio_to_system(&self, d: Domain) -> f64 {
+        self.get(d).freq_mhz / self.system.freq_mhz
     }
 }
 
@@ -151,5 +170,31 @@ mod tests {
         let t = ClockTree::nominal();
         assert_eq!(t.get(Domain::Vector).domain, Domain::Vector);
         assert!(t.get(Domain::Amr).freq_mhz > 0.0);
+    }
+
+    #[test]
+    fn trees_are_curve_sourced() {
+        // Corners read straight off the published DVFS curves: max_perf
+        // reproduces the old hardcoded 1000/1000/900 bit-identically;
+        // nominal keeps vector 550 / AMR 540 and moves the system domain
+        // to the curve's 610MHz @ 0.8V (documented delta from 640).
+        let m = ClockTree::max_perf();
+        assert_eq!(m.system.freq_mhz, 1000.0);
+        assert_eq!(m.vector.freq_mhz, 1000.0);
+        assert_eq!(m.amr.freq_mhz, 900.0);
+        let n = ClockTree::nominal();
+        assert!((n.vector.freq_mhz - 550.0).abs() < 1e-9);
+        assert!((n.amr.freq_mhz - 540.0).abs() < 1e-9);
+        assert!((n.system.freq_mhz - 610.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ratio_to_system_scales_cluster_progress() {
+        let t = ClockTree::max_perf();
+        assert_eq!(t.ratio_to_system(Domain::System), 1.0);
+        assert_eq!(t.ratio_to_system(Domain::Vector), 1.0);
+        assert!((t.ratio_to_system(Domain::Amr) - 0.9).abs() < 1e-12);
+        let low = ClockTree::at_voltages(0.6, 0.6, 0.6);
+        assert!((low.ratio_to_system(Domain::Vector) - 250.0 / 350.0).abs() < 1e-12);
     }
 }

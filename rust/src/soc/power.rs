@@ -16,6 +16,66 @@
 //! model *is* the instrument; the sweep's shape (perf ∝ f, efficiency
 //! peaking at low V) follows from the same physics the chip obeys.
 
+/// Nominal supply voltage (the paper's balanced 0.8V operating point).
+pub const NOMINAL_V: f64 = 0.8;
+/// Peak supply voltage (the 1.1V max-performance corner).
+pub const MAX_V: f64 = 1.1;
+
+/// Absolute slack accepted on range checks so voltages assembled by
+/// float arithmetic (grid steps, interpolation) are not rejected for
+/// representation error.
+const RANGE_TOLERANCE: f64 = 1e-9;
+
+/// A request outside a curve's validated envelope. NaN or out-of-range
+/// inputs are rejected loudly at the API boundary instead of silently
+/// clamped — a governor that asks for 1.4V must hear "no", not get
+/// 1.1V behaviour back.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DvfsError {
+    /// NaN or infinite supply voltage.
+    VoltageNotFinite { curve: &'static str },
+    /// Voltage outside the curve's published corner range.
+    VoltageOutOfRange {
+        curve: &'static str,
+        v: f64,
+        v_min: f64,
+        v_max: f64,
+    },
+    /// NaN or infinite activity factor.
+    UtilizationNotFinite,
+    /// Activity factor outside [0, 1].
+    UtilizationOutOfRange { util: f64 },
+}
+
+impl std::fmt::Display for DvfsError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            DvfsError::VoltageNotFinite { curve } => {
+                write!(f, "supply voltage for the {curve} curve is not finite")
+            }
+            DvfsError::VoltageOutOfRange {
+                curve,
+                v,
+                v_min,
+                v_max,
+            } => write!(
+                f,
+                "supply voltage {v:.3}V is outside the {curve} curve's \
+                 validated {v_min:.2}-{v_max:.2}V range"
+            ),
+            DvfsError::UtilizationNotFinite => {
+                write!(f, "activity/utilization factor is not finite")
+            }
+            DvfsError::UtilizationOutOfRange { util } => write!(
+                f,
+                "activity/utilization factor {util:.3} is outside [0, 1]"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for DvfsError {}
+
 /// Voltage/frequency/power law for one cluster.
 #[derive(Debug, Clone, Copy)]
 pub struct DvfsCurve {
@@ -87,18 +147,71 @@ impl DvfsCurve {
         }
     }
 
-    /// Max frequency at supply `v` (linear corner interpolation).
+    /// Validate a supply voltage for this curve, returning it snapped
+    /// exactly onto the `[v_min, v_max]` envelope (tolerance covers only
+    /// float representation error, not genuine out-of-range requests).
+    pub fn validate_voltage(&self, v: f64) -> Result<f64, DvfsError> {
+        if !v.is_finite() {
+            return Err(DvfsError::VoltageNotFinite { curve: self.name });
+        }
+        if v < self.v_min - RANGE_TOLERANCE || v > self.v_max + RANGE_TOLERANCE {
+            return Err(DvfsError::VoltageOutOfRange {
+                curve: self.name,
+                v,
+                v_min: self.v_min,
+                v_max: self.v_max,
+            });
+        }
+        Ok(v.clamp(self.v_min, self.v_max))
+    }
+
+    /// Validate an activity/utilization factor, snapping representation
+    /// error back onto [0, 1].
+    pub fn validate_util(util: f64) -> Result<f64, DvfsError> {
+        if !util.is_finite() {
+            return Err(DvfsError::UtilizationNotFinite);
+        }
+        if !(-RANGE_TOLERANCE..=1.0 + RANGE_TOLERANCE).contains(&util) {
+            return Err(DvfsError::UtilizationOutOfRange { util });
+        }
+        Ok(util.clamp(0.0, 1.0))
+    }
+
+    /// Max frequency at supply `v` (linear corner interpolation; the
+    /// published corners themselves are returned exactly).
+    pub fn try_freq_mhz(&self, v: f64) -> Result<f64, DvfsError> {
+        let v = self.validate_voltage(v)?;
+        if v == self.v_min {
+            return Ok(self.f_min_mhz);
+        }
+        if v == self.v_max {
+            return Ok(self.f_max_mhz);
+        }
+        Ok(self.f_min_mhz
+            + (v - self.v_min) / (self.v_max - self.v_min) * (self.f_max_mhz - self.f_min_mhz))
+    }
+
+    /// Max frequency at supply `v`. Panics (descriptively) on NaN or
+    /// out-of-range voltage — callers wanting a verdict instead use
+    /// [`DvfsCurve::try_freq_mhz`].
     pub fn freq_mhz(&self, v: f64) -> f64 {
-        let v = v.clamp(self.v_min, self.v_max);
-        self.f_min_mhz
-            + (v - self.v_min) / (self.v_max - self.v_min) * (self.f_max_mhz - self.f_min_mhz)
+        self.try_freq_mhz(v)
+            .unwrap_or_else(|e| panic!("invalid DVFS request: {e}"))
     }
 
     /// Active power in mW at supply `v`, frequency `f_mhz`, with an
     /// activity/utilization factor in [0, 1].
+    pub fn try_power_mw(&self, v: f64, f_mhz: f64, util: f64) -> Result<f64, DvfsError> {
+        let v = self.validate_voltage(v)?;
+        let util = Self::validate_util(util)?;
+        Ok(self.k * v.powf(self.alpha) * f_mhz * util + self.idle_mw)
+    }
+
+    /// Active power in mW. Panics (descriptively) on NaN/out-of-range
+    /// voltage or utilization — see [`DvfsCurve::try_power_mw`].
     pub fn power_mw(&self, v: f64, f_mhz: f64, util: f64) -> f64 {
-        let util = util.clamp(0.0, 1.0);
-        self.k * v.powf(self.alpha) * f_mhz * util + self.idle_mw
+        self.try_power_mw(v, f_mhz, util)
+            .unwrap_or_else(|e| panic!("invalid DVFS request: {e}"))
     }
 
     /// Convenience: power at the DVFS-selected max frequency for `v`.
@@ -190,10 +303,52 @@ mod tests {
     }
 
     #[test]
-    fn voltage_clamped_to_range() {
+    fn out_of_range_voltage_is_a_descriptive_error() {
         let c = DvfsCurve::vector();
-        assert_eq!(c.freq_mhz(0.3), c.freq_mhz(0.6));
-        assert_eq!(c.freq_mhz(1.4), c.freq_mhz(1.1));
+        let err = c.try_freq_mhz(1.4).unwrap_err();
+        assert_eq!(
+            err,
+            DvfsError::VoltageOutOfRange {
+                curve: "vector",
+                v: 1.4,
+                v_min: 0.6,
+                v_max: 1.1,
+            }
+        );
+        assert!(err.to_string().contains("1.400V"), "{err}");
+        assert!(c.try_freq_mhz(0.3).is_err());
+        assert!(c.try_freq_mhz(f64::NAN).is_err());
+        assert!(c.try_power_mw(f64::INFINITY, 500.0, 1.0).is_err());
+        // Representation error from grid arithmetic is snapped, not
+        // rejected: 0.6 + 10 * 0.05 lands a hair above 1.1.
+        let v = 0.6 + 10.0 * 0.05;
+        assert_eq!(c.try_freq_mhz(v).unwrap(), c.f_max_mhz);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the vector curve")]
+    fn out_of_range_voltage_panics_loudly_on_the_infallible_api() {
+        let _ = DvfsCurve::vector().freq_mhz(1.4);
+    }
+
+    #[test]
+    fn negative_utilization_is_a_descriptive_error() {
+        let c = DvfsCurve::amr();
+        let err = c.try_power_mw(0.8, c.freq_mhz(0.8), -0.25).unwrap_err();
+        assert_eq!(err, DvfsError::UtilizationOutOfRange { util: -0.25 });
+        assert!(err.to_string().contains("outside [0, 1]"), "{err}");
+        assert!(c.try_power_mw(0.8, 600.0, 1.5).is_err());
+        assert!(c.try_power_mw(0.8, 600.0, f64::NAN).is_err());
+        // The exact endpoints are of course valid.
+        assert!(c.try_power_mw(0.8, 600.0, 0.0).is_ok());
+        assert!(c.try_power_mw(0.8, 600.0, 1.0).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "outside [0, 1]")]
+    fn negative_utilization_panics_loudly_on_the_infallible_api() {
+        let c = DvfsCurve::amr();
+        let _ = c.power_mw(0.8, 600.0, -1.0);
     }
 
     #[test]

@@ -8,7 +8,7 @@
 use crate::coordinator::Scenario;
 use crate::soc::axi::xbar::Crossbar;
 use crate::soc::axi::{Target, BEAT_BYTES};
-use crate::soc::clock::Cycle;
+use crate::soc::clock::{ClockTree, Cycle};
 use crate::soc::mem::dcspm::Dcspm;
 use crate::soc::mem::hyperram;
 use crate::soc::mem::peripheral::Peripheral;
@@ -70,6 +70,22 @@ pub struct TaskBound {
     /// Worst-case completion time (`None` for endless workloads).
     pub completion_bound: Option<Cycle>,
     pub completion_binding: Resource,
+}
+
+impl TaskBound {
+    /// Completion bound as wall-clock nanoseconds at an operating
+    /// point's clock tree — the DVFS governor's currency. Bounds are
+    /// computed in system cycles, so one analysis re-prices in
+    /// microseconds at every voltage candidate.
+    pub fn completion_ns(&self, clocks: &ClockTree) -> Option<f64> {
+        self.completion_bound
+            .map(|c| clocks.system.cycles_to_ns(c))
+    }
+
+    /// Memory-latency bound in nanoseconds at `clocks`.
+    pub fn mem_ns(&self, clocks: &ClockTree) -> f64 {
+        clocks.system.cycles_to_ns(self.mem_bound)
+    }
 }
 
 /// The analysis result for a scenario: one entry per critical task.
@@ -554,6 +570,22 @@ mod tests {
         let b = r.bound_for("dma");
         assert_eq!(b.completion_bound, None);
         assert_eq!(b.completion_binding, Resource::Endless);
+    }
+
+    #[test]
+    fn bounds_reprice_in_nanoseconds_per_operating_point() {
+        use crate::power::OperatingPoint;
+        let s = fig6a_scenario(IsolationPolicy::TsuRegulation);
+        let r = analyze(&s);
+        let b = r.bound_for("tct");
+        let fast = OperatingPoint::max_perf().clock_tree();
+        let slow = OperatingPoint::uniform(0.6).unwrap().clock_tree();
+        let c = b.completion_bound.unwrap() as f64;
+        // 1GHz system clock: 1 cycle = 1ns, exactly.
+        assert_eq!(b.completion_ns(&fast), Some(c));
+        let slow_ns = b.completion_ns(&slow).unwrap();
+        assert!((slow_ns - c * 1e3 / 350.0).abs() < 1e-6);
+        assert!(b.mem_ns(&fast) < b.mem_ns(&slow));
     }
 
     #[test]

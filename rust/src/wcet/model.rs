@@ -14,7 +14,7 @@ use crate::coordinator::task::Workload;
 use crate::coordinator::{McTask, Scenario};
 use crate::soc::amr::{AmrCluster, AmrTask};
 use crate::soc::axi::{Target, BEAT_BYTES};
-use crate::soc::clock::Cycle;
+use crate::soc::clock::{Cycle, Domain};
 use crate::soc::tiles::{TileStreamer, CLUSTER_BUFFER_DEPTH};
 use crate::soc::tsu::TsuConfig;
 use crate::soc::vector::{VectorCluster, VectorTask, VectorWork};
@@ -155,7 +155,14 @@ fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
                 part_id: 0,
             };
             let tiles = amr.tiles() as u64;
-            let compute = AmrCluster::tile_compute_bound(&amr, task.required_amr_mode(), 1.0);
+            // Compute time follows the AMR PLL ratio at the scenario's
+            // operating point — the exact duration the cluster FSM uses,
+            // so bound and simulator can never disagree on it.
+            let compute = AmrCluster::tile_compute_bound(
+                &amr,
+                task.required_amr_mode(),
+                scenario.freq_ratio(Domain::Amr),
+            );
             cluster_model(
                 task,
                 critical,
@@ -181,7 +188,7 @@ fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
                 dst_base: tuning.l2_base(slot) + (1 << 17),
                 part_id: 0,
             };
-            vector_model(task, critical, tsu, &vt)
+            vector_model(task, critical, tsu, &vt, scenario.freq_ratio(Domain::Vector))
         }
         Workload::VectorFft { format, n, batch } => {
             let vt = VectorTask {
@@ -191,7 +198,7 @@ fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
                 dst_base: tuning.l2_base(slot) + (1 << 17),
                 part_id: 0,
             };
-            vector_model(task, critical, tsu, &vt)
+            vector_model(task, critical, tsu, &vt, scenario.freq_ratio(Domain::Vector))
         }
     }
 }
@@ -201,9 +208,10 @@ fn vector_model(
     critical: bool,
     tsu: TsuConfig,
     vt: &VectorTask,
+    freq_ratio: f64,
 ) -> InitiatorModel {
     let (tiles, _, in_beats, out_beats) = vt.tiling();
-    let compute = VectorCluster::tile_compute_bound(vt, 1.0);
+    let compute = VectorCluster::tile_compute_bound(vt, freq_ratio);
     cluster_model(
         task,
         critical,
@@ -299,6 +307,39 @@ mod tests {
         assert!(
             !m[0].streams[1].unbuffered_write,
             "regulated profile write-buffers the DMA"
+        );
+    }
+
+    #[test]
+    fn cluster_compute_bound_follows_the_op_point_ratio() {
+        use crate::power::OperatingPoint;
+        use crate::soc::amr::IntPrecision;
+        let mk = || {
+            Scenario::new("m", IsolationPolicy::PrivatePaths).with_task(McTask::new(
+                "amr",
+                Criticality::Hard,
+                Workload::AmrMatMul {
+                    precision: IntPrecision::Int8,
+                    m: 64,
+                    k: 64,
+                    n: 64,
+                    tile: 16,
+                },
+            ))
+        };
+        let compute_of = |m: &[InitiatorModel]| match m[0].shape {
+            TaskShape::Cluster {
+                compute_per_tile, ..
+            } => compute_per_tile,
+            _ => panic!("cluster shape expected"),
+        };
+        let lockstep = compute_of(&models_of(&mk()));
+        // max_perf runs the AMR PLL at 0.9x the system clock: the
+        // compute bound stretches exactly as the simulator's FSM does.
+        let scaled = compute_of(&models_of(&mk().with_op_point(OperatingPoint::max_perf())));
+        assert!(
+            scaled > lockstep,
+            "0.9x AMR PLL must stretch the compute bound: {lockstep} -> {scaled}"
         );
     }
 

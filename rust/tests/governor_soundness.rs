@@ -1,0 +1,128 @@
+//! Soundness of the DVFS governor, fuzzed: for every randomly generated
+//! mix the governor finds a point for, the selected (operating point x
+//! tuning) pair must be *provably safe end to end* — the validating
+//! simulation measures within the recomputed bound, every deadline
+//! holds, and both the worst-case modeled power and the measured power
+//! stay inside the paper's 1.2W envelope. Plus the monotonicity
+//! property: tightening a deadline never selects a lower-voltage
+//! (lower-energy) operating point.
+
+use carfield::coordinator::Scenario;
+use carfield::experiments::energy::{reference_mix_ns, HOST_DEADLINES_NS};
+use carfield::power::governor::{self, GovernError};
+use carfield::util::XorShift;
+use carfield::wcet::fuzz;
+
+/// Mixes per campaign (the autotune/wcet fuzz spaces were validated on
+/// far more seeds offline; this keeps the in-tree run to seconds).
+const FUZZ_MIXES: u64 = 100;
+
+/// A fuzz mix with a seeded wall-clock deadline on every critical task
+/// (drawn wide enough that the grid splits into governable and
+/// exhausted mixes).
+fn governed_mix(seed: u64) -> Scenario {
+    let mut s = fuzz::random_scenario(seed);
+    let mut rng = XorShift::new(seed ^ 0xD7F5);
+    let deadline_ns = rng.in_range(250_000, 4_000_000) as f64;
+    for t in s.tasks.iter_mut() {
+        if t.criticality.is_time_critical() {
+            t.deadline_ns = deadline_ns;
+        }
+    }
+    s
+}
+
+#[test]
+fn governed_points_are_sound_deadline_safe_and_within_envelope() {
+    let mut governed = 0usize;
+    let mut exhausted = 0usize;
+    for seed in 1..=FUZZ_MIXES {
+        let scenario = governed_mix(seed);
+        match governor::govern(&scenario) {
+            Ok(choice) => {
+                governed += 1;
+                assert!(
+                    choice.modeled.within_envelope(),
+                    "seed {seed}: modeled {:.0}mW busts the 1.2W envelope at {}",
+                    choice.modeled.total_power_mw,
+                    choice.op.describe()
+                );
+                for (task, bound_ns, deadline_ns) in &choice.checks_ns {
+                    assert!(
+                        bound_ns <= deadline_ns,
+                        "seed {seed}: {task} bound {bound_ns:.0}ns > deadline {deadline_ns:.0}ns"
+                    );
+                }
+                let v = governor::validate(&scenario, &choice);
+                assert!(
+                    v.sound,
+                    "seed {seed}: measured exceeded bound at {}: {:?}",
+                    choice.op.describe(),
+                    v.checks
+                );
+                assert!(
+                    v.deadlines_met,
+                    "seed {seed}: deadline missed at {}",
+                    choice.op.describe()
+                );
+                assert!(
+                    v.measured.within_envelope(),
+                    "seed {seed}: measured {:.0}mW busts the envelope",
+                    v.measured.total_power_mw
+                );
+            }
+            Err(GovernError::NoDeadline) => {
+                panic!("seed {seed}: every fuzz mix carries a deadline-bearing critical task")
+            }
+            Err(GovernError::Exhausted { .. }) => exhausted += 1,
+        }
+    }
+    assert_eq!(governed + exhausted, FUZZ_MIXES as usize);
+    assert!(
+        governed >= 30,
+        "only {governed}/{FUZZ_MIXES} mixes governable — deadline draw degenerated"
+    );
+}
+
+#[test]
+fn tightening_the_deadline_never_selects_a_lower_energy_point() {
+    // Along the fig6a deadline grid (ascending slack), the winning
+    // system voltage must be non-increasing: more slack can only move
+    // the governor to the same or a lower-energy point, and tightening
+    // can only pin it higher. (Energy per unit of critical work grows
+    // ~V^alpha, so voltage order is energy order.)
+    let mut winners: Vec<(f64, f64)> = Vec::new(); // (deadline_ns, v_system)
+    for &deadline_ns in &HOST_DEADLINES_NS {
+        if let Ok(choice) = governor::govern(&reference_mix_ns(deadline_ns)) {
+            winners.push((deadline_ns, choice.op.v_system));
+        }
+    }
+    assert!(
+        winners.len() >= 4,
+        "too few governable deadlines to test monotonicity: {winners:?}"
+    );
+    for w in winners.windows(2) {
+        assert!(
+            w[1].1 <= w[0].1 + 1e-9,
+            "slacker deadline selected a higher voltage: {winners:?}"
+        );
+    }
+}
+
+#[test]
+fn governing_is_deterministic_across_runs() {
+    for seed in [7u64, 23, 61] {
+        let s = governed_mix(seed);
+        let a = governor::govern(&s);
+        let b = governor::govern(&s);
+        match (a, b) {
+            (Ok(x), Ok(y)) => {
+                assert_eq!(x.op, y.op);
+                assert_eq!(x.tuning, y.tuning);
+                assert_eq!(x.evaluations, y.evaluations);
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("seed {seed}: governor verdict flipped between runs"),
+        }
+    }
+}
