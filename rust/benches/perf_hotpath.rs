@@ -2,7 +2,9 @@
 //! event-driven cycle-skipping core), parallel scenario-sweep speedup,
 //! WCET analysis throughput + bound tightness, bound-driven autotune
 //! search throughput, DVFS governor search latency + energy saving,
-//! coordinator dispatch, and PJRT artifact execution overhead.
+//! split-uncore multi-rate stepping vs lock-step + ns-domain bound
+//! recomposition overhead, coordinator dispatch, and PJRT artifact
+//! execution overhead.
 //!
 //! Targets (see lib.rs layering docs): >= 60 simulated Mcyc/s on the
 //! Fig. 6a topology via the event-driven path (>= 3x naive), raised from
@@ -201,6 +203,65 @@ fn governor_overhead(b: &mut BenchRunner) {
     assert_eq!(choice.op.v_system, 0.6, "slack-rich winner drifted");
 }
 
+/// Split-uncore timebase: multi-rate stepping throughput vs lock-step
+/// (the rate-converted micro-tick loop must stay in the same performance
+/// class), and the wall-clock (ns-domain) bound recomposition overhead
+/// vs the plain cycles-only analysis.
+fn uncore_overhead(b: &mut BenchRunner) {
+    use carfield::power::OperatingPoint;
+    use carfield::wcet::analyze;
+
+    const CYCLES: u64 = 2_000_000;
+    let run_at = |op: Option<OperatingPoint>| {
+        let mut soc = fig6a_topology();
+        if let Some(op) = op {
+            soc.set_clocks(&op.clock_tree());
+        }
+        soc.run_cycles_fast(CYCLES);
+    };
+    let (_, dt_lockstep) = b.time_with_mean("SocSim 2M cycles lock-step uncore", 3, || {
+        run_at(None)
+    });
+    let decoupled_op = OperatingPoint::nominal().decoupled_uncore();
+    let (_, dt_multi) = b.time_with_mean("SocSim 2M cycles decoupled uncore (1000/610MHz)", 3, || {
+        run_at(Some(decoupled_op))
+    });
+    b.metric(
+        "multi-rate simulated cycles/sec",
+        CYCLES as f64 / dt_multi / 1e6,
+        "Mcyc/s (decoupled uncore)",
+    );
+    b.metric(
+        "multi-rate overhead vs lock-step",
+        dt_multi / dt_lockstep.max(1e-12),
+        "x wall-clock (same cycle count)",
+    );
+
+    // ns-domain bound recomposition: analyze the fig6a admission mix
+    // with the uncore decoupled (wall-clock busy window) vs lock-step
+    // (cycles-only fixed point).
+    let cycles_mix = carfield::experiments::autotune::reference_mix(800_000);
+    let ns_mix = cycles_mix
+        .clone()
+        .with_op_point(OperatingPoint::nominal().decoupled_uncore());
+    let (_, dt_cycles) = b.time_with_mean("wcet analyze lock-step (cycles)", 500, || {
+        analyze(&cycles_mix)
+    });
+    let (_, dt_ns) = b.time_with_mean("wcet analyze decoupled (wall-clock ns)", 500, || {
+        analyze(&ns_mix)
+    });
+    b.metric(
+        "ns-domain bound recomposition overhead",
+        dt_ns / dt_cycles.max(1e-12),
+        "x vs cycles-only analysis",
+    );
+    b.metric(
+        "ns-domain analyses/sec",
+        1.0 / dt_ns.max(1e-12),
+        "scenarios bounded/sec (decoupled uncore)",
+    );
+}
+
 /// Coordinator scenario-assembly + teardown overhead.
 fn dispatch_overhead(b: &mut BenchRunner) {
     b.time("Scheduler::run tiny scenario", 5, || {
@@ -256,6 +317,7 @@ fn main() {
     wcet_overhead(&mut b);
     autotune_overhead(&mut b);
     governor_overhead(&mut b);
+    uncore_overhead(&mut b);
     dispatch_overhead(&mut b);
     artifact_overhead(&mut b);
     b.finish();

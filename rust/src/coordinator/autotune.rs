@@ -395,7 +395,7 @@ pub fn validate(scenario: &Scenario, outcome: &TuneOutcome) -> TuneValidation {
     let mut checks = Vec::new();
     let mut sound = true;
     for b in &outcome.decision.report.bounds {
-        if let Some(bound) = b.completion_bound {
+        if let Some(bound) = b.completion_cycles(scenario.clocks().as_ref()) {
             let t = report.task(&b.task);
             sound &= t.makespan > 0 && t.makespan <= bound;
             checks.push((b.task.clone(), t.makespan, bound));

@@ -41,6 +41,11 @@ pub struct ScenarioReport {
     pub policy: String,
     /// Total simulated cycles until the measured set drained.
     pub cycles: Cycle,
+    /// Uncore-domain cycles the memory path (HyperRAM/DPLLC channel +
+    /// peripheral island) spent non-idle — the measured activity feed
+    /// for the uncore power domain. On the lock-step timebase these are
+    /// system cycles (the grids coincide).
+    pub uncore_busy_cycles: u64,
     pub tasks: Vec<TaskReport>,
 }
 
@@ -131,6 +136,7 @@ mod tests {
             scenario: "test".into(),
             policy: "NoIsolation".into(),
             cycles: 1000,
+            uncore_busy_cycles: 0,
             tasks: vec![TaskReport {
                 name: "tct".into(),
                 kind: "host-tct",

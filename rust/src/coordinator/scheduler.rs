@@ -163,12 +163,16 @@ impl Scheduler {
                 continue;
             }
             let b = report.bound_for(&task.name);
-            let feasible = matches!(b.completion_bound, Some(c) if c <= deadline);
+            // Per-domain bounds compare in system cycles through the
+            // scenario's clocks (uncore components round up — sound);
+            // on the lock-step timebase this is the plain cycle total.
+            let bound = b.completion_cycles(clocks.as_ref());
+            let feasible = matches!(bound, Some(c) if c <= deadline);
             if !feasible {
                 rejections.push(Rejection {
                     task: task.name.clone(),
                     deadline,
-                    bound: b.completion_bound,
+                    bound,
                     binding: b.completion_binding,
                 });
             }
@@ -221,6 +225,13 @@ impl Scheduler {
         let tuning = scenario.tuning;
         let cfg = tuning.resource_config();
         let mut soc = SocSim::new(scenario.tasks.len(), Self::targets(tuning));
+        // Multi-rate timebase: at a pinned operating point the uncore
+        // targets step on their own clock grid (identity converters when
+        // the tree is coupled — the seed's single timebase, so op-free
+        // scenarios and coupled points are bit-identical to the seed).
+        if let Some(tree) = scenario.clocks() {
+            soc.set_clocks(&tree);
+        }
 
         // Placement: one initiator slot per task, in declaration order.
         let mut measured: Vec<InitiatorId> = Vec::new();
@@ -323,6 +334,16 @@ impl Scheduler {
             measured.iter().all(|&id| soc.finished(id))
         });
         let cycles = soc.now;
+        // Uncore activity: non-idle cycles of the fixed-clock memory
+        // path (HyperRAM/DPLLC + peripheral island), in uncore cycles.
+        let uncore_busy_cycles = soc
+            .xbar
+            .target_ref(crate::soc::axi::Target::Hyperram)
+            .busy_cycles()
+            + soc
+                .xbar
+                .target_ref(crate::soc::axi::Target::Peripheral)
+                .busy_cycles();
 
         // Harvest reports (nanosecond deadlines resolve through the
         // scenario's operating point).
@@ -337,6 +358,7 @@ impl Scheduler {
             scenario: scenario.name.clone(),
             policy: tuning.describe(),
             cycles,
+            uncore_busy_cycles,
             tasks: reports,
         }
     }
@@ -383,6 +405,11 @@ impl Scheduler {
             }
             Workload::DmaCopy(_) => {
                 let d: &mut DmaEngine = soc.initiator_mut(id);
+                // First-issue-to-drain span: nonzero for finished finite
+                // jobs, so measured system-domain utilization (and
+                // deadline checks) stop undercounting them; endless
+                // interferers stay at 0 as before.
+                makespan = d.makespan();
                 extra.push(("bytes_moved".into(), d.stats.bytes_moved as f64));
                 extra.push(("loops".into(), d.stats.loops as f64));
                 mean_latency = d.stats.bytes_moved as f64 / total_cycles.max(1) as f64;

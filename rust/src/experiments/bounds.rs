@@ -98,9 +98,9 @@ pub fn run_with_threads(threads: usize) -> BoundsResult {
                 task: tb.task.clone(),
                 regulated_policy,
                 measured_worst_mem: measured,
-                mem_bound: tb.mem_bound,
+                mem_bound: tb.mem_cycles(scenario.clocks().as_ref()),
                 measured_makespan: t.makespan,
-                completion_bound: tb.completion_bound,
+                completion_bound: tb.completion_cycles(scenario.clocks().as_ref()),
                 binding: tb.mem_binding,
             });
         }

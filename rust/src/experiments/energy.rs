@@ -10,10 +10,15 @@
 //! admissible, confirmed by one validating simulation with measured
 //! energy columns.
 
-use crate::coordinator::Scenario;
-use crate::power::governor::{self, GovernError, GovernorChoice, GovernorValidation};
+use crate::coordinator::task::Criticality;
+use crate::coordinator::{IsolationPolicy, McTask, Scenario, Workload};
+use crate::power::governor::{
+    self, CertifiedChoice, GovernError, Governor, GovernorChoice, GovernorValidation,
+};
+use crate::power::OperatingPoint;
 use crate::soc::clock::Cycle;
 use crate::soc::power::NOMINAL_V;
+use crate::wcet;
 
 /// Deadlines swept for the fig6a host mix, in nanoseconds. Mirrors the
 /// autotune cycle grid at the 1GHz peak clock; the 430us point is the
@@ -54,6 +59,60 @@ pub fn reference_mix_ns(deadline_ns: f64) -> Scenario {
 /// The fig6b cluster mix with a wall-clock deadline.
 pub fn cluster_mix_ns(deadline_ns: f64) -> Scenario {
     with_ns_deadline(crate::experiments::autotune::cluster_mix(0), deadline_ns)
+}
+
+/// A dual-critical cluster mix: *both* clusters carry hard deadlines,
+/// so neither can be parked at the grid floor and the fully-active
+/// worst case at peak voltage (747mW AMR + 600mW vector + host/uncore
+/// floors) deterministically busts the 1.2W envelope — the mix the
+/// certified-activity feedback exists to rescue. The AMR job is much
+/// shorter than the vector job, so its *measured* duty cycle over the
+/// mix's span is small and the certified gate fits peak voltage.
+pub fn dual_cluster_mix_ns(deadline_ns: f64) -> Scenario {
+    use crate::soc::amr::IntPrecision;
+    use crate::soc::vector::FpFormat;
+    let s = Scenario::new("dual-cluster-mix", crate::coordinator::SocTuning::tsu_regulation())
+        .with_task(McTask::new(
+            "amr-tct",
+            Criticality::Hard,
+            Workload::AmrMatMul {
+                precision: IntPrecision::Int8,
+                m: 96,
+                k: 96,
+                n: 96,
+                tile: 8,
+            },
+        ))
+        .with_task(McTask::new(
+            "vec-tct",
+            Criticality::Hard,
+            Workload::VectorMatMul {
+                format: FpFormat::Fp16,
+                m: 256,
+                k: 256,
+                n: 256,
+                tile: 32,
+            },
+        ));
+    with_ns_deadline(s, deadline_ns)
+}
+
+/// The bound floor of the dual-critical mix at `op`, in nanoseconds:
+/// its interference-free PrivatePaths bounds (own cost is
+/// tuning-invariant and interference is non-negative, so no tuning in
+/// the space can beat this floor). Used to derive a deadline that is
+/// feasible *only* at peak voltage.
+pub fn dual_cluster_floor_ns(op: OperatingPoint) -> f64 {
+    let probe = dual_cluster_mix_ns(10_000_000.0)
+        .with_tuning(IsolationPolicy::PrivatePaths)
+        .with_op_point(op);
+    let report = wcet::analyze(&probe);
+    let tree = op.clock_tree();
+    report
+        .bounds
+        .iter()
+        .filter_map(|b| b.completion_ns(&tree))
+        .fold(0.0, f64::max)
 }
 
 /// One mix's governor verdict + validating simulation.
@@ -251,6 +310,283 @@ pub fn print(r: &DvfsResult) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Decoupled-uncore grid: the same deadlines under the fixed-frequency
+// memory subsystem.
+// ---------------------------------------------------------------------
+
+/// Wall-clock memory-latency bound of the regulated fig6a TCT with the
+/// uncore decoupled, at the grid floor and peak: `(low_v_ns, peak_v_ns,
+/// memory_bound)`. Frequency-invariance evidence — only the few
+/// system-side edge/CDC-sync cycles may stretch (~13% at the 0.6V
+/// floor vs 2.9x for the coupled model), and the row must genuinely be
+/// memory-bound (completion dominated by the HyperRAM channel).
+pub fn memory_bound_flatness() -> (f64, f64, bool) {
+    let at = |v: f64| {
+        let op = OperatingPoint::uniform(v)
+            .expect("grid voltage")
+            .decoupled_uncore();
+        let s = reference_mix_ns(800_000.0).with_op_point(op);
+        let r = wcet::analyze(&s);
+        let b = r.bound_for("tct");
+        // "Memory-bound" means the *completion* bound is governed by
+        // the HyperRAM channel (busy-window on the uncore service) —
+        // the per-transaction mem binding alone would be true for this
+        // mix by construction and prove nothing about the flat row.
+        (
+            b.mem_ns(&op.clock_tree()),
+            b.completion_binding == wcet::Resource::HyperramChannel,
+        )
+    };
+    let (low_ns, low_mem) = at(0.6);
+    let (peak_ns, peak_mem) = at(1.1);
+    (low_ns, peak_ns, low_mem && peak_mem)
+}
+
+/// One deadline's coupled-vs-decoupled governor comparison.
+pub struct UncoreRow {
+    pub mix: String,
+    pub deadline_ns: f64,
+    /// Winning system voltage of the seed (coupled-uncore) governor.
+    pub coupled_v: Option<f64>,
+    pub outcome: Result<GovernorChoice, GovernError>,
+    pub validation: Option<GovernorValidation>,
+}
+
+pub struct UncoreDvfsResult {
+    pub rows: Vec<UncoreRow>,
+    /// Regulated fig6a memory bound at 0.6V / 1.1V, uncore decoupled.
+    pub mem_ns_low_v: f64,
+    pub mem_ns_peak_v: f64,
+    /// The flatness rows really are memory-bound.
+    pub memory_bound: bool,
+}
+
+impl UncoreDvfsResult {
+    /// Every decoupled winner confirmed by its validating simulation.
+    pub fn all_confirmed(&self) -> bool {
+        self.rows.iter().all(|r| match (&r.outcome, &r.validation) {
+            (Ok(c), Some(v)) => c.modeled.within_envelope() && v.confirmed(),
+            (Ok(_), None) => false,
+            (Err(_), _) => true,
+        })
+    }
+
+    /// Memory wall-clock bound invariant under core DVFS: within the
+    /// system-side edge + CDC-sync margin (~13% of this bound at the
+    /// 0.6V floor — at the 1.1V anchor the grids coincide and the sync
+    /// margin vanishes), instead of the coupled model's 2.9x stretch.
+    pub fn memory_bound_is_flat(&self) -> bool {
+        self.memory_bound
+            && self.mem_ns_low_v >= self.mem_ns_peak_v
+            && self.mem_ns_low_v <= self.mem_ns_peak_v * 1.15
+    }
+
+    /// Rows where the coupled governor pinned a strictly higher system
+    /// voltage than the decoupled one needs — i.e. deadlines whose
+    /// low-voltage points the cycle-constant model falsely rejected:
+    /// `(deadline_ns, coupled_v, decoupled_v)`.
+    pub fn unpinned(&self) -> Vec<(f64, f64, f64)> {
+        self.rows
+            .iter()
+            .filter_map(|r| match (&r.outcome, r.coupled_v) {
+                (Ok(c), Some(cv)) if cv > c.op.v_system + 1e-9 => {
+                    Some((r.deadline_ns, cv, c.op.v_system))
+                }
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// The fig6a/fig6b deadline grids re-governed with the uncore parked at
+/// its fixed 1000MHz clock. Memory-bound rows' wall-clock bounds no
+/// longer scale with the core voltage, so deadlines the coupled
+/// governor could only carry at high voltage now admit low-voltage
+/// points (each confirmed by a validating simulation).
+pub fn run_uncore() -> UncoreDvfsResult {
+    let decoupled = Governor::decoupled();
+    let coupled = Governor::default();
+    let mut rows = Vec::new();
+    for (scenario, deadline_ns) in grid() {
+        // The coupled winner is cheap (analytic search only): it is the
+        // comparison column, not a shipped point.
+        let coupled_v = coupled.govern(&scenario).ok().map(|c| c.op.v_system);
+        let outcome = decoupled.govern(&scenario);
+        let validation = outcome
+            .as_ref()
+            .ok()
+            .map(|c| governor::validate(&scenario, c));
+        rows.push(UncoreRow {
+            mix: scenario.name.clone(),
+            deadline_ns,
+            coupled_v,
+            outcome,
+            validation,
+        });
+    }
+    let (mem_ns_low_v, mem_ns_peak_v, memory_bound) = memory_bound_flatness();
+    UncoreDvfsResult {
+        rows,
+        mem_ns_low_v,
+        mem_ns_peak_v,
+        memory_bound,
+    }
+}
+
+pub fn print_uncore(r: &UncoreDvfsResult) {
+    use crate::coordinator::metrics::print_table;
+    print_table(
+        "Decoupled uncore (fixed 1000MHz memory clock): coupled vs decoupled governor winners",
+        &[
+            "mix", "deadline", "coupled V", "decoupled point", "bound (wall-clock)",
+            "sim: measured <= bound",
+        ],
+        &r.rows
+            .iter()
+            .map(|row| {
+                let coupled = row
+                    .coupled_v
+                    .map_or("EXHAUSTED".to_string(), |v| format!("{v:.2}V"));
+                let (point, bound) = match &row.outcome {
+                    Ok(c) => (
+                        c.op.describe(),
+                        c.checks_ns
+                            .iter()
+                            .map(|(_, b, _)| format!("{b:.0}ns"))
+                            .collect::<Vec<_>>()
+                            .join("; "),
+                    ),
+                    Err(_) => ("EXHAUSTED".to_string(), "-".to_string()),
+                };
+                let sim = match &row.validation {
+                    Some(v) => v
+                        .checks
+                        .iter()
+                        .map(|(task, measured, bound)| {
+                            format!(
+                                "{task}: {measured} <= {bound}{}",
+                                if *measured <= *bound { "" } else { " VIOLATED" }
+                            )
+                        })
+                        .collect::<Vec<_>>()
+                        .join("; "),
+                    None => "-".to_string(),
+                };
+                vec![
+                    row.mix.clone(),
+                    format!("{:.0}us", row.deadline_ns / 1e3),
+                    coupled,
+                    point,
+                    bound,
+                    sim,
+                ]
+            })
+            .collect::<Vec<_>>(),
+    );
+    println!(
+        "\nmemory-bound fig6a row, wall-clock memory bound under core DVFS: \
+         {:.1}ns @0.60V vs {:.1}ns @1.10V ({}) — frequency-invariant: {}",
+        r.mem_ns_low_v,
+        r.mem_ns_peak_v,
+        if r.memory_bound {
+            "HyperRAM-channel-bound"
+        } else {
+            "NOT memory-bound"
+        },
+        r.memory_bound_is_flat()
+    );
+    for (deadline, cv, dv) in r.unpinned() {
+        println!(
+            "deadline {:.0}us: coupled governor pinned {cv:.2}V (cycle-constant memory model \
+             rejected every lower point); decoupled uncore admits {dv:.2}V",
+            deadline / 1e3
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Certified-activity showcase (`--certified-activity`).
+// ---------------------------------------------------------------------
+
+pub struct CertifiedResult {
+    /// The peak-voltage bound floor the deadline was derived from (ns).
+    pub floor_ns: f64,
+    /// The derived peak-only deadline (2% above the floor: feasible at
+    /// 1.1V, infeasible at 1.05V where every bound stretches ~7%).
+    pub deadline_ns: f64,
+    pub outcome: Result<CertifiedChoice, GovernError>,
+}
+
+/// Measured-utilization feedback on the dual-critical cluster mix: the
+/// fully-active envelope gate deterministically blocks peak voltage
+/// (747 + 600 + floors > 1.2W), and the deadline — derived from the
+/// mix's own bound floor — is feasible *only* at peak. The worst-case
+/// pass therefore exhausts; the certified pass measures the real duty
+/// cycles from a baseline run and re-governs with them.
+pub fn run_certified() -> CertifiedResult {
+    let floor_ns = dual_cluster_floor_ns(OperatingPoint::max_perf());
+    let deadline_ns = floor_ns * 1.02;
+    let outcome = Governor::default().govern_certified(&dual_cluster_mix_ns(deadline_ns));
+    CertifiedResult {
+        floor_ns,
+        deadline_ns,
+        outcome,
+    }
+}
+
+pub fn print_certified(r: &CertifiedResult) {
+    println!(
+        "\n== Certified-activity feedback (dual-critical cluster mix, deadline {:.0}us = \
+         bound floor {:.0}us + 2%)",
+        r.deadline_ns / 1e3,
+        r.floor_ns / 1e3
+    );
+    match &r.outcome {
+        Ok(c) => {
+            match &c.worst_case {
+                Some((wc, _)) => println!(
+                    "worst-case activity gate: governed at {}",
+                    wc.op.describe()
+                ),
+                None => println!(
+                    "worst-case activity gate: EXHAUSTED (fully-active 747mW AMR + 600mW \
+                     vector busts the 1.2W envelope at the only feasible voltage)"
+                ),
+            }
+            println!(
+                "certified activity bound (measured): sys {:.2} / vec {:.2} / amr {:.2} / \
+                 uncore {:.2}",
+                c.certified_utils.system,
+                c.certified_utils.vector,
+                c.certified_utils.amr,
+                c.certified_utils.uncore
+            );
+            println!(
+                "certified gate: governed at {} — modeled {:.0}mW within the envelope; \
+                 unlocked higher voltage: {}",
+                c.certified.op.describe(),
+                c.certified.modeled.total_power_mw,
+                c.unlocked()
+            );
+            println!(
+                "validating simulation: measured {:.0}mW ({} envelope); confirmed: {}",
+                c.certified_validation.measured.total_power_mw,
+                if c.certified_validation.measured.within_envelope() {
+                    "within"
+                } else {
+                    "OVER"
+                },
+                c.confirmed()
+            );
+        }
+        Err(e) => println!(
+            "certificate insufficient: {e} (measured duty cycles still bust the envelope \
+             at the only feasible voltage)"
+        ),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -310,5 +646,77 @@ mod tests {
         let c = cluster.outcome.as_ref().expect("cluster governable");
         assert_eq!(c.op.v_vector, 0.6, "{}", c.op.describe());
         assert!(c.op.v_system < 1.1, "{}", c.op.describe());
+    }
+
+    /// The decoupled-uncore grid: memory-bound wall-clock bounds stay
+    /// flat under core DVFS, every winner is sim-confirmed, and at
+    /// least one deadline the coupled governor pinned to a high voltage
+    /// now admits a lower point (the cycle-constant model's false
+    /// rejection, fixed).
+    #[test]
+    fn uncore_grid_unpins_memory_bound_deadlines() {
+        let r = run_uncore();
+        assert!(r.all_confirmed(), "a decoupled winner failed validation");
+        assert!(
+            r.memory_bound_is_flat(),
+            "memory bound scaled with core voltage: {:.1}ns @0.6V vs {:.1}ns @1.1V \
+             (memory-bound: {})",
+            r.mem_ns_low_v,
+            r.mem_ns_peak_v,
+            r.memory_bound
+        );
+        let unpinned = r.unpinned();
+        assert!(
+            !unpinned.is_empty(),
+            "no deadline was unpinned by decoupling the uncore"
+        );
+        // The 800us row is the canonical showcase: the coupled governor
+        // needed 0.75V (the 0.60V bound, stretched through the 350MHz
+        // clock, overshot 800us); decoupled, the uncore share of the
+        // bound is wall-clock-constant and a strictly lower voltage
+        // admits.
+        let row = r
+            .rows
+            .iter()
+            .find(|row| row.mix == "fig6a-mix" && row.deadline_ns == 800_000.0)
+            .expect("800us grid row");
+        let c = row.outcome.as_ref().expect("decoupled 800us governable");
+        let coupled_v = row.coupled_v.expect("coupled 800us governable");
+        assert!(
+            c.op.v_system < coupled_v,
+            "decoupling should lower the 800us winner: {} vs {coupled_v:.2}V",
+            c.op.describe()
+        );
+    }
+
+    /// Certified-activity rescue of the deterministic dual-critical
+    /// showcase: the worst-case gate cannot govern the peak-only
+    /// deadline (747 + 600mW fully active busts the envelope at the
+    /// only feasible voltage), and the measured certificate *must*
+    /// rescue it — the short AMR job's duty cycle over the vector
+    /// job's span leaves the certified gate hundreds of mW of
+    /// headroom (cross-validated by /tmp/wcet_proto/uncore_mirror.py).
+    #[test]
+    fn certified_activity_rescues_the_dual_critical_mix() {
+        let r = run_certified();
+        assert!(r.floor_ns > 0.0);
+        let c = r
+            .outcome
+            .as_ref()
+            .unwrap_or_else(|e| panic!("certificate failed to rescue the showcase: {e}"));
+        assert!(
+            c.worst_case.is_none(),
+            "the fully-active gate must block the peak-only deadline"
+        );
+        assert!(c.unlocked());
+        assert_eq!(c.certified.op.v_amr, 1.1, "{}", c.certified.op.describe());
+        assert!(c.confirmed(), "certified winner failed validation");
+        // The certificate is a real measurement, not worst case: the
+        // short AMR job cannot be busy across the whole mix span.
+        assert!(
+            c.certified_utils.amr < 1.0,
+            "amr util {} should reflect its short duty cycle",
+            c.certified_utils.amr
+        );
     }
 }

@@ -15,8 +15,12 @@
 //!                           prints the winner + validating simulation);
 //! - `dvfs`                — bound-driven DVFS governor: the fig6a/fig6b
 //!                           deadline grids searched for energy-minimal
-//!                           provably-safe operating points
-//!                           (`--deadline-ns N` governs the fig6a mix
+//!                           provably-safe operating points, plus the
+//!                           decoupled-uncore grid (fixed memory clock:
+//!                           wall-clock memory bounds invariant under
+//!                           core DVFS; `--certified-activity` adds the
+//!                           measured-utilization feedback showcase;
+//!                           `--deadline-ns N` governs the fig6a mix
 //!                           for one wall-clock deadline);
 //! - `all`                 — run every experiment in sequence;
 //! - `artifacts [--dir D]` — list AOT artifacts and smoke-execute one;
@@ -177,6 +181,52 @@ fn cmd_dvfs(args: &Args) {
                      saving (best: {other:?})"
                 );
                 std::process::exit(1);
+            }
+        }
+        // Decoupled-uncore grid: memory-bound rows must be wall-clock
+        // frequency-invariant under core DVFS, every winner confirmed,
+        // and at least one deadline unpinned from its coupled voltage.
+        let u = exp::energy::run_uncore();
+        exp::energy::print_uncore(&u);
+        if !u.all_confirmed() {
+            eprintln!("uncore dvfs validation failed: a decoupled winner was refuted");
+            std::process::exit(1);
+        }
+        if !u.memory_bound_is_flat() {
+            eprintln!(
+                "uncore regression: the memory-bound fig6a wall-clock bound scales with \
+                 core voltage ({:.1}ns @0.60V vs {:.1}ns @1.10V)",
+                u.mem_ns_low_v, u.mem_ns_peak_v
+            );
+            std::process::exit(1);
+        }
+        if u.unpinned().is_empty() {
+            eprintln!("uncore regression: decoupling unpinned no deadline");
+            std::process::exit(1);
+        }
+        if args.flag("certified-activity") {
+            let c = exp::energy::run_certified();
+            exp::energy::print_certified(&c);
+            // The dual-critical showcase is deterministic: the
+            // worst-case gate must block it and the measured
+            // certificate must rescue it, simulation-confirmed. Any
+            // other outcome is a regression in the feedback path.
+            match &c.outcome {
+                Ok(choice) if choice.confirmed() && choice.unlocked() => {}
+                Ok(_) => {
+                    eprintln!(
+                        "certified-activity regression: certified winner unconfirmed \
+                         or no voltage unlocked"
+                    );
+                    std::process::exit(1);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "certified-activity regression: the measured certificate \
+                         failed to rescue the dual-critical showcase ({e})"
+                    );
+                    std::process::exit(1);
+                }
             }
         }
         return;

@@ -9,22 +9,42 @@
 
 use crate::coordinator::{Scenario, ScenarioReport, Workload};
 use crate::power::op_point::OperatingPoint;
+use crate::soc::axi::Target;
 use crate::soc::clock::{Cycle, Domain};
-use crate::soc::power::EnergyMeter;
+use crate::soc::power::{uncore_power_mw, EnergyMeter};
 
 /// The paper's SoC power envelope (sub-2W budget, 1.2W achieved).
 pub const SOC_ENVELOPE_MW: f64 = 1200.0;
 
-/// Domain iteration order for reports.
-pub const DOMAINS: [Domain; 3] = [Domain::System, Domain::Vector, Domain::Amr];
+/// Domain iteration order for reports: the three voltage-scaled PLL
+/// domains plus the fixed-frequency uncore.
+pub const DOMAINS: [Domain; 4] = [Domain::System, Domain::Vector, Domain::Amr, Domain::Uncore];
 
-/// The clock domain a workload draws power in. Host TCTs and the system
-/// DMA live on the host/system domain; the clusters own theirs.
+/// The clock domain a workload draws *core* power in. Host TCTs and the
+/// system DMA live on the host/system domain; the clusters own theirs.
+/// (Memory-path activity is charged to the uncore separately — see
+/// [`touches_uncore`].)
 pub fn domain_of(workload: &Workload) -> Domain {
     match workload {
         Workload::AmrMatMul { .. } => Domain::Amr,
         Workload::VectorMatMul { .. } | Workload::VectorFft { .. } => Domain::Vector,
         Workload::HostTct(_) | Workload::DmaCopy(_) => Domain::System,
+    }
+}
+
+/// Whether a workload puts traffic on the fixed-clock memory path
+/// (HyperRAM/DPLLC channel or the peripheral island) — the analytic
+/// worst case charges the uncore fully active for such tasks.
+pub fn touches_uncore(workload: &Workload) -> bool {
+    let uncore_target = |t: Target| matches!(t, Target::Hyperram | Target::Peripheral);
+    match workload {
+        Workload::HostTct(_) => true, // HyperRAM walker by construction
+        Workload::DmaCopy(job) => {
+            uncore_target(job.src) || job.dst.map(uncore_target).unwrap_or(false)
+        }
+        Workload::AmrMatMul { .. }
+        | Workload::VectorMatMul { .. }
+        | Workload::VectorFft { .. } => false, // DCSPM-resident tiles
     }
 }
 
@@ -34,14 +54,24 @@ pub struct DomainUtilization {
     pub system: f64,
     pub vector: f64,
     pub amr: f64,
+    /// Fixed-clock memory path (HyperRAM/DPLLC + peripheral island).
+    pub uncore: f64,
 }
 
 impl DomainUtilization {
+    pub const IDLE: DomainUtilization = DomainUtilization {
+        system: 0.0,
+        vector: 0.0,
+        amr: 0.0,
+        uncore: 0.0,
+    };
+
     pub fn get(&self, d: Domain) -> f64 {
         match d {
             Domain::System => self.system,
             Domain::Vector => self.vector,
             Domain::Amr => self.amr,
+            Domain::Uncore => self.uncore,
         }
     }
 
@@ -50,21 +80,22 @@ impl DomainUtilization {
             Domain::System => self.system = util,
             Domain::Vector => self.vector = util,
             Domain::Amr => self.amr = util,
+            Domain::Uncore => self.uncore = util,
         }
     }
 
     /// Worst-case activity for the analytic search: any domain hosting a
-    /// task is charged fully active; empty domains sit at the idle
+    /// task is charged fully active (the uncore whenever any task puts
+    /// traffic on the memory path); empty domains sit at the idle
     /// floor. Conservative by construction — the envelope verdict can
     /// only improve when measured activity replaces it.
     pub fn analytic(scenario: &Scenario) -> Self {
-        let mut u = Self {
-            system: 0.0,
-            vector: 0.0,
-            amr: 0.0,
-        };
+        let mut u = Self::IDLE;
         for task in &scenario.tasks {
             u.set(domain_of(&task.workload), 1.0);
+            if touches_uncore(&task.workload) {
+                u.uncore = 1.0;
+            }
         }
         u
     }
@@ -73,14 +104,13 @@ impl DomainUtilization {
     /// activity counters: cluster domains are active for their makespan
     /// minus memory-stall cycles (clock-gated while the tile streamer
     /// waits); the host/system domain for each task's makespan (endless
-    /// DMA interferers run wall-to-wall).
+    /// DMA interferers run wall-to-wall; finite DMA jobs count their
+    /// first-issue-to-drain span); the uncore for the memory path's own
+    /// non-idle cycles, on its own clock grid (the scenario's clock
+    /// tree converts — pass the scenario the run actually executed).
     pub fn measured(scenario: &Scenario, report: &ScenarioReport) -> Self {
         let total = report.cycles.max(1) as f64;
-        let mut busy = Self {
-            system: 0.0,
-            vector: 0.0,
-            amr: 0.0,
-        };
+        let mut busy = Self::IDLE;
         for task in &scenario.tasks {
             let t = report.task(&task.name);
             let d = domain_of(&task.workload);
@@ -96,10 +126,19 @@ impl DomainUtilization {
             };
             busy.set(d, busy.get(d) + cycles);
         }
+        // Uncore activity counts in uncore cycles; the run spanned
+        // `cycles * (f_uncore / f_system)` of them (ratio 1 on the
+        // lock-step timebase).
+        let uncore_ratio = scenario
+            .clocks()
+            .map(|t| t.ratio_to_system(Domain::Uncore))
+            .unwrap_or(1.0);
+        let uncore_total = (total * uncore_ratio).max(1.0);
         Self {
             system: (busy.system / total).min(1.0),
             vector: (busy.vector / total).min(1.0),
             amr: (busy.amr / total).min(1.0),
+            uncore: (report.uncore_busy_cycles as f64 / uncore_total).min(1.0),
         }
     }
 }
@@ -136,16 +175,29 @@ impl EnergyReport {
 /// Model power per domain at `op` with `utils` activity, integrating
 /// energy over `cycles` system cycles through the [`EnergyMeter`].
 pub fn model(op: &OperatingPoint, utils: DomainUtilization, cycles: Cycle) -> EnergyReport {
-    let sys_mhz = op.clock_tree().system.freq_mhz;
+    let tree = op.clock_tree();
+    let sys_mhz = tree.system.freq_mhz;
     let mut domains = Vec::with_capacity(DOMAINS.len());
     let mut total_power_mw = 0.0;
     let mut total_energy_mj = 0.0;
     for d in DOMAINS {
-        let curve = OperatingPoint::curve(d);
-        let voltage = op.voltage(d);
-        let freq_mhz = curve.freq_mhz(voltage);
         let util = utils.get(d);
-        let power_mw = curve.power_mw(voltage, freq_mhz, util);
+        let (voltage, freq_mhz, power_mw) = match d {
+            // The uncore is not voltage-scaled: power follows its clock
+            // linearly (the system clock when coupled, the fixed PHY
+            // clock when decoupled) on the always-on supply.
+            Domain::Uncore => (
+                crate::soc::power::NOMINAL_V,
+                tree.uncore.freq_mhz,
+                uncore_power_mw(tree.uncore.freq_mhz, util),
+            ),
+            _ => {
+                let curve = OperatingPoint::curve(d);
+                let voltage = op.voltage(d);
+                let freq_mhz = curve.freq_mhz(voltage);
+                (voltage, freq_mhz, curve.power_mw(voltage, freq_mhz, util))
+            }
+        };
         // Every domain is powered for the same wall-clock window, which
         // the system clock defines: integrate at the system frequency.
         let mut meter = EnergyMeter::default();
@@ -213,6 +265,28 @@ mod tests {
         assert_eq!(u.system, 1.0);
         assert_eq!(u.vector, 0.0);
         assert_eq!(u.amr, 0.0);
+        // Both the TCT (HyperRAM walker) and the DMA (HyperRAM source)
+        // put traffic on the memory path: the uncore is charged active.
+        assert_eq!(u.uncore, 1.0);
+    }
+
+    #[test]
+    fn cluster_only_mixes_leave_the_uncore_idle() {
+        use crate::soc::amr::IntPrecision;
+        let s = Scenario::new("c", SocTuning::tsu_regulation()).with_task(McTask::new(
+            "amr",
+            Criticality::Hard,
+            Workload::AmrMatMul {
+                precision: IntPrecision::Int8,
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 16,
+            },
+        ));
+        let u = DomainUtilization::analytic(&s);
+        assert_eq!(u.amr, 1.0);
+        assert_eq!(u.uncore, 0.0, "DCSPM tiles never touch the memory path");
     }
 
     #[test]
@@ -241,6 +315,7 @@ mod tests {
             system: 1.0,
             vector: 1.0,
             amr: 1.0,
+            uncore: 1.0,
         };
         assert!(modeled_power_mw(&op, all) > SOC_ENVELOPE_MW);
         let clusters_halved = OperatingPoint::new(1.1, 0.8, 0.8).unwrap();
@@ -255,9 +330,14 @@ mod tests {
         // The looping DMA keeps the system domain busy wall-to-wall.
         assert_eq!(u.system, 1.0);
         assert_eq!(u.vector, 0.0);
+        // The DMA hammers the HyperRAM channel: the uncore measures hot.
+        assert!(u.uncore > 0.5, "uncore util {}", u.uncore);
+        assert!(u.uncore <= 1.0);
         let op = OperatingPoint::nominal();
         let m = measure(&s, &report, &op);
         assert!(m.total_energy_mj > 0.0);
         assert!(m.within_envelope());
+        let unc_row = m.domains.iter().find(|d| d.domain == Domain::Uncore).unwrap();
+        assert!(unc_row.power_mw > crate::soc::power::UNCORE_IDLE_MW);
     }
 }

@@ -40,6 +40,7 @@ use crate::power::op_point::{OperatingPoint, VOLTAGE_GRID};
 use crate::soc::clock::{Cycle, Domain};
 
 /// The deterministic bound-driven DVFS search.
+#[derive(Debug, Clone)]
 pub struct Governor {
     /// Voltage candidates for the critical domains, ascending (defaults
     /// to the paper's 0.6–1.1V ladder).
@@ -47,6 +48,20 @@ pub struct Governor {
     /// Park cluster domains hosting only best-effort (or no) work at
     /// the grid floor instead of the candidate voltage.
     pub refine_nct_domains: bool,
+    /// Park the uncore (memory subsystem) at this fixed frequency on
+    /// every candidate point. `None` keeps it coupled to the system
+    /// clock — the seed timebase, where every memory service constant
+    /// stretches with the system voltage. The uncore is *excluded from
+    /// the voltage grid*: the governor never searches over it.
+    pub uncore_mhz: Option<f64>,
+    /// Optional certified per-domain activity bound for the envelope
+    /// gate (and candidate energy models), replacing the worst-case
+    /// fully-active profile. Fed from a validating run's measured
+    /// utilization ([`Governor::govern_certified`]); activity factors
+    /// are duty-cycle ratios and carry across nearby operating points,
+    /// and the winner is still confirmed by its own validating
+    /// simulation (measured power <= envelope) before use.
+    pub activity_bound: Option<DomainUtilization>,
 }
 
 impl Default for Governor {
@@ -54,6 +69,22 @@ impl Default for Governor {
         Self {
             grid: VOLTAGE_GRID.to_vec(),
             refine_nct_domains: true,
+            uncore_mhz: None,
+            activity_bound: None,
+        }
+    }
+}
+
+impl Governor {
+    /// The decoupled-uncore governor: candidates park the memory
+    /// subsystem at the fixed [`UNCORE_MHZ`] clock, so memory-bound
+    /// wall-clock bounds stay flat as the core voltage drops.
+    ///
+    /// [`UNCORE_MHZ`]: crate::soc::clock::UNCORE_MHZ
+    pub fn decoupled() -> Self {
+        Self {
+            uncore_mhz: Some(crate::soc::clock::UNCORE_MHZ),
+            ..Self::default()
         }
     }
 }
@@ -178,7 +209,9 @@ impl Governor {
         if governed.is_empty() {
             return Err(GovernError::NoDeadline);
         }
-        let utils = DomainUtilization::analytic(scenario);
+        let utils = self
+            .activity_bound
+            .unwrap_or_else(|| DomainUtilization::analytic(scenario));
         let mut points_evaluated = 0u64;
         let mut evaluations = 0u64;
         let mut envelope_blocked = 0u64;
@@ -239,8 +272,9 @@ impl Governor {
 
         // Reference energy: the same mix at max_perf with its own
         // autotuned isolation (no envelope gate — it is a yardstick, not
-        // a candidate).
-        let base_op = OperatingPoint::max_perf();
+        // a candidate). Carries the same uncore configuration so the
+        // comparison is apples to apples.
+        let base_op = self.apply_uncore(OperatingPoint::max_perf());
         let baseline = match autotune::autotune(&scenario.clone().with_op_point(base_op)) {
             Ok(o) => {
                 evaluations += o.evaluations;
@@ -261,18 +295,17 @@ impl Governor {
             .iter()
             .map(|t| {
                 let dl = t.deadline_cycles(Some(&clocks));
-                let bound = winner
+                // Exact wall-clock bound: per-domain cycles convert
+                // through their own clocks (a decoupled uncore's service
+                // does not stretch with the system voltage).
+                let bound_ns = winner
                     .outcome
                     .decision
                     .report
                     .bound_for(&t.name)
-                    .completion_bound
+                    .completion_ns(&clocks)
                     .expect("admitted deadline task has a finite bound");
-                (
-                    t.name.clone(),
-                    clocks.system.cycles_to_ns(bound),
-                    clocks.system.cycles_to_ns(dl),
-                )
+                (t.name.clone(), bound_ns, clocks.system.cycles_to_ns(dl))
             })
             .collect();
         Ok(GovernorChoice {
@@ -289,17 +322,30 @@ impl Governor {
         })
     }
 
+    /// Apply this governor's uncore configuration to an operating point
+    /// (a fixed parked frequency, or coupled when `uncore_mhz` is None).
+    fn apply_uncore(&self, op: OperatingPoint) -> OperatingPoint {
+        match self.uncore_mhz {
+            Some(mhz) => op
+                .with_uncore_mhz(mhz)
+                .expect("governor uncore frequency validated at construction"),
+            None => op,
+        }
+    }
+
     /// The candidate point for grid voltage `v`: the system domain and
     /// every cluster domain hosting time-critical work run at `v`;
     /// cluster domains hosting only best-effort work — whose TSU
     /// arrival curves are frequency-invariant, so no critical bound can
     /// depend on their clock (the autotune at the candidate point
     /// re-proves admissibility regardless) — and idle domains park at
-    /// the grid floor (retention). Flooring happens *before* the
-    /// envelope gate so a high-voltage critical path stays reachable
-    /// even when the uniform point would bust the power budget.
+    /// the grid floor (retention). The uncore rides along per
+    /// [`Governor::uncore_mhz`] — it is never part of the grid.
+    /// Flooring happens *before* the envelope gate so a high-voltage
+    /// critical path stays reachable even when the uniform point would
+    /// bust the power budget.
     fn candidate_op(&self, scenario: &Scenario, v: f64) -> OperatingPoint {
-        let mut op = OperatingPoint::uniform(v).expect("grid voltage on every curve");
+        let mut op = self.apply_uncore(OperatingPoint::uniform(v).expect("grid voltage on every curve"));
         if !self.refine_nct_domains {
             return op;
         }
@@ -339,7 +385,8 @@ impl Governor {
 }
 
 /// Worst completion bound among deadline-carrying tasks, in system
-/// cycles — the execution window modeled energy integrates over.
+/// cycles at `op`'s clocks — the execution window modeled energy
+/// integrates over.
 fn worst_bound_cycles(scenario: &Scenario, op: &OperatingPoint, outcome: &TuneOutcome) -> Cycle {
     let clocks = op.clock_tree();
     scenario
@@ -351,7 +398,7 @@ fn worst_bound_cycles(scenario: &Scenario, op: &OperatingPoint, outcome: &TuneOu
                 .decision
                 .report
                 .bound_for(&t.name)
-                .completion_bound
+                .completion_cycles(Some(&clocks))
         })
         .max()
         .unwrap_or(0)
@@ -389,10 +436,11 @@ pub fn validate(scenario: &Scenario, choice: &GovernorChoice) -> GovernorValidat
         .with_tuning(choice.tuning)
         .with_op_point(choice.op);
     let report = Scheduler::run(&s);
+    let clocks = choice.op.clock_tree();
     let mut checks = Vec::new();
     let mut sound = true;
     for b in &choice.decision.report.bounds {
-        if let Some(bound) = b.completion_bound {
+        if let Some(bound) = b.completion_cycles(Some(&clocks)) {
             let t = report.task(&b.task);
             sound &= t.makespan > 0 && t.makespan <= bound;
             checks.push((b.task.clone(), t.makespan, bound));
@@ -406,6 +454,105 @@ pub fn validate(scenario: &Scenario, choice: &GovernorChoice) -> GovernorValidat
         sound,
         deadlines_met,
         measured,
+    }
+}
+
+/// Outcome of the two-pass certified-activity flow
+/// ([`Governor::govern_certified`], the `--certified-activity` CLI path).
+#[derive(Debug, Clone)]
+pub struct CertifiedChoice {
+    /// The worst-case-activity pass, when it found a point at all
+    /// (`None` when every candidate was envelope-blocked or
+    /// tuning-exhausted — exactly the case the certificate rescues).
+    pub worst_case: Option<(GovernorChoice, GovernorValidation)>,
+    /// The measured per-domain utilization fed back as the certificate.
+    pub certified_utils: DomainUtilization,
+    /// The re-governed choice under the certified activity bound.
+    pub certified: GovernorChoice,
+    pub certified_validation: GovernorValidation,
+}
+
+impl CertifiedChoice {
+    /// Every shipped point simulation-confirmed (bounds, deadlines and
+    /// *measured* power — the safety net that keeps an optimistic
+    /// certificate from ever shipping an envelope violation).
+    pub fn confirmed(&self) -> bool {
+        self.certified_validation.confirmed()
+            && self
+                .worst_case
+                .as_ref()
+                .map(|(_, v)| v.confirmed())
+                .unwrap_or(true)
+    }
+
+    /// Did the certificate admit a faster (higher-voltage) point than
+    /// the worst-case gate allowed — or govern a mix the worst-case
+    /// pass could not govern at all?
+    pub fn unlocked(&self) -> bool {
+        match &self.worst_case {
+            None => true,
+            Some((wc, _)) => {
+                self.certified.op.v_system > wc.op.v_system + 1e-9
+                    || self.certified.op.v_vector > wc.op.v_vector + 1e-9
+                    || self.certified.op.v_amr > wc.op.v_amr + 1e-9
+            }
+        }
+    }
+}
+
+impl Governor {
+    /// Measured-utilization feedback (`--certified-activity`): govern
+    /// with the worst-case fully-active profile, confirm the winner by
+    /// simulation, then feed that run's *measured* per-domain
+    /// utilization back as a certified activity bound and search again.
+    /// The certified envelope gate admits high-voltage candidates the
+    /// worst case blocked (e.g. a dual-critical cluster mix whose
+    /// deadline is only feasible at peak voltage); the certified winner
+    /// is itself simulation-confirmed before anyone acts on it.
+    ///
+    /// When the worst-case pass exhausts (no point both admits the
+    /// deadlines and fits the fully-active envelope), the certificate
+    /// is measured from one run at the max-performance baseline tuning
+    /// instead — a measurement probe, not a shipped point.
+    pub fn govern_certified(&self, scenario: &Scenario) -> Result<CertifiedChoice, GovernError> {
+        let worst_case = match self.govern(scenario) {
+            Ok(choice) => {
+                let v = validate(scenario, &choice);
+                Some((choice, v))
+            }
+            Err(GovernError::NoDeadline) => return Err(GovernError::NoDeadline),
+            Err(GovernError::Exhausted { .. }) => None,
+        };
+        let certified_utils = match &worst_case {
+            Some((choice, v)) => {
+                let s = scenario.clone().with_op_point(choice.op);
+                DomainUtilization::measured(&s, &v.report)
+            }
+            None => {
+                // Measurement probe at the max-perf baseline (best
+                // available tuning; the scenario's own if autotune also
+                // exhausts).
+                let base_op = self.apply_uncore(OperatingPoint::max_perf());
+                let probe = scenario.clone().with_op_point(base_op);
+                let tuning = autotune::autotune(&probe)
+                    .map(|o| o.tuning)
+                    .unwrap_or(scenario.tuning);
+                let report = Scheduler::run(&probe.clone().with_tuning(tuning));
+                DomainUtilization::measured(&probe, &report)
+            }
+        };
+        let certified_governor = Governor {
+            activity_bound: Some(certified_utils),
+            ..self.clone()
+        };
+        let certified = certified_governor.govern(scenario)?;
+        let certified_validation = validate(scenario, &certified);
+        Ok(CertifiedChoice {
+            worst_case,
+            certified_utils,
+            certified,
+            certified_validation,
+        })
     }
 }
 
@@ -485,6 +632,85 @@ mod tests {
         assert_eq!(a.tuning, b.tuning);
         assert_eq!(a.evaluations, b.evaluations);
         assert_eq!(a.modeled.total_energy_mj, b.modeled.total_energy_mj);
+    }
+
+    #[test]
+    fn decoupled_uncore_admits_sub_peak_for_a_high_voltage_deadline() {
+        // 470us on the fig6a mix: the cycle-constant (coupled) model's
+        // bound floor is ~412.6k cycles, which only fits the wall-clock
+        // budget once the system clock reaches ~878MHz — the coupled
+        // governor needs a >=1.0V point. Decoupled, the ~85%-uncore
+        // bound stays flat in wall clock as the core slows, so a much
+        // lower system voltage carries the same deadline — the memory
+        // path no longer falsely slows down with the core.
+        let s = reference_mix_ns(470_000.0);
+        let coupled = govern(&s).expect("feasible at high voltage");
+        assert!(
+            coupled.op.v_system >= 1.0,
+            "cycle-constant model should need a high voltage: {}",
+            coupled.op.describe()
+        );
+        let dec = Governor::decoupled()
+            .govern(&s)
+            .expect("decoupled uncore must admit below the coupled winner");
+        assert!(
+            dec.op.v_system <= 0.95 && dec.op.v_system < coupled.op.v_system,
+            "decoupling should unpin the voltage: {} vs {}",
+            dec.op.describe(),
+            coupled.op.describe()
+        );
+        assert!(dec.decision.admitted);
+        let v = validate(&s, &dec);
+        assert!(v.confirmed(), "sim refuted the decoupled winner: {:?}", v.checks);
+        // The wall-clock bound report stays under the deadline exactly.
+        for (task, bound_ns, deadline_ns) in &dec.checks_ns {
+            assert!(bound_ns <= deadline_ns, "{task}: {bound_ns} > {deadline_ns}");
+        }
+    }
+
+    #[test]
+    fn decoupled_governor_is_deterministic_and_never_worse() {
+        // On every grid deadline the decoupled governor's winner is at
+        // most the coupled winner's voltage (memory no longer stretches
+        // with the core clock, so nothing gets harder to admit).
+        for deadline_ns in [550_000.0, 800_000.0, 2_500_000.0] {
+            let s = reference_mix_ns(deadline_ns);
+            let coupled = govern(&s).expect("coupled governable");
+            let dec = Governor::decoupled().govern(&s).expect("decoupled governable");
+            assert!(
+                dec.op.v_system <= coupled.op.v_system + 1e-9,
+                "decoupling raised the winning voltage at {deadline_ns}ns: {} vs {}",
+                dec.op.describe(),
+                coupled.op.describe()
+            );
+            let again = Governor::decoupled().govern(&s).expect("deterministic");
+            assert_eq!(dec.op, again.op);
+            assert_eq!(dec.evaluations, again.evaluations);
+        }
+    }
+
+    #[test]
+    fn certified_activity_flow_is_confirmed_and_never_slower() {
+        let s = cluster_mix_ns(400_000.0);
+        let c = Governor::default()
+            .govern_certified(&s)
+            .expect("cluster mix governable");
+        assert!(c.confirmed(), "a certified pass failed validation");
+        // Certified utils are a real measurement: inside [0, 1], with
+        // the hosting domains actually active.
+        assert!(c.certified_utils.amr > 0.0 && c.certified_utils.amr <= 1.0);
+        assert!(c.certified_utils.vector <= 1.0);
+        // The certificate only relaxes the envelope gate: the certified
+        // winner is the worst-case winner or a faster point, never a
+        // slower one.
+        if let Some((wc, _)) = &c.worst_case {
+            assert!(
+                c.certified.op.v_system + 1e-9 >= wc.op.v_system,
+                "certificate selected a slower point: {} vs {}",
+                c.certified.op.describe(),
+                wc.op.describe()
+            );
+        }
     }
 
     #[test]

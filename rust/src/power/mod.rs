@@ -28,5 +28,7 @@ pub mod governor;
 pub mod op_point;
 
 pub use energy::{DomainPower, DomainUtilization, EnergyReport, SOC_ENVELOPE_MW};
-pub use governor::{govern, validate, GovernError, Governor, GovernorChoice, GovernorValidation};
+pub use governor::{
+    govern, validate, CertifiedChoice, GovernError, Governor, GovernorChoice, GovernorValidation,
+};
 pub use op_point::{OperatingPoint, VOLTAGE_GRID};

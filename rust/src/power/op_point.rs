@@ -8,8 +8,15 @@
 //! point can never carry a voltage/frequency pair the silicon model does
 //! not support. Construction validates every voltage against its curve
 //! (NaN and out-of-range rejected loudly, in the [`DvfsError`] style).
+//!
+//! The **uncore** domain (HyperBUS PHY + memory controller + DPLLC) is
+//! *not* on the voltage grid: it either stays coupled to the system
+//! clock (the default — the seed's single timebase, bit-identical) or is
+//! parked at a fixed frequency via [`OperatingPoint::with_uncore_mhz`] /
+//! [`OperatingPoint::decoupled_uncore`], in which case memory service
+//! time is wall-clock-invariant under core DVFS.
 
-use crate::soc::clock::{ClockTree, Domain};
+use crate::soc::clock::{ClockTree, Domain, UNCORE_MHZ};
 use crate::soc::power::{DvfsCurve, DvfsError, MAX_V, NOMINAL_V};
 
 /// The governor's voltage ladder: the paper's 0.6–1.1V sweep in 50mV
@@ -18,22 +25,36 @@ pub const VOLTAGE_GRID: [f64; 11] = [
     0.60, 0.65, 0.70, 0.75, 0.80, 0.85, 0.90, 0.95, 1.00, 1.05, 1.10,
 ];
 
-/// One DVFS operating point: a supply voltage per clock domain.
+/// One DVFS operating point: a supply voltage per voltage-scaled clock
+/// domain, plus the (optional) fixed uncore frequency.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct OperatingPoint {
     pub v_system: f64,
     pub v_vector: f64,
     pub v_amr: f64,
+    /// Fixed uncore (memory-subsystem) frequency in MHz. `None` keeps
+    /// the uncore coupled to the system clock — the seed's single
+    /// timebase, bit-identical to the pre-split model. The governor
+    /// never varies this: the uncore is excluded from the voltage grid.
+    pub uncore_mhz: Option<f64>,
 }
 
 impl OperatingPoint {
-    /// The curve a domain's voltage is validated against and its
-    /// frequency/power derived from.
+    /// The curve a voltage-scaled domain's voltage is validated against
+    /// and its frequency/power derived from. The uncore is not
+    /// voltage-scaled and has no curve (its power follows its clock
+    /// linearly — [`uncore_power_mw`]).
+    ///
+    /// [`uncore_power_mw`]: crate::soc::power::uncore_power_mw
     pub fn curve(d: Domain) -> DvfsCurve {
         match d {
             Domain::System => DvfsCurve::host(),
             Domain::Vector => DvfsCurve::vector(),
             Domain::Amr => DvfsCurve::amr(),
+            Domain::Uncore => panic!(
+                "the uncore domain is fixed-frequency: it has no DVFS \
+                 curve and is excluded from the voltage grid"
+            ),
         }
     }
 
@@ -44,7 +65,25 @@ impl OperatingPoint {
             v_system: Self::curve(Domain::System).validate_voltage(v_system)?,
             v_vector: Self::curve(Domain::Vector).validate_voltage(v_vector)?,
             v_amr: Self::curve(Domain::Amr).validate_voltage(v_amr)?,
+            uncore_mhz: None,
         })
+    }
+
+    /// Park the uncore at a fixed `mhz`, decoupling the memory
+    /// subsystem from the system voltage (validated: positive, finite).
+    pub fn with_uncore_mhz(mut self, mhz: f64) -> Result<Self, DvfsError> {
+        if !mhz.is_finite() || mhz <= 0.0 {
+            return Err(DvfsError::UncoreFrequencyInvalid { mhz });
+        }
+        self.uncore_mhz = Some(mhz);
+        Ok(self)
+    }
+
+    /// The paper's decoupled configuration: the uncore parked at the
+    /// fixed [`UNCORE_MHZ`] PHY clock regardless of the core voltages.
+    pub fn decoupled_uncore(self) -> Self {
+        self.with_uncore_mhz(UNCORE_MHZ)
+            .expect("UNCORE_MHZ is positive and finite")
     }
 
     /// Every domain at the same supply voltage.
@@ -67,37 +106,52 @@ impl OperatingPoint {
             Domain::System => self.v_system,
             Domain::Vector => self.v_vector,
             Domain::Amr => self.v_amr,
+            Domain::Uncore => panic!(
+                "the uncore domain is fixed-frequency: it carries no \
+                 supply-voltage knob"
+            ),
         }
     }
 
-    /// Replace one domain's voltage (validated).
+    /// Replace one voltage-scaled domain's voltage (validated).
     pub fn with_voltage(mut self, d: Domain, v: f64) -> Result<Self, DvfsError> {
         let v = Self::curve(d).validate_voltage(v)?;
         match d {
             Domain::System => self.v_system = v,
             Domain::Vector => self.v_vector = v,
             Domain::Amr => self.v_amr = v,
+            Domain::Uncore => unreachable!("curve() rejects the uncore domain"),
         }
         Ok(self)
     }
 
-    /// The PLL tree this point programs (curve-derived frequencies).
-    /// All cycle/nanosecond conversion goes through this tree
-    /// (`ClockDomain::cycles_to_ns`, `McTask::deadline_cycles`) — one
-    /// implementation of the sound-direction rounding, not two.
+    /// The PLL tree this point programs (curve-derived frequencies; the
+    /// uncore clock pinned to the system frequency when coupled, parked
+    /// at `uncore_mhz` when decoupled). All cycle/nanosecond conversion
+    /// goes through this tree (`ClockDomain::cycles_to_ns`,
+    /// `McTask::deadline_cycles`) — one implementation of the
+    /// sound-direction rounding, not two.
     pub fn clock_tree(&self) -> ClockTree {
-        ClockTree::at_voltages(self.v_system, self.v_vector, self.v_amr)
+        let tree = ClockTree::at_voltages(self.v_system, self.v_vector, self.v_amr);
+        match self.uncore_mhz {
+            Some(mhz) => tree.with_uncore_mhz(mhz),
+            None => tree,
+        }
     }
 
     /// Compact human-readable form for reports.
     pub fn describe(&self) -> String {
-        if self.v_system == self.v_vector && self.v_system == self.v_amr {
+        let core = if self.v_system == self.v_vector && self.v_system == self.v_amr {
             format!("{:.2}V", self.v_system)
         } else {
             format!(
                 "sys {:.2}V / vec {:.2}V / amr {:.2}V",
                 self.v_system, self.v_vector, self.v_amr
             )
+        };
+        match self.uncore_mhz {
+            Some(mhz) => format!("{core} (uncore {mhz:.0}MHz fixed)"),
+            None => core,
         }
     }
 }
@@ -153,5 +207,38 @@ mod tests {
         assert_eq!(OperatingPoint::nominal().describe(), "0.80V");
         let mixed = OperatingPoint::new(0.9, 0.6, 0.9).unwrap();
         assert_eq!(mixed.describe(), "sys 0.90V / vec 0.60V / amr 0.90V");
+        let dec = OperatingPoint::nominal().decoupled_uncore();
+        assert_eq!(dec.describe(), "0.80V (uncore 1000MHz fixed)");
+    }
+
+    #[test]
+    fn uncore_defaults_coupled_and_decouples_explicitly() {
+        // Coupled (default): the tree pins the uncore to the system
+        // clock — the seed's single timebase.
+        let coupled = OperatingPoint::uniform(0.6).unwrap().clock_tree();
+        assert!(!coupled.uncore_decoupled());
+        assert_eq!(coupled.uncore.freq_mhz, coupled.system.freq_mhz);
+        // Decoupled: the uncore stays at 1000MHz while the system domain
+        // drops to 350MHz — memory service is wall-clock-invariant.
+        let dec = OperatingPoint::uniform(0.6).unwrap().decoupled_uncore().clock_tree();
+        assert!(dec.uncore_decoupled());
+        assert_eq!(dec.uncore.freq_mhz, 1000.0);
+        assert_eq!(dec.system.freq_mhz, 350.0);
+        // At the 1.1V corner the decoupled uncore coincides with the
+        // system clock: the seed timebase is the pinned special case.
+        let peak = OperatingPoint::max_perf().decoupled_uncore().clock_tree();
+        assert!(!peak.uncore_decoupled());
+    }
+
+    #[test]
+    fn invalid_uncore_frequency_is_rejected() {
+        use crate::soc::power::DvfsError;
+        let op = OperatingPoint::nominal();
+        assert_eq!(
+            op.with_uncore_mhz(0.0).unwrap_err(),
+            DvfsError::UncoreFrequencyInvalid { mhz: 0.0 }
+        );
+        assert!(op.with_uncore_mhz(f64::NAN).is_err());
+        assert!(op.with_uncore_mhz(-500.0).is_err());
     }
 }

@@ -141,12 +141,26 @@ impl Completion {
 
 /// A target-side service model plugged into the crossbar.
 ///
-/// Contract per system cycle: the crossbar calls `can_accept` /
-/// `start` for queued bursts, then `tick` exactly once; completions are
-/// appended to `done`.
+/// Contract: the crossbar calls `can_accept` / `start` for queued
+/// bursts once per *system* cycle, then `tick` once per cycle of the
+/// target's own clock domain ([`TargetModel::domain`]); completions are
+/// appended to `done`. All `Cycle` arguments (`start`'s `now`, `tick`'s
+/// `now`, `next_event`, `fast_forward`) are in the target's *local*
+/// domain cycles — the crossbar converts at the boundary with an exact
+/// [`RateConverter`], which is the identity for system-domain targets
+/// and for a coupled uncore (the seed timebase).
+///
+/// [`RateConverter`]: crate::soc::clock::RateConverter
 pub trait TargetModel {
     /// Which target address space this model serves.
     fn target(&self) -> Target;
+
+    /// The clock domain this target's service timing is priced in.
+    /// System-domain targets (the default) tick in lock-step with the
+    /// master grid; uncore-domain targets tick on the uncore grid.
+    fn domain(&self) -> crate::soc::clock::Domain {
+        crate::soc::clock::Domain::System
+    }
 
     /// Whether a service slot is available for this burst *this cycle*.
     fn can_accept(&self, burst: &Burst) -> bool;
@@ -194,6 +208,13 @@ pub trait TargetModel {
     /// in exactly the state a naive run would reach at `to`.
     fn fast_forward(&mut self, from: Cycle, to: Cycle) {
         let _ = (from, to);
+    }
+
+    /// Cycles (of this target's own domain) spent non-idle so far — the
+    /// activity counter behind measured uncore utilization. Targets that
+    /// do not track it report 0.
+    fn busy_cycles(&self) -> u64 {
+        0
     }
 }
 

@@ -9,7 +9,7 @@
 use std::collections::VecDeque;
 
 use super::{Burst, Completion, InitiatorId, Target, TargetModel};
-use crate::soc::clock::Cycle;
+use crate::soc::clock::{ClockTree, Cycle, RateConverter};
 
 /// Per-initiator input queue.
 #[derive(Debug, Default)]
@@ -31,6 +31,13 @@ pub struct Crossbar {
     /// arbiters have — and that the WCET analysis assumes.
     rr: Vec<Vec<usize>>,
     targets: Vec<Box<dyn TargetModel>>,
+    /// Per-target edge converter from the target's clock domain to the
+    /// system master grid. Lockstep (the identity) until
+    /// [`Crossbar::set_clocks`] installs a tree with a decoupled uncore;
+    /// every boundary crossing — grant time, service ticks, completion
+    /// timestamps, event skips — goes through this, so the 1:1 case is
+    /// bit-identical to the single-timebase seed by construction.
+    rates: Vec<RateConverter>,
     /// Completed bursts this cycle (drained by the SoC).
     pub completions: Vec<Completion>,
     /// Total bursts granted per initiator (bandwidth accounting).
@@ -50,10 +57,12 @@ pub struct Crossbar {
 impl Crossbar {
     pub fn new(n_initiators: usize, targets: Vec<Box<dyn TargetModel>>) -> Self {
         let rr = targets.iter().map(|t| vec![0; t.lanes().max(1)]).collect();
+        let rates = vec![RateConverter::lockstep(); targets.len()];
         Self {
             queues: (0..n_initiators).map(|_| InputQueue::default()).collect(),
             queued: 0,
             rr,
+            rates,
             targets,
             completions: Vec::new(),
             granted_beats: vec![0; n_initiators],
@@ -96,6 +105,52 @@ impl Crossbar {
             .expect("unknown target")
     }
 
+    /// Program the per-target rate converters from a clock tree: each
+    /// target's grid follows its [`TargetModel::domain`]. Without this
+    /// call every target runs in lock-step with the system grid (the
+    /// seed's single timebase); a coupled tree installs the identity
+    /// converters, so behaviour is bit-identical either way.
+    pub fn set_clocks(&mut self, tree: &ClockTree) {
+        for (t_idx, target) in self.targets.iter().enumerate() {
+            self.rates[t_idx] = tree.converter(target.domain());
+        }
+    }
+
+    /// The installed converter for `t`'s domain (observability).
+    pub fn rate_of(&self, t: Target) -> RateConverter {
+        self.targets
+            .iter()
+            .position(|m| m.target() == t)
+            .map(|i| self.rates[i])
+            .expect("unknown target")
+    }
+
+    /// Advance target `t_idx` across system step `now`: one local tick
+    /// per edge of the target's own clock grid within `[now, now + 1)`,
+    /// with completion timestamps converted back to the system grid at
+    /// the boundary (a faster uncore ticks several times per step, a
+    /// slower one sometimes not at all; lock-step targets tick exactly
+    /// once, bit-identical to the single-timebase seed).
+    fn tick_target(&mut self, t_idx: usize, now: Cycle) {
+        let rate = self.rates[t_idx];
+        let target = &mut self.targets[t_idx];
+        if rate.is_lockstep() {
+            target.tick(now, &mut self.completions);
+            return;
+        }
+        let (lo, hi) = (rate.local_of(now), rate.local_of(now + 1));
+        if lo == hi {
+            return; // no local edge falls inside this system step
+        }
+        let before = self.completions.len();
+        for local in lo..hi {
+            target.tick(local, &mut self.completions);
+        }
+        for c in &mut self.completions[before..] {
+            c.finished_at = rate.to_system_edge(c.finished_at);
+        }
+    }
+
     /// One system cycle: grant + advance targets.
     pub fn tick(&mut self, now: Cycle) {
         let n_init = self.queues.len();
@@ -104,8 +159,8 @@ impl Crossbar {
         // EXPERIMENTS.md §Perf). The queued-burst counter makes this an
         // O(1) check instead of an O(n_initiators) scan per cycle.
         if self.queued == 0 {
-            for target in self.targets.iter_mut() {
-                target.tick(now, &mut self.completions);
+            for t_idx in 0..self.targets.len() {
+                self.tick_target(t_idx, now);
             }
             return;
         }
@@ -124,6 +179,9 @@ impl Crossbar {
         } else {
             'targets: for (t_idx, target) in self.targets.iter_mut().enumerate() {
                 let twhich = target.target();
+                // Grants happen on the system grid; a burst enters the
+                // target's service at the target-domain time of this step.
+                let local_now = self.rates[t_idx].local_of(now);
                 for lane in 0..self.rr[t_idx].len() {
                     let start = self.rr[t_idx][lane];
                     let mut granted_any = false;
@@ -143,7 +201,7 @@ impl Crossbar {
                         self.granted_beats[i] += burst.beats as u64;
                         let holds_w = burst.write && !burst.wb_buffered;
                         let beats = burst.beats as Cycle;
-                        target.start(burst, now);
+                        target.start(burst, local_now);
                         if !granted_any {
                             // Advance this lane's RR past the first
                             // grantee for fairness.
@@ -158,9 +216,9 @@ impl Crossbar {
                 }
             }
         }
-        // Service phase.
-        for target in self.targets.iter_mut() {
-            target.tick(now, &mut self.completions);
+        // Service phase: each target advances on its own clock grid.
+        for t_idx in 0..self.targets.len() {
+            self.tick_target(t_idx, now);
         }
     }
 
@@ -183,8 +241,18 @@ impl Crossbar {
             return Some(now);
         }
         let mut earliest: Option<Cycle> = None;
-        for target in &self.targets {
-            if let Some(t) = target.next_event(now) {
+        for (t_idx, target) in self.targets.iter().enumerate() {
+            let rate = self.rates[t_idx];
+            let local_now = rate.local_of(now);
+            if let Some(e) = target.next_event(local_now) {
+                // Convert the local-domain event to the system step that
+                // processes it (identity at lockstep), clamped to `now`.
+                let t = if rate.is_lockstep() {
+                    e
+                } else {
+                    rate.system_step_of(e.max(local_now))
+                };
+                let t = t.max(now);
                 earliest = crate::soc::clock::merge_event(earliest, t);
                 if t <= now {
                     break; // cannot get earlier than "this cycle"
@@ -194,10 +262,12 @@ impl Crossbar {
         earliest
     }
 
-    /// Replay a skipped quiescent window on every target model.
+    /// Replay a skipped quiescent window on every target model (each in
+    /// its own clock domain's cycles).
     pub fn fast_forward(&mut self, from: Cycle, to: Cycle) {
-        for target in self.targets.iter_mut() {
-            target.fast_forward(from, to);
+        for (t_idx, target) in self.targets.iter_mut().enumerate() {
+            let rate = self.rates[t_idx];
+            target.fast_forward(rate.local_of(from), rate.local_of(to));
         }
     }
 

@@ -1,14 +1,34 @@
-//! Clock domains and the cycle timebase.
+//! Clock domains and the multi-rate timebase.
 //!
-//! The SoC operates across three clock domains, each driven by a
-//! dedicated PLL (paper §II): the host/system domain, the vector-cluster
-//! domain and the AMR-cluster domain. The simulator steps a single
-//! *system* cycle counter; per-domain progress is derived from the
-//! domain's frequency ratio against the system clock, which is how the
-//! RTL's clock-domain crossings average out at the transaction level.
+//! The SoC operates across four clock domains (paper §II): the
+//! host/system domain, the vector-cluster domain and the AMR-cluster
+//! domain are each driven by a dedicated DVFS-scaled PLL; the **uncore**
+//! domain (HyperBUS PHY + HyperRAM memory controller + DPLLC service
+//! pipeline, plus the peripheral island) runs on its own fixed-frequency
+//! clock, decoupled from the voltage-scaled core domains.
+//!
+//! The simulator steps a single *system* cycle counter as its master
+//! grid. Cluster progress is derived from the domain's frequency ratio
+//! against the system clock inside the cluster FSMs (transaction-level
+//! CDC averaging). Uncore-domain targets are stepped on their *own*
+//! cycle grid by the crossbar: a [`RateConverter`] maps system edges to
+//! uncore edges exactly (integer rational arithmetic — no float drift
+//! over hundred-million-cycle runs), so with the uncore pinned to the
+//! system frequency the conversion is the identity and the seed's
+//! single-timebase behaviour is recovered bit-identically.
 
-/// Simulation time in system-clock cycles.
+/// Simulation time in clock cycles of some domain (the master counter
+/// `SocSim::now` is in *system* cycles).
 pub type Cycle = u64;
+
+/// The paper's fixed uncore frequency in MHz: the HyperBUS PHY and
+/// memory subsystem are clocked at the peak system frequency and stay
+/// there while the core domains voltage-scale — which is what makes
+/// memory service wall-clock-invariant under core DVFS. The
+/// single-timebase seed corresponds to the uncore *coupled* to the
+/// system clock (ratio 1), which remains the default; decoupling is the
+/// explicit opt-in of [`crate::power::OperatingPoint::with_uncore_mhz`].
+pub const UNCORE_MHZ: f64 = 1000.0;
 
 /// Merge a pending event time into an accumulator, keeping the earliest
 /// (shared by the event-driven `next_event` implementations).
@@ -19,15 +39,18 @@ pub fn merge_event(earliest: Option<Cycle>, t: Cycle) -> Option<Cycle> {
     })
 }
 
-/// The three PLL-driven clock domains (paper Fig. 1).
+/// The four clock domains (paper Fig. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Domain {
-    /// Host + interconnect + memory system ("system" clock).
+    /// Host cores + interconnect + TSU shapers ("system" clock).
     System,
     /// Dual-RVVU vector cluster.
     Vector,
     /// 12-core AMR integer cluster.
     Amr,
+    /// HyperBUS PHY + HyperRAM controller + DPLLC pipeline + peripheral
+    /// island — fixed-frequency, excluded from the DVFS voltage grid.
+    Uncore,
 }
 
 /// One clock domain's operating point.
@@ -66,27 +89,132 @@ impl ClockDomain {
     }
 }
 
-/// The PLL trio with the paper's nominal frequencies.
+/// Exact edge arithmetic between a local (target-domain) cycle grid and
+/// the system master grid: `num / den` is the local-over-system
+/// frequency ratio as a reduced integer rational, so repeated
+/// conversions can never accumulate float drift and the 1:1 case is the
+/// literal identity. The simulator's multi-rate stepping
+/// ([`crate::soc::axi::xbar::Crossbar`]) runs every boundary crossing
+/// (grant, service, completion, event skip) through one of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RateConverter {
+    num: u64,
+    den: u64,
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a.max(1)
+}
+
+impl RateConverter {
+    /// The identity converter (local grid == system grid) — the seed's
+    /// single timebase.
+    pub fn lockstep() -> Self {
+        Self { num: 1, den: 1 }
+    }
+
+    /// Converter for a local domain at `f_local` MHz against the system
+    /// clock at `f_sys` MHz. Frequencies are snapped to 1 kHz resolution
+    /// before reduction so curve-interpolated values stay exact.
+    pub fn new(f_local: f64, f_sys: f64) -> Self {
+        assert!(
+            f_local > 0.0 && f_sys > 0.0,
+            "rate converter needs positive frequencies"
+        );
+        let num = (f_local * 1e3).round() as u64;
+        let den = (f_sys * 1e3).round() as u64;
+        assert!(num > 0 && den > 0, "frequency below converter resolution");
+        let g = gcd(num, den);
+        Self {
+            num: num / g,
+            den: den / g,
+        }
+    }
+
+    /// True when the local grid is the system grid (identity).
+    pub fn is_lockstep(&self) -> bool {
+        self.num == self.den
+    }
+
+    /// Local cycles per system cycle (observability / bench metrics).
+    pub fn ratio(&self) -> f64 {
+        self.num as f64 / self.den as f64
+    }
+
+    /// Local edges elapsed strictly before system edge `sys`:
+    /// `floor(sys * num / den)`. The local cycles processed during
+    /// system step `s` are exactly `local_of(s) .. local_of(s + 1)`.
+    pub fn local_of(&self, sys: Cycle) -> Cycle {
+        (sys as u128 * self.num as u128 / self.den as u128) as Cycle
+    }
+
+    /// The system step during which local cycle `local` is processed:
+    /// the unique `s` with `local_of(s) <= local < local_of(s + 1)`.
+    pub fn system_step_of(&self, local: Cycle) -> Cycle {
+        // local_of(s) <= local  <=>  s * num < (local + 1) * den
+        // so the covering step is ceil((local + 1) * den / num) - 1.
+        let n = (local as u128 + 1) * self.den as u128;
+        (n.div_ceil(self.num as u128) - 1) as Cycle
+    }
+
+    /// The system edge at or after local edge `local` — the timestamp a
+    /// local-domain event carries once it crosses into the system
+    /// domain (identity at lockstep): `ceil(local * den / num)`.
+    pub fn to_system_edge(&self, local: Cycle) -> Cycle {
+        let n = local as u128 * self.den as u128;
+        n.div_ceil(self.num as u128) as Cycle
+    }
+}
+
+/// The PLL quartet: the three voltage-scaled core-domain PLLs plus the
+/// fixed-frequency uncore clock.
 #[derive(Debug, Clone, Copy)]
 pub struct ClockTree {
     pub system: ClockDomain,
     pub vector: ClockDomain,
     pub amr: ClockDomain,
+    /// The uncore (memory-subsystem) clock. Coupled trees pin it to the
+    /// system frequency (the seed's single timebase); decoupled trees
+    /// park it at a fixed frequency regardless of the system voltage.
+    pub uncore: ClockDomain,
 }
 
 impl ClockTree {
     /// Derive the PLL trio from the published DVFS curves at per-domain
     /// supply voltages — the single source of truth for every operating
     /// point (the governor's [`OperatingPoint`] builds its tree here).
+    /// The uncore clock is *coupled* (pinned to the derived system
+    /// frequency); use [`ClockTree::with_uncore_mhz`] to decouple it.
     ///
     /// [`OperatingPoint`]: crate::power::OperatingPoint
     pub fn at_voltages(v_system: f64, v_vector: f64, v_amr: f64) -> Self {
         use crate::soc::power::DvfsCurve;
+        let system = ClockDomain::new(Domain::System, DvfsCurve::host().freq_mhz(v_system));
+        let uncore = ClockDomain::new(Domain::Uncore, system.freq_mhz);
         Self {
-            system: ClockDomain::new(Domain::System, DvfsCurve::host().freq_mhz(v_system)),
+            system,
+            uncore,
             vector: ClockDomain::new(Domain::Vector, DvfsCurve::vector().freq_mhz(v_vector)),
             amr: ClockDomain::new(Domain::Amr, DvfsCurve::amr().freq_mhz(v_amr)),
         }
+    }
+
+    /// The same tree with the uncore PLL parked at `freq_mhz` (fixed,
+    /// independent of the system voltage).
+    pub fn with_uncore_mhz(mut self, freq_mhz: f64) -> Self {
+        self.uncore = ClockDomain::new(Domain::Uncore, freq_mhz);
+        self
+    }
+
+    /// Whether the uncore runs on its own grid (decoupled from the
+    /// system clock).
+    pub fn uncore_decoupled(&self) -> bool {
+        self.uncore.freq_mhz != self.system.freq_mhz
     }
 
     /// Nominal 0.8V operating point, curve-sourced: vector 550MHz and
@@ -112,6 +240,7 @@ impl ClockTree {
             Domain::System => &self.system,
             Domain::Vector => &self.vector,
             Domain::Amr => &self.amr,
+            Domain::Uncore => &self.uncore,
         }
     }
 
@@ -120,6 +249,15 @@ impl ClockTree {
     /// cycles elapsed per system cycle).
     pub fn ratio_to_system(&self, d: Domain) -> f64 {
         self.get(d).freq_mhz / self.system.freq_mhz
+    }
+
+    /// The exact edge converter from `d`'s grid to the system grid.
+    pub fn converter(&self, d: Domain) -> RateConverter {
+        if self.get(d).freq_mhz == self.system.freq_mhz {
+            RateConverter::lockstep()
+        } else {
+            RateConverter::new(self.get(d).freq_mhz, self.system.freq_mhz)
+        }
     }
 }
 
@@ -170,6 +308,11 @@ mod tests {
         let t = ClockTree::nominal();
         assert_eq!(t.get(Domain::Vector).domain, Domain::Vector);
         assert!(t.get(Domain::Amr).freq_mhz > 0.0);
+        // The default tree couples the uncore to the system clock — the
+        // seed's single timebase.
+        assert_eq!(t.get(Domain::Uncore).freq_mhz, t.system.freq_mhz);
+        assert!(!t.uncore_decoupled());
+        assert!(t.converter(Domain::Uncore).is_lockstep());
     }
 
     #[test]
@@ -196,5 +339,66 @@ mod tests {
         assert!((t.ratio_to_system(Domain::Amr) - 0.9).abs() < 1e-12);
         let low = ClockTree::at_voltages(0.6, 0.6, 0.6);
         assert!((low.ratio_to_system(Domain::Vector) - 250.0 / 350.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn decoupled_uncore_keeps_its_frequency() {
+        let t = ClockTree::at_voltages(0.6, 0.6, 0.6).with_uncore_mhz(UNCORE_MHZ);
+        assert!(t.uncore_decoupled());
+        assert_eq!(t.uncore.freq_mhz, 1000.0);
+        assert!((t.ratio_to_system(Domain::Uncore) - 1000.0 / 350.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rate_converter_identity_at_lockstep() {
+        let r = RateConverter::lockstep();
+        for s in [0u64, 1, 7, 1_000_000_007] {
+            assert_eq!(r.local_of(s), s);
+            assert_eq!(r.system_step_of(s), s);
+        }
+        assert!(r.is_lockstep());
+        // Equal frequencies reduce to the identity even when derived
+        // from interpolated (non-integer-MHz) values.
+        let pinned = RateConverter::new(676.4705882352941, 676.4705882352941);
+        assert!(pinned.is_lockstep());
+        assert_eq!(pinned.local_of(123_456_789), 123_456_789);
+    }
+
+    #[test]
+    fn rate_converter_partitions_local_cycles_exactly() {
+        // Every local cycle is processed in exactly one system step, for
+        // faster and slower local grids alike (including non-integer
+        // ratios such as 1000/610).
+        for (fl, fs) in [(1000.0, 350.0), (1000.0, 610.0), (350.0, 1000.0), (610.0, 915.0)] {
+            let r = RateConverter::new(fl, fs);
+            let mut covered: Cycle = 0;
+            for s in 0..10_000u64 {
+                let lo = r.local_of(s);
+                let hi = r.local_of(s + 1);
+                assert_eq!(lo, covered, "gap or overlap at step {s} ({fl}/{fs})");
+                for l in lo..hi {
+                    assert_eq!(r.system_step_of(l), s, "local {l} misplaced ({fl}/{fs})");
+                }
+                covered = hi;
+            }
+            // Long-run total matches the exact rational count.
+            assert_eq!(r.local_of(10_000), covered);
+            let expect = (10_000f64 * fl / fs).floor() as u64;
+            assert!(
+                (covered as i64 - expect as i64).abs() <= 1,
+                "drift: {covered} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn rate_converter_faster_local_grid_counts_multiple_edges() {
+        let r = RateConverter::new(1000.0, 500.0); // 2 local edges per step
+        assert_eq!(r.local_of(3) - r.local_of(2), 2);
+        assert_eq!(r.system_step_of(5), 2);
+        let slow = RateConverter::new(500.0, 1000.0); // 1 edge per 2 steps
+        assert_eq!(slow.local_of(1) - slow.local_of(0), 0);
+        assert_eq!(slow.local_of(2) - slow.local_of(0), 1);
+        assert_eq!(slow.system_step_of(0), 1, "local 0 processed in step 1");
     }
 }

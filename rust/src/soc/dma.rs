@@ -70,6 +70,14 @@ pub struct DmaStats {
     pub loops: u64,
     /// Cycles spent with at least one transfer outstanding.
     pub busy_cycles: u64,
+    /// Cycle the first burst of the programmed job was issued (`None`
+    /// until something has been put on the bus).
+    pub first_issue_at: Option<Cycle>,
+    /// Cycle a *finite* job drained its last transfer (0 while running
+    /// or looping) — with `first_issue_at`, the makespan feed that lets
+    /// `TaskReport.makespan` be nonzero for finite DMA jobs so measured
+    /// system-domain utilization stops undercounting them.
+    pub drained_at: Cycle,
 }
 
 /// The engine.
@@ -133,6 +141,17 @@ impl DmaEngine {
         }
     }
 
+    /// First-issue-to-drain span of a finished finite job (0 while
+    /// running, for looping jobs, or before anything was issued).
+    pub fn makespan(&self) -> Cycle {
+        if self.stats.drained_at == 0 {
+            return 0;
+        }
+        self.stats
+            .drained_at
+            .saturating_sub(self.stats.first_issue_at.unwrap_or(0))
+    }
+
     fn chunk_beats_at(job: &DmaJob, offset: u64) -> u32 {
         let left = job.bytes - offset;
         let beats_left = left.div_ceil(super::axi::BEAT_BYTES) as u32;
@@ -187,6 +206,9 @@ impl DmaEngine {
                 .with_tag(self.tag_seq);
             b.issued_at = now;
             tsu.submit(b, now);
+            if self.stats.first_issue_at.is_none() {
+                self.stats.first_issue_at = Some(now);
+            }
             self.in_flight.insert(self.tag_seq, Side::Read { offset, beats });
             self.next_offset += beats as u64 * super::axi::BEAT_BYTES;
         }
@@ -232,6 +254,9 @@ impl DmaEngine {
         self.stats.bytes_moved += bytes;
         self.stats.chunks += 1;
         self.last_activity = now;
+        if self.stats.drained_at == 0 && self.done() {
+            self.stats.drained_at = now;
+        }
     }
 }
 
@@ -288,6 +313,30 @@ mod tests {
         // bytes_moved counts logical bytes copied once per chunk pair.
         assert_eq!(e.stats.bytes_moved, 1024);
         assert_eq!(e.stats.chunks, 1024 / (16 * 8));
+    }
+
+    #[test]
+    fn finite_job_records_first_issue_to_drain_makespan() {
+        let mut e = DmaEngine::new(InitiatorId(0));
+        let mut tsu = Tsu::new(TsuConfig::passthrough());
+        e.program(job(1024, false));
+        assert_eq!(e.makespan(), 0, "no makespan before the job drains");
+        drive(&mut e, &mut tsu, 4000);
+        assert!(e.done());
+        assert_eq!(e.stats.first_issue_at, Some(0), "issues on the first tick");
+        let span = e.makespan();
+        assert!(span > 0 && span < 4000, "span={span}");
+        assert_eq!(span, e.stats.drained_at, "first issue at cycle 0");
+    }
+
+    #[test]
+    fn looping_job_never_reports_a_makespan() {
+        let mut e = DmaEngine::new(InitiatorId(0));
+        let mut tsu = Tsu::new(TsuConfig::passthrough());
+        e.program(job(256, true));
+        drive(&mut e, &mut tsu, 3000);
+        assert_eq!(e.stats.drained_at, 0);
+        assert_eq!(e.makespan(), 0);
     }
 
     #[test]

@@ -117,6 +117,12 @@ impl Dcspm {
     /// per cycle plus the response edge; a conflicting stream on the
     /// other port can steal every other beat slot (priority alternates
     /// by cycle parity), doubling the worst case.
+    ///
+    /// Owning clock domain: **system**. The DCSPM is the tightly-coupled
+    /// on-chip L2, clocked with the host/interconnect domain (unlike the
+    /// HyperRAM/DPLLC path, which lives in the fixed-frequency uncore) —
+    /// so this cost scales with the system voltage, and the bound layer
+    /// converts it to wall-clock through the system clock.
     pub fn worst_burst_cycles(beats: u32, conflict_possible: bool) -> Cycle {
         let b = beats as Cycle;
         (if conflict_possible { 2 * b } else { b }) + 1

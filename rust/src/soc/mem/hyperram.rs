@@ -14,10 +14,17 @@
 //! point that makes an unregulated DMA catastrophic for a TCT (Fig. 6a).
 
 use super::super::axi::{Burst, Completion, Target, TargetModel};
-use super::super::clock::Cycle;
+use super::super::clock::{Cycle, Domain};
 use super::dpllc::{Access, Dpllc, DpllcConfig};
 
-/// Deterministic HyperBUS timing in system cycles.
+/// Deterministic HyperBUS timing in **uncore cycles**.
+///
+/// The HyperBUS PHY, the memory controller and the DPLLC pipeline live
+/// in the fixed-frequency uncore clock domain ([`Domain::Uncore`]):
+/// these constants do not stretch when the core domains voltage-scale.
+/// On the seed's single timebase (uncore coupled to the system clock)
+/// uncore cycles and system cycles coincide, so every number below reads
+/// exactly as it did before the domain split.
 #[derive(Debug, Clone, Copy)]
 pub struct HyperRamTiming {
     /// Command + access latency for a line whose row is not open.
@@ -60,15 +67,17 @@ impl HyperRamTiming {
         1 + (lines - 1).div_ceil(per_row)
     }
 
-    /// WCET service model: the most channel cycles `lines` sequential
-    /// line fetches served back to back can take — the first line of
-    /// each spanned row pays the full row open, the rest row-hit. With
-    /// `dirty_possible` every fill may additionally drain a dirty victim
-    /// (a symmetric write, paper-deterministic like the fill itself).
+    /// WCET service model: the most channel cycles (uncore domain)
+    /// `lines` sequential line fetches served back to back can take —
+    /// the first line of each spanned row pays the full row open, the
+    /// rest row-hit. With `dirty_possible` every fill may additionally
+    /// drain a dirty victim (a symmetric write, paper-deterministic like
+    /// the fill itself).
     ///
     /// This is the per-target worst-case characterization the `wcet`
     /// bound engine composes with TSU arrival curves and crossbar
-    /// arbitration bounds.
+    /// arbitration bounds; the bound layer converts it to wall-clock
+    /// through the uncore clock, never the system clock.
     pub fn worst_lines_cost(&self, lines: u64, line_bytes: u64, dirty_possible: bool) -> Cycle {
         if lines == 0 {
             return 0;
@@ -91,6 +100,9 @@ pub struct PathStats {
     pub row_hits: u64,
     pub row_misses: u64,
     pub bursts: u64,
+    /// Uncore cycles with work in flight (queue, channel or hit port) —
+    /// the measured-utilization feed for the uncore power domain.
+    pub busy_cycles: u64,
 }
 
 #[derive(Debug)]
@@ -234,6 +246,16 @@ impl TargetModel for HyperramPath {
         Target::Hyperram
     }
 
+    /// DPLLC + HyperBUS belong to the fixed-frequency uncore domain: the
+    /// crossbar steps this model on the uncore cycle grid.
+    fn domain(&self) -> Domain {
+        Domain::Uncore
+    }
+
+    fn busy_cycles(&self) -> u64 {
+        self.stats.busy_cycles
+    }
+
     /// Two arbitration lanes: the parallel LLC hit port and the channel
     /// command queue. Without the split, continuous hit-port grants
     /// would re-park a shared round-robin pointer and let one initiator
@@ -284,6 +306,9 @@ impl TargetModel for HyperramPath {
     }
 
     fn tick(&mut self, now: Cycle, done: &mut Vec<Completion>) {
+        if !self.idle() {
+            self.stats.busy_cycles += 1;
+        }
         // Hit port completes independently of the channel.
         if let Some((b, t)) = &self.hit_port {
             if now + 1 >= *t {
@@ -347,6 +372,16 @@ impl TargetModel for HyperramPath {
             None => {}
         }
         earliest
+    }
+
+    /// Replay the per-cycle busy accounting over a skipped window: the
+    /// path's occupancy is constant across a quiescent window (a queued
+    /// burst with a free channel wakes the very next cycle, so skipped
+    /// windows only ever cover a static in-service or fully-idle state).
+    fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        if !self.idle() {
+            self.stats.busy_cycles += to - from;
+        }
     }
 }
 

@@ -1,21 +1,26 @@
 //! Constant-latency peripheral region (UART/SPI/GPIO/... of Fig. 1).
 //!
 //! Single outstanding transaction, fixed access latency — enough to model
-//! register-file style peripheral traffic in the scenarios.
+//! register-file style peripheral traffic in the scenarios. The
+//! peripheral island sits on the fixed-frequency uncore clock with the
+//! HyperBUS PHY: its access latency is a device property, priced in
+//! **uncore cycles** and invariant under core DVFS.
 
 use super::super::axi::{Burst, Completion, Target, TargetModel};
-use super::super::clock::Cycle;
+use super::super::clock::{Cycle, Domain};
 
 pub struct Peripheral {
     latency: Cycle,
     current: Option<(Burst, Cycle)>,
     pub accesses: u64,
+    /// Uncore cycles with a transaction in flight (activity counter).
+    pub busy: u64,
 }
 
 impl Peripheral {
-    /// Register-file access latency the coordinator programs
-    /// (`Scheduler::targets`, `SocSim::carfield_targets`) — also the
-    /// value the WCET engine composes with.
+    /// Register-file access latency (uncore cycles) the coordinator
+    /// programs (`Scheduler::targets`, `SocSim::carfield_targets`) —
+    /// also the value the WCET engine composes with.
     pub const DEFAULT_LATENCY: Cycle = 20;
 
     pub fn new(latency: Cycle) -> Self {
@@ -23,10 +28,12 @@ impl Peripheral {
             latency,
             current: None,
             accesses: 0,
+            busy: 0,
         }
     }
 
-    /// WCET service model: fixed access latency plus one cycle per beat.
+    /// WCET service model: fixed access latency plus one uncore cycle
+    /// per beat.
     pub fn worst_burst_cycles(&self, beats: u32) -> Cycle {
         self.latency + beats as Cycle
     }
@@ -35,6 +42,15 @@ impl Peripheral {
 impl TargetModel for Peripheral {
     fn target(&self) -> Target {
         Target::Peripheral
+    }
+
+    /// The peripheral island shares the fixed uncore clock.
+    fn domain(&self) -> Domain {
+        Domain::Uncore
+    }
+
+    fn busy_cycles(&self) -> u64 {
+        self.busy
     }
 
     fn can_accept(&self, _burst: &Burst) -> bool {
@@ -49,6 +65,7 @@ impl TargetModel for Peripheral {
 
     fn tick(&mut self, now: Cycle, done: &mut Vec<Completion>) {
         if let Some((b, t)) = &self.current {
+            self.busy += 1;
             if now + 1 >= *t {
                 done.push(Completion::of(b, *t));
                 self.current = None;
@@ -65,6 +82,14 @@ impl TargetModel for Peripheral {
         self.current
             .as_ref()
             .map(|(_, done_at)| done_at.saturating_sub(1).max(now))
+    }
+
+    /// Occupancy is static across a quiescent window; replay the
+    /// per-cycle busy accounting.
+    fn fast_forward(&mut self, from: Cycle, to: Cycle) {
+        if self.current.is_some() {
+            self.busy += to - from;
+        }
     }
 }
 

@@ -178,6 +178,18 @@ impl SocSim {
         self.ports[id.0 as usize].1.reconfigure(cfg);
     }
 
+    /// Program the multi-rate timebase from a clock tree: every crossbar
+    /// target steps on its own domain's cycle grid (the uncore targets
+    /// decouple from the system clock when the tree says so). Without
+    /// this call — or with a coupled tree — every converter is the
+    /// identity and stepping is bit-identical to the single-timebase
+    /// seed. Initiators (host cores, DMA, cluster FSMs) stay on the
+    /// system grid; clusters scale their compute internally via
+    /// `freq_ratio`, exactly as before.
+    pub fn set_clocks(&mut self, tree: &clock::ClockTree) {
+        self.xbar.set_clocks(tree);
+    }
+
     /// Borrow an attached initiator back as concrete type `T`.
     pub fn initiator_mut<T: 'static>(&mut self, id: InitiatorId) -> &mut T {
         self.ports[id.0 as usize]

@@ -21,6 +21,26 @@ pub const NOMINAL_V: f64 = 0.8;
 /// Peak supply voltage (the 1.1V max-performance corner).
 pub const MAX_V: f64 = 1.1;
 
+/// Uncore (HyperBUS PHY + memory controller + DPLLC) dynamic power per
+/// MHz of its clock at full activity — sized so the fixed 1GHz PHY
+/// point burns 25mW active, a realistic figure for a 400MB/s 8b-DDR
+/// HyperBUS PHY plus its controller/LLC pipeline. The uncore is not
+/// voltage-scaled, so there is no `V^alpha` term: power follows its
+/// clock (the system clock when coupled, the fixed PHY clock when
+/// decoupled) linearly, like any fixed-voltage CMOS block.
+pub const UNCORE_MW_PER_MHZ: f64 = 0.025;
+/// Uncore retention/idle floor in mW (PHY bias + controller clock gate).
+pub const UNCORE_IDLE_MW: f64 = 2.0;
+
+/// Uncore power at `freq_mhz` with an activity factor in [0, 1]
+/// (validated like the curve-based models: NaN/out-of-range utilization
+/// is rejected loudly).
+pub fn uncore_power_mw(freq_mhz: f64, util: f64) -> f64 {
+    let util = DvfsCurve::validate_util(util)
+        .unwrap_or_else(|e| panic!("invalid DVFS request: {e}"));
+    UNCORE_MW_PER_MHZ * freq_mhz * util + UNCORE_IDLE_MW
+}
+
 /// Absolute slack accepted on range checks so voltages assembled by
 /// float arithmetic (grid steps, interpolation) are not rejected for
 /// representation error.
@@ -45,6 +65,8 @@ pub enum DvfsError {
     UtilizationNotFinite,
     /// Activity factor outside [0, 1].
     UtilizationOutOfRange { util: f64 },
+    /// Requested fixed uncore frequency is NaN, infinite or non-positive.
+    UncoreFrequencyInvalid { mhz: f64 },
 }
 
 impl std::fmt::Display for DvfsError {
@@ -69,6 +91,10 @@ impl std::fmt::Display for DvfsError {
             DvfsError::UtilizationOutOfRange { util } => write!(
                 f,
                 "activity/utilization factor {util:.3} is outside [0, 1]"
+            ),
+            DvfsError::UncoreFrequencyInvalid { mhz } => write!(
+                f,
+                "fixed uncore frequency {mhz}MHz is not a positive finite value"
             ),
         }
     }
@@ -362,10 +388,27 @@ mod tests {
     #[test]
     fn soc_envelope_at_nominal() {
         // Sum of cluster powers at nominal 0.8V stays within the 1.2W
-        // envelope the paper claims.
+        // envelope the paper claims — uncore included.
         let total = DvfsCurve::amr().power_at_v(0.8, 1.0)
             + DvfsCurve::vector().power_at_v(0.8, 1.0)
-            + DvfsCurve::host().power_at_v(0.8, 1.0);
+            + DvfsCurve::host().power_at_v(0.8, 1.0)
+            + uncore_power_mw(1000.0, 1.0);
         assert!(total < 1200.0, "total={total}mW exceeds envelope");
+    }
+
+    #[test]
+    fn uncore_power_follows_its_clock_linearly() {
+        assert_eq!(uncore_power_mw(1000.0, 0.0), UNCORE_IDLE_MW);
+        assert_eq!(uncore_power_mw(1000.0, 1.0), 25.0 + UNCORE_IDLE_MW);
+        // Coupled at the 350MHz low-voltage system clock: the memory
+        // path's dynamic power shrinks with it (no V^alpha term).
+        assert_eq!(uncore_power_mw(350.0, 1.0), 8.75 + UNCORE_IDLE_MW);
+        assert!(uncore_power_mw(1000.0, 0.5) < uncore_power_mw(1000.0, 1.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "outside [0, 1]")]
+    fn uncore_power_rejects_bad_utilization() {
+        let _ = uncore_power_mw(1000.0, 1.5);
     }
 }

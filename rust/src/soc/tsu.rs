@@ -17,6 +17,14 @@
 //! All three are runtime-(re)configurable — the coordinator programs them
 //! when criticality mixes change (paper: "software-programmable ... at
 //! zero performance overhead").
+//!
+//! Owning clock domain: **system**. The TSUs sit at each initiator's bus
+//! entry, clocked with the host/interconnect domain — so `tru_period`
+//! and the arrival curve of [`TsuConfig::max_beats_in_window`] are
+//! system-clock cycles. That keeps arrival curves frequency-invariant
+//! *in cycles* across DVFS points (the governor's domain-flooring
+//! argument), while the uncore split makes the *service* side of the
+//! bound wall-clock-invariant instead.
 
 use std::collections::VecDeque;
 

@@ -4,6 +4,30 @@
 //! soundness (`measured <= bound`) against 1200 randomized mixes and
 //! the fig6a/fig6b grids, and for tightness (`bound <= 2x measured`) on
 //! the TSU-regulated rows.
+//!
+//! # Multi-domain composition
+//!
+//! Every timed term belongs to an explicit clock domain and bounds are
+//! carried as a per-domain [`CostSplit`]:
+//!
+//! * **system cycles** — think/compute time, TSU shaping delays,
+//!   pipeline edges, W-channel holds, DCSPM service;
+//! * **uncore cycles** — HyperRAM/DPLLC service
+//!   ([`HyperRamTiming::worst_lines_cost`]) and peripheral access, which
+//!   run on the fixed uncore clock and do not stretch under core DVFS.
+//!
+//! On the single-timebase seed (no operating point, or a coupled
+//! uncore) the two grids coincide and all arithmetic is bit-identical to
+//! the original cycles-only engine. With a *decoupled* uncore the
+//! busy-window fixed point iterates in wall-clock nanoseconds (arrival
+//! windows converted to system cycles per-resource, service priced
+//! through the uncore clock) and [`TaskBound::completion_ns`] is the
+//! exact per-domain sum — not a post-hoc single-clock conversion —
+//! which is what makes memory-bound completion bounds wall-clock-flat
+//! as the core voltage drops. Each uncore service activation is
+//! additionally charged one uncore plus one system cycle of CDC
+//! synchronization margin, covering the simulator's exact edge
+//! conversions at the initiator->crossbar->target boundary.
 
 use crate::coordinator::Scenario;
 use crate::soc::axi::xbar::Crossbar;
@@ -17,7 +41,7 @@ use crate::soc::mem::HyperRamTiming;
 use super::model::{models_of, InitiatorModel, StreamModel, TaskShape};
 
 /// Pipeline edges budget per transaction: issue, grant, service start
-/// and response delivery each cost at most one cycle.
+/// and response delivery each cost at most one cycle (system domain).
 pub const EDGES: Cycle = 4;
 /// DPLLC / L1 line size (bytes) — constant across the Carfield models
 /// (asserted against `DpllcConfig::carfield()` in [`analyze`]).
@@ -60,31 +84,107 @@ impl Resource {
     }
 }
 
-/// Bounds for one time-critical task.
+/// A bound decomposed into per-clock-domain cycle components. The sum
+/// is only meaningful through a clock tree (or on the lock-step seed
+/// timebase, where the grids coincide and the plain total is exact).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CostSplit {
+    /// System-domain cycles (think/compute, edges, TSU, W holds, DCSPM).
+    pub system: Cycle,
+    /// Uncore-domain cycles (HyperRAM/DPLLC channel, peripheral).
+    pub uncore: Cycle,
+}
+
+impl CostSplit {
+    pub const ZERO: CostSplit = CostSplit { system: 0, uncore: 0 };
+
+    pub fn sys(c: Cycle) -> Self {
+        Self { system: c, uncore: 0 }
+    }
+
+    pub fn unc(c: Cycle) -> Self {
+        Self { system: 0, uncore: c }
+    }
+
+    pub fn plus(self, o: Self) -> Self {
+        Self {
+            system: self.system + o.system,
+            uncore: self.uncore + o.uncore,
+        }
+    }
+
+    pub fn times(self, n: u64) -> Self {
+        Self {
+            system: self.system * n,
+            uncore: self.uncore * n,
+        }
+    }
+
+    /// The plain cycle total — exact only on the lock-step timebase
+    /// (seed semantics, where uncore cycles *are* system cycles).
+    pub fn lockstep_total(&self) -> Cycle {
+        self.system + self.uncore
+    }
+
+    /// Exact wall-clock value: each component converted through its own
+    /// domain's clock, then summed.
+    pub fn ns(&self, clocks: &ClockTree) -> f64 {
+        clocks.system.cycles_to_ns(self.system) + clocks.uncore.cycles_to_ns(self.uncore)
+    }
+
+    /// Sound system-cycle equivalent for cycle-domain comparisons
+    /// (admission against `McTask::deadline_cycles`): uncore cycles
+    /// convert through the tree rounded *up*, so a bound that fits a
+    /// cycle budget provably fits it in wall clock too. Without a tree
+    /// (or with a coupled uncore) the grids coincide and the total is
+    /// exact, bit-identical to the seed engine.
+    pub fn system_cycles(&self, clocks: Option<&ClockTree>) -> Cycle {
+        match clocks {
+            Some(t) if t.uncore_decoupled() => {
+                self.system + t.uncore.to_system(self.uncore, &t.system)
+            }
+            _ => self.lockstep_total(),
+        }
+    }
+}
+
+/// Bounds for one time-critical task, per clock domain.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskBound {
     pub task: String,
     /// Worst-case latency of a single memory transaction.
-    pub mem_bound: Cycle,
+    pub mem_bound: CostSplit,
     pub mem_binding: Resource,
     /// Worst-case completion time (`None` for endless workloads).
-    pub completion_bound: Option<Cycle>,
+    pub completion_bound: Option<CostSplit>,
     pub completion_binding: Resource,
 }
 
 impl TaskBound {
-    /// Completion bound as wall-clock nanoseconds at an operating
-    /// point's clock tree — the DVFS governor's currency. Bounds are
-    /// computed in system cycles, so one analysis re-prices in
-    /// microseconds at every voltage candidate.
-    pub fn completion_ns(&self, clocks: &ClockTree) -> Option<f64> {
-        self.completion_bound
-            .map(|c| clocks.system.cycles_to_ns(c))
+    /// Completion bound in system cycles at the scenario's clocks (the
+    /// admission test's currency). Sound: uncore components round up.
+    pub fn completion_cycles(&self, clocks: Option<&ClockTree>) -> Option<Cycle> {
+        self.completion_bound.map(|c| c.system_cycles(clocks))
     }
 
-    /// Memory-latency bound in nanoseconds at `clocks`.
+    /// Memory-latency bound in system cycles at the scenario's clocks.
+    pub fn mem_cycles(&self, clocks: Option<&ClockTree>) -> Cycle {
+        self.mem_bound.system_cycles(clocks)
+    }
+
+    /// Completion bound as wall-clock nanoseconds at an operating
+    /// point's clock tree — the DVFS governor's currency. *Exact*: each
+    /// domain's cycles convert through their own clock and the results
+    /// sum in wall-clock, so a decoupled uncore's service time does not
+    /// falsely stretch with the system voltage.
+    pub fn completion_ns(&self, clocks: &ClockTree) -> Option<f64> {
+        self.completion_bound.map(|c| c.ns(clocks))
+    }
+
+    /// Memory-latency bound in nanoseconds at `clocks` (exact
+    /// per-domain composition, like [`TaskBound::completion_ns`]).
     pub fn mem_ns(&self, clocks: &ClockTree) -> f64 {
-        clocks.system.cycles_to_ns(self.mem_bound)
+        self.mem_bound.ns(clocks)
     }
 }
 
@@ -105,6 +205,93 @@ impl WcetReport {
     }
 }
 
+/// How a scenario's bounds are priced for comparison and for the
+/// busy-window fixed point.
+#[derive(Debug, Clone, Copy)]
+enum Pricing {
+    /// Single timebase (no operating point, or a coupled uncore): bound
+    /// units are system cycles and every formula is bit-identical to
+    /// the seed's cycles-only engine.
+    Lockstep,
+    /// Decoupled uncore: bound units are wall-clock nanoseconds; each
+    /// domain's cycles convert through its own clock (the same
+    /// [`ClockDomain`] conversions — and rounding directions — the rest
+    /// of the stack uses).
+    ///
+    /// [`ClockDomain`]: crate::soc::clock::ClockDomain
+    WallClock {
+        sys: crate::soc::clock::ClockDomain,
+        unc: crate::soc::clock::ClockDomain,
+    },
+}
+
+impl Pricing {
+    fn of(scenario: &Scenario) -> Self {
+        match scenario.clocks() {
+            Some(t) if t.uncore_decoupled() => Pricing::WallClock {
+                sys: t.system,
+                unc: t.uncore,
+            },
+            _ => Pricing::Lockstep,
+        }
+    }
+
+    /// System cycles -> bound units.
+    fn sys(&self, c: f64) -> f64 {
+        match self {
+            Pricing::Lockstep => c,
+            Pricing::WallClock { sys, .. } => sys.cycles_to_ns(1) * c,
+        }
+    }
+
+    /// Uncore cycles -> bound units.
+    fn unc(&self, c: f64) -> f64 {
+        match self {
+            Pricing::Lockstep => c,
+            Pricing::WallClock { unc, .. } => unc.cycles_to_ns(1) * c,
+        }
+    }
+
+    /// Scalar value of a split in bound units (for comparisons).
+    fn units(&self, c: CostSplit) -> f64 {
+        self.sys(c.system as f64) + self.unc(c.uncore as f64)
+    }
+
+    /// A window in bound units, as the system-cycle count the TSU
+    /// arrival curves consume — [`ClockDomain::ns_to_cycles`] rounds
+    /// up, so no reachable arrival is ever excluded.
+    ///
+    /// [`ClockDomain::ns_to_cycles`]: crate::soc::clock::ClockDomain::ns_to_cycles
+    fn window_sys_cycles(&self, units: f64) -> Cycle {
+        match self {
+            Pricing::Lockstep => units as Cycle,
+            Pricing::WallClock { sys, .. } => sys.ns_to_cycles(units),
+        }
+    }
+
+    /// CDC synchronization margin charged per uncore service activation
+    /// when the grids are decoupled: entry sync to the next uncore edge
+    /// plus completion visibility at the next system edge. Zero on the
+    /// lock-step timebase (there is no boundary to cross), keeping seed
+    /// arithmetic untouched.
+    fn sync(&self) -> CostSplit {
+        match self {
+            Pricing::Lockstep => CostSplit::ZERO,
+            Pricing::WallClock { .. } => CostSplit { system: 1, uncore: 1 },
+        }
+    }
+
+    /// A converged busy-window value (bound units) as a split: system
+    /// cycles on the lock-step timebase, uncore cycles (rounded up —
+    /// sound) when decoupled.
+    fn busy_split(&self, units: f64) -> CostSplit {
+        match self {
+            Pricing::Lockstep => CostSplit::sys(units.ceil() as Cycle),
+            Pricing::WallClock { unc, .. } => CostSplit::unc(unc.ns_to_cycles(units)),
+        }
+    }
+}
+
 /// Analyze a scenario: derive bounds for every time-critical task
 /// without simulating. Pure and deterministic — identical output for
 /// identical scenarios, regardless of thread count or call order.
@@ -120,9 +307,10 @@ pub fn analyze(scenario: &Scenario) -> WcetReport {
     );
     let models = models_of(scenario);
     let timing = HyperRamTiming::carfield();
+    let pricing = Pricing::of(scenario);
     let bounds = (0..models.len())
         .filter(|&i| models[i].critical)
-        .map(|i| analyze_model(i, &models, &timing))
+        .map(|i| analyze_model(i, &models, &timing, pricing))
         .collect();
     WcetReport {
         scenario: scenario.name.clone(),
@@ -174,23 +362,35 @@ fn stream_conflict(models: &[InitiatorModel], owner: usize, s: &StreamModel) -> 
 }
 
 /// Worst service time of one shaped fragment of initiator `owner`'s
-/// stream `s`.
+/// stream `s`, in its owning domain's cycles (HyperRAM and peripheral:
+/// uncore; DCSPM: system), including the per-activation CDC sync margin
+/// for uncore targets on a decoupled timebase.
 fn fragment_cost(
     models: &[InitiatorModel],
     owner: usize,
     s: &StreamModel,
     timing: &HyperRamTiming,
     dirty: bool,
-) -> Cycle {
+    pricing: Pricing,
+) -> CostSplit {
     let frag = models[owner].tsu.fragment_beats(s.beats);
     match s.target {
-        Target::Hyperram => timing.worst_lines_cost(lines_of_fragment(frag), LINE_BYTES, dirty),
-        Target::Dcspm => Dcspm::worst_burst_cycles(frag, stream_conflict(models, owner, s)),
-        Target::Peripheral => Peripheral::new(Peripheral::DEFAULT_LATENCY).worst_burst_cycles(frag),
+        Target::Hyperram => {
+            CostSplit::unc(timing.worst_lines_cost(lines_of_fragment(frag), LINE_BYTES, dirty))
+                .plus(pricing.sync())
+        }
+        Target::Dcspm => {
+            CostSplit::sys(Dcspm::worst_burst_cycles(frag, stream_conflict(models, owner, s)))
+        }
+        Target::Peripheral => {
+            CostSplit::unc(Peripheral::new(Peripheral::DEFAULT_LATENCY).worst_burst_cycles(frag))
+                .plus(pricing.sync())
+        }
     }
 }
 
-/// Worst shaping delay of the task's own TSU for one logical burst.
+/// Worst shaping delay of the task's own TSU for one logical burst
+/// (system cycles — the shapers are clocked with the interconnect).
 fn own_tsu_delay(me: &InitiatorModel, s: &StreamModel) -> Cycle {
     let tsu = &me.tsu;
     let mut d: Cycle = 0;
@@ -212,13 +412,18 @@ fn own_tsu_delay(me: &InitiatorModel, s: &StreamModel) -> Cycle {
 
 /// Per-stream structural bound components.
 struct StreamBound {
-    total: Cycle,
-    own: Cycle,
-    w_term: Cycle,
+    total: CostSplit,
+    own: CostSplit,
+    w_term: CostSplit,
     endless: bool,
 }
 
-fn analyze_model(my_idx: usize, models: &[InitiatorModel], timing: &HyperRamTiming) -> TaskBound {
+fn analyze_model(
+    my_idx: usize,
+    models: &[InitiatorModel],
+    timing: &HyperRamTiming,
+    pricing: Pricing,
+) -> TaskBound {
     let me = &models[my_idx];
     let dirty = dirty_possible(models);
 
@@ -243,12 +448,12 @@ fn analyze_model(my_idx: usize, models: &[InitiatorModel], timing: &HyperRamTimi
     }
 
     let mut per_stream: Vec<StreamBound> = Vec::new();
-    let mut mem_bound: Cycle = 0;
+    let mut mem_bound = CostSplit::ZERO;
     let mut mem_binding = Resource::HyperramChannel;
     for s in &me.streams {
         let own_frag = me.tsu.fragment_beats(s.beats);
         let n_frags = ceil_div(s.beats as u64, own_frag as u64);
-        let own = n_frags * fragment_cost(models, my_idx, s, timing, dirty);
+        let own = fragment_cost(models, my_idx, s, timing, dirty, pricing).times(n_frags);
         let own_resource = match s.target {
             Target::Hyperram => Resource::HyperramChannel,
             Target::Dcspm => Resource::DcspmPort,
@@ -280,27 +485,39 @@ fn analyze_model(my_idx: usize, models: &[InitiatorModel], timing: &HyperRamTimi
         let ahead = Crossbar::worst_bursts_ahead(n_comp_inits, queue);
         let worst_comp = competitors
             .iter()
-            .map(|&(i, c)| fragment_cost(models, i, c, timing, dirty))
-            .max()
-            .unwrap_or(0);
+            .map(|&(i, c)| fragment_cost(models, i, c, timing, dirty, pricing))
+            .fold(CostSplit::ZERO, |acc, c| {
+                if pricing.units(c) > pricing.units(acc) {
+                    c
+                } else {
+                    acc
+                }
+            });
         // Every own fragment can wait out a full arbitration round; each
         // serviced burst ahead may additionally be preceded by one
         // W-channel hold, plus each writer's provable back-to-back chain.
-        let interference = n_frags * ahead * worst_comp;
+        let interference = worst_comp.times(n_frags * ahead);
         let w_term = if w_frag > 0 {
-            (ahead + 1 + w_chain) * w_frag as Cycle
+            CostSplit::sys((ahead + 1 + w_chain) * w_frag as Cycle)
         } else {
-            0
+            CostSplit::ZERO
         };
-        let tsu_d = own_tsu_delay(me, s);
-        let total = tsu_d + interference + w_term + own + EDGES;
-        if total > mem_bound {
+        let tsu_d = CostSplit::sys(own_tsu_delay(me, s));
+        let total = tsu_d
+            .plus(interference)
+            .plus(w_term)
+            .plus(own)
+            .plus(CostSplit::sys(EDGES));
+        if pricing.units(total) > pricing.units(mem_bound) {
             mem_bound = total;
-            mem_binding = if interference >= own.max(w_term).max(tsu_d) {
+            let own_u = pricing.units(own);
+            let w_u = pricing.units(w_term);
+            let tsu_u = pricing.units(tsu_d);
+            mem_binding = if pricing.units(interference) >= own_u.max(w_u).max(tsu_u) {
                 own_resource
-            } else if w_term > own.max(tsu_d) {
+            } else if w_u > own_u.max(tsu_u) {
                 Resource::WChannel
-            } else if tsu_d > own {
+            } else if tsu_u > own_u {
                 Resource::TsuShaping
             } else {
                 own_resource
@@ -314,8 +531,16 @@ fn analyze_model(my_idx: usize, models: &[InitiatorModel], timing: &HyperRamTimi
         });
     }
 
-    let (completion, completion_binding) =
-        completion_of(my_idx, models, &per_stream, timing, dirty, w_frag, mem_binding);
+    let (completion, completion_binding) = completion_of(
+        my_idx,
+        models,
+        &per_stream,
+        timing,
+        dirty,
+        w_frag,
+        mem_binding,
+        pricing,
+    );
     TaskBound {
         task: me.name.clone(),
         mem_bound,
@@ -334,9 +559,12 @@ fn competitors_regulated(models: &[InitiatorModel], my_idx: usize, target: Targe
     })
 }
 
-/// Worst service time competitors' arrivals (TRU curves) plus carried-in
-/// backlog can consume on `target` within `window` cycles. Only called
-/// when every competitor on `target` is regulated.
+/// Worst service (bound units) competitors' arrivals (TRU curves) plus
+/// carried-in backlog can consume on `target` within a window of
+/// `window` bound units. Arrival curves count in system cycles (the
+/// TSUs' clock); service prices through the target's owning domain.
+/// Only called when every competitor on `target` is regulated.
+#[allow(clippy::too_many_arguments)]
 fn window_interference(
     models: &[InitiatorModel],
     my_idx: usize,
@@ -344,7 +572,10 @@ fn window_interference(
     window: f64,
     timing: &HyperRamTiming,
     dirty: bool,
+    pricing: Pricing,
 ) -> f64 {
+    let sync_u = pricing.units(pricing.sync());
+    let window_sys = pricing.window_sys_cycles(window);
     let mut total = 0.0;
     for (i, m) in models.iter().enumerate() {
         if i == my_idx {
@@ -383,7 +614,7 @@ fn window_interference(
         // Periods derive from the TSU's own arrival curve (which covers
         // windows straddling a partial period at both ends).
         let max_beats = tsu
-            .max_beats_in_window(window as Cycle)
+            .max_beats_in_window(window_sys)
             .expect("caller guarantees regulated competitors");
         let periods = (max_beats / tsu.tru_budget_beats as u64) as f64;
         let carry_frags: u64 = m.inflight_cap
@@ -394,22 +625,27 @@ fn window_interference(
                 .unwrap();
         if target == Target::Hyperram {
             let lines = per_period_frags * lines_of_fragment(frag);
-            total += periods * timing.worst_lines_cost(lines, LINE_BYTES, dirty) as f64;
-            total += timing.worst_lines_cost(
+            total += periods
+                * (pricing.unc(timing.worst_lines_cost(lines, LINE_BYTES, dirty) as f64)
+                    + per_period_frags as f64 * sync_u);
+            total += pricing.unc(timing.worst_lines_cost(
                 carry_frags * lines_of_fragment(frag),
                 LINE_BYTES,
                 dirty,
-            ) as f64;
+            ) as f64)
+                + carry_frags as f64 * sync_u;
         } else {
             let conflict = streams.iter().any(|s| stream_conflict(models, i, s));
             let per = Dcspm::worst_burst_cycles(per_period_beats, conflict) + per_period_frags;
-            total += periods * per as f64;
-            total += carry_frags as f64 * Dcspm::worst_burst_cycles(frag, conflict) as f64;
+            total += periods * pricing.sys(per as f64);
+            total +=
+                carry_frags as f64 * pricing.sys(Dcspm::worst_burst_cycles(frag, conflict) as f64);
         }
     }
     total
 }
 
+#[allow(clippy::too_many_arguments)]
 fn completion_of(
     my_idx: usize,
     models: &[InitiatorModel],
@@ -418,7 +654,8 @@ fn completion_of(
     dirty: bool,
     w_frag: u32,
     mem_binding: Resource,
-) -> (Option<Cycle>, Resource) {
+    pricing: Pricing,
+) -> (Option<CostSplit>, Resource) {
     let me = &models[my_idx];
     if per_stream.iter().any(|s| s.endless) {
         return (None, Resource::Endless);
@@ -426,7 +663,9 @@ fn completion_of(
     // ---- structural path (always finite, always sound) ----
     let (structural, structural_binding, base, target) = match me.shape {
         TaskShape::HostTct { think, accesses } => {
-            let structural = accesses * (think + 2 + per_stream[0].total);
+            let structural = CostSplit::sys(think + 2)
+                .plus(per_stream[0].total)
+                .times(accesses);
             let has_comp = models.iter().enumerate().any(|(i, m)| {
                 i != my_idx && m.streams.iter().any(|s| s.target == Target::Hyperram)
             });
@@ -437,29 +676,46 @@ fn completion_of(
             } else {
                 0
             };
-            let base = accesses
-                * (think + EDGES + timing.worst_lines_cost(1, LINE_BYTES, dirty) + reopen);
+            let base = CostSplit::sys(think + EDGES)
+                .plus(CostSplit::unc(
+                    timing.worst_lines_cost(1, LINE_BYTES, dirty) + reopen,
+                ))
+                .plus(pricing.sync())
+                .times(accesses);
             (structural, mem_binding, base, Target::Hyperram)
         }
         TaskShape::Cluster {
             tiles,
             compute_per_tile,
         } => {
-            let per_tile: Cycle = per_stream.iter().map(|s| s.total).sum();
-            let structural = tiles * (per_tile + compute_per_tile + 4);
-            let binding = if compute_per_tile + 4 > per_tile {
+            let per_tile = per_stream
+                .iter()
+                .fold(CostSplit::ZERO, |acc, s| acc.plus(s.total));
+            let structural = per_tile
+                .plus(CostSplit::sys(compute_per_tile + 4))
+                .times(tiles);
+            let binding = if pricing.sys((compute_per_tile + 4) as f64) > pricing.units(per_tile)
+            {
                 Resource::Compute
             } else {
                 mem_binding
             };
-            let own: Cycle =
-                per_stream.iter().map(|s| s.own + s.w_term).sum::<Cycle>() + 2 * EDGES;
-            let base = tiles * (own + compute_per_tile + 4);
+            let own = per_stream
+                .iter()
+                .fold(CostSplit::ZERO, |acc, s| acc.plus(s.own).plus(s.w_term))
+                .plus(CostSplit::sys(2 * EDGES));
+            let base = own
+                .plus(CostSplit::sys(compute_per_tile + 4))
+                .times(tiles);
             (structural, binding, base, Target::Dcspm)
         }
         TaskShape::Dma { chunks } => {
             let chunks = chunks.unwrap_or(0); // endless handled above
-            let structural = chunks * (per_stream.iter().map(|s| s.total).sum::<Cycle>() + 2);
+            let structural = per_stream
+                .iter()
+                .fold(CostSplit::ZERO, |acc, s| acc.plus(s.total))
+                .plus(CostSplit::sys(2))
+                .times(chunks);
             return (Some(structural), mem_binding);
         }
     };
@@ -469,11 +725,12 @@ fn completion_of(
     let mut best = structural;
     let mut binding = structural_binding;
     if competitors_regulated(models, my_idx, target) && w_frag == 0 {
-        let base_f = base as f64;
-        let mut t = base_f;
+        let base_u = pricing.units(base);
+        let mut t = base_u;
         let mut converged = false;
         for _ in 0..200 {
-            let nxt = base_f + window_interference(models, my_idx, target, t, timing, dirty);
+            let nxt = base_u
+                + window_interference(models, my_idx, target, t, timing, dirty, pricing);
             if nxt > WINDOW_CAP {
                 break;
             }
@@ -484,8 +741,9 @@ fn completion_of(
             }
             t = nxt;
         }
-        if converged && (t.ceil() as Cycle) < best {
-            best = t.ceil() as Cycle;
+        let busy = pricing.busy_split(t);
+        if converged && pricing.units(busy) < pricing.units(structural) {
+            best = busy;
             binding = match target {
                 Target::Hyperram => Resource::HyperramChannel,
                 _ => Resource::DcspmPort,
@@ -527,7 +785,10 @@ mod tests {
         let r = analyze(&s);
         let b = r.bound_for("tct");
         // One 64B line: row miss (24) + 8 beats x 2 cycles + 4 edges.
-        assert_eq!(b.mem_bound, 44);
+        assert_eq!(b.mem_cycles(None), 44);
+        // The split types the terms by owning domain: the line fill is
+        // uncore service, the edges are system cycles.
+        assert_eq!(b.mem_bound, CostSplit { system: 4, uncore: 40 });
         assert!(b.completion_bound.is_some());
     }
 
@@ -536,10 +797,14 @@ mod tests {
         let r = analyze(&fig6a_scenario(IsolationPolicy::TsuRegulation));
         let b = r.bound_for("tct");
         // own 40 + edges 4 + (1 in service + 4 queue + 1 RR turn) x 40.
-        assert_eq!(b.mem_bound, 284);
+        assert_eq!(b.mem_cycles(None), 284);
         assert_eq!(b.mem_binding, Resource::HyperramChannel);
+        // All service is uncore-domain; only the edges ride the system
+        // clock.
+        assert_eq!(b.mem_bound.system, 4);
+        assert_eq!(b.mem_bound.uncore, 280);
         // The busy window converges: the regulated DMA leaves headroom.
-        let c = b.completion_bound.expect("finite");
+        let c = b.completion_cycles(None).expect("finite");
         assert!(c < 2_000_000, "busy window diverged: {c}");
     }
 
@@ -551,9 +816,9 @@ mod tests {
         let b_unreg = unreg.bound_for("tct");
         // Unsplit 256-beat bursts + W-channel holds blow the bound up by
         // over an order of magnitude — the Fig. 6a story, analytically.
-        assert!(b_unreg.mem_bound > 10 * b_reg.mem_bound);
+        assert!(b_unreg.mem_cycles(None) > 10 * b_reg.mem_cycles(None));
         assert!(
-            b_unreg.completion_bound.unwrap() > 10 * b_reg.completion_bound.unwrap(),
+            b_unreg.completion_cycles(None).unwrap() > 10 * b_reg.completion_cycles(None).unwrap(),
             "unreg {:?} vs reg {:?}",
             b_unreg.completion_bound,
             b_reg.completion_bound
@@ -580,18 +845,101 @@ mod tests {
         let b = r.bound_for("tct");
         let fast = OperatingPoint::max_perf().clock_tree();
         let slow = OperatingPoint::uniform(0.6).unwrap().clock_tree();
-        let c = b.completion_bound.unwrap() as f64;
+        let c = b.completion_cycles(None).unwrap() as f64;
         // 1GHz system clock: 1 cycle = 1ns, exactly.
         assert_eq!(b.completion_ns(&fast), Some(c));
+        // A *coupled* tree stretches the whole bound with the system
+        // clock — the seed's post-hoc conversion, recovered exactly.
         let slow_ns = b.completion_ns(&slow).unwrap();
         assert!((slow_ns - c * 1e3 / 350.0).abs() < 1e-6);
         assert!(b.mem_ns(&fast) < b.mem_ns(&slow));
     }
 
     #[test]
+    fn decoupled_uncore_keeps_memory_bounds_wall_clock_flat() {
+        use crate::power::OperatingPoint;
+        // The same regulated fig6a mix analyzed at 0.6V and 1.1V with
+        // the uncore parked at its fixed 1000MHz: the memory-latency
+        // bound's wall-clock value barely moves (only the 4 system-side
+        // edge cycles stretch), instead of scaling ~2.9x with the core
+        // clock as the coupled model does.
+        let at = |v: f64| {
+            let op = OperatingPoint::uniform(v).unwrap().decoupled_uncore();
+            let s = fig6a_scenario(IsolationPolicy::TsuRegulation).with_op_point(op);
+            analyze(&s).bound_for("tct").mem_ns(&op.clock_tree())
+        };
+        let low_ns = at(0.6);
+        let high_ns = at(1.1);
+        // Uncore component identical; only the system-side edges (and,
+        // at genuinely split frequencies, the CDC sync margin — at the
+        // 1.1V anchor the grids coincide and pricing collapses to the
+        // seed path with no sync) differ: the low-voltage bound stays
+        // within ~13% of the peak one instead of scaling 2.9x.
+        assert!(
+            low_ns < high_ns * 1.15,
+            "memory bound scaled with core voltage: {low_ns:.1} vs {high_ns:.1} ns"
+        );
+        assert!(low_ns >= high_ns, "slower edges cannot shrink the bound");
+        // The coupled model at 0.6V stretches the same bound ~2.9x: the
+        // whole 284-cycle bound rides the 350MHz system clock.
+        let coupled_op = OperatingPoint::uniform(0.6).unwrap();
+        let coupled = analyze(
+            &fig6a_scenario(IsolationPolicy::TsuRegulation).with_op_point(coupled_op),
+        );
+        let coupled_ns = coupled.bound_for("tct").mem_ns(&coupled_op.clock_tree());
+        assert!(
+            coupled_ns > low_ns * 1.5,
+            "coupled {coupled_ns:.1}ns vs decoupled {low_ns:.1}ns"
+        );
+    }
+
+    #[test]
+    fn decoupled_completion_cycles_round_soundly() {
+        use crate::power::OperatingPoint;
+        let op = OperatingPoint::uniform(0.6).unwrap().decoupled_uncore();
+        let s = fig6a_scenario(IsolationPolicy::TsuRegulation).with_op_point(op);
+        let r = analyze(&s);
+        let b = r.bound_for("tct");
+        let tree = op.clock_tree();
+        let cycles = b.completion_cycles(Some(&tree)).unwrap();
+        let ns = b.completion_ns(&tree).unwrap();
+        // The cycle-domain bound must cover the exact wall-clock bound
+        // (rounded up through the 350MHz system clock) and be tighter
+        // than the naive single-clock total (which would price uncore
+        // service at system speed).
+        let wall_in_sys = ns * tree.system.freq_mhz / 1e3;
+        assert!(cycles as f64 >= wall_in_sys - 1e-6);
+        assert!(cycles as f64 <= wall_in_sys + 2.0, "conversion too loose");
+        let naive_total = b.completion_bound.unwrap().lockstep_total();
+        assert!(cycles < naive_total, "decoupling must shrink the cycle bound");
+    }
+
+    #[test]
     fn analyze_is_deterministic() {
         let s = fig6a_scenario(IsolationPolicy::TsuRegulation);
         assert_eq!(analyze(&s), analyze(&s));
+    }
+
+    #[test]
+    fn cost_split_arithmetic() {
+        let a = CostSplit { system: 3, uncore: 5 };
+        let b = CostSplit::sys(2).plus(CostSplit::unc(7));
+        let sum = a.plus(b);
+        assert_eq!(sum, CostSplit { system: 5, uncore: 12 });
+        assert_eq!(sum.times(2), CostSplit { system: 10, uncore: 24 });
+        assert_eq!(sum.lockstep_total(), 17);
+        assert_eq!(sum.system_cycles(None), 17);
+        // ns composition at the 1GHz max_perf corner: 1 cycle = 1ns in
+        // both domains, so the exact per-domain sum is the plain total.
+        let tree = crate::soc::clock::ClockTree::max_perf();
+        assert_eq!(sum.ns(&tree), 17.0);
+        // Decoupled: 5 sys cycles @ 500MHz = 10ns + 12 unc @ 1GHz = 12ns.
+        let dec = crate::soc::clock::ClockTree {
+            system: crate::soc::clock::ClockDomain::new(crate::soc::clock::Domain::System, 500.0),
+            ..tree
+        };
+        assert_eq!(sum.ns(&dec), 22.0);
+        assert_eq!(sum.system_cycles(Some(&dec)), 5 + 6, "12 unc @ 1GHz = 6 sys @ 500MHz");
     }
 
     #[test]

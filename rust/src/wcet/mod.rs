@@ -41,14 +41,31 @@
 //! unbuffered writer exists, which is exactly the regime the paper's
 //! isolation policies establish.
 //!
+//! # Clock domains and wall-clock composition
+//!
+//! Every timed resource belongs to an explicit clock domain: TSU
+//! shaping, pipeline edges, W-channel holds and DCSPM service ride the
+//! DVFS-scaled **system** clock, while HyperRAM/DPLLC service and
+//! peripheral access ride the fixed-frequency **uncore** clock. Bounds
+//! are carried as per-domain [`CostSplit`]s and composed in wall-clock
+//! nanoseconds ([`TaskBound::completion_ns`] is the exact per-domain
+//! sum): with a decoupled uncore, lowering the core voltage stretches
+//! only the system-side terms, so memory-bound completion bounds stay
+//! flat in wall clock — the property that lets the DVFS governor admit
+//! low-voltage points the cycle-constant model falsely rejected. On the
+//! seed's single timebase the domains coincide and every formula is
+//! bit-identical to the original cycles-only engine.
+//!
 //! Soundness (`measured <= bound`) is enforced empirically by the seeded
-//! scenario fuzzer in `tests/wcet_soundness.rs` and, for the paper
-//! grids, by `experiments::bounds`; tightness on the TSU-regulated rows
-//! (`bound <= 2x measured worst case`) is asserted there too.
+//! scenario fuzzer in `tests/wcet_soundness.rs` (and across mixed
+//! uncore/core frequency ratios by `tests/uncore_equivalence.rs`) and,
+//! for the paper grids, by `experiments::bounds`; tightness on the
+//! TSU-regulated rows (`bound <= 2x measured worst case`) is asserted
+//! there too.
 
 pub mod bound;
 pub mod fuzz;
 pub mod model;
 
-pub use bound::{analyze, Resource, TaskBound, WcetReport};
+pub use bound::{analyze, CostSplit, Resource, TaskBound, WcetReport};
 pub use model::{models_of, InitiatorModel, StreamModel, TaskShape};

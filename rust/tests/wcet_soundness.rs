@@ -30,16 +30,17 @@ fn fuzzed_mixes_measured_never_exceeds_bound() {
                 .extra_value("access_max")
                 .or_else(|| t.extra_value("mem_max"))
                 .unwrap_or(0.0);
+            let mem_bound = tb.mem_cycles(scenario.clocks().as_ref());
             assert!(
-                measured_mem <= tb.mem_bound as f64,
+                measured_mem <= mem_bound as f64,
                 "{}::{} memory latency UNSOUND: measured {} > bound {} \
                  (reproduce with wcet::fuzz::random_scenario)",
                 scenario.name,
                 tb.task,
                 measured_mem,
-                tb.mem_bound
+                mem_bound
             );
-            if let Some(cb) = tb.completion_bound {
+            if let Some(cb) = tb.completion_cycles(scenario.clocks().as_ref()) {
                 assert!(
                     t.makespan > 0,
                     "{}::{} never drained within the cycle budget",
