@@ -6,7 +6,7 @@
 
 RUST_DIR := rust
 
-.PHONY: build test bench wcet autotune dvfs artifacts python-test
+.PHONY: build test bench wcet autotune dvfs faults artifacts python-test
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -32,6 +32,12 @@ autotune: build
 # simulations and measured energy columns.
 dvfs: build
 	$(RUST_DIR)/target/release/carfield dvfs
+
+# Deterministic fault-injection grid: k-fault admission verdicts
+# validated by seeded faulted simulations (fails on an unsound bound,
+# an empty availability grid, or a fault dimension that never binds).
+faults: build
+	$(RUST_DIR)/target/release/carfield faults
 
 # AOT-lower the JAX/Pallas kernels to HLO text artifacts consumed by the
 # rust PJRT runtime (requires the python toolchain).

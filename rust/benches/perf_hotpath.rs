@@ -3,8 +3,10 @@
 //! WCET analysis throughput + bound tightness, bound-driven autotune
 //! search throughput, DVFS governor search latency + energy saving,
 //! split-uncore multi-rate stepping vs lock-step + ns-domain bound
-//! recomposition overhead, coordinator dispatch, and PJRT artifact
-//! execution overhead.
+//! recomposition overhead, fault-injection overhead (faulted vs
+//! fault-free simulation, k-fault bound throughput, reliability-grid
+//! latency), coordinator dispatch, and PJRT artifact execution
+//! overhead.
 //!
 //! Targets (see lib.rs layering docs): >= 60 simulated Mcyc/s on the
 //! Fig. 6a topology via the event-driven path (>= 3x naive), raised from
@@ -262,6 +264,70 @@ fn uncore_overhead(b: &mut BenchRunner) {
     );
 }
 
+/// Fault-injection overhead: seeded faulted simulation vs the
+/// fault-free engine on the same mixes (the injection hooks must stay
+/// out of the hot path when quiet and cheap when armed), k-fault bound
+/// analysis throughput, and the full reliability-grid latency.
+fn reliability_overhead(b: &mut BenchRunner) {
+    use carfield::coordinator::FaultPlan;
+    use carfield::experiments::{autotune as mixes, reliability};
+    use carfield::wcet::analyze;
+
+    let clean = mixes::cluster_mix(mixes::CLUSTER_DEADLINE);
+    let plan = reliability::plan_for(7, 2.0, 2);
+    let faulted = clean.clone().with_faults(plan);
+    let (clean_cycles, dt_clean) = b.time_with_mean("Scheduler::run fig6b mix fault-free", 20, || {
+        Scheduler::run(&clean).cycles
+    });
+    let (faulted_cycles, dt_faulted) =
+        b.time_with_mean("Scheduler::run fig6b mix faulted (k=2 + retries + scrub)", 20, || {
+            Scheduler::run(&faulted).cycles
+        });
+    b.metric(
+        "faulted sim throughput",
+        faulted_cycles as f64 / dt_faulted / 1e6,
+        "Mcyc/s (AMR recoveries + HyperRAM retries + scrub)",
+    );
+    b.metric(
+        "fault-injection sim overhead",
+        (dt_faulted / dt_clean.max(1e-12)) / (faulted_cycles as f64 / clean_cycles.max(1) as f64),
+        "x wall-clock per simulated cycle vs fault-free",
+    );
+    let (_, dt_k) = b.time_with_mean("wcet analyze with k-fault term (fig6b mix)", 500, || {
+        analyze(&faulted)
+    });
+    b.metric(
+        "k-fault analyses/sec",
+        1.0 / dt_k.max(1e-12),
+        "scenarios bounded/sec (retry-inflated timing + scrub model)",
+    );
+    let quiet = clean.clone().with_faults(FaultPlan::new(7));
+    let (_, dt_quiet) = b.time_with_mean("wcet analyze with quiet plan (fig6b mix)", 500, || {
+        analyze(&quiet)
+    });
+    b.metric(
+        "k-fault analysis overhead (armed vs quiet)",
+        dt_k / dt_quiet.max(1e-12),
+        "x (quiet plan == fault-free engine)",
+    );
+    let (r, dt_grid) = b.time_with_mean("reliability grid (admission + seeded sims)", 1, || {
+        reliability::run()
+    });
+    b.metric(
+        "reliability grid latency",
+        dt_grid * 1e3,
+        &format!("ms for {} cells", r.rows.len()),
+    );
+    b.metric(
+        "reliability grid sim throughput",
+        r.sim_cycles as f64 / dt_grid / 1e6,
+        "Mcyc/s aggregate (faulted validation sims)",
+    );
+    b.metric("reliability grid availability", r.availability, "deadlines met under injection");
+    assert!(r.all_sound(), "a seeded sim exceeded its k-fault bound");
+    assert!(r.k_flips >= 1, "the k-term flipped no knife-edge cell");
+}
+
 /// Coordinator scenario-assembly + teardown overhead.
 fn dispatch_overhead(b: &mut BenchRunner) {
     b.time("Scheduler::run tiny scenario", 5, || {
@@ -318,6 +384,7 @@ fn main() {
     autotune_overhead(&mut b);
     governor_overhead(&mut b);
     uncore_overhead(&mut b);
+    reliability_overhead(&mut b);
     dispatch_overhead(&mut b);
     artifact_overhead(&mut b);
     b.finish();

@@ -340,10 +340,16 @@ fn binding_axis(binding: Resource, base: SocTuning) -> Vec<SocTuning> {
             }
             candidates.extend(throttle_axis(base));
         }
-        // The task's own shaping, its own compute, or an endless stream:
-        // no isolation knob helps — fall through to the lattice (which
-        // documents the exhaustion in the error).
-        Resource::TsuShaping | Resource::Compute | Resource::Endless | Resource::Peripheral => {}
+        // The task's own shaping, its own compute, an endless stream, or
+        // the fault plan's k-fault recovery budget: no isolation knob
+        // helps — fall through to the lattice (which documents the
+        // exhaustion in the error; for FaultRecovery the fix is a lower
+        // k / fault rate or a relaxed deadline, not a reprogrammed TSU).
+        Resource::TsuShaping
+        | Resource::Compute
+        | Resource::Endless
+        | Resource::Peripheral
+        | Resource::FaultRecovery => {}
     }
     candidates
 }

@@ -1,0 +1,188 @@
+//! Deterministic, seeded fault-injection plans.
+//!
+//! A [`FaultPlan`] attaches a *reliability scenario* to a
+//! [`Scenario`](crate::coordinator::Scenario): seeded lockstep-mismatch
+//! events on the AMR cluster (forcing HFR recovery plus a full tile
+//! re-execution), transient HyperRAM line retries with a bounded retry
+//! count per line, and an ECC scrub engine emitting periodic background
+//! read traffic. Everything is derived from the plan's seed — the same
+//! plan injects the bit-identical fault sequence on every run, on every
+//! thread count, and under both the naive and the event-driven
+//! simulator — so faulted campaigns reproduce exactly, in the style of
+//! `wcet::fuzz`.
+//!
+//! The analytic counterpart lives in `wcet::bound`: `analyze` prices the
+//! same plan as (a) a per-line retry inflation of
+//! `HyperRamTiming::worst_lines_cost`, (b) an extra regulated scrub
+//! initiator in the interference model, and (c) a k-fault re-execution
+//! term in [`TaskBound`](crate::wcet::TaskBound) so `Scheduler::admit`
+//! answers "does this mix meet its deadlines with up to `k_faults`
+//! recoveries?". The injection side caps AMR mismatches at `k_faults`
+//! (the hypothesis admission certifies) while retries and scrub traffic
+//! are *unbudgeted* — their worst case is already priced per line /
+//! per window, so soundness needs no event count.
+
+use crate::soc::clock::Cycle;
+
+/// ECC scrub engine configuration: every `period` cycles the scrubber
+/// reads `beats` bus beats of HyperRAM-backed memory in the background.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScrubConfig {
+    /// Scrub period in uncore-referenced TSU cycles (the scrubber is
+    /// TRU-regulated to exactly this cadence).
+    pub period: Cycle,
+    /// Beats read per scrub burst.
+    pub beats: u32,
+}
+
+impl ScrubConfig {
+    /// The Carfield patrol scrubber: one 64B line (8 beats) every 512
+    /// cycles — ~1.5% of channel bandwidth, matching an ECC scrub pass
+    /// over the 32MiB HyperRAM every few hundred ms at 1GHz.
+    pub fn carfield() -> Self {
+        ScrubConfig {
+            period: 512,
+            beats: 8,
+        }
+    }
+}
+
+/// A deterministic fault-injection plan for one scenario.
+///
+/// `FaultPlan::new(seed)` is the all-quiet plan (no faults of any
+/// class, `k_faults = 0`); builders switch on individual fault classes.
+/// The quiet plan is bit-identical to no plan at all, in both the
+/// simulator and the bound engine (pinned by `tests/fault_soundness.rs`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Campaign seed: every per-task fault RNG stream is derived from
+    /// (this seed, the task's initiator slot) via [`Self::stream_seed`].
+    pub seed: u64,
+    /// Expected AMR lockstep mismatches per 1000 cluster cycles.
+    pub amr_fault_per_kcycle: f64,
+    /// Inject a transient retry burst on every n-th HyperRAM line fill
+    /// (0 = never).
+    pub retry_every_lines: u64,
+    /// Retries per affected line (each costs a full row-miss re-fetch).
+    pub retries_per_line: u32,
+    /// Max AMR recoveries the admission bound must cover — and the
+    /// injection budget: the simulator injects at most this many
+    /// lockstep mismatches per cluster, so "measured ≤ k-fault bound"
+    /// is the exact hypothesis being validated.
+    pub k_faults: u32,
+    /// Background ECC scrub traffic, if enabled.
+    pub scrub: Option<ScrubConfig>,
+}
+
+impl FaultPlan {
+    /// The all-quiet plan for `seed`: no fault class enabled.
+    pub fn new(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            amr_fault_per_kcycle: 0.0,
+            retry_every_lines: 0,
+            retries_per_line: 0,
+            k_faults: 0,
+            scrub: None,
+        }
+    }
+
+    /// Enable seeded AMR lockstep mismatches at `rate` per kcycle.
+    pub fn with_amr_rate(mut self, rate: f64) -> Self {
+        self.amr_fault_per_kcycle = rate;
+        self
+    }
+
+    /// Enable HyperRAM line retries: `retries` extra row-miss fetches on
+    /// every `every`-th line fill.
+    pub fn with_retries(mut self, every: u64, retries: u32) -> Self {
+        self.retry_every_lines = every;
+        self.retries_per_line = retries;
+        self
+    }
+
+    /// Set the re-execution budget the admission bound covers.
+    pub fn with_k(mut self, k: u32) -> Self {
+        self.k_faults = k;
+        self
+    }
+
+    /// Enable the background ECC scrubber.
+    pub fn with_scrub(mut self, scrub: ScrubConfig) -> Self {
+        self.scrub = Some(scrub);
+        self
+    }
+
+    /// True when no fault class is enabled *and* `k_faults == 0` — the
+    /// plan that must be indistinguishable from no plan.
+    pub fn is_quiet(&self) -> bool {
+        self.amr_fault_per_kcycle == 0.0
+            && self.retry_every_lines == 0
+            && self.k_faults == 0
+            && self.scrub.is_none()
+    }
+
+    /// Derive the per-task fault RNG seed for initiator `slot`.
+    ///
+    /// SplitMix64-style finalizer over (campaign seed, slot): streams
+    /// for different tasks are decorrelated, and — crucially for the
+    /// sweep — a task's stream depends only on the scenario's plan and
+    /// its own slot, never on sibling tasks or on which worker thread
+    /// runs the scenario (`tests/fault_soundness.rs` pins bit-identical
+    /// fault reports across `CARFIELD_THREADS` ∈ {1, 2, 8}).
+    pub fn stream_seed(&self, slot: usize) -> u64 {
+        let mut z = self
+            .seed
+            .wrapping_add(0x9E37_79B9_7F4A_7C15u64.wrapping_mul(slot as u64 + 1));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        // XorShift::new rejects 0; the finalizer output is 0 only for
+        // one input in 2^64 — nudge it off the fixed point.
+        (z ^ (z >> 31)) | 1
+    }
+
+    /// Extra HyperRAM cycles the plan can add to *one* line fill, given
+    /// the per-retry cost (a full row-miss re-fetch of the line).
+    pub fn retry_overhead(&self, per_retry: Cycle) -> Cycle {
+        if self.retry_every_lines == 0 {
+            0
+        } else {
+            self.retries_per_line as Cycle * per_retry
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quiet_plan_is_quiet() {
+        assert!(FaultPlan::new(7).is_quiet());
+        assert!(!FaultPlan::new(7).with_k(1).is_quiet());
+        assert!(!FaultPlan::new(7).with_amr_rate(0.5).is_quiet());
+        assert!(!FaultPlan::new(7).with_retries(64, 1).is_quiet());
+        assert!(!FaultPlan::new(7).with_scrub(ScrubConfig::carfield()).is_quiet());
+    }
+
+    #[test]
+    fn stream_seeds_are_deterministic_and_decorrelated() {
+        let p = FaultPlan::new(42);
+        let seeds: Vec<u64> = (0..8).map(|s| p.stream_seed(s)).collect();
+        let again: Vec<u64> = (0..8).map(|s| p.stream_seed(s)).collect();
+        assert_eq!(seeds, again);
+        let unique: std::collections::HashSet<_> = seeds.iter().collect();
+        assert_eq!(unique.len(), seeds.len(), "per-slot streams collide");
+        assert!(seeds.iter().all(|&s| s != 0), "XorShift rejects seed 0");
+        // A different campaign seed shifts every stream.
+        let other = FaultPlan::new(43);
+        assert!((0..8).all(|s| other.stream_seed(s) != p.stream_seed(s)));
+    }
+
+    #[test]
+    fn retry_overhead_follows_the_knobs() {
+        let p = FaultPlan::new(1).with_retries(64, 2);
+        assert_eq!(p.retry_overhead(40), 80);
+        assert_eq!(FaultPlan::new(1).retry_overhead(40), 0);
+    }
+}

@@ -17,11 +17,17 @@
 //! - [`autotune`]: the bound-driven search that turns a rejected
 //!   admission's binding resource into the least-restrictive tuning
 //!   whose bounds admit the mix;
+//! - [`faults`]: deterministic, seeded fault-injection plans
+//!   ([`FaultPlan`]) whose consequences the WCET engine prices as a
+//!   k-fault re-execution term, retry-inflated memory service and scrub
+//!   interference — admission under a plan certifies deadlines *with
+//!   faults*;
 //! - [`metrics`]: per-task reports and experiment tables;
 //! - [`sweep`]: parallel execution of independent scenario grids across
 //!   OS threads (the experiment figures are embarrassingly parallel).
 
 pub mod autotune;
+pub mod faults;
 pub mod metrics;
 pub mod policy;
 pub mod scheduler;
@@ -29,6 +35,7 @@ pub mod sweep;
 pub mod task;
 
 pub use autotune::{autotune, Autotuner, SearchStrategy, TuneError, TuneOutcome};
+pub use faults::{FaultPlan, ScrubConfig};
 pub use metrics::{ScenarioReport, TaskReport};
 pub use policy::{IsolationPolicy, ResourceConfig, SocTuning, TsuKnobs, TuningError};
 pub use scheduler::{AdmissionDecision, Rejection, Scenario, Scheduler};

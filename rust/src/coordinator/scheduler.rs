@@ -7,16 +7,18 @@
 //! (endless interferers keep running), and returns per-task reports.
 
 use crate::power::OperatingPoint;
-use crate::soc::amr::{AmrCluster, AmrTask};
-use crate::soc::axi::{InitiatorId, TargetModel};
+use crate::soc::amr::{AmrCluster, AmrTask, Recovery};
+use crate::soc::axi::{InitiatorId, Target, TargetModel};
 use crate::soc::clock::{ClockTree, Cycle, Domain};
-use crate::soc::dma::DmaEngine;
+use crate::soc::dma::{DmaEngine, DmaJob};
 use crate::soc::hostd::HostCore;
 use crate::soc::mem::dpllc::DpllcConfig;
 use crate::soc::mem::{Dcspm, HyperRamTiming, HyperramPath, Peripheral};
+use crate::soc::tsu::TsuConfig;
 use crate::soc::vector::{VectorCluster, VectorTask};
 use crate::soc::SocSim;
 
+use super::faults::FaultPlan;
 use super::metrics::{ScenarioReport, TaskReport};
 use super::policy::SocTuning;
 use super::task::{McTask, Workload};
@@ -34,6 +36,10 @@ pub struct Scenario {
     /// (PLL ratio 1.0) and deadlines only expressible in cycles; the
     /// governor always pins `Some` point.
     pub op_point: Option<OperatingPoint>,
+    /// The fault-injection plan the mix runs (and is admitted) under.
+    /// `None` — and the quiet plan — keep simulator and bounds
+    /// bit-identical to the fault-free engine.
+    pub faults: Option<FaultPlan>,
     pub tasks: Vec<McTask>,
     /// Simulation budget (guards against starvation bugs).
     pub max_cycles: Cycle,
@@ -45,6 +51,7 @@ impl Scenario {
             name: name.to_string(),
             tuning: tuning.into(),
             op_point: None,
+            faults: None,
             tasks: Vec::new(),
             max_cycles: 200_000_000,
         }
@@ -67,6 +74,21 @@ impl Scenario {
     pub fn with_op_point(mut self, op: OperatingPoint) -> Self {
         self.op_point = Some(op);
         self
+    }
+
+    /// The same mix under a fault-injection plan. Admission, the
+    /// auto-tuner and the DVFS governor all evaluate the plan's k-fault
+    /// bounds (their probe scenarios clone the plan along with the
+    /// tasks), and `Scheduler::run` injects the plan's seeded faults.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// The active fault plan, with quiet plans normalized away so the
+    /// fault-free fast paths stay bit-identical.
+    pub fn fault_plan(&self) -> Option<FaultPlan> {
+        self.faults.filter(|p| !p.is_quiet())
     }
 
     /// The PLL tree the operating point programs, if one is pinned.
@@ -169,11 +191,21 @@ impl Scheduler {
             let bound = b.completion_cycles(clocks.as_ref());
             let feasible = matches!(bound, Some(c) if c <= deadline);
             if !feasible {
+                // Attribute the rejection: when the *nominal* (fault-
+                // free) bound fits the deadline and only the k-fault
+                // re-execution term pushes it over, faults — not load —
+                // are the binding cost.
+                let nominal = b.nominal_completion_cycles(clocks.as_ref());
+                let nominal_fits = matches!(nominal, Some(c) if c <= deadline);
                 rejections.push(Rejection {
                     task: task.name.clone(),
                     deadline,
                     bound,
-                    binding: b.completion_binding,
+                    binding: if bound.is_some() && nominal_fits {
+                        Resource::FaultRecovery
+                    } else {
+                        b.completion_binding
+                    },
                 });
             }
         }
@@ -196,14 +228,25 @@ impl Scheduler {
         }
     }
 
-    /// Build the target set with the tuning's DPLLC partitioning.
-    fn targets(tuning: SocTuning) -> Vec<Box<dyn TargetModel>> {
+    /// Build the target set with the tuning's DPLLC partitioning (and
+    /// the fault plan's transient line-retry injection, if any).
+    fn targets(tuning: SocTuning, faults: Option<FaultPlan>) -> Vec<Box<dyn TargetModel>> {
         let cfg = tuning.resource_config();
         let mut dpllc = DpllcConfig::carfield();
         dpllc.partitions = cfg.dpllc_partitions;
+        let mut hyperram = HyperramPath::new(dpllc, HyperRamTiming::carfield());
+        if let Some(plan) = faults {
+            if plan.retry_every_lines > 0 {
+                hyperram.set_fault_retries(
+                    plan.retry_every_lines,
+                    plan.retries_per_line,
+                    plan.seed % plan.retry_every_lines,
+                );
+            }
+        }
         vec![
             Box::new(Dcspm::new()),
-            Box::new(HyperramPath::new(dpllc, HyperRamTiming::carfield())),
+            Box::new(hyperram),
             Box::new(Peripheral::new(Peripheral::DEFAULT_LATENCY)),
         ]
     }
@@ -224,7 +267,12 @@ impl Scheduler {
     fn execute(scenario: &Scenario, event_driven: bool) -> ScenarioReport {
         let tuning = scenario.tuning;
         let cfg = tuning.resource_config();
-        let mut soc = SocSim::new(scenario.tasks.len(), Self::targets(tuning));
+        let faults = scenario.fault_plan();
+        // The ECC scrubber (when planned) occupies one extra initiator
+        // slot *after* every task, so task placement is untouched.
+        let scrub = faults.and_then(|p| p.scrub);
+        let n_initiators = scenario.tasks.len() + usize::from(scrub.is_some());
+        let mut soc = SocSim::new(n_initiators, Self::targets(tuning, faults));
         // Multi-rate timebase: at a pinned operating point the uncore
         // targets step on their own clock grid (identity converters when
         // the tree is coupled — the seed's single timebase, so op-free
@@ -248,9 +296,24 @@ impl Scheduler {
                     n,
                     tile,
                 } => {
-                    let mut cluster = AmrCluster::new(id);
+                    let mut cluster = match faults {
+                        // Per-task fault stream: seeded from (campaign
+                        // seed, slot) only — deterministic across sweep
+                        // threads and sibling-task changes.
+                        Some(plan) => AmrCluster::new(id).with_seed(plan.stream_seed(slot)),
+                        None => AmrCluster::new(id),
+                    };
                     cluster.mode = task.required_amr_mode();
                     cluster.freq_ratio = scenario.freq_ratio(Domain::Amr);
+                    if let Some(plan) = faults {
+                        cluster.fault_per_kcycle = plan.amr_fault_per_kcycle;
+                        // Lockstep mismatches under the plan recover via
+                        // HFR and re-execute the interrupted tile — the
+                        // event the k-fault bound prices.
+                        cluster.recovery = Recovery::Hfr;
+                        cluster.reexec_on_fault = true;
+                        cluster.fault_budget = Some(plan.k_faults as u64);
+                    }
                     cluster.submit(
                         AmrTask {
                             precision: *precision,
@@ -327,6 +390,30 @@ impl Scheduler {
             }
         }
 
+        // The ECC scrub engine: an endless, TRU-regulated background
+        // reader patrolling the HyperRAM space — never measured, never
+        // reported, but fully visible to the crossbar (and priced by
+        // the bound engine as one more regulated competitor).
+        if let Some(sc) = scrub {
+            let id = InitiatorId(scenario.tasks.len() as u8);
+            let mut engine = DmaEngine::new(id);
+            engine.program(DmaJob {
+                src: Target::Hyperram,
+                src_addr: 0x40_0000,
+                dst: None,
+                dst_addr: 0,
+                bytes: 1 << 20,
+                chunk_beats: sc.beats,
+                outstanding: 1,
+                looping: true,
+                part_id: 0,
+            });
+            soc.attach(
+                Box::new(engine),
+                TsuConfig::regulated(sc.beats, sc.beats, sc.period),
+            );
+        }
+
         // Run until all measured tasks drain (endless interferers keep
         // running); the shared loop suppresses skips at the drain edge
         // so the reported cycle count matches naive stepping exactly.
@@ -382,6 +469,8 @@ impl Scheduler {
                 extra.push(("mac_per_cyc".into(), c.stats.effective_mac_per_cyc(0)));
                 extra.push(("stall_cycles".into(), c.stats.stall_cycles as f64));
                 extra.push(("faults".into(), c.stats.faults_detected as f64));
+                extra.push(("faults_silent".into(), c.stats.faults_silent as f64));
+                extra.push(("reboots".into(), c.stats.reboots as f64));
                 extra.push(("recovery_cycles".into(), c.stats.recovery_cycles as f64));
                 extra.push(("mem_max".into(), c.mem_latency_max() as f64));
             }

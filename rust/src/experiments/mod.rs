@@ -10,6 +10,9 @@
 //! mixes admitted by the fixed four policies vs the bound-driven search.
 //! `energy` is the DVFS governor grid (`carfield dvfs`): deadline grids
 //! through the energy-minimal provably-safe operating-point search.
+//! `reliability` is the fault-injection grid (`carfield faults`):
+//! k-fault admission verdicts validated by seeded faulted simulation
+//! across an availability × deadline sweep.
 
 pub mod autotune;
 pub mod bounds;
@@ -21,3 +24,4 @@ pub mod fig6b;
 pub mod fig7;
 pub mod fig8;
 pub mod micro;
+pub mod reliability;

@@ -22,6 +22,11 @@
 //!                           measured-utilization feedback showcase;
 //!                           `--deadline-ns N` governs the fig6a mix
 //!                           for one wall-clock deadline);
+//! - `faults`              — deterministic fault-injection grid: k-fault
+//!                           admission verdicts (AMR lockstep recoveries,
+//!                           HyperRAM retries, ECC scrub traffic) checked
+//!                           against seeded faulted simulations on an
+//!                           availability × deadline sweep;
 //! - `all`                 — run every experiment in sequence;
 //! - `artifacts [--dir D]` — list AOT artifacts and smoke-execute one;
 //! - `infer [--dir D]`     — run the QNN MLP artifact through the PJRT
@@ -54,6 +59,7 @@ fn main() {
         Some("wcet") => cmd_wcet(&args),
         Some("autotune") => cmd_autotune(&args),
         Some("dvfs") => cmd_dvfs(&args),
+        Some("faults") => cmd_faults(),
         Some("all") => {
             exp::fig3c::print(&exp::fig3c::run());
             exp::fig5::print(&exp::fig5::run());
@@ -65,13 +71,14 @@ fn main() {
             exp::bounds::print(&exp::bounds::run());
             exp::autotune::print(&exp::autotune::run());
             exp::energy::print(&exp::energy::run());
+            exp::reliability::print(&exp::reliability::run());
         }
         Some("artifacts") => cmd_artifacts(&args),
         Some("infer") => cmd_infer(&args),
         Some("scenario") => cmd_scenario(&args),
         _ => {
             eprintln!(
-                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|autotune|dvfs|all|artifacts|infer|scenario> [options]"
+                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|autotune|dvfs|faults|all|artifacts|infer|scenario> [options]"
             );
             std::process::exit(2);
         }
@@ -283,6 +290,33 @@ fn cmd_dvfs(args: &Args) {
             eprintln!("dvfs governor failed: {e}");
             std::process::exit(1);
         }
+    }
+}
+
+fn cmd_faults() {
+    let r = exp::reliability::run();
+    exp::reliability::print(&r);
+    // The smoke gate: every seeded faulted simulation must stay under
+    // its k-fault bound, and the grid must actually exercise the fault
+    // dimension — at least one knife-edge cell flipped by the k-term
+    // alone and at least one rejection attributed to the recovery
+    // budget (else a regression that zeroes the fault term would pass
+    // vacuously with an all-admitted grid).
+    if r.rows.is_empty() {
+        eprintln!("faults regression: the availability grid is empty");
+        std::process::exit(1);
+    }
+    if !r.all_sound() {
+        eprintln!("faults validation failed: a seeded simulation exceeded its k-fault bound");
+        std::process::exit(1);
+    }
+    if r.k_flips == 0 {
+        eprintln!("faults regression: no cell flipped from admitted@k=0 to rejected@k=1");
+        std::process::exit(1);
+    }
+    if r.fault_bound_rejections == 0 {
+        eprintln!("faults regression: no rejection was attributed to the fault-recovery budget");
+        std::process::exit(1);
     }
 }
 

@@ -29,7 +29,16 @@
 //! per unit work grows ~V^alpha, so ties resolve to the lower voltage
 //! by the ascending scan).
 //!
+//! Fault awareness rides along for free: probe scenarios are clones of
+//! the governed scenario, so a [`FaultPlan`] — and with it the k-fault
+//! re-execution term in every recomputed bound — survives into each
+//! candidate's admission test. The energy-minimal point the governor
+//! returns is therefore provably safe *under up to k recoveries*, and
+//! since recovery cycles are system-domain they stretch with the
+//! candidate's core voltage exactly like the compute they re-run.
+//!
 //! [`coordinator::autotune`]: crate::coordinator::autotune
+//! [`FaultPlan`]: crate::coordinator::FaultPlan
 
 use crate::coordinator::autotune::{self, SearchStrategy, TuneOutcome};
 use crate::coordinator::{

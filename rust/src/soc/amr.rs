@@ -234,6 +234,15 @@ pub struct AmrCluster {
     pub freq_ratio: f64,
     /// Fault probability per 1k compute cycles (fault-injection knob).
     pub fault_per_kcycle: f64,
+    /// Max faults to inject over the task's lifetime (`None` =
+    /// unbounded — the legacy knob). A `FaultPlan` pins this to its
+    /// `k_faults` so "measured under injection ≤ k-fault bound" tests
+    /// exactly the hypothesis admission certified.
+    pub fault_budget: Option<u64>,
+    /// Re-execute the interrupted tile after a detected HFR recovery
+    /// (adds the tile's compute window to each recovery penalty — the
+    /// per-event cost the k-fault bound prices).
+    pub reexec_on_fault: bool,
     rng: XorShift,
     task: Option<AmrTask>,
     streamer: Option<TileStreamer>,
@@ -250,6 +259,8 @@ impl AmrCluster {
             recovery: Recovery::Hfr,
             freq_ratio: 1.0,
             fault_per_kcycle: 0.0,
+            fault_budget: None,
+            reexec_on_fault: false,
             rng: XorShift::new(0xA31),
             task: None,
             streamer: None,
@@ -303,8 +314,11 @@ impl AmrCluster {
 
     /// Deterministic per-tile compute time for `task` under `mode` — the
     /// exact duration the FSM uses, exposed so the WCET engine composes
-    /// the same number instead of re-deriving it (fault-free; recovery
-    /// penalties are a reliability budget, not a timing one).
+    /// the same number instead of re-deriving it. Fault recoveries are
+    /// priced separately: under a `FaultPlan` the k-fault re-execution
+    /// term adds `k * (HFR_RESTORE_CYCLES + this bound)` per lockstep
+    /// task, which is exactly the worst per-event penalty
+    /// `fault_penalty` can charge with `reexec_on_fault` set.
     pub fn tile_compute_bound(task: &AmrTask, mode: AmrMode, freq_ratio: f64) -> Cycle {
         let rate = task.precision.cluster_mac_per_cyc() * mode.perf_factor() * freq_ratio;
         (task.macs_per_tile() as f64 / rate).ceil() as Cycle
@@ -326,6 +340,13 @@ impl AmrCluster {
         if self.rng.chance(expected - events as f64) {
             events += 1;
         }
+        // A pinned budget caps injection at the k faults the admission
+        // bound was asked to cover (sampling the RNG first keeps the
+        // stream position — and so any unbudgeted run — unchanged).
+        if let Some(budget) = self.fault_budget {
+            let injected = self.stats.faults_detected + self.stats.faults_silent;
+            events = events.min(budget.saturating_sub(injected));
+        }
         if events == 0 {
             return 0;
         }
@@ -338,7 +359,8 @@ impl AmrCluster {
                 }
                 (_, Recovery::Hfr) => {
                     self.stats.faults_detected += 1;
-                    penalty += HFR_RESTORE_CYCLES;
+                    penalty += HFR_RESTORE_CYCLES
+                        + if self.reexec_on_fault { window } else { 0 };
                 }
                 (AmrMode::Tlm, Recovery::Software) => {
                     self.stats.faults_detected += 1;
@@ -673,6 +695,34 @@ mod tests {
         let stats = run_cluster(c, task(IntPrecision::Int8));
         assert!(stats.reboots > 0);
         assert!(stats.recovery_cycles >= stats.reboots * REBOOT_CYCLES);
+    }
+
+    #[test]
+    fn fault_budget_caps_injection_and_reexec_prices_the_window() {
+        let t = task(IntPrecision::Int8);
+        let mk = |budget, reexec| {
+            let mut c = AmrCluster::new(InitiatorId(0)).with_seed(7);
+            c.mode = AmrMode::Dlm;
+            c.fault_per_kcycle = 1.0;
+            c.fault_budget = budget;
+            c.reexec_on_fault = reexec;
+            c
+        };
+        let unbudgeted = run_cluster(mk(None, false), t.clone());
+        assert!(unbudgeted.faults_detected > 1, "seed 7 injects several");
+        // Budget 1: exactly one fault lands; budget 0: none (the k=0
+        // path is injection-free regardless of the rate knob).
+        let one = run_cluster(mk(Some(1), false), t.clone());
+        assert_eq!(one.faults_detected, 1);
+        let zero = run_cluster(mk(Some(0), false), t.clone());
+        assert_eq!(zero.faults_detected + zero.faults_silent, 0);
+        assert_eq!(zero.recovery_cycles, 0);
+        // Re-execution charges the interrupted tile's window on top of
+        // the HFR restore, per event.
+        let window = AmrCluster::tile_compute_bound(&t, AmrMode::Dlm, 1.0);
+        let re = run_cluster(mk(Some(1), true), t);
+        assert_eq!(re.faults_detected, 1);
+        assert_eq!(re.recovery_cycles, HFR_RESTORE_CYCLES + window);
     }
 
     #[test]

@@ -38,6 +38,13 @@ pub struct HyperRamTiming {
     pub row_bytes: u64,
     /// LLC hit pipeline latency.
     pub llc_hit: Cycle,
+    /// Worst-case transient-retry overhead charged per line fill (0 on
+    /// the fault-free path). A `FaultPlan` with line retries inflates
+    /// this to `retries_per_line * line_retry_cost(..)` — the channel
+    /// cycles of a full row-miss re-fetch per retry — so
+    /// `worst_lines_cost` stays a sound per-target service model under
+    /// injection.
+    pub line_retry_overhead: Cycle,
 }
 
 impl HyperRamTiming {
@@ -48,7 +55,23 @@ impl HyperRamTiming {
             beat_cycles: 2,
             row_bytes: 1024,
             llc_hit: 4,
+            line_retry_overhead: 0,
         }
+    }
+
+    /// Channel cycles one transient retry of a `line_bytes` line costs:
+    /// the HyperBUS aborts and re-issues the whole line transfer with a
+    /// fresh row open (the deterministic worst case — row locality is
+    /// lost on the retry).
+    pub fn line_retry_cost(&self, line_bytes: u64) -> Cycle {
+        self.t_row_miss + self.line_stream_cycles(line_bytes)
+    }
+
+    /// The same timing with a per-line retry overhead — the bound
+    /// engine's inflation hook for faulted scenarios.
+    pub fn with_retry_overhead(mut self, overhead: Cycle) -> Self {
+        self.line_retry_overhead = overhead;
+        self
     }
 
     /// Channel cycles to stream one `line_bytes` cache line (excluding
@@ -88,7 +111,10 @@ impl HyperRamTiming {
         if dirty_possible {
             cost += lines * (self.t_row_miss + stream);
         }
-        cost
+        // Transient-retry inflation: every line may pay the full retry
+        // overhead (the simulator injects on at most every n-th fill, so
+        // measured service stays under this worst case).
+        cost + lines * self.line_retry_overhead
     }
 }
 
@@ -100,6 +126,8 @@ pub struct PathStats {
     pub row_hits: u64,
     pub row_misses: u64,
     pub bursts: u64,
+    /// Transient line retries injected by a fault plan.
+    pub retries: u64,
     /// Uncore cycles with work in flight (queue, channel or hit port) —
     /// the measured-utilization feed for the uncore power domain.
     pub busy_cycles: u64,
@@ -144,6 +172,13 @@ pub struct HyperramPath {
     /// When true the LLC is bypassed entirely (uncached region) — used
     /// by ablation benches.
     pub bypass_llc: bool,
+    /// Fault injection: every n-th line fill suffers a transient retry
+    /// burst (0 = never). Counter-based, so the injected sequence is a
+    /// pure function of the fill sequence — bit-identical under naive
+    /// and event-driven stepping and across sweep threads.
+    fault_retry_every: u64,
+    fault_retries_per_line: u32,
+    fault_fill_counter: u64,
 }
 
 impl HyperramPath {
@@ -158,7 +193,19 @@ impl HyperramPath {
             last_row: None,
             stats: PathStats::default(),
             bypass_llc: false,
+            fault_retry_every: 0,
+            fault_retries_per_line: 0,
+            fault_fill_counter: 0,
         }
+    }
+
+    /// Arm deterministic transient-retry injection: every `every`-th
+    /// line fill (counting from `phase`, a seed-derived offset) pays
+    /// `per_line` retries, each a full row-miss re-fetch of the line.
+    pub fn set_fault_retries(&mut self, every: u64, per_line: u32, phase: u64) {
+        self.fault_retry_every = every;
+        self.fault_retries_per_line = per_line;
+        self.fault_fill_counter = phase;
     }
 
     /// Line base addresses a burst touches.
@@ -211,7 +258,7 @@ impl HyperramPath {
         let line_addr = cur.next_line_addr;
         let part = cur.burst.part_id;
         let write = cur.burst.write;
-        let (dur, fill, wb) = if self.bypass_llc {
+        let (mut dur, fill, wb) = if self.bypass_llc {
             let cur_mut = self.current.as_mut().unwrap();
             let _ = cur_mut;
             let d = self.line_fetch_cycles(line_addr);
@@ -231,6 +278,18 @@ impl HyperramPath {
         };
         if fill {
             self.stats.line_fills += 1;
+            // Seeded transient retry: the affected fill re-fetches the
+            // line `per_line` times. Strictly less than the analytic
+            // inflation (which charges every line), so injection can
+            // only keep measured service under the faulted bound.
+            if self.fault_retry_every > 0 {
+                self.fault_fill_counter += 1;
+                if self.fault_fill_counter % self.fault_retry_every == 0 {
+                    dur += self.fault_retries_per_line as Cycle
+                        * self.timing.line_retry_cost(self.llc.line_bytes());
+                    self.stats.retries += self.fault_retries_per_line as u64;
+                }
+            }
         }
         if wb {
             self.stats.writebacks += 1;
@@ -531,6 +590,32 @@ mod tests {
         }
         let tags: Vec<u64> = done.iter().map(|c| c.tag).collect();
         assert_eq!(tags, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn injected_retries_slow_fills_but_stay_under_the_inflated_model() {
+        let t = HyperRamTiming::carfield();
+        let per_retry = t.line_retry_cost(64);
+        assert_eq!(per_retry, 24 + 16, "row-miss re-fetch of one line");
+        // The inflated service model adds the overhead to every line...
+        let inflated = t.with_retry_overhead(2 * per_retry);
+        assert_eq!(
+            inflated.worst_lines_cost(12, 64, false),
+            t.worst_lines_cost(12, 64, false) + 12 * 2 * per_retry
+        );
+        // ...while the injector hits only every n-th fill: measured
+        // completion stays under the inflated bound, above the clean one.
+        let mut p = HyperramPath::carfield();
+        p.set_fault_retries(1, 2, 0); // every fill, worst phase
+        let c = run_one(&mut p, read(0, 8).with_tag(1), 0);
+        assert_eq!(p.stats.retries, 2);
+        assert!(c.finished_at > 42, "retries must cost channel time");
+        assert!(c.finished_at <= inflated.worst_lines_cost(1, 64, false) + 2);
+        // Unarmed paths are bit-identical to the fault-free seed.
+        let mut q = HyperramPath::carfield();
+        let c2 = run_one(&mut q, read(0, 8).with_tag(1), 0);
+        assert!((40..=42).contains(&c2.finished_at));
+        assert_eq!(q.stats.retries, 0);
     }
 
     #[test]

@@ -68,6 +68,10 @@ pub enum Resource {
     Compute,
     /// An endless stream — no completion bound exists.
     Endless,
+    /// The fault plan's k-fault re-execution budget: the nominal bound
+    /// fits the deadline, the faulted one does not. No isolation knob
+    /// helps — lower k, lower the fault rate, or relax the deadline.
+    FaultRecovery,
 }
 
 impl Resource {
@@ -80,6 +84,7 @@ impl Resource {
             Resource::TsuShaping => "own TSU shaping",
             Resource::Compute => "compute pipeline",
             Resource::Endless => "endless workload (no completion bound)",
+            Resource::FaultRecovery => "k-fault recovery budget",
         }
     }
 }
@@ -155,15 +160,33 @@ pub struct TaskBound {
     /// Worst-case latency of a single memory transaction.
     pub mem_bound: CostSplit,
     pub mem_binding: Resource,
-    /// Worst-case completion time (`None` for endless workloads).
+    /// Worst-case *nominal* completion time (`None` for endless
+    /// workloads) — the fault-free term.
     pub completion_bound: Option<CostSplit>,
     pub completion_binding: Resource,
+    /// k-fault re-execution term from the scenario's `FaultPlan`: up to
+    /// `k_faults` HFR recoveries, each restoring core state
+    /// (`HFR_RESTORE_CYCLES`) and re-executing the interrupted tile.
+    /// Recovery runs on the cluster's own pipeline, so the term lands in
+    /// the system domain (it stretches with core DVFS, not with the
+    /// uncore clock). `ZERO` without a plan — every accessor is then
+    /// bit-identical to the fault-free engine.
+    pub fault_bound: CostSplit,
 }
 
 impl TaskBound {
     /// Completion bound in system cycles at the scenario's clocks (the
-    /// admission test's currency). Sound: uncore components round up.
+    /// admission test's currency), *including* the k-fault re-execution
+    /// term. Sound: uncore components round up.
     pub fn completion_cycles(&self, clocks: Option<&ClockTree>) -> Option<Cycle> {
+        self.completion_bound
+            .map(|c| c.plus(self.fault_bound).system_cycles(clocks))
+    }
+
+    /// The fault-free completion bound in system cycles — what admission
+    /// compares to attribute a rejection to [`Resource::FaultRecovery`]
+    /// (deadline fits nominally, misses with the k-fault term).
+    pub fn nominal_completion_cycles(&self, clocks: Option<&ClockTree>) -> Option<Cycle> {
         self.completion_bound.map(|c| c.system_cycles(clocks))
     }
 
@@ -173,12 +196,13 @@ impl TaskBound {
     }
 
     /// Completion bound as wall-clock nanoseconds at an operating
-    /// point's clock tree — the DVFS governor's currency. *Exact*: each
-    /// domain's cycles convert through their own clock and the results
-    /// sum in wall-clock, so a decoupled uncore's service time does not
-    /// falsely stretch with the system voltage.
+    /// point's clock tree — the DVFS governor's currency, k-fault term
+    /// included. *Exact*: each domain's cycles convert through their own
+    /// clock and the results sum in wall-clock, so a decoupled uncore's
+    /// service time does not falsely stretch with the system voltage.
     pub fn completion_ns(&self, clocks: &ClockTree) -> Option<f64> {
-        self.completion_bound.map(|c| c.ns(clocks))
+        self.completion_bound
+            .map(|c| c.plus(self.fault_bound).ns(clocks))
     }
 
     /// Memory-latency bound in nanoseconds at `clocks` (exact
@@ -306,16 +330,57 @@ pub fn analyze(scenario: &Scenario) -> WcetReport {
         "WCET engine geometry drifted from DpllcConfig::carfield()"
     );
     let models = models_of(scenario);
-    let timing = HyperRamTiming::carfield();
+    let plan = scenario.fault_plan();
+    // Transient-retry inflation: under a fault plan with line retries
+    // every HyperRAM line fill may pay `retries_per_line` full row-miss
+    // re-fetches; the inflated timing flows through every service-curve
+    // and interference formula below. Zero overhead without a plan —
+    // bit-identical to the fault-free engine.
+    let timing = {
+        let base = HyperRamTiming::carfield();
+        match plan {
+            Some(p) => base.with_retry_overhead(p.retry_overhead(base.line_retry_cost(LINE_BYTES))),
+            None => base,
+        }
+    };
     let pricing = Pricing::of(scenario);
     let bounds = (0..models.len())
         .filter(|&i| models[i].critical)
-        .map(|i| analyze_model(i, &models, &timing, pricing))
+        .map(|i| {
+            let mut tb = analyze_model(i, &models, &timing, pricing);
+            tb.fault_bound = fault_term(&models[i], plan);
+            tb
+        })
         .collect();
     WcetReport {
         scenario: scenario.name.clone(),
         policy: scenario.tuning.describe(),
         bounds,
+    }
+}
+
+/// The k-fault re-execution term for one critical initiator: each of up
+/// to `k_faults` detected lockstep mismatches costs an HFR restore plus
+/// a re-execution of the interrupted tile — exactly the worst per-event
+/// penalty the AMR simulator charges under a plan. Lockstep detection
+/// exists only on AMR cluster tasks (the model's compute window *is*
+/// `AmrCluster::tile_compute_bound`, so bound and simulator agree on the
+/// window by construction); INDIP tasks take silent faults with no time
+/// penalty, and non-cluster tasks have no lockstep hardware at all.
+fn fault_term(me: &InitiatorModel, plan: Option<crate::coordinator::FaultPlan>) -> CostSplit {
+    let Some(p) = plan else {
+        return CostSplit::ZERO;
+    };
+    if p.k_faults == 0 || !me.lockstep {
+        return CostSplit::ZERO;
+    }
+    match me.shape {
+        TaskShape::Cluster {
+            compute_per_tile, ..
+        } => CostSplit::sys(
+            p.k_faults as Cycle * (crate::soc::amr::HFR_RESTORE_CYCLES + compute_per_tile),
+        ),
+        _ => CostSplit::ZERO,
     }
 }
 
@@ -547,6 +612,7 @@ fn analyze_model(
         mem_binding,
         completion_bound: completion,
         completion_binding,
+        fault_bound: CostSplit::ZERO,
     }
 }
 
@@ -952,8 +1018,63 @@ mod tests {
             Resource::TsuShaping,
             Resource::Compute,
             Resource::Endless,
+            Resource::FaultRecovery,
         ] {
             assert!(!r.describe().is_empty());
         }
+    }
+
+    #[test]
+    fn fault_term_prices_k_recoveries_on_lockstep_clusters_only() {
+        use crate::coordinator::FaultPlan;
+        use crate::soc::amr::{AmrCluster, AmrMode, HFR_RESTORE_CYCLES};
+        use crate::soc::amr::{AmrTask, IntPrecision};
+        let amr = |crit| {
+            Scenario::new("f", IsolationPolicy::PrivatePaths).with_task(McTask::new(
+                "amr",
+                crit,
+                Workload::AmrMatMul {
+                    precision: IntPrecision::Int8,
+                    m: 64,
+                    k: 64,
+                    n: 64,
+                    tile: 16,
+                },
+            ))
+        };
+        let plan = FaultPlan::new(3).with_amr_rate(1.0).with_k(2);
+        // Safety -> DLM lockstep: the k-term is k x (HFR + tile window).
+        let s = amr(Criticality::Safety).with_faults(plan);
+        let b = analyze(&s);
+        let tb = b.bound_for("amr");
+        let window = AmrCluster::tile_compute_bound(
+            &AmrTask {
+                precision: IntPrecision::Int8,
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 16,
+                src_base: 0,
+                dst_base: 0,
+                part_id: 0,
+            },
+            AmrMode::Dlm,
+            1.0,
+        );
+        assert_eq!(
+            tb.fault_bound,
+            CostSplit::sys(2 * (HFR_RESTORE_CYCLES + window))
+        );
+        assert_eq!(
+            tb.completion_cycles(None).unwrap(),
+            tb.nominal_completion_cycles(None).unwrap() + tb.fault_bound.system
+        );
+        // Hard -> INDIP: faults are silent, no time penalty, no term.
+        let indip = analyze(&amr(Criticality::Hard).with_faults(plan));
+        assert_eq!(indip.bound_for("amr").fault_bound, CostSplit::ZERO);
+        // k = 0 (and no plan at all) are bit-identical.
+        let k0 = analyze(&amr(Criticality::Safety).with_faults(FaultPlan::new(3)));
+        let none = analyze(&amr(Criticality::Safety));
+        assert_eq!(k0, none);
     }
 }

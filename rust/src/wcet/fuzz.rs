@@ -9,7 +9,7 @@
 //! were empirically validated on (1200 mixes, zero violations).
 
 use crate::coordinator::task::Criticality;
-use crate::coordinator::{IsolationPolicy, McTask, Scenario, Workload};
+use crate::coordinator::{FaultPlan, IsolationPolicy, McTask, Scenario, ScrubConfig, Workload};
 use crate::soc::amr::IntPrecision;
 use crate::soc::axi::Target;
 use crate::soc::dma::DmaJob;
@@ -167,6 +167,28 @@ pub fn random_scenario(seed: u64) -> Scenario {
         slot += 1;
     }
     scenario
+}
+
+/// Generate the deterministic random fault plan for `seed` at the
+/// `k`-fault hypothesis (`tests/fault_soundness.rs`).
+///
+/// Uses its *own* RNG stream (domain-separated from the scenario
+/// generator's), so pairing a plan with `random_scenario(seed)` never
+/// perturbs the mix's draw order — the same seed yields the same mix
+/// with and without faults.
+pub fn random_fault_plan(seed: u64, k: u32) -> FaultPlan {
+    let mut rng = XorShift::new(seed ^ 0xFA17_0000_FA17_0001);
+    let rate = [0.0, 0.25, 1.0, 3.0][rng.below(4) as usize];
+    let retry_every = [0u64, 32, 64, 128][rng.below(4) as usize];
+    let retries_per_line = 1 + rng.below(2) as u32;
+    let mut plan = FaultPlan::new(seed).with_amr_rate(rate).with_k(k);
+    if retry_every > 0 {
+        plan = plan.with_retries(retry_every, retries_per_line);
+    }
+    if rng.below(2) == 0 {
+        plan = plan.with_scrub(ScrubConfig::carfield());
+    }
+    plan
 }
 
 #[cfg(test)]

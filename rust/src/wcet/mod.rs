@@ -56,8 +56,20 @@
 //! seed's single timebase the domains coincide and every formula is
 //! bit-identical to the original cycles-only engine.
 //!
+//! # The fault dimension
+//!
+//! A scenario's [`FaultPlan`](crate::coordinator::FaultPlan) threads
+//! through the analysis: HyperRAM timing is inflated by the bounded
+//! per-line retry overhead, the ECC scrub engine joins the model set as
+//! one more TRU-regulated competitor (its interference composes through
+//! the same arrival curves), and lockstep AMR tasks carry a **k-fault
+//! re-execution term** ([`TaskBound::fault_bound`]) pricing up to
+//! `k_faults` HFR recoveries. A quiet plan is normalised away, so the
+//! k=0 path is byte-identical to the fault-free engine.
+//!
 //! Soundness (`measured <= bound`) is enforced empirically by the seeded
-//! scenario fuzzer in `tests/wcet_soundness.rs` (and across mixed
+//! scenario fuzzer in `tests/wcet_soundness.rs` (under seeded fault
+//! injection by `tests/fault_soundness.rs`, and across mixed
 //! uncore/core frequency ratios by `tests/uncore_equivalence.rs`) and,
 //! for the paper grids, by `experiments::bounds`; tightness on the
 //! TSU-regulated rows (`bound <= 2x measured worst case`) is asserted

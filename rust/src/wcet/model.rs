@@ -12,7 +12,7 @@
 
 use crate::coordinator::task::Workload;
 use crate::coordinator::{McTask, Scenario};
-use crate::soc::amr::{AmrCluster, AmrTask};
+use crate::soc::amr::{AmrCluster, AmrMode, AmrTask};
 use crate::soc::axi::{Target, BEAT_BYTES};
 use crate::soc::clock::{Cycle, Domain};
 use crate::soc::tiles::{TileStreamer, CLUSTER_BUFFER_DEPTH};
@@ -61,18 +61,56 @@ pub struct InitiatorModel {
     /// its own (bounds W-channel hold chains; see
     /// `TileStreamer::worst_write_chain`).
     pub write_chain_cap: u64,
+    /// Runs in an AMR lockstep mode (DLM/TLM): mismatches are *detected*
+    /// and recovered — the initiator the k-fault re-execution term
+    /// applies to. INDIP and non-AMR initiators take no timed fault
+    /// penalty (INDIP corruptions are silent).
+    pub lockstep: bool,
     pub shape: TaskShape,
     pub streams: Vec<StreamModel>,
 }
 
-/// Derive the per-initiator traffic models for a scenario.
+/// Derive the per-initiator traffic models for a scenario — one per
+/// task in declaration order, plus the fault plan's ECC scrub engine
+/// (when enabled) as a trailing regulated background initiator,
+/// mirroring `Scheduler::execute`'s attach order exactly.
 pub fn models_of(scenario: &Scenario) -> Vec<InitiatorModel> {
-    scenario
+    let mut models: Vec<InitiatorModel> = scenario
         .tasks
         .iter()
         .enumerate()
         .map(|(slot, task)| model_of(scenario, slot, task))
-        .collect()
+        .collect();
+    if let Some(sc) = scenario.fault_plan().and_then(|p| p.scrub) {
+        models.push(scrub_model(sc));
+    }
+    models
+}
+
+/// The ECC patrol scrubber as an interference source: an endless,
+/// TRU-regulated HyperRAM reader. Its arrival curve
+/// (`TsuConfig::max_beats_in_window`) feeds the busy-window fixed point
+/// like any other regulated competitor, and its mere presence charges
+/// the TCT walker's row-reopen penalty — background scrub traffic
+/// destroys row locality just like a DMA does.
+fn scrub_model(sc: crate::coordinator::ScrubConfig) -> InitiatorModel {
+    InitiatorModel {
+        name: "ecc-scrub".to_string(),
+        critical: false,
+        tsu: TsuConfig::regulated(sc.beats, sc.beats, sc.period),
+        inflight_cap: 1,
+        write_chain_cap: 0,
+        lockstep: false,
+        shape: TaskShape::Dma { chunks: None },
+        streams: vec![StreamModel {
+            target: Target::Hyperram,
+            beats: sc.beats,
+            write: false,
+            addr: 0x40_0000,
+            count: None,
+            unbuffered_write: false,
+        }],
+    }
 }
 
 fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
@@ -89,6 +127,7 @@ fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
                 tsu,
                 inflight_cap: 1,
                 write_chain_cap: 0,
+                lockstep: false,
                 shape: TaskShape::HostTct {
                     think: spec.think_cycles,
                     accesses,
@@ -133,6 +172,7 @@ fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
                 tsu,
                 inflight_cap: job.outstanding as u64,
                 write_chain_cap: job.outstanding as u64,
+                lockstep: false,
                 shape: TaskShape::Dma { chunks },
                 streams,
             }
@@ -163,7 +203,7 @@ fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
                 task.required_amr_mode(),
                 scenario.freq_ratio(Domain::Amr),
             );
-            cluster_model(
+            let mut m = cluster_model(
                 task,
                 critical,
                 tsu,
@@ -173,7 +213,9 @@ fn model_of(scenario: &Scenario, slot: usize, task: &McTask) -> InitiatorModel {
                 amr.out_beats_per_tile(),
                 amr.src_base,
                 amr.dst_base,
-            )
+            );
+            m.lockstep = task.required_amr_mode() != AmrMode::Indip;
+            m
         }
         Workload::VectorMatMul { format, m, k, n, tile } => {
             let vt = VectorTask {
@@ -262,6 +304,7 @@ fn cluster_model(
         tsu,
         inflight_cap: 1,
         write_chain_cap: TileStreamer::worst_write_chain(CLUSTER_BUFFER_DEPTH),
+        lockstep: false,
         shape: TaskShape::Cluster {
             tiles,
             compute_per_tile,
@@ -341,6 +384,43 @@ mod tests {
             scaled > lockstep,
             "0.9x AMR PLL must stretch the compute bound: {lockstep} -> {scaled}"
         );
+    }
+
+    #[test]
+    fn scrub_plan_appends_a_regulated_endless_reader() {
+        use crate::coordinator::{FaultPlan, ScrubConfig};
+        let base = Scenario::new("m", IsolationPolicy::TsuRegulation).with_task(McTask::new(
+            "tct",
+            Criticality::Hard,
+            Workload::HostTct(TctSpec::fig6a()),
+        ));
+        assert_eq!(models_of(&base).len(), 1);
+        let faulted = base.with_faults(FaultPlan::new(5).with_scrub(ScrubConfig::carfield()));
+        let m = models_of(&faulted);
+        assert_eq!(m.len(), 2, "scrub trails the task initiators");
+        let scrub = &m[1];
+        assert_eq!(scrub.name, "ecc-scrub");
+        assert!(!scrub.critical && !scrub.lockstep);
+        assert!(scrub.tsu.is_tru_regulated(), "scrub must stay analyzable");
+        assert!(scrub.streams[0].count.is_none(), "patrol never drains");
+        // Lockstep marking: Safety AMR is DLM (lockstep), Hard is INDIP.
+        use crate::soc::amr::IntPrecision;
+        let amr = |crit| {
+            let s = Scenario::new("m", IsolationPolicy::PrivatePaths).with_task(McTask::new(
+                "amr",
+                crit,
+                Workload::AmrMatMul {
+                    precision: IntPrecision::Int8,
+                    m: 32,
+                    k: 32,
+                    n: 32,
+                    tile: 8,
+                },
+            ));
+            models_of(&s)[0].lockstep
+        };
+        assert!(amr(Criticality::Safety));
+        assert!(!amr(Criticality::Hard));
     }
 
     #[test]

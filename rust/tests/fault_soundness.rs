@@ -1,0 +1,172 @@
+//! Soundness of the k-fault admission story, fuzzed: every seeded
+//! faulted simulation must stay under its k-fault completion bound, the
+//! quiet plan must be bit-identical to no plan at all (the k=0
+//! regression pin), bounds must be monotone in the fault knobs, and
+//! fault reports must be byte-stable across sweep thread counts (the
+//! per-scenario fault RNG streams owe nothing to execution order).
+
+use carfield::coordinator::{sweep, FaultPlan, Scenario, Scheduler};
+use carfield::experiments::reliability;
+use carfield::wcet::{analyze, fuzz};
+
+/// Mixes per faulted campaign (mirrors `tests/wcet_soundness.rs`).
+const FUZZ_MIXES: u64 = 200;
+
+/// The faulted fuzz grid: each mix paired with its seeded fault plan,
+/// cycling the k-fault hypothesis through {0, 1, 2} across the campaign.
+fn faulted_grid(n: u64) -> Vec<Scenario> {
+    (1..=n)
+        .map(|seed| {
+            let plan = fuzz::random_fault_plan(seed, (seed % 3) as u32);
+            fuzz::random_scenario(seed).with_faults(plan)
+        })
+        .collect()
+}
+
+#[test]
+fn faulted_mixes_measured_never_exceeds_k_fault_bound() {
+    let grid = faulted_grid(FUZZ_MIXES);
+    let reports = sweep::run_scenarios(&grid, sweep::default_threads());
+    let mut checked = 0usize;
+    let mut injected = 0u64;
+    for (scenario, report) in grid.iter().zip(&reports) {
+        let wr = analyze(scenario);
+        for tb in &wr.bounds {
+            let t = report.task(&tb.task);
+            injected += (t.extra_value("faults").unwrap_or(0.0)
+                + t.extra_value("faults_silent").unwrap_or(0.0)) as u64;
+            let measured_mem = t
+                .extra_value("access_max")
+                .or_else(|| t.extra_value("mem_max"))
+                .unwrap_or(0.0);
+            let mem_bound = tb.mem_cycles(scenario.clocks().as_ref());
+            assert!(
+                measured_mem <= mem_bound as f64,
+                "{}::{} memory latency UNSOUND under injection: measured {} > bound {} \
+                 (reproduce with fuzz::random_scenario + fuzz::random_fault_plan)",
+                scenario.name,
+                tb.task,
+                measured_mem,
+                mem_bound
+            );
+            if let Some(cb) = tb.completion_cycles(scenario.clocks().as_ref()) {
+                assert!(
+                    t.makespan > 0,
+                    "{}::{} never drained within the cycle budget",
+                    scenario.name,
+                    tb.task
+                );
+                assert!(
+                    t.makespan <= cb,
+                    "{}::{} completion UNSOUND under injection: makespan {} > k-fault bound {}",
+                    scenario.name,
+                    tb.task,
+                    t.makespan,
+                    cb
+                );
+            }
+            checked += 1;
+        }
+    }
+    assert!(
+        checked >= FUZZ_MIXES as usize,
+        "only {checked} critical tasks checked — generator degenerated?"
+    );
+    assert!(
+        injected > 0,
+        "no mix injected a single fault — the campaign is vacuous"
+    );
+}
+
+#[test]
+fn quiet_plan_is_bit_identical_to_no_plan() {
+    // The k=0 regression pin: an all-quiet plan (rate 0, no retries, no
+    // scrub, k=0) must leave both the analysis and the simulation
+    // byte-for-byte identical to a scenario with no plan at all.
+    for seed in [1u64, 3, 17, 42, 99] {
+        let bare = fuzz::random_scenario(seed);
+        let quiet = fuzz::random_scenario(seed).with_faults(FaultPlan::new(seed));
+        assert_eq!(
+            analyze(&bare),
+            analyze(&quiet),
+            "quiet plan perturbed the bounds for seed {seed}"
+        );
+        assert_eq!(
+            Scheduler::run(&bare),
+            Scheduler::run(&quiet),
+            "quiet plan perturbed the simulation for seed {seed}"
+        );
+    }
+}
+
+#[test]
+fn bounds_are_monotone_in_the_fault_knobs() {
+    // A harsher hypothesis can only raise (never lower) a completion
+    // bound: non-decreasing in k, in the per-line retry burden, and in
+    // the rate axis of the reliability grid's plan mapping.
+    let mixes: Vec<Scenario> = (1..=60)
+        .map(fuzz::random_scenario)
+        .filter(|s| {
+            s.tasks
+                .iter()
+                .any(|t| t.required_amr_mode() != carfield::soc::amr::AmrMode::Indip)
+        })
+        .take(6)
+        .collect();
+    assert!(!mixes.is_empty(), "no lockstep mixes in the first 60 seeds");
+    let bound_under = |s: &Scenario, plan: FaultPlan| -> Vec<Option<u64>> {
+        let wr = analyze(&s.clone().with_faults(plan));
+        wr.bounds
+            .iter()
+            .map(|tb| tb.completion_cycles(s.clocks().as_ref()))
+            .collect()
+    };
+    let all_le = |a: &[Option<u64>], b: &[Option<u64>]| {
+        a.iter().zip(b).all(|(x, y)| match (x, y) {
+            (Some(x), Some(y)) => x <= y,
+            (None, None) => true,
+            _ => false,
+        })
+    };
+    for s in &mixes {
+        for k in 0..2u32 {
+            let lo = bound_under(s, FaultPlan::new(5).with_amr_rate(1.0).with_k(k));
+            let hi = bound_under(s, FaultPlan::new(5).with_amr_rate(1.0).with_k(k + 1));
+            assert!(all_le(&lo, &hi), "{}: bound shrank as k {k} -> {}", s.name, k + 1);
+        }
+        let none = bound_under(s, FaultPlan::new(5).with_k(1));
+        let one = bound_under(s, FaultPlan::new(5).with_k(1).with_retries(64, 1));
+        let two = bound_under(s, FaultPlan::new(5).with_k(1).with_retries(64, 2));
+        assert!(all_le(&none, &one) && all_le(&one, &two), "{}: retry burden", s.name);
+        let mut prev = bound_under(s, reliability::plan_for(5, reliability::FAULT_RATES[0], 1));
+        for &rate in &reliability::FAULT_RATES[1..] {
+            let next = bound_under(s, reliability::plan_for(5, rate, 1));
+            assert!(all_le(&prev, &next), "{}: bound shrank at rate {rate}", s.name);
+            prev = next;
+        }
+    }
+}
+
+#[test]
+fn fault_reports_bit_identical_across_thread_counts() {
+    // The per-scenario fault RNG streams are derived from (plan seed,
+    // placement slot) alone, so sweep parallelism must not change a
+    // single injected event: full reports, not just verdicts, compare
+    // equal at every thread count.
+    let grid = faulted_grid(32);
+    let reference = sweep::run_scenarios(&grid, 1);
+    assert!(
+        reference.iter().any(|r| r
+            .tasks
+            .iter()
+            .any(|t| t.extra_value("faults").unwrap_or(0.0) > 0.0)),
+        "the determinism grid never injected a fault"
+    );
+    for threads in [2usize, 8] {
+        assert_eq!(
+            sweep::run_scenarios(&grid, threads),
+            reference,
+            "fault reports diverged at {threads} threads"
+        );
+    }
+}
