@@ -6,7 +6,7 @@
 
 RUST_DIR := rust
 
-.PHONY: build test bench wcet autotune dvfs faults artifacts python-test
+.PHONY: build test bench wcet autotune dvfs faults trace artifacts python-test
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -38,6 +38,14 @@ dvfs: build
 # an empty availability grid, or a fault dimension that never binds).
 faults: build
 	$(RUST_DIR)/target/release/carfield faults
+
+# Bound gap attribution: the fig6a grid traced into per-resource
+# interference ledgers printed next to the WCET breakdown terms; JSONL +
+# Perfetto sink files land in rust/target/trace/ (fails on a ledger that
+# does not re-sum to its makespan, a measured term over its bound, a
+# perturbed report, or an invalid sink).
+trace: build
+	cd $(RUST_DIR) && target/release/carfield trace
 
 # AOT-lower the JAX/Pallas kernels to HLO text artifacts consumed by the
 # rust PJRT runtime (requires the python toolchain).

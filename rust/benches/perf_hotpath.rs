@@ -5,8 +5,9 @@
 //! split-uncore multi-rate stepping vs lock-step + ns-domain bound
 //! recomposition overhead, fault-injection overhead (faulted vs
 //! fault-free simulation, k-fault bound throughput, reliability-grid
-//! latency), coordinator dispatch, and PJRT artifact execution
-//! overhead.
+//! latency), event-tracing overhead (zero-cost-when-disabled gate +
+//! armed recording cost), coordinator dispatch, and PJRT artifact
+//! execution overhead.
 //!
 //! Targets (see lib.rs layering docs): >= 60 simulated Mcyc/s on the
 //! Fig. 6a topology via the event-driven path (>= 3x naive), raised from
@@ -328,6 +329,70 @@ fn reliability_overhead(b: &mut BenchRunner) {
     assert!(r.k_flips >= 1, "the k-term flipped no knife-edge cell");
 }
 
+/// Event-tracing overhead: the zero-cost-when-disabled contract. Three
+/// measurements on the fig6a topology — never-touched baseline, armed
+/// then disarmed (proves disarming restores the fast path), and armed —
+/// plus the sweep-level non-perturbation gate: trace-enabled runs must
+/// reproduce every `ScenarioReport` bit-identically.
+fn tracing_overhead(b: &mut BenchRunner) {
+    const CYCLES: u64 = 2_000_000;
+    let (_, dt_untraced) = b.time_with_mean("SocSim 2M cycles untraced baseline", 5, || {
+        let mut soc = fig6a_topology();
+        soc.run_cycles_fast(CYCLES);
+    });
+    let (_, dt_disabled) =
+        b.time_with_mean("SocSim 2M cycles tracing disarmed (armed, then off)", 5, || {
+            let mut soc = fig6a_topology();
+            soc.set_trace(true);
+            soc.set_trace(false);
+            soc.run_cycles_fast(CYCLES);
+        });
+    let (events, dt_armed) = b.time_with_mean("SocSim 2M cycles tracing armed", 5, || {
+        let mut soc = fig6a_topology();
+        soc.set_trace(true);
+        soc.run_cycles_fast(CYCLES);
+        soc.take_trace().len()
+    });
+    b.metric(
+        "trace-disabled throughput",
+        CYCLES as f64 / dt_disabled / 1e6,
+        "Mcyc/s (gate: within 5% of untraced)",
+    );
+    let disabled_cost = dt_disabled / dt_untraced.max(1e-12);
+    b.metric("trace-disabled cost vs untraced", disabled_cost, "x wall-clock (gate <= 1.05)");
+    b.metric(
+        "trace-armed cost vs untraced",
+        dt_armed / dt_untraced.max(1e-12),
+        "x wall-clock (event recording + drain)",
+    );
+    b.metric("trace events captured (2M cycles)", events as f64, "events");
+    // The CI perf gate: with tracing disabled (the default every other
+    // experiment runs under) the hot path must stay within 5% of the
+    // untraced baseline. Both paths are branch-identical, so anything
+    // past noise means disarming stopped restoring the fast path.
+    assert!(
+        disabled_cost <= 1.05,
+        "trace-disabled run {disabled_cost:.3}x slower than untraced baseline (gate: 1.05)"
+    );
+
+    // The determinism half of the gate, on the real figure grid.
+    let grid = fig6a::scenario_grid();
+    let (reports_off, _) = b.time_with_mean("sweep fig6a grid tracing disabled", 2, || {
+        sweep::run_scenarios(&grid, 1)
+    });
+    let (reports_on, dt_on) = b.time_with_mean("sweep fig6a grid tracing enabled", 2, || {
+        grid.iter()
+            .map(|s| Scheduler::run_traced(s).0)
+            .collect::<Vec<_>>()
+    });
+    assert_eq!(reports_on, reports_off, "tracing perturbed a ScenarioReport");
+    b.metric(
+        "trace-enabled sweep latency",
+        dt_on * 1e3,
+        "ms (fig6a grid, capture + ledger inputs)",
+    );
+}
+
 /// Coordinator scenario-assembly + teardown overhead.
 fn dispatch_overhead(b: &mut BenchRunner) {
     b.time("Scheduler::run tiny scenario", 5, || {
@@ -385,6 +450,7 @@ fn main() {
     governor_overhead(&mut b);
     uncore_overhead(&mut b);
     reliability_overhead(&mut b);
+    tracing_overhead(&mut b);
     dispatch_overhead(&mut b);
     artifact_overhead(&mut b);
     b.finish();

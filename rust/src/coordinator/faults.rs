@@ -21,6 +21,14 @@
 //! (the hypothesis admission certifies) while retries and scrub traffic
 //! are *unbudgeted* — their worst case is already priced per line /
 //! per window, so soundness needs no event count.
+//!
+//! With tracing armed ([`crate::trace`]), every consequence of a plan is
+//! visible in the event stream: HFR recoveries and reboots as `recovery`
+//! events (Perfetto instants on the cluster's track), retry overhead on
+//! each `line_fill` event's `retry_cycles` field, and scrub traffic as
+//! one more initiator's `delivery` lifecycle — so a faulted campaign's
+//! ledger attributes recovery stalls per task next to the k-fault bound
+//! term.
 
 use crate::soc::clock::Cycle;
 

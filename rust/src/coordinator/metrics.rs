@@ -27,9 +27,14 @@ pub struct TaskReport {
 
 impl TaskReport {
     pub fn extra_value(&self, key: &str) -> Option<f64> {
+        // Byte compare with a length pre-check: extras keys are short
+        // ASCII literals, and the common case in a grid harvest is a
+        // miss on every row but one — rejecting on `len` avoids the
+        // memcmp (and any Unicode-aware `str` comparison machinery).
+        let key = key.as_bytes();
         self.extra
             .iter()
-            .find(|(k, _)| k == key)
+            .find(|(k, _)| k.len() == key.len() && k.as_bytes() == key)
             .map(|(_, v)| *v)
     }
 }
@@ -51,10 +56,32 @@ pub struct ScenarioReport {
 
 impl ScenarioReport {
     pub fn task(&self, name: &str) -> &TaskReport {
+        let key = name.as_bytes();
         self.tasks
             .iter()
-            .find(|t| t.name == name)
+            .find(|t| t.name.len() == key.len() && t.name.as_bytes() == key)
             .unwrap_or_else(|| panic!("no task report named {name}"))
+    }
+
+    /// Precomputed name -> slot lookup for repeated `task()` calls: the
+    /// experiment grids and the trace gap-attribution table resolve the
+    /// same few names once per row per metric, and the repeated linear
+    /// String scans were measurable in the sweep harvest. Build once
+    /// per report; lookups binary-search a sorted slice of borrowed
+    /// names (no interning table to maintain, nothing added to the
+    /// frozen report shape).
+    pub fn index(&self) -> TaskIndex<'_> {
+        let mut by_name: Vec<(&str, usize)> = self
+            .tasks
+            .iter()
+            .enumerate()
+            .map(|(i, t)| (t.name.as_str(), i))
+            .collect();
+        by_name.sort_unstable_by_key(|&(n, i)| (n, i));
+        TaskIndex {
+            tasks: &self.tasks,
+            by_name,
+        }
     }
 
     /// All TCT deadlines met?
@@ -96,6 +123,31 @@ impl ScenarioReport {
             }
         }
         out
+    }
+}
+
+/// Sorted-name lookup over one report's tasks (see
+/// [`ScenarioReport::index`]). Duplicate task names resolve to the
+/// first declaration, matching the linear scan's behaviour.
+pub struct TaskIndex<'a> {
+    tasks: &'a [TaskReport],
+    by_name: Vec<(&'a str, usize)>,
+}
+
+impl<'a> TaskIndex<'a> {
+    pub fn get(&self, name: &str) -> Option<&'a TaskReport> {
+        let i = self.by_name.partition_point(|&(n, _)| n < name);
+        match self.by_name.get(i) {
+            Some(&(n, slot)) if n == name => Some(&self.tasks[slot]),
+            _ => None,
+        }
+    }
+
+    /// Panicking counterpart of [`TaskIndex::get`], mirroring
+    /// [`ScenarioReport::task`].
+    pub fn task(&self, name: &str) -> &'a TaskReport {
+        self.get(name)
+            .unwrap_or_else(|| panic!("no task report named {name}"))
     }
 }
 
@@ -164,6 +216,27 @@ mod tests {
     #[should_panic(expected = "no task report")]
     fn missing_task_panics() {
         report().task("ghost");
+    }
+
+    #[test]
+    fn task_index_matches_linear_scan() {
+        let mut r = report();
+        r.tasks.push(TaskReport {
+            name: "aaa".into(),
+            ..r.tasks[0].clone()
+        });
+        // A duplicate name must resolve to the first declaration, like
+        // the linear scan does.
+        r.tasks.push(TaskReport {
+            makespan: 1,
+            ..r.tasks[0].clone()
+        });
+        let idx = r.index();
+        for name in ["tct", "aaa"] {
+            assert!(std::ptr::eq(idx.task(name), r.task(name)), "{name}");
+        }
+        assert!(idx.get("ghost").is_none());
+        assert_eq!(idx.task("tct").makespan, 900);
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub mod task;
 
 pub use autotune::{autotune, Autotuner, SearchStrategy, TuneError, TuneOutcome};
 pub use faults::{FaultPlan, ScrubConfig};
-pub use metrics::{ScenarioReport, TaskReport};
+pub use metrics::{ScenarioReport, TaskIndex, TaskReport};
 pub use policy::{IsolationPolicy, ResourceConfig, SocTuning, TsuKnobs, TuningError};
 pub use scheduler::{AdmissionDecision, Rejection, Scenario, Scheduler};
 pub use task::{Criticality, McTask, Workload};

@@ -22,6 +22,7 @@ use super::faults::FaultPlan;
 use super::metrics::{ScenarioReport, TaskReport};
 use super::policy::SocTuning;
 use super::task::{McTask, Workload};
+use crate::trace::{LedgerTask, TraceCapture, TraceConfig};
 use crate::wcet::{self, Resource, WcetReport};
 
 /// A bundle of tasks to run concurrently under one isolation tuning.
@@ -40,6 +41,9 @@ pub struct Scenario {
     /// `None` — and the quiet plan — keep simulator and bounds
     /// bit-identical to the fault-free engine.
     pub faults: Option<FaultPlan>,
+    /// Event tracing (off by default — the hook sites then cost one
+    /// branch each and reports stay bit-identical to the seed).
+    pub trace: TraceConfig,
     pub tasks: Vec<McTask>,
     /// Simulation budget (guards against starvation bugs).
     pub max_cycles: Cycle,
@@ -52,6 +56,7 @@ impl Scenario {
             tuning: tuning.into(),
             op_point: None,
             faults: None,
+            trace: TraceConfig::default(),
             tasks: Vec::new(),
             max_cycles: 200_000_000,
         }
@@ -82,6 +87,12 @@ impl Scenario {
     /// tasks), and `Scheduler::run` injects the plan's seeded faults.
     pub fn with_faults(mut self, plan: FaultPlan) -> Self {
         self.faults = Some(plan);
+        self
+    }
+
+    /// The same mix with event tracing switched on (or off).
+    pub fn with_trace(mut self, trace: TraceConfig) -> Self {
+        self.trace = trace;
         self
     }
 
@@ -255,16 +266,34 @@ impl Scheduler {
     /// event-driven fast path (bit-identical to naive stepping; see
     /// `tests/event_driven_equivalence.rs`).
     pub fn run(scenario: &Scenario) -> ScenarioReport {
-        Self::execute(scenario, true)
+        Self::execute(scenario, true).0
     }
 
     /// Naive cycle-by-cycle reference executor, kept for the equivalence
     /// tests and for debugging suspected fast-path divergence.
     pub fn run_naive(scenario: &Scenario) -> ScenarioReport {
-        Self::execute(scenario, false)
+        Self::execute(scenario, false).0
     }
 
-    fn execute(scenario: &Scenario, event_driven: bool) -> ScenarioReport {
+    /// Execute with event tracing forced on; returns the report plus
+    /// the full [`TraceCapture`] (merged event stream + task directory
+    /// the interference ledger is built from). The report is
+    /// bit-identical to an untraced `run` of the same scenario.
+    pub fn run_traced(scenario: &Scenario) -> (ScenarioReport, TraceCapture) {
+        let s = scenario.clone().with_trace(TraceConfig::on());
+        let (report, cap) = Self::execute(&s, true);
+        (report, cap.expect("tracing was armed"))
+    }
+
+    /// Naive-stepping counterpart of [`Scheduler::run_traced`], kept for
+    /// the trace-determinism equivalence tests.
+    pub fn run_traced_naive(scenario: &Scenario) -> (ScenarioReport, TraceCapture) {
+        let s = scenario.clone().with_trace(TraceConfig::on());
+        let (report, cap) = Self::execute(&s, false);
+        (report, cap.expect("tracing was armed"))
+    }
+
+    fn execute(scenario: &Scenario, event_driven: bool) -> (ScenarioReport, Option<TraceCapture>) {
         let tuning = scenario.tuning;
         let cfg = tuning.resource_config();
         let faults = scenario.fault_plan();
@@ -414,6 +443,11 @@ impl Scheduler {
             );
         }
 
+        // Arm tracing last so every attached initiator gets a buffer.
+        if scenario.trace.enabled {
+            soc.set_trace(true);
+        }
+
         // Run until all measured tasks drain (endless interferers keep
         // running); the shared loop suppresses skips at the drain edge
         // so the reported cycle count matches naive stepping exactly.
@@ -432,6 +466,14 @@ impl Scheduler {
                 .target_ref(crate::soc::axi::Target::Peripheral)
                 .busy_cycles();
 
+        // Drain the event buffers (fixed component order) before the
+        // report harvest takes its own mutable borrows.
+        let events = if scenario.trace.enabled {
+            Some(soc.take_trace())
+        } else {
+            None
+        };
+
         // Harvest reports (nanosecond deadlines resolve through the
         // scenario's operating point).
         let clocks = scenario.clocks();
@@ -441,13 +483,39 @@ impl Scheduler {
             let deadline = task.deadline_cycles(clocks.as_ref());
             reports.push(Self::report_for(&mut soc, id, task, deadline, cycles));
         }
-        ScenarioReport {
+
+        // Assemble the capture: the task directory (makespans + fault-
+        // recovery stalls) comes from the just-harvested reports, so the
+        // ledger decomposes exactly the numbers the report shows.
+        let capture = events.map(|events| {
+            let mut cap = TraceCapture::new(
+                &scenario.name,
+                soc.xbar.rate_of(Target::Hyperram),
+            );
+            cap.events = events;
+            for (slot, task) in scenario.tasks.iter().enumerate() {
+                let rep = &reports[slot];
+                cap.tasks.push(LedgerTask {
+                    name: task.name.clone(),
+                    initiator: InitiatorId(slot as u8),
+                    makespan: rep.makespan,
+                    recovery_cycles: rep
+                        .extra_value("recovery_cycles")
+                        .unwrap_or(0.0) as Cycle,
+                });
+            }
+            cap.finish();
+            cap
+        });
+
+        let report = ScenarioReport {
             scenario: scenario.name.clone(),
             policy: tuning.describe(),
             cycles,
             uncore_busy_cycles,
             tasks: reports,
-        }
+        };
+        (report, capture)
     }
 
     fn report_for(

@@ -12,7 +12,9 @@
 //! through the energy-minimal provably-safe operating-point search.
 //! `reliability` is the fault-injection grid (`carfield faults`):
 //! k-fault admission verdicts validated by seeded faulted simulation
-//! across an availability × deadline sweep.
+//! across an availability × deadline sweep. `trace` is the bound
+//! gap-attribution table (`carfield trace`): the fig6a grid traced into
+//! per-resource interference ledgers laid next to the WCET breakdown.
 
 pub mod autotune;
 pub mod bounds;
@@ -25,3 +27,4 @@ pub mod fig7;
 pub mod fig8;
 pub mod micro;
 pub mod reliability;
+pub mod trace;

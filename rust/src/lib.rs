@@ -57,15 +57,26 @@
 //!   inside the 1.2W envelope; `experiments::energy` / `carfield dvfs`
 //!   sweep the Fig. 6 deadline grids through it.
 //!
+//! - **Interference tracing** — the `trace` module arms
+//!   zero-cost-when-disabled event hooks at every shared-resource
+//!   decision point (TSU releases, crossbar grants/W-holds, HyperRAM
+//!   line fills, DCSPM bank conflicts, AMR fault recoveries) and folds
+//!   them into a per-task interference ledger keyed by the WCET
+//!   `Resource` axis; `carfield trace` prints measured-vs-bound *gap
+//!   attribution* per Fig. 6a row and exports JSONL + Perfetto sinks.
+//!
 //! Perf target (tracked by `make bench` → `BENCH_perf_hotpath.json`):
 //! >= 60 simulated Mcyc/s on the Fig. 6a TCT+DMA topology via the
 //! event-driven path (>= 3x the naive 20 Mcyc/s target it replaces).
+//! The `tracing_overhead` bench section gates the disabled-tracing path
+//! at >= 95% of that throughput.
 
 pub mod coordinator;
 pub mod experiments;
 pub mod power;
 pub mod runtime;
 pub mod soc;
+pub mod trace;
 pub mod util;
 pub mod wcet;
 

@@ -27,6 +27,13 @@
 //!                           HyperRAM retries, ECC scrub traffic) checked
 //!                           against seeded faulted simulations on an
 //!                           availability × deadline sweep;
+//! - `trace`               — bound gap attribution: the fig6a grid
+//!                           re-run with event tracing armed, measured
+//!                           per-resource interference cycles printed
+//!                           next to the WCET breakdown terms, and the
+//!                           JSONL + Perfetto sinks written to `--out D`
+//!                           (default `target/trace`; `--threads N`
+//!                           pins the sweep width);
 //! - `all`                 — run every experiment in sequence;
 //! - `artifacts [--dir D]` — list AOT artifacts and smoke-execute one;
 //! - `infer [--dir D]`     — run the QNN MLP artifact through the PJRT
@@ -60,6 +67,7 @@ fn main() {
         Some("autotune") => cmd_autotune(&args),
         Some("dvfs") => cmd_dvfs(&args),
         Some("faults") => cmd_faults(),
+        Some("trace") => cmd_trace(&args),
         Some("all") => {
             exp::fig3c::print(&exp::fig3c::run());
             exp::fig5::print(&exp::fig5::run());
@@ -78,7 +86,7 @@ fn main() {
         Some("scenario") => cmd_scenario(&args),
         _ => {
             eprintln!(
-                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|autotune|dvfs|faults|all|artifacts|infer|scenario> [options]"
+                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|autotune|dvfs|faults|trace|all|artifacts|infer|scenario> [options]"
             );
             std::process::exit(2);
         }
@@ -316,6 +324,42 @@ fn cmd_faults() {
     }
     if r.fault_bound_rejections == 0 {
         eprintln!("faults regression: no rejection was attributed to the fault-recovery budget");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_trace(args: &Args) {
+    let threads = args.get_parse("threads", carfield::coordinator::sweep::default_threads());
+    let r = exp::trace::run_with_threads(threads);
+    exp::trace::print(&r);
+    let out = args.get_or("out", "target/trace");
+    match exp::trace::write_sinks(&r, out) {
+        Ok(n) => println!("wrote {n} sink file(s) to {out}/"),
+        Err(e) => {
+            eprintln!("cannot write trace sinks to {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+    // The smoke gate: the ledger invariants and the zero-cost-when-
+    // disabled contract are what make the traces *evidence* — a run
+    // that breaks either is a regression, not a report.
+    if !r.all_sound() {
+        eprintln!(
+            "trace validation failed: a ledger row broke its sum-to-makespan \
+             or measured<=bound invariant"
+        );
+        std::process::exit(1);
+    }
+    if !r.reports_unperturbed {
+        eprintln!("trace regression: arming tracing perturbed a ScenarioReport");
+        std::process::exit(1);
+    }
+    if let Some(e) = &r.sink_error {
+        eprintln!("trace sink validation failed: {e}");
+        std::process::exit(1);
+    }
+    if r.rows.is_empty() {
+        eprintln!("trace regression: the attribution table is empty");
         std::process::exit(1);
     }
 }

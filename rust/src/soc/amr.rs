@@ -21,9 +21,10 @@
 //! the coordinator level.
 
 use super::axi::{Completion, InitiatorId};
-use super::clock::Cycle;
+use super::clock::{Cycle, Domain};
 use super::tiles::{TileStream, TileStreamer};
 use super::tsu::Tsu;
+use crate::trace::{TraceBuf, TraceEvent, TraceKind};
 use crate::util::XorShift;
 
 /// Integer operand precisions (uniform and mixed), paper Fig. 5a/b.
@@ -248,6 +249,8 @@ pub struct AmrCluster {
     streamer: Option<TileStreamer>,
     state: EngineState,
     task_started: Cycle,
+    /// Armed by `SocSim::set_trace`: fault-recovery events land here.
+    trace: TraceBuf,
     pub stats: AmrStats,
 }
 
@@ -266,6 +269,7 @@ impl AmrCluster {
             streamer: None,
             state: EngineState::Idle,
             task_started: 0,
+            trace: None,
             stats: AmrStats::default(),
         }
     }
@@ -458,6 +462,26 @@ impl AmrCluster {
                         s.push_writeback(tile);
                     }
                     let penalty = self.fault_penalty(self.tile_compute_cycles(&task));
+                    // Determinism: this arm only runs when `now >= until`,
+                    // and `next_event` pins `until` — the event-driven run
+                    // steps this exact cycle, so naive and event-driven
+                    // runs record identical recovery events.
+                    if penalty > 0 {
+                        if let Some(tb) = self.trace.as_deref_mut() {
+                            tb.push(TraceEvent {
+                                at: now,
+                                domain: Domain::System,
+                                initiator: self.id,
+                                target: None,
+                                lane: 0,
+                                tag: tile as u64,
+                                kind: TraceKind::Recovery {
+                                    penalty,
+                                    reboot: penalty >= REBOOT_CYCLES,
+                                },
+                            });
+                        }
+                    }
                     self.state = if penalty >= REBOOT_CYCLES {
                         EngineState::Rebooting {
                             until: now + penalty,
@@ -543,6 +567,15 @@ impl super::BusInitiator for AmrCluster {
     }
     fn fast_forward(&mut self, from: Cycle, to: Cycle) {
         AmrCluster::fast_forward(self, from, to)
+    }
+    fn set_trace(&mut self, on: bool) {
+        self.trace = if on { crate::trace::armed() } else { None };
+    }
+    fn take_trace(&mut self) -> Vec<TraceEvent> {
+        match self.trace.as_deref_mut() {
+            Some(v) => std::mem::take(v),
+            None => Vec::new(),
+        }
     }
     fn as_any(&mut self) -> &mut dyn std::any::Any {
         self

@@ -46,6 +46,14 @@ pub struct Burst {
     /// Cycle the *original* transaction was issued by the initiator
     /// (preserved across GBS fragmentation for latency accounting).
     pub issued_at: Cycle,
+    /// Cycle this fragment left its TSU for the crossbar admission
+    /// queue (stamped by `SocSim::step`; system cycles). With
+    /// `issued_at` and `granted_at` it decomposes a completion's
+    /// latency into shaping / queueing / service for the trace ledger.
+    pub released_at: Cycle,
+    /// Cycle the crossbar granted this fragment to its target lane
+    /// (stamped by the grant loop; system cycles).
+    pub granted_at: Cycle,
     /// Initiator-private tag; completions echo it.
     pub tag: u64,
     /// Non-zero when this burst is a GBS fragment: fragments of one
@@ -68,6 +76,8 @@ impl Burst {
             write: false,
             part_id: 0,
             issued_at: 0,
+            released_at: 0,
+            granted_at: 0,
             tag: 0,
             fragments_left: 0,
             wb_buffered: false,
@@ -108,6 +118,8 @@ impl Burst {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Completion {
     pub initiator: InitiatorId,
+    /// Target that serviced the burst (trace-ledger attribution).
+    pub target: Target,
     pub tag: u64,
     pub write: bool,
     /// Beats carried by this (fragment) burst.
@@ -118,6 +130,11 @@ pub struct Completion {
     pub finished_at: Cycle,
     /// Cycle the original transaction was issued (for latency stats).
     pub issued_at: Cycle,
+    /// TSU-release and crossbar-grant cycles, copied from the burst so
+    /// the trace ledger can decompose latency without re-matching
+    /// per-fragment event streams.
+    pub released_at: Cycle,
+    pub granted_at: Cycle,
 }
 
 impl Completion {
@@ -125,12 +142,15 @@ impl Completion {
     pub fn of(burst: &Burst, finished_at: Cycle) -> Self {
         Self {
             initiator: burst.initiator,
+            target: burst.target,
             tag: burst.tag,
             write: burst.write,
             beats: burst.beats,
             last_fragment: burst.fragments_left == 0,
             finished_at,
             issued_at: burst.issued_at,
+            released_at: burst.released_at,
+            granted_at: burst.granted_at,
         }
     }
 
@@ -215,6 +235,17 @@ pub trait TargetModel {
     /// do not track it report 0.
     fn busy_cycles(&self) -> u64 {
         0
+    }
+
+    /// Arm (or disarm, with `None`) this target's trace event sink.
+    /// Targets without hook sites ignore it — the default drops the
+    /// buffer, so un-instrumented targets stay trace-free rather than
+    /// silently losing events.
+    fn set_trace(&mut self, _buf: crate::trace::TraceBuf) {}
+
+    /// Drain the recorded events (empty for un-instrumented targets).
+    fn take_trace(&mut self) -> Vec<crate::trace::TraceEvent> {
+        Vec::new()
     }
 }
 

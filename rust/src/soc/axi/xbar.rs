@@ -9,7 +9,8 @@
 use std::collections::VecDeque;
 
 use super::{Burst, Completion, InitiatorId, Target, TargetModel};
-use crate::soc::clock::{ClockTree, Cycle, RateConverter};
+use crate::soc::clock::{ClockTree, Cycle, Domain, RateConverter};
+use crate::trace::{TraceBuf, TraceEvent, TraceKind};
 
 /// Per-initiator input queue.
 #[derive(Debug, Default)]
@@ -52,6 +53,12 @@ pub struct Crossbar {
     w_hold_until: Cycle,
     /// Cycles lost to W-channel holds (observability).
     pub w_stall_cycles: u64,
+    /// Trace sink for grant / W-hold events. `None` (default) disables
+    /// tracing at the cost of one branch in the grant loop; grants only
+    /// happen while `queued > 0`, a state `next_event` pins to stepped
+    /// cycles, so event streams are identical under naive and
+    /// event-driven stepping.
+    trace: TraceBuf,
 }
 
 impl Crossbar {
@@ -69,7 +76,30 @@ impl Crossbar {
             hwm: vec![0; n_initiators],
             w_hold_until: 0,
             w_stall_cycles: 0,
+            trace: None,
         }
+    }
+
+    /// Arm or disarm tracing on the fabric and every target model.
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace = if on { crate::trace::armed() } else { None };
+        for t in &mut self.targets {
+            t.set_trace(if on { crate::trace::armed() } else { None });
+        }
+    }
+
+    /// Drain recorded events: fabric grants/W-holds first, then each
+    /// target's buffer in target order (a fixed order — the capture's
+    /// stable sort keeps equal-timestamp events deterministic).
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        let mut out = match self.trace.as_deref_mut() {
+            Some(v) => std::mem::take(v),
+            None => Vec::new(),
+        };
+        for t in &mut self.targets {
+            out.extend(t.take_trace());
+        }
+        out
     }
 
     /// Enqueue a shaped burst from an initiator's TSU.
@@ -196,11 +226,37 @@ impl Crossbar {
                         {
                             continue;
                         }
-                        let burst = self.queues[i].fifo.pop_front().unwrap();
+                        let mut burst = self.queues[i].fifo.pop_front().unwrap();
                         self.queued -= 1;
                         self.granted_beats[i] += burst.beats as u64;
+                        burst.granted_at = now;
                         let holds_w = burst.write && !burst.wb_buffered;
                         let beats = burst.beats as Cycle;
+                        if let Some(tb) = self.trace.as_deref_mut() {
+                            tb.push(TraceEvent {
+                                at: now,
+                                domain: Domain::System,
+                                initiator: burst.initiator,
+                                target: Some(twhich),
+                                lane: lane as u8,
+                                tag: burst.tag,
+                                kind: TraceKind::Grant {
+                                    beats: burst.beats,
+                                    write: burst.write,
+                                },
+                            });
+                            if holds_w {
+                                tb.push(TraceEvent {
+                                    at: now,
+                                    domain: Domain::System,
+                                    initiator: burst.initiator,
+                                    target: Some(twhich),
+                                    lane: lane as u8,
+                                    tag: burst.tag,
+                                    kind: TraceKind::WHold { beats: burst.beats },
+                                });
+                            }
+                        }
                         target.start(burst, local_now);
                         if !granted_any {
                             // Advance this lane's RR past the first

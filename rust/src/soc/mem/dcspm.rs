@@ -18,7 +18,8 @@
 //! (priority alternates each cycle for fairness).
 
 use super::super::axi::{Burst, Completion, Target, TargetModel};
-use super::super::clock::Cycle;
+use super::super::clock::{Cycle, Domain};
+use crate::trace::{TraceBuf, TraceEvent, TraceKind};
 
 /// Address bit that selects the contiguous (bank-isolated) alias window.
 pub const CONTIG_ALIAS_BIT: u64 = 1 << 28;
@@ -49,6 +50,11 @@ pub struct Dcspm {
     pub stats: DcspmStats,
     /// Completion pipeline latency (SPM macro + AXI return).
     resp_latency: Cycle,
+    /// Trace sink for cross-port bank-conflict events. Conflicts only
+    /// happen with both ports busy — a state `next_event` refuses to
+    /// skip — so the stream is identical under naive and event-driven
+    /// stepping.
+    trace: TraceBuf,
 }
 
 impl Dcspm {
@@ -57,6 +63,7 @@ impl Dcspm {
             ports: [None, None],
             stats: DcspmStats::default(),
             resp_latency: 1,
+            trace: None,
         }
     }
 
@@ -187,6 +194,17 @@ impl TargetModel for Dcspm {
             let bank = Self::bank_of(inf.burst.addr, inf.beats_done as u64);
             if bank_used == Some(bank) {
                 self.stats.bank_conflicts += 1;
+                if let Some(tb) = self.trace.as_deref_mut() {
+                    tb.push(TraceEvent {
+                        at: now,
+                        domain: Domain::System,
+                        initiator: inf.burst.initiator,
+                        target: Some(Target::Dcspm),
+                        lane: p as u8,
+                        tag: inf.burst.tag,
+                        kind: TraceKind::BankConflict,
+                    });
+                }
                 continue; // stalled this cycle
             }
             bank_used = Some(bank);
@@ -201,6 +219,17 @@ impl TargetModel for Dcspm {
 
     fn idle(&self) -> bool {
         self.ports.iter().all(|p| p.is_none())
+    }
+
+    fn set_trace(&mut self, buf: TraceBuf) {
+        self.trace = buf;
+    }
+
+    fn take_trace(&mut self) -> Vec<TraceEvent> {
+        match self.trace.as_deref_mut() {
+            Some(v) => std::mem::take(v),
+            None => Vec::new(),
+        }
     }
 
     /// With a single busy port there is no bank contention: service is

@@ -16,6 +16,7 @@
 use super::super::axi::{Burst, Completion, Target, TargetModel};
 use super::super::clock::{Cycle, Domain};
 use super::dpllc::{Access, Dpllc, DpllcConfig};
+use crate::trace::{TraceBuf, TraceEvent, TraceKind};
 
 /// Deterministic HyperBUS timing in **uncore cycles**.
 ///
@@ -179,6 +180,10 @@ pub struct HyperramPath {
     fault_retry_every: u64,
     fault_retries_per_line: u32,
     fault_fill_counter: u64,
+    /// Trace sink for line-fill/retry events (uncore-local timestamps).
+    /// Fills are only scheduled in cycles `next_event` pins, so the
+    /// stream is identical under naive and event-driven stepping.
+    trace: TraceBuf,
 }
 
 impl HyperramPath {
@@ -196,6 +201,7 @@ impl HyperramPath {
             fault_retry_every: 0,
             fault_retries_per_line: 0,
             fault_fill_counter: 0,
+            trace: None,
         }
     }
 
@@ -276,6 +282,7 @@ impl HyperramPath {
                 }
             }
         };
+        let mut retry_cycles: Cycle = 0;
         if fill {
             self.stats.line_fills += 1;
             // Seeded transient retry: the affected fill re-fetches the
@@ -285,14 +292,32 @@ impl HyperramPath {
             if self.fault_retry_every > 0 {
                 self.fault_fill_counter += 1;
                 if self.fault_fill_counter % self.fault_retry_every == 0 {
-                    dur += self.fault_retries_per_line as Cycle
+                    retry_cycles = self.fault_retries_per_line as Cycle
                         * self.timing.line_retry_cost(self.llc.line_bytes());
+                    dur += retry_cycles;
                     self.stats.retries += self.fault_retries_per_line as u64;
                 }
             }
         }
         if wb {
             self.stats.writebacks += 1;
+        }
+        if let Some(tb) = self.trace.as_deref_mut() {
+            let cur = self.current.as_ref().unwrap();
+            tb.push(TraceEvent {
+                at: now,
+                domain: Domain::Uncore,
+                initiator: cur.burst.initiator,
+                target: Some(Target::Hyperram),
+                lane: 0,
+                tag: cur.burst.tag,
+                kind: TraceKind::LineFill {
+                    hit: !fill,
+                    dirty_victim: wb,
+                    retry_cycles,
+                    service_cycles: dur,
+                },
+            });
         }
         let cur = self.current.as_mut().unwrap();
         cur.line_done_at = now + dur;
@@ -313,6 +338,17 @@ impl TargetModel for HyperramPath {
 
     fn busy_cycles(&self) -> u64 {
         self.stats.busy_cycles
+    }
+
+    fn set_trace(&mut self, buf: TraceBuf) {
+        self.trace = buf;
+    }
+
+    fn take_trace(&mut self) -> Vec<TraceEvent> {
+        match self.trace.as_deref_mut() {
+            Some(v) => std::mem::take(v),
+            None => Vec::new(),
+        }
     }
 
     /// Two arbitration lanes: the parallel LLC hit port and the channel

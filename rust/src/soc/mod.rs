@@ -27,8 +27,10 @@ pub mod vector;
 use std::any::Any;
 
 use axi::{xbar::Crossbar, Burst, Completion, InitiatorId, TargetModel};
-use clock::Cycle;
+use clock::{Cycle, Domain};
 use tsu::{Tsu, TsuConfig};
+
+use crate::trace::{TraceBuf, TraceEvent, TraceKind};
 
 /// Anything that drives traffic onto the AXI fabric.
 pub trait BusInitiator: Any {
@@ -55,6 +57,13 @@ pub trait BusInitiator: Any {
     /// a skipped run stays bit-identical to naive stepping.
     fn fast_forward(&mut self, from: Cycle, to: Cycle) {
         let _ = (from, to);
+    }
+    /// Arm or disarm this initiator's own trace hooks (e.g. AMR fault
+    /// recoveries). Initiators without hook sites ignore it.
+    fn set_trace(&mut self, _on: bool) {}
+    /// Drain recorded trace events (empty unless instrumented).
+    fn take_trace(&mut self) -> Vec<TraceEvent> {
+        Vec::new()
     }
     /// Downcast hook for result extraction by experiments.
     fn as_any(&mut self) -> &mut dyn Any;
@@ -135,6 +144,12 @@ pub struct SocSim {
     pub skipped_cycles: u64,
     /// Completions delivered to initiators so far (skip validation).
     pub completions_delivered: u64,
+    /// Harness-level trace sink: TSU release and completion-delivery
+    /// events (both fire only in stepped cycles — releases are pinned by
+    /// `Tsu::next_release_at`, deliveries by the crossbar's queued-work
+    /// events — so naive and event-driven streams are bit-identical).
+    /// `None` (the default) disables tracing at one branch per site.
+    trace: TraceBuf,
 }
 
 impl SocSim {
@@ -159,7 +174,35 @@ impl SocSim {
             validate_skips: false,
             skipped_cycles: 0,
             completions_delivered: 0,
+            trace: None,
         }
+    }
+
+    /// Arm or disarm tracing SoC-wide: the crossbar and its targets,
+    /// this harness's release/delivery hooks, and every attached
+    /// initiator. Call after `attach`; arming mid-run starts a partial
+    /// stream but never perturbs simulation state.
+    pub fn set_trace(&mut self, on: bool) {
+        self.trace = if on { crate::trace::armed() } else { None };
+        self.xbar.set_trace(on);
+        for (init, _) in self.ports.iter_mut() {
+            init.set_trace(on);
+        }
+    }
+
+    /// Drain every component's recorded events (harness, fabric +
+    /// targets, initiators — a fixed order, so the capture's stable
+    /// sort stays deterministic).
+    pub fn take_trace(&mut self) -> Vec<TraceEvent> {
+        let mut out = match self.trace.as_deref_mut() {
+            Some(v) => std::mem::take(v),
+            None => Vec::new(),
+        };
+        out.extend(self.xbar.take_trace());
+        for (init, _) in self.ports.iter_mut() {
+            out.extend(init.take_trace());
+        }
+        out
     }
 
     /// Attach an initiator with its TSU configuration. The initiator's
@@ -213,7 +256,22 @@ impl SocSim {
             }
             self.staged.clear();
             tsu.release(now, &mut self.staged);
-            for b in self.staged.drain(..) {
+            for mut b in self.staged.drain(..) {
+                b.released_at = now;
+                if let Some(tb) = self.trace.as_deref_mut() {
+                    tb.push(TraceEvent {
+                        at: now,
+                        domain: Domain::System,
+                        initiator: b.initiator,
+                        target: Some(b.target),
+                        lane: 0,
+                        tag: b.tag,
+                        kind: TraceKind::TsuRelease {
+                            beats: b.beats,
+                            write: b.write,
+                        },
+                    });
+                }
                 self.xbar.push(b);
             }
         }
@@ -226,6 +284,24 @@ impl SocSim {
             self.completions_delivered += self.comp_scratch.len() as u64;
             for i in 0..self.comp_scratch.len() {
                 let c = self.comp_scratch[i];
+                if let Some(tb) = self.trace.as_deref_mut() {
+                    tb.push(TraceEvent {
+                        at: now,
+                        domain: Domain::System,
+                        initiator: c.initiator,
+                        target: Some(c.target),
+                        lane: 0,
+                        tag: c.tag,
+                        kind: TraceKind::Delivery {
+                            beats: c.beats,
+                            write: c.write,
+                            last_fragment: c.last_fragment,
+                            issued_at: c.issued_at,
+                            released_at: c.released_at,
+                            granted_at: c.granted_at,
+                        },
+                    });
+                }
                 let (init, tsu) = &mut self.ports[c.initiator.0 as usize];
                 init.complete(c, now, tsu);
                 // A completion may have queued follow-up bursts eligible
@@ -233,7 +309,22 @@ impl SocSim {
                 // don't pay a phantom cycle.
                 self.staged.clear();
                 tsu.release(now, &mut self.staged);
-                for b in self.staged.drain(..) {
+                for mut b in self.staged.drain(..) {
+                    b.released_at = now;
+                    if let Some(tb) = self.trace.as_deref_mut() {
+                        tb.push(TraceEvent {
+                            at: now,
+                            domain: Domain::System,
+                            initiator: b.initiator,
+                            target: Some(b.target),
+                            lane: 0,
+                            tag: b.tag,
+                            kind: TraceKind::TsuRelease {
+                                beats: b.beats,
+                                write: b.write,
+                            },
+                        });
+                    }
                     self.xbar.push(b);
                 }
             }

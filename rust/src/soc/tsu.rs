@@ -118,7 +118,10 @@ impl TsuConfig {
 }
 
 /// Counters exposed for observability (the paper stresses observability
-/// *and* controllability of shared resources).
+/// *and* controllability of shared resources). Aggregate totals only —
+/// the per-release picture (which fragment waited, how long, on which
+/// budget) surfaces as `TsuRelease` events through `SocSim` tracing
+/// ([`crate::trace`]) when a scenario arms it.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TsuStats {
     pub bursts_in: u64,

@@ -1,0 +1,1027 @@
+//! Zero-cost-when-disabled interference tracing (PR 7, observability).
+//!
+//! The simulator's hot path is instrumented at every shared-resource
+//! decision point — TSU throttle releases, crossbar grants and W-channel
+//! holds, HyperRAM line fills and fault retries, DCSPM cross-port bank
+//! conflicts, AMR fault recoveries, and completion deliveries — and each
+//! site records a [`TraceEvent`] *only* when its component has been armed
+//! with an event buffer. Disabled tracing costs one `Option::is_some`
+//! branch per site and leaves every `ScenarioReport` bit-identical
+//! (asserted by `tests/trace_determinism.rs` and gated in the
+//! `perf_hotpath` bench).
+//!
+//! Timestamps are **per-domain cycles**: system-domain events carry the
+//! master grid directly, uncore-domain events (HyperRAM line engine)
+//! carry their local grid and cross into system time through the same
+//! exact [`RateConverter`] the crossbar uses — so a decoupled uncore
+//! never smears event order.
+//!
+//! Three consumers:
+//! - [`InterferenceLedger`]: per-task measured cycles keyed by the WCET
+//!   engine's [`Resource`] axis, summing exactly to the task's observed
+//!   makespan — the measured column of the *bound gap attribution*
+//!   table printed by `carfield trace`.
+//! - [`to_jsonl`]: one structured JSON object per event, for ad-hoc
+//!   scripting.
+//! - [`to_perfetto`]: Chrome `trace_event` JSON (open in Perfetto /
+//!   `chrome://tracing`): one track per initiator, one per target lane,
+//!   fault recoveries and bank conflicts as instant events.
+//!
+//! Determinism: events are only recorded in *stepped* cycles (every hook
+//! site sits on a path that `next_event` pins — see the per-component
+//! notes at the hook sites), so naive and event-driven runs produce
+//! bit-identical streams, and the per-scenario capture makes sweep
+//! results independent of `CARFIELD_THREADS`.
+
+use crate::soc::axi::{InitiatorId, Target};
+use crate::soc::clock::{Cycle, Domain, RateConverter};
+use crate::wcet::Resource;
+
+/// What happened at a hook site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// A TSU released one fragment into the crossbar admission queue
+    /// after GBS/WB/TRU shaping (system domain).
+    TsuRelease { beats: u32, write: bool },
+    /// The crossbar granted a burst to a target lane (system domain).
+    Grant { beats: u32, write: bool },
+    /// An unbuffered write grant holds the shared W channel for `beats`
+    /// cycles, stalling every other grant (system domain).
+    WHold { beats: u32 },
+    /// The HyperRAM channel scheduled one line's service (uncore-local
+    /// timestamp). `retry_cycles` is the injected ECC-retry overhead
+    /// folded into `service_cycles`.
+    LineFill {
+        hit: bool,
+        dirty_victim: bool,
+        retry_cycles: Cycle,
+        service_cycles: Cycle,
+    },
+    /// A DCSPM port lost its turn to a cross-port bank conflict
+    /// (system domain).
+    BankConflict,
+    /// AMR lockstep mismatch recovery: `penalty` stall cycles (HFR
+    /// restore or full reboot).
+    Recovery { penalty: Cycle, reboot: bool },
+    /// A completion was delivered back to the initiator. Carries the
+    /// full per-fragment lifecycle so the ledger can decompose latency
+    /// without re-matching event streams.
+    Delivery {
+        beats: u32,
+        write: bool,
+        last_fragment: bool,
+        issued_at: Cycle,
+        released_at: Cycle,
+        granted_at: Cycle,
+    },
+}
+
+impl TraceKind {
+    /// Stable lowercase name used by both sinks.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceKind::TsuRelease { .. } => "tsu_release",
+            TraceKind::Grant { .. } => "grant",
+            TraceKind::WHold { .. } => "w_hold",
+            TraceKind::LineFill { .. } => "line_fill",
+            TraceKind::BankConflict => "bank_conflict",
+            TraceKind::Recovery { .. } => "recovery",
+            TraceKind::Delivery { .. } => "delivery",
+        }
+    }
+}
+
+/// One recorded event. `at` is in `domain`-local cycles; use
+/// [`TraceCapture::system_ts`] to place it on the master grid.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub at: Cycle,
+    pub domain: Domain,
+    pub initiator: InitiatorId,
+    pub target: Option<Target>,
+    pub lane: u8,
+    pub tag: u64,
+    pub kind: TraceKind,
+}
+
+/// The per-component event sink. `None` (the default everywhere) means
+/// tracing is disabled: every hook site guards on `is_some()` before
+/// even constructing the event, so the disabled path costs one branch.
+/// The `Box` keeps the slot pointer-sized inside hot structs.
+pub type TraceBuf = Option<Box<Vec<TraceEvent>>>;
+
+/// A fresh armed buffer.
+pub fn armed() -> TraceBuf {
+    Some(Box::new(Vec::new()))
+}
+
+/// Per-scenario tracing switch, carried on
+/// [`Scenario`](crate::coordinator::Scenario) and defaulting to off.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceConfig {
+    pub enabled: bool,
+}
+
+impl TraceConfig {
+    pub fn on() -> Self {
+        Self { enabled: true }
+    }
+}
+
+/// Ledger input describing one measured task of the scenario.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LedgerTask {
+    pub name: String,
+    pub initiator: InitiatorId,
+    /// Observed completion time in system cycles.
+    pub makespan: Cycle,
+    /// Stall cycles spent in fault recovery (AMR HFR / reboot).
+    pub recovery_cycles: Cycle,
+}
+
+/// Everything one traced scenario run produced: the merged event stream
+/// (sorted by system timestamp) plus the task directory the ledger is
+/// built from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceCapture {
+    pub scenario: String,
+    pub events: Vec<TraceEvent>,
+    /// Uncore-grid-to-system-grid converter of the run (identity on the
+    /// seed's coupled timebase).
+    pub uncore: RateConverter,
+    pub tasks: Vec<LedgerTask>,
+}
+
+impl TraceCapture {
+    pub fn new(scenario: &str, uncore: RateConverter) -> Self {
+        Self {
+            scenario: scenario.to_string(),
+            events: Vec::new(),
+            uncore,
+            tasks: Vec::new(),
+        }
+    }
+
+    /// The event's timestamp on the system master grid.
+    pub fn system_ts(&self, e: &TraceEvent) -> Cycle {
+        match e.domain {
+            Domain::Uncore => self.uncore.to_system_edge(e.at),
+            _ => e.at,
+        }
+    }
+
+    /// Stable-sort the stream by system timestamp. Buffers are appended
+    /// in a fixed component order before sorting, so equal-timestamp
+    /// ordering is deterministic.
+    pub fn finish(&mut self) {
+        let unc = self.uncore;
+        self.events.sort_by_key(|e| match e.domain {
+            Domain::Uncore => unc.to_system_edge(e.at),
+            _ => e.at,
+        });
+    }
+}
+
+/// Maps a crossbar target to the WCET resource its service is priced
+/// under.
+pub fn resource_of(t: Target) -> Resource {
+    match t {
+        Target::Hyperram => Resource::HyperramChannel,
+        Target::Dcspm => Resource::DcspmPort,
+        Target::Peripheral => Resource::Peripheral,
+    }
+}
+
+/// One task's measured interference decomposition. `rows` are system
+/// cycles per resource and sum exactly to `makespan`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TaskLedger {
+    pub task: String,
+    pub initiator: InitiatorId,
+    pub makespan: Cycle,
+    pub rows: Vec<(Resource, Cycle)>,
+}
+
+impl TaskLedger {
+    pub fn measured(&self, r: Resource) -> Cycle {
+        self.rows
+            .iter()
+            .find(|(res, _)| *res == r)
+            .map(|(_, c)| *c)
+            .unwrap_or(0)
+    }
+
+    /// The measured column must always re-sum to the makespan — the
+    /// ledger's defining invariant.
+    pub fn sums_to_makespan(&self) -> bool {
+        self.rows.iter().map(|(_, c)| c).sum::<Cycle>() == self.makespan
+    }
+}
+
+/// Per-task interference ledger of one traced scenario run.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct InterferenceLedger {
+    pub tasks: Vec<TaskLedger>,
+}
+
+/// Merge intervals and return them sorted and disjoint.
+fn merge_intervals(mut iv: Vec<(Cycle, Cycle)>) -> Vec<(Cycle, Cycle)> {
+    iv.retain(|(a, b)| b > a);
+    iv.sort_unstable();
+    let mut out: Vec<(Cycle, Cycle)> = Vec::with_capacity(iv.len());
+    for (a, b) in iv {
+        match out.last_mut() {
+            Some((_, pb)) if a <= *pb => *pb = (*pb).max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+fn union_len(iv: &[(Cycle, Cycle)]) -> Cycle {
+    iv.iter().map(|(a, b)| b - a).sum()
+}
+
+/// Length of `[a, b)` covered by the merged, sorted interval set.
+fn overlap_len(merged: &[(Cycle, Cycle)], a: Cycle, b: Cycle) -> Cycle {
+    merged
+        .iter()
+        .map(|&(x, y)| y.min(b).saturating_sub(x.max(a)))
+        .sum()
+}
+
+impl InterferenceLedger {
+    /// Decompose each task's makespan along the WCET [`Resource`] axis
+    /// from the delivery lifecycles in `cap`.
+    ///
+    /// Per delivered fragment (all timestamps system cycles):
+    /// - `released_at - issued_at` → [`Resource::TsuShaping`] (GBS/WB/
+    ///   TRU shaping delay);
+    /// - the part of `[released_at, granted_at)` covered by W-channel
+    ///   holds → [`Resource::WChannel`];
+    /// - the rest of `delivered - released_at` (queue wait behind
+    ///   competitors + target service + return edges) → the fragment's
+    ///   target resource.
+    ///
+    /// For pipelined initiators the per-fragment spans overlap, so the
+    /// raw sums can exceed wall-clock memory-active time. The rows are
+    /// shrunk proportionally (largest-remainder on the cumulative sums,
+    /// exact integer arithmetic) onto the *union* of the spans; for a
+    /// strictly sequential initiator (the Fig. 6a host TCT) the union
+    /// equals the raw sum and the scaling is the identity. The remainder
+    /// `makespan - union - recovery` is [`Resource::Compute`] (issue
+    /// gaps: think time / tile compute), and fault-recovery stalls close
+    /// the sum as [`Resource::FaultRecovery`] — so the rows always re-sum
+    /// to the makespan exactly.
+    pub fn build(cap: &TraceCapture) -> Self {
+        // Global W-hold windows: an unbuffered write's W-channel hold
+        // stalls every initiator's grants, whoever issued it.
+        let holds = merge_intervals(
+            cap.events
+                .iter()
+                .filter_map(|e| match e.kind {
+                    TraceKind::WHold { beats } => Some((e.at, e.at + beats as Cycle)),
+                    _ => None,
+                })
+                .collect(),
+        );
+        let tasks = cap
+            .tasks
+            .iter()
+            .map(|t| Self::build_task(cap, t, &holds))
+            .collect();
+        Self { tasks }
+    }
+
+    fn build_task(cap: &TraceCapture, t: &LedgerTask, holds: &[(Cycle, Cycle)]) -> TaskLedger {
+        let mut tsu: u128 = 0;
+        let mut wchan: u128 = 0;
+        // Fixed resource order keeps output deterministic.
+        let targets = [
+            Resource::HyperramChannel,
+            Resource::DcspmPort,
+            Resource::Peripheral,
+        ];
+        let mut per_target: [u128; 3] = [0; 3];
+        let mut spans: Vec<(Cycle, Cycle)> = Vec::new();
+        for e in &cap.events {
+            if e.initiator != t.initiator {
+                continue;
+            }
+            let TraceKind::Delivery {
+                issued_at,
+                released_at,
+                granted_at,
+                ..
+            } = e.kind
+            else {
+                continue;
+            };
+            let delivered = e.at;
+            tsu += (released_at - issued_at) as u128;
+            let held = overlap_len(holds, released_at, granted_at);
+            wchan += held as u128;
+            let rest = (delivered - released_at).saturating_sub(held);
+            if let Some(tgt) = e.target {
+                let ti = targets
+                    .iter()
+                    .position(|r| *r == resource_of(tgt))
+                    .unwrap();
+                per_target[ti] += rest as u128;
+            }
+            spans.push((issued_at, delivered.min(t.makespan)));
+        }
+        let active = union_len(&merge_intervals(spans)).min(t.makespan);
+        let raw: Vec<(Resource, u128)> = [
+            (Resource::TsuShaping, tsu),
+            (Resource::WChannel, wchan),
+            (targets[0], per_target[0]),
+            (targets[1], per_target[1]),
+            (targets[2], per_target[2]),
+        ]
+        .into_iter()
+        .collect();
+        let raw_total: u128 = raw.iter().map(|(_, c)| c).sum();
+        // Shrink the raw (possibly overlapping) attribution onto the
+        // wall-clock active window: cumulative floor scaling sums to
+        // `active` exactly and is the identity when raw_total == active.
+        let mut rows: Vec<(Resource, Cycle)> = Vec::new();
+        let mut run_raw: u128 = 0;
+        let mut run_scaled: u128 = 0;
+        for (res, c) in &raw {
+            run_raw += c;
+            let cum = if raw_total == 0 {
+                0
+            } else {
+                run_raw * active as u128 / raw_total
+            };
+            let v = (cum - run_scaled) as Cycle;
+            run_scaled = cum;
+            if v > 0 {
+                rows.push((*res, v));
+            }
+        }
+        let recovery = t.recovery_cycles.min(t.makespan - active);
+        let compute = t.makespan - active - recovery;
+        rows.push((Resource::Compute, compute));
+        if recovery > 0 {
+            rows.push((Resource::FaultRecovery, recovery));
+        }
+        TaskLedger {
+            task: t.name.clone(),
+            initiator: t.initiator,
+            makespan: t.makespan,
+            rows,
+        }
+    }
+
+    pub fn task(&self, name: &str) -> Option<&TaskLedger> {
+        self.tasks.iter().find(|t| t.task == name)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sinks: hand-built JSON (no external deps), following the escaping
+// idiom of `util::bench`.
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn domain_name(d: Domain) -> &'static str {
+    match d {
+        Domain::System => "system",
+        Domain::Vector => "vector",
+        Domain::Amr => "amr",
+        Domain::Uncore => "uncore",
+    }
+}
+
+fn target_name(t: Target) -> &'static str {
+    match t {
+        Target::Dcspm => "dcspm",
+        Target::Hyperram => "hyperram",
+        Target::Peripheral => "peripheral",
+    }
+}
+
+fn kind_fields(k: &TraceKind, out: &mut String) {
+    use std::fmt::Write;
+    match *k {
+        TraceKind::TsuRelease { beats, write } | TraceKind::Grant { beats, write } => {
+            write!(out, ",\"beats\":{beats},\"write\":{write}").unwrap()
+        }
+        TraceKind::WHold { beats } => write!(out, ",\"beats\":{beats}").unwrap(),
+        TraceKind::LineFill {
+            hit,
+            dirty_victim,
+            retry_cycles,
+            service_cycles,
+        } => write!(
+            out,
+            ",\"hit\":{hit},\"dirty_victim\":{dirty_victim},\"retry_cycles\":{retry_cycles},\"service_cycles\":{service_cycles}"
+        )
+        .unwrap(),
+        TraceKind::BankConflict => {}
+        TraceKind::Recovery { penalty, reboot } => {
+            write!(out, ",\"penalty\":{penalty},\"reboot\":{reboot}").unwrap()
+        }
+        TraceKind::Delivery {
+            beats,
+            write,
+            last_fragment,
+            issued_at,
+            released_at,
+            granted_at,
+        } => write!(
+            out,
+            ",\"beats\":{beats},\"write\":{write},\"last_fragment\":{last_fragment},\"issued_at\":{issued_at},\"released_at\":{released_at},\"granted_at\":{granted_at}"
+        )
+        .unwrap(),
+    }
+}
+
+/// Structured JSONL sink: one JSON object per line, chronological.
+/// `sys` is the event's system-grid timestamp; `at` stays in the
+/// owning domain's local cycles.
+pub fn to_jsonl(cap: &TraceCapture) -> String {
+    use std::fmt::Write;
+    let mut out = String::new();
+    for e in &cap.events {
+        write!(
+            out,
+            "{{\"scenario\":\"{}\",\"kind\":\"{}\",\"sys\":{},\"at\":{},\"domain\":\"{}\",\"initiator\":{},\"lane\":{},\"tag\":{}",
+            esc(&cap.scenario),
+            e.kind.name(),
+            cap.system_ts(e),
+            e.at,
+            domain_name(e.domain),
+            e.initiator.0,
+            e.lane,
+            e.tag,
+        )
+        .unwrap();
+        if let Some(t) = e.target {
+            write!(out, ",\"target\":\"{}\"", target_name(t)).unwrap();
+        }
+        kind_fields(&e.kind, &mut out);
+        out.push_str("}\n");
+    }
+    out
+}
+
+/// Chrome/Perfetto `trace_event` JSON. Track layout:
+/// - `pid 1` "initiators": one thread per initiator; delivery
+///   lifecycles as complete (`X`) slices `[released_at, delivered)`,
+///   TSU releases / W-holds / fault recoveries as instant events.
+/// - `pid 2` "targets": one thread per (target, lane); in-service
+///   windows `[granted_at, delivered)` as `X` slices, bank conflicts as
+///   instants.
+/// - `pid 3` "hyperram line engine": line fills (with retry overhead)
+///   as `X` slices on the uncore grid converted to system edges.
+///
+/// `ts`/`dur` are system-clock cycles (Perfetto renders them as µs —
+/// only the relative scale matters).
+pub fn to_perfetto(cap: &TraceCapture) -> String {
+    use std::fmt::Write;
+    let mut ev: Vec<String> = Vec::new();
+    let meta = |pid: u32, tid: u64, name: String| {
+        format!(
+            "{{\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\"name\":\"thread_name\",\"args\":{{\"name\":\"{}\"}}}}",
+            esc(&name)
+        )
+    };
+    ev.push(format!(
+        "{{\"ph\":\"M\",\"pid\":1,\"name\":\"process_name\",\"args\":{{\"name\":\"initiators ({})\"}}}}",
+        esc(&cap.scenario)
+    ));
+    ev.push("{\"ph\":\"M\",\"pid\":2,\"name\":\"process_name\",\"args\":{\"name\":\"targets\"}}".into());
+    ev.push(
+        "{\"ph\":\"M\",\"pid\":3,\"name\":\"process_name\",\"args\":{\"name\":\"hyperram line engine\"}}"
+            .into(),
+    );
+    let mut init_threads: Vec<u64> = Vec::new();
+    let mut lane_threads: Vec<u64> = Vec::new();
+    let lane_tid = |t: Target, lane: u8| -> u64 {
+        let ti = match t {
+            Target::Dcspm => 0u64,
+            Target::Hyperram => 1,
+            Target::Peripheral => 2,
+        };
+        ti * 8 + lane as u64
+    };
+    for e in &cap.events {
+        let tid = e.initiator.0 as u64;
+        if !init_threads.contains(&tid) {
+            init_threads.push(tid);
+            let name = if let Some(t) = cap.tasks.iter().find(|t| t.initiator == e.initiator) {
+                format!("init {} ({})", tid, t.name)
+            } else {
+                format!("init {tid}")
+            };
+            ev.push(meta(1, tid, name));
+        }
+        if let Some(t) = e.target {
+            let lt = lane_tid(t, e.lane);
+            if !lane_threads.contains(&lt) {
+                lane_threads.push(lt);
+                ev.push(meta(2, lt, format!("{} lane {}", target_name(t), e.lane)));
+            }
+        }
+        let sys = cap.system_ts(e);
+        let mut args = String::from("{\"tag\":");
+        write!(args, "{}", e.tag).unwrap();
+        kind_fields_args(&e.kind, &mut args);
+        args.push('}');
+        match e.kind {
+            TraceKind::Delivery {
+                released_at,
+                granted_at,
+                ..
+            } => {
+                let dur = sys.saturating_sub(released_at).max(1);
+                ev.push(format!(
+                    "{{\"ph\":\"X\",\"pid\":1,\"tid\":{tid},\"ts\":{released_at},\"dur\":{dur},\"name\":\"xact\",\"cat\":\"bus\",\"args\":{args}}}"
+                ));
+                if let Some(t) = e.target {
+                    let lt = lane_tid(t, e.lane);
+                    let sdur = sys.saturating_sub(granted_at).max(1);
+                    ev.push(format!(
+                        "{{\"ph\":\"X\",\"pid\":2,\"tid\":{lt},\"ts\":{granted_at},\"dur\":{sdur},\"name\":\"serve init {}\",\"cat\":\"bus\",\"args\":{args}}}",
+                        e.initiator.0
+                    ));
+                }
+            }
+            TraceKind::LineFill { service_cycles, .. } => {
+                let end = cap.uncore.to_system_edge(e.at + service_cycles);
+                let dur = end.saturating_sub(sys).max(1);
+                ev.push(format!(
+                    "{{\"ph\":\"X\",\"pid\":3,\"tid\":0,\"ts\":{sys},\"dur\":{dur},\"name\":\"line fill\",\"cat\":\"mem\",\"args\":{args}}}"
+                ));
+            }
+            TraceKind::BankConflict => {
+                if let Some(t) = e.target {
+                    let lt = lane_tid(t, e.lane);
+                    ev.push(format!(
+                        "{{\"ph\":\"i\",\"pid\":2,\"tid\":{lt},\"ts\":{sys},\"s\":\"t\",\"name\":\"bank conflict\",\"cat\":\"mem\",\"args\":{args}}}"
+                    ));
+                }
+            }
+            _ => {
+                ev.push(format!(
+                    "{{\"ph\":\"i\",\"pid\":1,\"tid\":{tid},\"ts\":{sys},\"s\":\"t\",\"name\":\"{}\",\"cat\":\"bus\",\"args\":{args}}}",
+                    e.kind.name()
+                ));
+            }
+        }
+    }
+    let mut out = String::from("{\"traceEvents\":[\n");
+    out.push_str(&ev.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+fn kind_fields_args(k: &TraceKind, out: &mut String) {
+    // Reuse the flat field encoding; inside an args object the leading
+    // comma after "tag" is already correct.
+    kind_fields(k, out);
+}
+
+// ---------------------------------------------------------------------
+// Schema checks: a dependency-free JSON validator used by the sink
+// tests and the `carfield trace` gate.
+
+/// Validate that `s` is one well-formed JSON value (RFC 8259 subset:
+/// no surrogate-pair checking). Returns the byte offset of the first
+/// error.
+pub fn validate_json(s: &str) -> Result<(), String> {
+    let mut p = JsonParser {
+        b: s.as_bytes(),
+        i: 0,
+    };
+    p.ws();
+    p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        return Err(format!("trailing data at byte {}", p.i));
+    }
+    Ok(())
+}
+
+/// Validate a JSONL document: every non-empty line is a JSON object
+/// containing the required keys.
+pub fn validate_jsonl(s: &str, required_keys: &[&str]) -> Result<(), String> {
+    for (n, line) in s.lines().enumerate() {
+        if line.is_empty() {
+            continue;
+        }
+        validate_json(line).map_err(|e| format!("line {}: {e}", n + 1))?;
+        if !line.starts_with('{') {
+            return Err(format!("line {}: not an object", n + 1));
+        }
+        for k in required_keys {
+            if !line.contains(&format!("\"{k}\":")) {
+                return Err(format!("line {}: missing key {k:?}", n + 1));
+            }
+        }
+    }
+    Ok(())
+}
+
+struct JsonParser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl JsonParser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn value(&mut self) -> Result<(), String> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => self.string(),
+            Some(b't') => self.lit("true"),
+            Some(b'f') => self.lit("false"),
+            Some(b'n') => self.lit("null"),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(format!("expected value at byte {}", self.i)),
+        }
+    }
+
+    fn lit(&mut self, word: &str) -> Result<(), String> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(())
+        } else {
+            Err(format!("bad literal at byte {}", self.i))
+        }
+    }
+
+    fn number(&mut self) -> Result<(), String> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        let digits = |p: &mut Self| {
+            let s = p.i;
+            while matches!(p.peek(), Some(c) if c.is_ascii_digit()) {
+                p.i += 1;
+            }
+            p.i > s
+        };
+        if !digits(self) {
+            return Err(format!("bad number at byte {start}"));
+        }
+        if self.peek() == Some(b'.') {
+            self.i += 1;
+            if !digits(self) {
+                return Err(format!("bad fraction at byte {start}"));
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.i += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.i += 1;
+            }
+            if !digits(self) {
+                return Err(format!("bad exponent at byte {start}"));
+            }
+        }
+        Ok(())
+    }
+
+    fn string(&mut self) -> Result<(), String> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.i += 1;
+        while let Some(c) = self.peek() {
+            match c {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                b'\\' => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(b'"' | b'\\' | b'/' | b'b' | b'f' | b'n' | b'r' | b't') => {
+                            self.i += 1
+                        }
+                        Some(b'u') => {
+                            self.i += 1;
+                            for _ in 0..4 {
+                                if !matches!(self.peek(), Some(h) if h.is_ascii_hexdigit()) {
+                                    return Err(format!("bad \\u escape at byte {}", self.i));
+                                }
+                                self.i += 1;
+                            }
+                        }
+                        _ => return Err(format!("bad escape at byte {}", self.i)),
+                    }
+                }
+                c if c < 0x20 => return Err(format!("raw control char at byte {}", self.i)),
+                _ => self.i += 1,
+            }
+        }
+        Err("unterminated string".into())
+    }
+
+    fn object(&mut self) -> Result<(), String> {
+        self.i += 1; // '{'
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            if self.peek() != Some(b'"') {
+                return Err(format!("expected key at byte {}", self.i));
+            }
+            self.string()?;
+            self.ws();
+            if self.peek() != Some(b':') {
+                return Err(format!("expected ':' at byte {}", self.i));
+            }
+            self.i += 1;
+            self.ws();
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<(), String> {
+        self.i += 1; // '['
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(());
+        }
+        loop {
+            self.ws();
+            self.value()?;
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(());
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.i)),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delivery(
+        init: u8,
+        tag: u64,
+        issued: Cycle,
+        released: Cycle,
+        granted: Cycle,
+        done: Cycle,
+        target: Target,
+    ) -> TraceEvent {
+        TraceEvent {
+            at: done,
+            domain: Domain::System,
+            initiator: InitiatorId(init),
+            target: Some(target),
+            lane: 0,
+            tag,
+            kind: TraceKind::Delivery {
+                beats: 8,
+                write: false,
+                last_fragment: true,
+                issued_at: issued,
+                released_at: released,
+                granted_at: granted,
+            },
+        }
+    }
+
+    fn capture(events: Vec<TraceEvent>, tasks: Vec<LedgerTask>) -> TraceCapture {
+        let mut cap = TraceCapture::new("test", RateConverter::lockstep());
+        cap.events = events;
+        cap.tasks = tasks;
+        cap.finish();
+        cap
+    }
+
+    #[test]
+    fn ledger_decomposes_a_sequential_task_exactly() {
+        // Two back-to-back accesses: issue 0, shaped 2, granted 5,
+        // delivered 20; then issue 30 (10 cycles of think), shaped 30,
+        // granted 31, delivered 45. Makespan 50.
+        let cap = capture(
+            vec![
+                delivery(0, 1, 0, 2, 5, 20, Target::Hyperram),
+                delivery(0, 2, 30, 30, 31, 45, Target::Hyperram),
+            ],
+            vec![LedgerTask {
+                name: "tct".into(),
+                initiator: InitiatorId(0),
+                makespan: 50,
+                recovery_cycles: 0,
+            }],
+        );
+        let ledger = InterferenceLedger::build(&cap);
+        let t = ledger.task("tct").unwrap();
+        assert!(t.sums_to_makespan());
+        // Sequential task: the scaling is the identity.
+        assert_eq!(t.measured(Resource::TsuShaping), 2);
+        assert_eq!(t.measured(Resource::HyperramChannel), (20 - 2) + (45 - 30));
+        // Compute = makespan - union([0,20) u [30,45)) = 50 - 35.
+        assert_eq!(t.measured(Resource::Compute), 15);
+        assert_eq!(t.measured(Resource::WChannel), 0);
+    }
+
+    #[test]
+    fn ledger_attributes_w_channel_holds() {
+        let mut ev = vec![delivery(0, 1, 0, 0, 8, 20, Target::Hyperram)];
+        // A competitor's unbuffered write holds W for [2, 8).
+        ev.push(TraceEvent {
+            at: 2,
+            domain: Domain::System,
+            initiator: InitiatorId(1),
+            target: Some(Target::Hyperram),
+            lane: 0,
+            tag: 0,
+            kind: TraceKind::WHold { beats: 6 },
+        });
+        let cap = capture(
+            ev,
+            vec![LedgerTask {
+                name: "tct".into(),
+                initiator: InitiatorId(0),
+                makespan: 20,
+                recovery_cycles: 0,
+            }],
+        );
+        let t = InterferenceLedger::build(&cap);
+        let t = t.task("tct").unwrap();
+        // Queue wait [0, 8) overlaps the hold [2, 8) for 6 cycles.
+        assert_eq!(t.measured(Resource::WChannel), 6);
+        assert_eq!(t.measured(Resource::HyperramChannel), 20 - 6);
+        assert!(t.sums_to_makespan());
+    }
+
+    #[test]
+    fn ledger_shrinks_pipelined_overlap_onto_wall_clock() {
+        // Two fully overlapping spans [0, 20): raw attribution 40 must
+        // shrink onto the 20-cycle active window.
+        let cap = capture(
+            vec![
+                delivery(0, 1, 0, 0, 0, 20, Target::Hyperram),
+                delivery(0, 2, 0, 0, 0, 20, Target::Hyperram),
+            ],
+            vec![LedgerTask {
+                name: "dma".into(),
+                initiator: InitiatorId(0),
+                makespan: 25,
+                recovery_cycles: 0,
+            }],
+        );
+        let t = InterferenceLedger::build(&cap);
+        let t = t.task("dma").unwrap();
+        assert_eq!(t.measured(Resource::HyperramChannel), 20);
+        assert_eq!(t.measured(Resource::Compute), 5);
+        assert!(t.sums_to_makespan());
+    }
+
+    #[test]
+    fn ledger_closes_with_fault_recovery() {
+        let cap = capture(
+            vec![delivery(0, 1, 0, 0, 0, 10, Target::Dcspm)],
+            vec![LedgerTask {
+                name: "amr".into(),
+                initiator: InitiatorId(0),
+                makespan: 100,
+                recovery_cycles: 24,
+            }],
+        );
+        let t = InterferenceLedger::build(&cap);
+        let t = t.task("amr").unwrap();
+        assert_eq!(t.measured(Resource::FaultRecovery), 24);
+        assert_eq!(t.measured(Resource::DcspmPort), 10);
+        assert_eq!(t.measured(Resource::Compute), 100 - 10 - 24);
+        assert!(t.sums_to_makespan());
+    }
+
+    #[test]
+    fn capture_sorts_uncore_events_on_the_system_grid() {
+        let mut cap = TraceCapture::new("s", RateConverter::new(1000.0, 500.0));
+        cap.events.push(TraceEvent {
+            at: 10, // uncore-local -> system edge 5
+            domain: Domain::Uncore,
+            initiator: InitiatorId(0),
+            target: Some(Target::Hyperram),
+            lane: 0,
+            tag: 0,
+            kind: TraceKind::LineFill {
+                hit: false,
+                dirty_victim: false,
+                retry_cycles: 0,
+                service_cycles: 24,
+            },
+        });
+        cap.events.push(delivery(0, 1, 0, 0, 1, 3, Target::Hyperram));
+        cap.finish();
+        assert_eq!(cap.events[0].kind.name(), "delivery");
+        assert_eq!(cap.system_ts(&cap.events[1]), 5);
+    }
+
+    #[test]
+    fn jsonl_sink_is_schema_valid() {
+        let cap = capture(
+            vec![delivery(0, 7, 0, 1, 2, 9, Target::Hyperram)],
+            vec![],
+        );
+        let jsonl = to_jsonl(&cap);
+        validate_jsonl(&jsonl, &["kind", "sys", "at", "initiator", "tag"]).unwrap();
+        assert!(jsonl.contains("\"kind\":\"delivery\""));
+    }
+
+    #[test]
+    fn perfetto_sink_is_valid_json() {
+        let mut ev = vec![delivery(0, 1, 0, 0, 2, 9, Target::Hyperram)];
+        ev.push(TraceEvent {
+            at: 3,
+            domain: Domain::System,
+            initiator: InitiatorId(1),
+            target: None,
+            lane: 0,
+            tag: 0,
+            kind: TraceKind::Recovery {
+                penalty: 24,
+                reboot: false,
+            },
+        });
+        let cap = capture(
+            ev,
+            vec![LedgerTask {
+                name: "tct \"quoted\"".into(),
+                initiator: InitiatorId(0),
+                makespan: 9,
+                recovery_cycles: 0,
+            }],
+        );
+        let json = to_perfetto(&cap);
+        validate_json(&json).unwrap();
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"ph\":\"i\""));
+    }
+
+    #[test]
+    fn json_validator_accepts_and_rejects() {
+        validate_json("{\"a\":[1,2.5,-3e4,true,null,\"x\\n\"]}").unwrap();
+        validate_json("  [ ]  ").unwrap();
+        assert!(validate_json("{\"a\":}").is_err());
+        assert!(validate_json("[1,]").is_err());
+        assert!(validate_json("{} extra").is_err());
+        assert!(validate_json("\"unterminated").is_err());
+        // Lenient where RFC 8259 is strict: leading zeros still parse.
+        validate_json("01").unwrap();
+    }
+
+    #[test]
+    fn interval_helpers() {
+        let m = merge_intervals(vec![(5, 9), (0, 3), (2, 4), (9, 9)]);
+        assert_eq!(m, vec![(0, 4), (5, 9)]);
+        assert_eq!(union_len(&m), 8);
+        assert_eq!(overlap_len(&m, 1, 7), 3 + 2);
+        assert_eq!(overlap_len(&m, 10, 20), 0);
+    }
+}

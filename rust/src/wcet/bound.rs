@@ -172,6 +172,19 @@ pub struct TaskBound {
     /// uncore clock). `ZERO` without a plan — every accessor is then
     /// bit-identical to the fault-free engine.
     pub fault_bound: CostSplit,
+    /// The *nominal* completion bound decomposed along the [`Resource`]
+    /// axis: the terms sum exactly (per domain component) to
+    /// `completion_bound`, so the trace ledger's measured column lines
+    /// up row-for-row with the bound column ("gap attribution").
+    /// Structural bounds carve out own-TSU shaping, W-channel holds and
+    /// the per-target service+interference term per stream; a winning
+    /// busy-window bound keeps its compute term and charges the whole
+    /// window remainder to the binding resource (on a decoupled
+    /// timebase the busy value is a single uncore-priced quantity and
+    /// stays whole on the binding resource). Empty for endless tasks.
+    /// The k-fault term is *not* included — append it with
+    /// [`TaskBound::breakdown_with_fault`].
+    pub breakdown: Vec<(Resource, CostSplit)>,
 }
 
 impl TaskBound {
@@ -209,6 +222,28 @@ impl TaskBound {
     /// per-domain composition, like [`TaskBound::completion_ns`]).
     pub fn mem_ns(&self, clocks: &ClockTree) -> f64 {
         self.mem_bound.ns(clocks)
+    }
+
+    /// The breakdown term for one resource (`ZERO` when absent).
+    pub fn breakdown_term(&self, r: Resource) -> CostSplit {
+        self.breakdown
+            .iter()
+            .find(|(res, _)| *res == r)
+            .map(|(_, c)| *c)
+            .unwrap_or(CostSplit::ZERO)
+    }
+
+    /// The breakdown including the k-fault re-execution term, summing
+    /// exactly to `completion_bound + fault_bound` — what the `carfield
+    /// trace` gap-attribution table prints. (The fault term is applied
+    /// by [`analyze`] *after* the per-model decomposition, so it lives
+    /// outside `breakdown` and is appended lazily here.)
+    pub fn breakdown_with_fault(&self) -> Vec<(Resource, CostSplit)> {
+        let mut rows = self.breakdown.clone();
+        if self.fault_bound != CostSplit::ZERO {
+            rows.push((Resource::FaultRecovery, self.fault_bound));
+        }
+        rows
     }
 }
 
@@ -480,7 +515,85 @@ struct StreamBound {
     total: CostSplit,
     own: CostSplit,
     w_term: CostSplit,
+    /// Own-TSU shaping delay component of `total`.
+    tsu_d: CostSplit,
+    /// The stream's target resource (where `total - tsu_d - w_term` is
+    /// attributed in the completion-bound breakdown).
+    resource: Resource,
     endless: bool,
+}
+
+/// Componentwise subtraction for breakdown carving. Callers only
+/// subtract terms that are componentwise summands of `a`; saturation
+/// is a belt-and-braces guard, not an expected path.
+fn minus(a: CostSplit, b: CostSplit) -> CostSplit {
+    CostSplit {
+        system: a.system.saturating_sub(b.system),
+        uncore: a.uncore.saturating_sub(b.uncore),
+    }
+}
+
+/// Decompose a structural completion bound `(compute + sum(totals)) * n`
+/// into per-resource terms. Row order mirrors the trace ledger's
+/// (TsuShaping, WChannel, targets, Compute); zero rows are dropped
+/// except Compute, so the terms always re-sum to the bound exactly.
+fn structural_rows(
+    per_stream: &[StreamBound],
+    compute: CostSplit,
+    n: u64,
+) -> Vec<(Resource, CostSplit)> {
+    let order = [
+        Resource::HyperramChannel,
+        Resource::DcspmPort,
+        Resource::Peripheral,
+    ];
+    let mut tsu = CostSplit::ZERO;
+    let mut w = CostSplit::ZERO;
+    let mut per_target = [CostSplit::ZERO; 3];
+    for s in per_stream {
+        tsu = tsu.plus(s.tsu_d);
+        w = w.plus(s.w_term);
+        let rest = minus(minus(s.total, s.tsu_d), s.w_term);
+        let ti = order.iter().position(|r| *r == s.resource).unwrap();
+        per_target[ti] = per_target[ti].plus(rest);
+    }
+    let mut rows = Vec::new();
+    if tsu != CostSplit::ZERO {
+        rows.push((Resource::TsuShaping, tsu.times(n)));
+    }
+    if w != CostSplit::ZERO {
+        rows.push((Resource::WChannel, w.times(n)));
+    }
+    for (ti, r) in order.iter().enumerate() {
+        if per_target[ti] != CostSplit::ZERO {
+            rows.push((*r, per_target[ti].times(n)));
+        }
+    }
+    rows.push((Resource::Compute, compute.times(n)));
+    rows
+}
+
+/// Decompose a winning busy-window bound: keep the compute term (the
+/// window's base charges at least `compute` per activation, so the
+/// remainder never underflows on the lock-step timebase) and attribute
+/// everything else to the binding resource. On a decoupled timebase the
+/// window is one uncore-priced quantity; carving a system-domain
+/// compute term out of it would be cross-domain, so the whole window
+/// stays on the binding resource (documented caveat on
+/// [`TaskBound::breakdown`]).
+fn busy_rows(
+    busy: CostSplit,
+    compute: CostSplit,
+    binding: Resource,
+    pricing: Pricing,
+) -> Vec<(Resource, CostSplit)> {
+    match pricing {
+        Pricing::Lockstep => vec![
+            (binding, minus(busy, compute)),
+            (Resource::Compute, compute),
+        ],
+        Pricing::WallClock { .. } => vec![(binding, busy)],
+    }
 }
 
 fn analyze_model(
@@ -592,11 +705,13 @@ fn analyze_model(
             total,
             own,
             w_term,
+            tsu_d,
+            resource: own_resource,
             endless: s.count.is_none(),
         });
     }
 
-    let (completion, completion_binding) = completion_of(
+    let (completion, completion_binding, breakdown) = completion_of(
         my_idx,
         models,
         &per_stream,
@@ -613,6 +728,7 @@ fn analyze_model(
         completion_bound: completion,
         completion_binding,
         fault_bound: CostSplit::ZERO,
+        breakdown,
     }
 }
 
@@ -721,13 +837,13 @@ fn completion_of(
     w_frag: u32,
     mem_binding: Resource,
     pricing: Pricing,
-) -> (Option<CostSplit>, Resource) {
+) -> (Option<CostSplit>, Resource, Vec<(Resource, CostSplit)>) {
     let me = &models[my_idx];
     if per_stream.iter().any(|s| s.endless) {
-        return (None, Resource::Endless);
+        return (None, Resource::Endless, Vec::new());
     }
     // ---- structural path (always finite, always sound) ----
-    let (structural, structural_binding, base, target) = match me.shape {
+    let (structural, structural_binding, base, target, compute, mult) = match me.shape {
         TaskShape::HostTct { think, accesses } => {
             let structural = CostSplit::sys(think + 2)
                 .plus(per_stream[0].total)
@@ -748,7 +864,14 @@ fn completion_of(
                 ))
                 .plus(pricing.sync())
                 .times(accesses);
-            (structural, mem_binding, base, Target::Hyperram)
+            (
+                structural,
+                mem_binding,
+                base,
+                Target::Hyperram,
+                CostSplit::sys(think + 2),
+                accesses,
+            )
         }
         TaskShape::Cluster {
             tiles,
@@ -773,7 +896,14 @@ fn completion_of(
             let base = own
                 .plus(CostSplit::sys(compute_per_tile + 4))
                 .times(tiles);
-            (structural, binding, base, Target::Dcspm)
+            (
+                structural,
+                binding,
+                base,
+                Target::Dcspm,
+                CostSplit::sys(compute_per_tile + 4),
+                tiles,
+            )
         }
         TaskShape::Dma { chunks } => {
             let chunks = chunks.unwrap_or(0); // endless handled above
@@ -782,7 +912,11 @@ fn completion_of(
                 .fold(CostSplit::ZERO, |acc, s| acc.plus(s.total))
                 .plus(CostSplit::sys(2))
                 .times(chunks);
-            return (Some(structural), mem_binding);
+            return (
+                Some(structural),
+                mem_binding,
+                structural_rows(per_stream, CostSplit::sys(2), chunks),
+            );
         }
     };
     // ---- busy-window path (tighter; needs regulated competitors and no
@@ -790,6 +924,7 @@ fn completion_of(
     // captured by per-target arrival curves) ----
     let mut best = structural;
     let mut binding = structural_binding;
+    let mut rows = structural_rows(per_stream, compute, mult);
     if competitors_regulated(models, my_idx, target) && w_frag == 0 {
         let base_u = pricing.units(base);
         let mut t = base_u;
@@ -814,9 +949,10 @@ fn completion_of(
                 Target::Hyperram => Resource::HyperramChannel,
                 _ => Resource::DcspmPort,
             };
+            rows = busy_rows(busy, compute.times(mult), binding, pricing);
         }
     }
-    (Some(best), binding)
+    (Some(best), binding, rows)
 }
 
 #[cfg(test)]
@@ -978,6 +1114,60 @@ mod tests {
         assert!(cycles as f64 <= wall_in_sys + 2.0, "conversion too loose");
         let naive_total = b.completion_bound.unwrap().lockstep_total();
         assert!(cycles < naive_total, "decoupling must shrink the cycle bound");
+    }
+
+    #[test]
+    fn breakdown_sums_to_the_completion_bound_on_both_paths() {
+        // NoIsolation takes the structural path (unregulated DMA), the
+        // TSU rows take the busy-window path: the per-resource terms
+        // must re-sum to the headline bound exactly on both.
+        for policy in [
+            IsolationPolicy::NoIsolation,
+            IsolationPolicy::TsuRegulation,
+            IsolationPolicy::TsuPlusLlcPartition {
+                tct_fraction_percent: 50,
+            },
+        ] {
+            let r = analyze(&fig6a_scenario(policy));
+            let b = r.bound_for("tct");
+            let total = b
+                .breakdown
+                .iter()
+                .fold(CostSplit::ZERO, |acc, (_, c)| acc.plus(*c));
+            assert_eq!(Some(total), b.completion_bound, "{policy:?}");
+            assert_ne!(
+                b.breakdown_term(Resource::Compute),
+                CostSplit::ZERO,
+                "{policy:?}: think time must be carved out"
+            );
+            assert_ne!(
+                b.breakdown_term(Resource::HyperramChannel),
+                CostSplit::ZERO,
+                "{policy:?}: the walker's memory term must be present"
+            );
+        }
+        // Endless critical streams have no bound and no breakdown.
+        let job = DmaJob::interferer();
+        let s = Scenario::new("endless", IsolationPolicy::TsuRegulation).with_task(
+            McTask::new("dma", Criticality::Hard, Workload::DmaCopy(job)),
+        );
+        assert!(analyze(&s).bound_for("dma").breakdown.is_empty());
+    }
+
+    #[test]
+    fn breakdown_with_fault_appends_the_k_term() {
+        use crate::coordinator::FaultPlan;
+        let s = fig6a_scenario(IsolationPolicy::TsuRegulation);
+        let b = analyze(&s);
+        let tb = b.bound_for("tct");
+        // No plan: identical to the plain breakdown.
+        assert_eq!(tb.breakdown_with_fault(), tb.breakdown);
+        // Host tasks have no lockstep hardware — the term stays zero
+        // even under a plan (soundness of the omission is covered by
+        // fault_term_prices_k_recoveries_on_lockstep_clusters_only).
+        let planned = analyze(&s.clone().with_faults(FaultPlan::new(3).with_k(2)));
+        let ptb = planned.bound_for("tct");
+        assert_eq!(ptb.breakdown_with_fault(), ptb.breakdown);
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Trace determinism properties: arming the event tracer must not cost
+//! determinism anywhere.
+//!
+//! Three contracts, each load-bearing for the interference ledger's
+//! evidentiary value:
+//!
+//! 1. **Thread parity** — traced captures (events, ledger inputs) and
+//!    reports are bit-identical whatever the sweep width. The
+//!    `CARFIELD_THREADS` override feeds exactly the `parallel_map`
+//!    width exercised here, so {1, 2, 8} covers serial, contended and
+//!    oversubscribed scheduling.
+//! 2. **Stepping parity** — `run_traced` (event-driven, cycle-skipping)
+//!    and `run_traced_naive` (per-cycle stepping) produce identical
+//!    event streams and ledgers: every hook site sits on a path the
+//!    event scheduler pins, so events fire inside `fast_forward` replay
+//!    exactly as they do under naive stepping.
+//! 3. **Zero perturbation** — the traced run's `ScenarioReport` equals
+//!    the untraced run's, bit-exact (f64 included).
+
+use carfield::coordinator::task::Criticality;
+use carfield::coordinator::{
+    sweep, FaultPlan, IsolationPolicy, McTask, Scenario, Scheduler, Workload,
+};
+use carfield::experiments::fig6a;
+use carfield::experiments::trace::JSONL_KEYS;
+use carfield::soc::amr::IntPrecision;
+use carfield::soc::dma::DmaJob;
+use carfield::soc::hostd::TctSpec;
+use carfield::trace::{
+    to_jsonl, to_perfetto, validate_json, validate_jsonl, InterferenceLedger, TraceKind,
+};
+
+fn small_tct() -> McTask {
+    McTask::new(
+        "tct",
+        Criticality::Hard,
+        Workload::HostTct(TctSpec {
+            accesses: 256,
+            iterations: 3,
+            ..TctSpec::fig6a()
+        }),
+    )
+}
+
+fn dma() -> McTask {
+    McTask::new(
+        "sys-dma",
+        Criticality::BestEffort,
+        Workload::DmaCopy(DmaJob::interferer()),
+    )
+}
+
+/// Fig. 6a-shaped contended scenario, scaled down so the naive
+/// per-cycle reference stays cheap (same traffic shape as the figure).
+fn contended(policy: IsolationPolicy) -> Scenario {
+    Scenario::new("trace-contended", policy)
+        .with_task(small_tct())
+        .with_task(dma())
+}
+
+/// AMR lockstep mix under a harsh seeded fault plan, so the
+/// fault-recovery hook (the only trace site off the memory path) is
+/// exercised by the stepping-parity check too.
+fn faulted_cluster() -> Scenario {
+    Scenario::new("trace-faulted", IsolationPolicy::TsuRegulation)
+        .with_task(McTask::new(
+            "amr",
+            Criticality::Safety,
+            Workload::AmrMatMul {
+                precision: IntPrecision::Int8,
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 8,
+            },
+        ))
+        .with_task(dma())
+        .with_faults(FaultPlan::new(0x5EED).with_amr_rate(4.0).with_k(2))
+}
+
+fn assert_trace_equivalent(scenario: &Scenario) {
+    let (fast_report, fast_cap) = Scheduler::run_traced(scenario);
+    let (naive_report, naive_cap) = Scheduler::run_traced_naive(scenario);
+    assert_eq!(
+        fast_report, naive_report,
+        "traced event-driven vs naive reports diverged for `{}`",
+        scenario.name
+    );
+    assert_eq!(
+        fast_cap, naive_cap,
+        "event streams diverged between stepping modes for `{}`",
+        scenario.name
+    );
+    assert_eq!(
+        InterferenceLedger::build(&fast_cap),
+        InterferenceLedger::build(&naive_cap)
+    );
+    // And the zero-perturbation contract on both stepping modes.
+    assert_eq!(fast_report, Scheduler::run(scenario));
+    assert_eq!(naive_report, Scheduler::run_naive(scenario));
+}
+
+/// Contract 1 on the real figure grid: same captures at every width.
+#[test]
+fn captures_bit_identical_across_thread_counts() {
+    let grid = fig6a::scenario_grid();
+    let sweep_at = |threads: usize| sweep::parallel_map(&grid, threads, Scheduler::run_traced);
+    let serial = sweep_at(1);
+    assert_eq!(serial, sweep_at(2), "2-thread sweep diverged from serial");
+    assert_eq!(serial, sweep_at(8), "8-thread sweep diverged from serial");
+    for (scenario, (report, cap)) in grid.iter().zip(&serial) {
+        assert_eq!(
+            report,
+            &Scheduler::run(scenario),
+            "tracing perturbed `{}`",
+            scenario.name
+        );
+        assert!(!cap.events.is_empty(), "`{}` captured nothing", scenario.name);
+    }
+}
+
+/// Contract 2 across the isolation ladder (scaled-down mixes keep the
+/// per-cycle reference fast).
+#[test]
+fn event_stream_identical_between_stepping_modes() {
+    for policy in [
+        IsolationPolicy::NoIsolation,
+        IsolationPolicy::TsuRegulation,
+        IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 50,
+        },
+        IsolationPolicy::PrivatePaths,
+    ] {
+        assert_trace_equivalent(&contended(policy));
+    }
+}
+
+/// Contract 2 for the fault-recovery hook: recovery events replay
+/// identically, and they appear exactly when the report saw recovery
+/// stalls (the event stream and the harvested counters agree).
+#[test]
+fn recovery_events_replay_identically() {
+    let scenario = faulted_cluster();
+    assert_trace_equivalent(&scenario);
+    let (report, cap) = Scheduler::run_traced(&scenario);
+    let recovered = report
+        .task("amr")
+        .extra_value("recovery_cycles")
+        .unwrap_or(0.0)
+        > 0.0;
+    let saw_events = cap
+        .events
+        .iter()
+        .any(|e| matches!(e.kind, TraceKind::Recovery { .. }));
+    assert_eq!(
+        saw_events, recovered,
+        "recovery events and harvested recovery cycles disagree"
+    );
+}
+
+/// Ledger invariants + sink schemas on a contended traced run: every
+/// task's measured rows re-sum to its makespan, and both serializations
+/// pass the schema validator.
+#[test]
+fn ledger_sums_and_sinks_validate() {
+    let (report, cap) = Scheduler::run_traced(&contended(IsolationPolicy::NoIsolation));
+    let ledger = InterferenceLedger::build(&cap);
+    let idx = report.index();
+    for tl in &ledger.tasks {
+        assert!(tl.sums_to_makespan(), "{tl:?}");
+        assert_eq!(tl.makespan, idx.task(&tl.task).makespan);
+    }
+    // The hard TCT's decomposition attributes real cycles to the memory
+    // path it actually fought over.
+    let tct = ledger.task("tct").expect("tct ledger");
+    assert!(tct.measured(carfield::wcet::Resource::HyperramChannel) > 0);
+    assert!(tct.measured(carfield::wcet::Resource::Compute) > 0);
+    validate_json(&to_perfetto(&cap)).expect("perfetto schema");
+    validate_jsonl(&to_jsonl(&cap), &JSONL_KEYS).expect("jsonl schema");
+}
