@@ -1,5 +1,6 @@
 //! Bench: L3 hot paths — simulator cycle throughput (naive vs the
-//! event-driven cycle-skipping core), parallel scenario-sweep speedup,
+//! event-driven cycle-skipping core vs the structure-of-arrays event
+//! wheel), parallel scenario-sweep speedup,
 //! WCET analysis throughput + bound tightness, bound-driven autotune
 //! search throughput, DVFS governor search latency + energy saving,
 //! split-uncore multi-rate stepping vs lock-step + ns-domain bound
@@ -46,8 +47,8 @@ fn fig6a_topology() -> SocSim {
     soc
 }
 
-/// Simulator cycle throughput on the Fig. 6a topology, naive vs
-/// event-driven.
+/// Simulator cycle throughput on the Fig. 6a topology: naive vs
+/// event-driven vs the structure-of-arrays wheel.
 fn sim_throughput(b: &mut BenchRunner) {
     const CYCLES: u64 = 2_000_000;
     let (_, dt_naive) = b.time_with_mean("SocSim 2M cycles naive (TCT + DMA)", 3, || {
@@ -57,6 +58,11 @@ fn sim_throughput(b: &mut BenchRunner) {
     let (skipped, dt_fast) = b.time_with_mean("SocSim 2M cycles event-driven (TCT + DMA)", 3, || {
         let mut soc = fig6a_topology();
         soc.run_cycles_fast(CYCLES);
+        soc.skipped_cycles
+    });
+    let (skipped_wheel, dt_wheel) = b.time_with_mean("SocSim 2M cycles wheel (TCT + DMA)", 3, || {
+        let mut soc = fig6a_topology();
+        soc.run_cycles_wheel(CYCLES);
         soc.skipped_cycles
     });
     b.metric(
@@ -70,14 +76,29 @@ fn sim_throughput(b: &mut BenchRunner) {
         "Mcyc/s (target >= 60)",
     );
     b.metric(
+        "simulated cycles/sec wheel",
+        CYCLES as f64 / dt_wheel / 1e6,
+        "Mcyc/s (structure-of-arrays core)",
+    );
+    b.metric(
         "event-driven speedup vs naive",
         dt_naive / dt_fast,
         "x (acceptance >= 3)",
     );
     b.metric(
+        "wheel speedup vs event-driven",
+        dt_fast / dt_wheel,
+        "x (acceptance >= 1.5)",
+    );
+    b.metric(
         "cycles skipped (of 2M)",
         skipped as f64 / CYCLES as f64 * 100.0,
         "%",
+    );
+    b.metric(
+        "wheel cycles skipped (of 2M)",
+        skipped_wheel as f64 / CYCLES as f64 * 100.0,
+        "% (holds and parked scans jumped too)",
     );
 }
 
@@ -100,9 +121,27 @@ fn sweep_throughput(b: &mut BenchRunner) {
         b.time_with_mean(&format!("sweep {n} scenarios on {threads} threads"), 1, || {
             assert_eq!(sweep::run_scenarios(&grid, threads).len(), n);
         });
+    // Wheel scaling on the same fig6a + fig6b grids: the serial wheel
+    // sweep against the serial event-driven sweep above is the
+    // grid-level counterpart of the single-topology speedup metric.
+    let (wheel_cycles, dt_wheel) =
+        b.time_with_mean(&format!("sweep {n} scenarios wheel serial"), 1, || {
+            grid.iter().map(|s| Scheduler::run_wheel(s).cycles).sum::<u64>()
+        });
+    assert_eq!(wheel_cycles, sim_cycles, "wheel sweep diverged from event-driven");
     b.metric(
         "sweep simulated throughput (parallel)",
         sim_cycles as f64 / dt_parallel / 1e6,
+        "Mcyc/s",
+    );
+    b.metric(
+        "sweep simulated throughput (wheel serial)",
+        wheel_cycles as f64 / dt_wheel / 1e6,
+        "Mcyc/s (vs event-driven serial below)",
+    );
+    b.metric(
+        "sweep simulated throughput (event-driven serial)",
+        sim_cycles as f64 / dt_serial / 1e6,
         "Mcyc/s",
     );
     b.metric(

@@ -177,6 +177,19 @@ impl AdmissionDecision {
 /// Stateless scenario executor.
 pub struct Scheduler;
 
+/// Which of the three bit-identical stepping cores executes a scenario.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum StepMode {
+    /// Every component ticks every cycle (the reference semantics).
+    Naive,
+    /// Cycle-skipping over fabric-quiescent windows.
+    EventDriven,
+    /// The structure-of-arrays event wheel: per-cycle work touches only
+    /// components whose wheel slot fired, and busy-but-inert windows
+    /// (W-channel holds, parked grant scans) are jumped too.
+    Wheel,
+}
+
 impl Scheduler {
     /// Bound-aware admission control: compute the analytical WCET
     /// bounds for the mix and reject it when any critical task's
@@ -266,13 +279,20 @@ impl Scheduler {
     /// event-driven fast path (bit-identical to naive stepping; see
     /// `tests/event_driven_equivalence.rs`).
     pub fn run(scenario: &Scenario) -> ScenarioReport {
-        Self::execute(scenario, true).0
+        Self::execute(scenario, StepMode::EventDriven).0
     }
 
     /// Naive cycle-by-cycle reference executor, kept for the equivalence
     /// tests and for debugging suspected fast-path divergence.
     pub fn run_naive(scenario: &Scenario) -> ScenarioReport {
-        Self::execute(scenario, false).0
+        Self::execute(scenario, StepMode::Naive).0
+    }
+
+    /// Wheel-core executor (the structure-of-arrays hot path) —
+    /// bit-identical to both of the above; see
+    /// `tests/wheel_equivalence.rs`.
+    pub fn run_wheel(scenario: &Scenario) -> ScenarioReport {
+        Self::execute(scenario, StepMode::Wheel).0
     }
 
     /// Execute with event tracing forced on; returns the report plus
@@ -281,7 +301,7 @@ impl Scheduler {
     /// bit-identical to an untraced `run` of the same scenario.
     pub fn run_traced(scenario: &Scenario) -> (ScenarioReport, TraceCapture) {
         let s = scenario.clone().with_trace(TraceConfig::on());
-        let (report, cap) = Self::execute(&s, true);
+        let (report, cap) = Self::execute(&s, StepMode::EventDriven);
         (report, cap.expect("tracing was armed"))
     }
 
@@ -289,11 +309,19 @@ impl Scheduler {
     /// the trace-determinism equivalence tests.
     pub fn run_traced_naive(scenario: &Scenario) -> (ScenarioReport, TraceCapture) {
         let s = scenario.clone().with_trace(TraceConfig::on());
-        let (report, cap) = Self::execute(&s, false);
+        let (report, cap) = Self::execute(&s, StepMode::Naive);
         (report, cap.expect("tracing was armed"))
     }
 
-    fn execute(scenario: &Scenario, event_driven: bool) -> (ScenarioReport, Option<TraceCapture>) {
+    /// Wheel-core counterpart of [`Scheduler::run_traced`]: event
+    /// streams must be bit-identical across all three cores.
+    pub fn run_traced_wheel(scenario: &Scenario) -> (ScenarioReport, TraceCapture) {
+        let s = scenario.clone().with_trace(TraceConfig::on());
+        let (report, cap) = Self::execute(&s, StepMode::Wheel);
+        (report, cap.expect("tracing was armed"))
+    }
+
+    fn execute(scenario: &Scenario, mode: StepMode) -> (ScenarioReport, Option<TraceCapture>) {
         let tuning = scenario.tuning;
         let cfg = tuning.resource_config();
         let faults = scenario.fault_plan();
@@ -449,11 +477,20 @@ impl Scheduler {
         }
 
         // Run until all measured tasks drain (endless interferers keep
-        // running); the shared loop suppresses skips at the drain edge
-        // so the reported cycle count matches naive stepping exactly.
-        soc.run_until(scenario.max_cycles, event_driven, |soc| {
-            measured.iter().all(|&id| soc.finished(id))
-        });
+        // running); both loops suppress skips at the drain edge so the
+        // reported cycle count matches naive stepping exactly.
+        match mode {
+            StepMode::Wheel => {
+                soc.run_until_wheel(scenario.max_cycles, |soc| {
+                    measured.iter().all(|&id| soc.finished(id))
+                });
+            }
+            _ => {
+                soc.run_until(scenario.max_cycles, mode == StepMode::EventDriven, |soc| {
+                    measured.iter().all(|&id| soc.finished(id))
+                });
+            }
+        }
         let cycles = soc.now;
         // Uncore activity: non-idle cycles of the fixed-clock memory
         // path (HyperRAM/DPLLC + peripheral island), in uncore cycles.

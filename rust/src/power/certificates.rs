@@ -1,0 +1,108 @@
+//! Persistence of measured activity certificates across governor runs.
+//!
+//! [`Governor::govern_certified`] pays for its certificate with a
+//! measurement sweep: a full worst-case govern pass plus at least one
+//! validating simulation before the measured [`DomainUtilization`] can
+//! be fed back as the activity bound. Fleet-style admission re-packing
+//! re-governs the *same workload shapes* over and over (new deadlines,
+//! new co-runners arriving in the same mix families), so the
+//! certificate — a duty-cycle ratio, not a timing — is the part worth
+//! keeping.
+//!
+//! [`UtilizationLibrary`] is that store: a deterministic map from a
+//! *workload shape key* (governor search space + everything about the
+//! scenario that can steer measured activity, excluding task names) to
+//! the certified utilization. [`Governor::govern_certified_with`]
+//! consults it and, on a hit, skips the measurement sweep entirely —
+//! the certified point is still simulation-confirmed before anyone
+//! acts on it, so a stale certificate can relax the envelope gate but
+//! never ship an unvalidated point.
+//!
+//! [`Governor::govern_certified`]: crate::power::governor::Governor::govern_certified
+//! [`Governor::govern_certified_with`]: crate::power::governor::Governor::govern_certified_with
+
+use std::collections::BTreeMap;
+use std::fmt::Write;
+
+use crate::coordinator::Scenario;
+use crate::power::energy::DomainUtilization;
+use crate::power::governor::Governor;
+
+/// A deterministic certificate store keyed by workload shape.
+///
+/// Backed by a `BTreeMap` so iteration (and any future serialization)
+/// is ordered and reproducible. Hit/miss counters are plain
+/// observability — they never influence behaviour.
+#[derive(Debug, Clone, Default)]
+pub struct UtilizationLibrary {
+    entries: BTreeMap<String, DomainUtilization>,
+    /// Lookups answered from the library (measurement sweep skipped).
+    pub hits: u64,
+    /// Lookups that fell through to a full certified pass.
+    pub misses: u64,
+}
+
+impl UtilizationLibrary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The shape key a `(governor, scenario)` pair files its
+    /// certificate under: the governor's search space and every
+    /// scenario field that can steer measured activity — tuning, the
+    /// pinned operating point, the fault plan, the cycle budget and
+    /// each task's (criticality, workload, deadline) triple. Task
+    /// *names* are deliberately excluded: renaming a mix does not
+    /// change what the counters measure.
+    pub fn shape_key(governor: &Governor, scenario: &Scenario) -> String {
+        let mut key = String::new();
+        write!(
+            key,
+            "grid={:?};refine={};uncore={:?};tuning={:?};op={:?};faults={:?};budget={}",
+            governor.grid,
+            governor.refine_nct_domains,
+            governor.uncore_mhz,
+            scenario.tuning,
+            scenario.op_point,
+            scenario.fault_plan(),
+            scenario.max_cycles,
+        )
+        .expect("writing to a String cannot fail");
+        for t in &scenario.tasks {
+            write!(
+                key,
+                "|task={:?}/{:?}/d{}/dns{:?}",
+                t.criticality, t.workload, t.deadline, t.deadline_ns
+            )
+            .expect("writing to a String cannot fail");
+        }
+        key
+    }
+
+    /// Look up a certificate, counting the outcome.
+    pub fn lookup(&mut self, key: &str) -> Option<DomainUtilization> {
+        match self.entries.get(key).copied() {
+            Some(u) => {
+                self.hits += 1;
+                Some(u)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// File (or refresh) a certificate under `key`.
+    pub fn insert(&mut self, key: String, utils: DomainUtilization) {
+        self.entries.insert(key, utils);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}

@@ -44,6 +44,7 @@ use crate::coordinator::autotune::{self, SearchStrategy, TuneOutcome};
 use crate::coordinator::{
     AdmissionDecision, McTask, Scenario, ScenarioReport, Scheduler, SocTuning,
 };
+use crate::power::certificates::UtilizationLibrary;
 use crate::power::energy::{self, DomainUtilization, EnergyReport, SOC_ENVELOPE_MW};
 use crate::power::op_point::{OperatingPoint, VOLTAGE_GRID};
 use crate::soc::clock::{Cycle, Domain};
@@ -563,6 +564,41 @@ impl Governor {
             certified_validation,
         })
     }
+
+    /// [`Governor::govern_certified`] with a persistent certificate
+    /// store ([`UtilizationLibrary`]): when the library already holds a
+    /// certificate for this `(governor, scenario)` workload shape, the
+    /// measurement sweep — the worst-case govern pass and its
+    /// validating/probe simulations — is skipped entirely and the
+    /// stored utilization is re-governed directly. The certified winner
+    /// is still confirmed by its own validating simulation, so a reused
+    /// certificate can relax the envelope gate but never ship an
+    /// unvalidated point. A miss runs the full certified flow and files
+    /// the fresh certificate.
+    pub fn govern_certified_with(
+        &self,
+        scenario: &Scenario,
+        library: &mut UtilizationLibrary,
+    ) -> Result<CertifiedChoice, GovernError> {
+        let key = UtilizationLibrary::shape_key(self, scenario);
+        if let Some(certified_utils) = library.lookup(&key) {
+            let certified_governor = Governor {
+                activity_bound: Some(certified_utils),
+                ..self.clone()
+            };
+            let certified = certified_governor.govern(scenario)?;
+            let certified_validation = validate(scenario, &certified);
+            return Ok(CertifiedChoice {
+                worst_case: None,
+                certified_utils,
+                certified,
+                certified_validation,
+            });
+        }
+        let choice = self.govern_certified(scenario)?;
+        library.insert(key, choice.certified_utils);
+        Ok(choice)
+    }
 }
 
 #[cfg(test)]
@@ -720,6 +756,37 @@ mod tests {
                 wc.op.describe()
             );
         }
+    }
+
+    #[test]
+    fn certificate_library_hit_skips_the_sweep_deterministically() {
+        let s = cluster_mix_ns(400_000.0);
+        let g = Governor::default();
+        let mut lib = UtilizationLibrary::new();
+        let miss = g.govern_certified_with(&s, &mut lib).expect("governable");
+        assert_eq!((lib.hits, lib.misses), (0, 1));
+        assert_eq!(lib.len(), 1);
+        let hit = g.govern_certified_with(&s, &mut lib).expect("governable");
+        assert_eq!((lib.hits, lib.misses), (1, 1));
+        assert_eq!(lib.len(), 1, "a hit must not file a duplicate");
+        // The hit path skipped the measurement sweep...
+        assert!(hit.worst_case.is_none(), "hit still ran the worst-case pass");
+        // ...reused the certificate bit-exactly...
+        assert_eq!(hit.certified_utils, miss.certified_utils);
+        // ...and re-derived the same confirmed point deterministically.
+        assert_eq!(hit.certified.op, miss.certified.op);
+        assert_eq!(hit.certified.tuning, miss.certified.tuning);
+        assert!(hit.confirmed(), "a library-backed pass failed validation");
+        // A renamed copy of the same mix is the same shape — a hit.
+        let mut renamed = s.clone();
+        renamed.name = "renamed-mix".to_string();
+        let _ = g.govern_certified_with(&renamed, &mut lib).expect("governable");
+        assert_eq!((lib.hits, lib.misses), (2, 1));
+        // A different deadline is a different shape — a miss.
+        let other = cluster_mix_ns(800_000.0);
+        let _ = g.govern_certified_with(&other, &mut lib);
+        assert_eq!(lib.misses, 2);
+        assert_eq!(lib.len(), 2);
     }
 
     #[test]

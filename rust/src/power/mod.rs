@@ -15,7 +15,10 @@
 //!   recomputed analytically at every V/f candidate, isolation re-tuned
 //!   per point via [`coordinator::autotune`], winner = lowest modeled
 //!   energy that provably meets every deadline inside the envelope, and
-//!   confirmed by one real simulation.
+//!   confirmed by one real simulation;
+//! - [`certificates`]: a persistent [`UtilizationLibrary`] keyed by
+//!   workload shape, so repeat certified govern runs reuse a measured
+//!   activity certificate instead of re-running the measurement sweep.
 //!
 //! `experiments::energy` / `carfield dvfs` sweep the Fig. 6 deadline
 //! grids through the governor; `tests/governor_soundness.rs` fuzzes the
@@ -23,10 +26,12 @@
 //!
 //! [`coordinator::autotune`]: crate::coordinator::autotune
 
+pub mod certificates;
 pub mod energy;
 pub mod governor;
 pub mod op_point;
 
+pub use certificates::UtilizationLibrary;
 pub use energy::{DomainPower, DomainUtilization, EnergyReport, SOC_ENVELOPE_MW};
 pub use governor::{
     govern, validate, CertifiedChoice, GovernError, Governor, GovernorChoice, GovernorValidation,

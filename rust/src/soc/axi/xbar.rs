@@ -49,10 +49,32 @@ pub struct Crossbar {
     /// dribbles its data, the shared W mux is held and no new bursts are
     /// granted anywhere (paper §II: the TSU write buffer "prevents an
     /// initiator from holding the W channel, avoiding interconnect
-    /// stalls").
+    /// stalls"). The hold expires on the system edge at which the write
+    /// data has cleared the *target's* clock grid — `beats` edges of the
+    /// PHY clock for uncore targets — which collapses to `now + beats`
+    /// for lock-step targets (the seed timebase).
     w_hold_until: Cycle,
     /// Cycles lost to W-channel holds (observability).
     pub w_stall_cycles: u64,
+    /// Wheel core state (structure-of-arrays next-event times): the
+    /// system-grid cycle at which each target next does effectful work
+    /// (`Cycle::MAX` = dormant), and a per-target replay watermark —
+    /// every system cycle `< target_clean[t]` is fully accounted on
+    /// target `t`; the window up to `now` is replayed lazily through
+    /// `fast_forward` before the target next acts. Only the `wheel_*`
+    /// entry points read these; `tick`/`next_event`/`fast_forward` (the
+    /// naive and event-driven cores) ignore them entirely.
+    target_next: Vec<Cycle>,
+    target_clean: Vec<Cycle>,
+    /// Next cycle a wheel grant scan could possibly succeed. After a
+    /// failed scan nothing can change its outcome before a push, a
+    /// grant, or a target's next effectful tick (service frees slots in
+    /// the *service* phase, visible to the next cycle's grant phase —
+    /// hence the `+ 1` when the scan parks on `min(target_next)`).
+    scan_at: Cycle,
+    /// A burst was pushed since the last completed scan (re-arms the
+    /// scan immediately: a new head may be grantable right away).
+    scan_pushed: bool,
     /// Trace sink for grant / W-hold events. `None` (default) disables
     /// tracing at the cost of one branch in the grant loop; grants only
     /// happen while `queued > 0`, a state `next_event` pins to stepped
@@ -65,6 +87,7 @@ impl Crossbar {
     pub fn new(n_initiators: usize, targets: Vec<Box<dyn TargetModel>>) -> Self {
         let rr = targets.iter().map(|t| vec![0; t.lanes().max(1)]).collect();
         let rates = vec![RateConverter::lockstep(); targets.len()];
+        let n_targets = targets.len();
         Self {
             queues: (0..n_initiators).map(|_| InputQueue::default()).collect(),
             queued: 0,
@@ -76,6 +99,10 @@ impl Crossbar {
             hwm: vec![0; n_initiators],
             w_hold_until: 0,
             w_stall_cycles: 0,
+            target_next: vec![0; n_targets],
+            target_clean: vec![0; n_targets],
+            scan_at: 0,
+            scan_pushed: false,
             trace: None,
         }
     }
@@ -106,6 +133,7 @@ impl Crossbar {
     pub fn push(&mut self, burst: Burst) {
         self.queues[burst.initiator.0 as usize].fifo.push_back(burst);
         self.queued += 1;
+        self.scan_pushed = true;
     }
 
     /// Bursts waiting across all input queues (O(1)).
@@ -200,39 +228,69 @@ impl Crossbar {
                 self.hwm[i] = q.fifo.len();
             }
         }
-        // Grant phase: per target, rotate over initiators, admitting every
-        // head-of-line burst the target can still accept this cycle.
-        // An unbuffered write in flight holds the shared W channel: no
-        // grants at all until its data has dribbled through.
+        // Grant phase: an unbuffered write in flight holds the shared W
+        // channel — no grants at all until its data has dribbled
+        // through.
         if now < self.w_hold_until {
             self.w_stall_cycles += 1;
         } else {
-            'targets: for (t_idx, target) in self.targets.iter_mut().enumerate() {
-                let twhich = target.target();
-                // Grants happen on the system grid; a burst enters the
-                // target's service at the target-domain time of this step.
-                let local_now = self.rates[t_idx].local_of(now);
-                for lane in 0..self.rr[t_idx].len() {
-                    let start = self.rr[t_idx][lane];
-                    let mut granted_any = false;
-                    for off in 0..n_init {
-                        let i = (start + off) % n_init;
-                        let Some(head) = self.queues[i].fifo.front() else {
-                            continue;
-                        };
-                        if head.target != twhich
-                            || target.lane_of(head) != lane
-                            || !target.can_accept(head)
-                        {
-                            continue;
-                        }
-                        let mut burst = self.queues[i].fifo.pop_front().unwrap();
-                        self.queued -= 1;
-                        self.granted_beats[i] += burst.beats as u64;
-                        burst.granted_at = now;
-                        let holds_w = burst.write && !burst.wb_buffered;
-                        let beats = burst.beats as Cycle;
-                        if let Some(tb) = self.trace.as_deref_mut() {
+            self.grant_scan(now);
+        }
+        // Service phase: each target advances on its own clock grid.
+        for t_idx in 0..self.targets.len() {
+            self.tick_target(t_idx, now);
+        }
+    }
+
+    /// Grant phase: per target, rotate over initiators, admitting every
+    /// head-of-line burst the target can still accept this cycle.
+    /// Shared verbatim by all three stepping cores; returns whether any
+    /// burst was granted (the wheel core re-arms its scan schedule on
+    /// grants).
+    fn grant_scan(&mut self, now: Cycle) -> bool {
+        let n_init = self.queues.len();
+        let mut granted_some = false;
+        'targets: for (t_idx, target) in self.targets.iter_mut().enumerate() {
+            let twhich = target.target();
+            // Grants happen on the system grid; a burst enters the
+            // target's service at the target-domain time of this step.
+            let rate = self.rates[t_idx];
+            let local_now = rate.local_of(now);
+            for lane in 0..self.rr[t_idx].len() {
+                let start = self.rr[t_idx][lane];
+                let mut granted_any = false;
+                for off in 0..n_init {
+                    let i = (start + off) % n_init;
+                    let Some(head) = self.queues[i].fifo.front() else {
+                        continue;
+                    };
+                    if head.target != twhich
+                        || target.lane_of(head) != lane
+                        || !target.can_accept(head)
+                    {
+                        continue;
+                    }
+                    let mut burst = self.queues[i].fifo.pop_front().unwrap();
+                    self.queued -= 1;
+                    self.granted_beats[i] += burst.beats as u64;
+                    granted_some = true;
+                    burst.granted_at = now;
+                    let holds_w = burst.write && !burst.wb_buffered;
+                    let beats = burst.beats as Cycle;
+                    if let Some(tb) = self.trace.as_deref_mut() {
+                        tb.push(TraceEvent {
+                            at: now,
+                            domain: Domain::System,
+                            initiator: burst.initiator,
+                            target: Some(twhich),
+                            lane: lane as u8,
+                            tag: burst.tag,
+                            kind: TraceKind::Grant {
+                                beats: burst.beats,
+                                write: burst.write,
+                            },
+                        });
+                        if holds_w {
                             tb.push(TraceEvent {
                                 at: now,
                                 domain: Domain::System,
@@ -240,42 +298,33 @@ impl Crossbar {
                                 target: Some(twhich),
                                 lane: lane as u8,
                                 tag: burst.tag,
-                                kind: TraceKind::Grant {
-                                    beats: burst.beats,
-                                    write: burst.write,
-                                },
+                                kind: TraceKind::WHold { beats: burst.beats },
                             });
-                            if holds_w {
-                                tb.push(TraceEvent {
-                                    at: now,
-                                    domain: Domain::System,
-                                    initiator: burst.initiator,
-                                    target: Some(twhich),
-                                    lane: lane as u8,
-                                    tag: burst.tag,
-                                    kind: TraceKind::WHold { beats: burst.beats },
-                                });
-                            }
                         }
-                        target.start(burst, local_now);
-                        if !granted_any {
-                            // Advance this lane's RR past the first
-                            // grantee for fairness.
-                            self.rr[t_idx][lane] = (i + 1) % n_init;
-                            granted_any = true;
-                        }
-                        if holds_w {
-                            self.w_hold_until = now + beats;
-                            break 'targets;
-                        }
+                    }
+                    target.start(burst, local_now);
+                    if !granted_any {
+                        // Advance this lane's RR past the first
+                        // grantee for fairness.
+                        self.rr[t_idx][lane] = (i + 1) % n_init;
+                        granted_any = true;
+                    }
+                    if holds_w {
+                        // W data dribbles at the *target's* beat rate:
+                        // the hold clears on the first system edge at or
+                        // after `beats` edges of the target's own clock
+                        // grid. Identity — `now + beats` — for lock-step
+                        // targets, so the single-timebase seed is
+                        // bit-identical; for a slower PHY the hold
+                        // honestly covers the longer dribble instead of
+                        // under-pricing it on the system grid.
+                        self.w_hold_until = rate.to_system_edge(local_now + beats);
+                        break 'targets;
                     }
                 }
             }
         }
-        // Service phase: each target advances on its own clock grid.
-        for t_idx in 0..self.targets.len() {
-            self.tick_target(t_idx, now);
-        }
+        granted_some
     }
 
     /// Drain completions accumulated so far.
@@ -324,6 +373,155 @@ impl Crossbar {
         for (t_idx, target) in self.targets.iter_mut().enumerate() {
             let rate = self.rates[t_idx];
             target.fast_forward(rate.local_of(from), rate.local_of(to));
+        }
+    }
+
+    // --- Wheel core -----------------------------------------------------
+    //
+    // The entry points below implement the structure-of-arrays hot path:
+    // per-cycle work touches only targets whose `target_next` slot fired
+    // (everything in between is replayed lazily through `fast_forward`
+    // windows, exactly like the event-driven core's skip windows), and
+    // grant scans run only when their outcome could have changed — after
+    // a push, a grant, a W-hold expiry, or a target's effectful tick.
+    // With only uncore-domain targets active the scan schedule therefore
+    // lands on uncore edges, batching the per-system-step wakeups the
+    // event-driven core still pays.
+
+    /// Arm the wheel state at `now` (start of a wheel run). Idempotent;
+    /// the naive/event-driven cores may have run before this.
+    pub(crate) fn wheel_init(&mut self, now: Cycle) {
+        self.scan_at = now;
+        self.scan_pushed = self.queued > 0;
+        for t_idx in 0..self.targets.len() {
+            self.target_clean[t_idx] = now;
+            self.wheel_recompute_target(t_idx, now);
+        }
+    }
+
+    /// Replay target `t_idx`'s lazy window `[target_clean, to)` (no-op
+    /// cycles by the `next_event` contract — only running counters).
+    fn wheel_sync_target(&mut self, t_idx: usize, to: Cycle) {
+        let from = self.target_clean[t_idx];
+        if from < to {
+            let rate = self.rates[t_idx];
+            self.targets[t_idx].fast_forward(rate.local_of(from), rate.local_of(to));
+            self.target_clean[t_idx] = to;
+        }
+    }
+
+    /// Refresh `target_next[t_idx]` with the system-grid cycle of the
+    /// target's next effectful tick as seen from `at` (same conversion
+    /// as [`Crossbar::next_event`]).
+    fn wheel_recompute_target(&mut self, t_idx: usize, at: Cycle) {
+        let rate = self.rates[t_idx];
+        let local_at = rate.local_of(at);
+        self.target_next[t_idx] = match self.targets[t_idx].next_event(local_at) {
+            Some(e) => {
+                let t = if rate.is_lockstep() {
+                    e
+                } else {
+                    rate.system_step_of(e.max(local_at))
+                };
+                t.max(at)
+            }
+            None => Cycle::MAX,
+        };
+    }
+
+    /// One processed wheel cycle: busy-cycle bookkeeping, a grant scan
+    /// when one could succeed, and service ticks for due targets only.
+    /// Bit-identical to [`Crossbar::tick`] at every processed cycle; the
+    /// cycles the wheel never processes are provably inert here (their
+    /// only effects — W-stall accounting and lazy target windows — are
+    /// replayed by [`Crossbar::wheel_skip`] and `wheel_sync_target`).
+    pub(crate) fn wheel_cycle(&mut self, now: Cycle) {
+        let mut scanned = false;
+        if self.queued > 0 {
+            // High-water marks are maxima: queue lengths only change at
+            // processed cycles (pushes and grants both happen here), so
+            // recording at processed busy cycles is exact.
+            for (i, q) in self.queues.iter().enumerate() {
+                if q.fifo.len() > self.hwm[i] {
+                    self.hwm[i] = q.fifo.len();
+                }
+            }
+            if now < self.w_hold_until {
+                self.w_stall_cycles += 1;
+            } else if self.scan_pushed || now >= self.scan_at {
+                self.scan_pushed = false;
+                scanned = true;
+                // `start`/`can_accept` must see fully replayed state.
+                for t_idx in 0..self.targets.len() {
+                    self.wheel_sync_target(t_idx, now);
+                }
+                if self.grant_scan(now) {
+                    // Service may free slots for the remaining heads as
+                    // early as the next cycle's grant phase (or at the
+                    // hold expiry if this grant holds W).
+                    self.scan_at = self.w_hold_until.max(now + 1);
+                } else {
+                    // Nothing grantable: frozen until a push (re-arms
+                    // via `scan_pushed`) or a target's next effectful
+                    // tick, whose service-phase effect is first visible
+                    // to the *following* cycle's grant phase.
+                    let soonest = self.target_next.iter().copied().min();
+                    self.scan_at = match soonest {
+                        Some(t) if t < Cycle::MAX => t.saturating_add(1),
+                        _ => now + 1,
+                    };
+                }
+            }
+        }
+        // Service phase: due targets only — plus every target on scan
+        // cycles, where a fresh grant may have re-armed any of them (all
+        // already synced to `now`; idle targets tick as no-ops exactly
+        // like under naive stepping).
+        for t_idx in 0..self.targets.len() {
+            if scanned || self.target_next[t_idx] <= now {
+                self.wheel_sync_target(t_idx, now);
+                self.tick_target(t_idx, now);
+                self.target_clean[t_idx] = now + 1;
+                self.wheel_recompute_target(t_idx, now + 1);
+            }
+        }
+    }
+
+    /// Earliest cycle >= `now` the wheel must process the fabric:
+    /// the soonest due target, and — while bursts are queued — the hold
+    /// expiry or the armed scan.
+    pub(crate) fn wheel_next(&self, now: Cycle) -> Cycle {
+        let mut due = self.target_next.iter().copied().min().unwrap_or(Cycle::MAX);
+        if self.queued > 0 {
+            let scan = if now < self.w_hold_until {
+                // The hold window itself is inert (stall cycles are
+                // bulk-accounted by `wheel_skip`); the scan resumes at
+                // its expiry.
+                self.w_hold_until
+            } else if self.scan_pushed {
+                now
+            } else {
+                self.scan_at
+            };
+            due = due.min(scan);
+        }
+        due
+    }
+
+    /// Bulk-account a jumped window `[from, to)`: the only per-cycle
+    /// fabric effect in an inert window is W-stall counting, and both
+    /// `queued` and the hold deadline are frozen across it.
+    pub(crate) fn wheel_skip(&mut self, from: Cycle, to: Cycle) {
+        if self.queued > 0 && from < self.w_hold_until {
+            self.w_stall_cycles += self.w_hold_until.min(to) - from;
+        }
+    }
+
+    /// Flush every target's lazy replay window up to `now` (end of a
+    /// wheel run, before counters are harvested).
+    pub(crate) fn wheel_flush(&mut self, now: Cycle) {
+        for t_idx in 0..self.targets.len() {
+            self.wheel_sync_target(t_idx, now);
         }
     }
 

@@ -48,6 +48,9 @@ struct InFlight {
 pub struct Dcspm {
     ports: [Option<InFlight>; 2],
     pub stats: DcspmStats,
+    /// Cycles with at least one port in service (the per-resource
+    /// service-mode counter; replayed exactly by `fast_forward`).
+    busy_cycles: u64,
     /// Completion pipeline latency (SPM macro + AXI return).
     resp_latency: Cycle,
     /// Trace sink for cross-port bank-conflict events. Conflicts only
@@ -62,6 +65,7 @@ impl Dcspm {
         Self {
             ports: [None, None],
             stats: DcspmStats::default(),
+            busy_cycles: 0,
             resp_latency: 1,
             trace: None,
         }
@@ -182,6 +186,9 @@ impl TargetModel for Dcspm {
     }
 
     fn tick(&mut self, now: Cycle, done: &mut Vec<Completion>) {
+        if self.ports.iter().any(|p| p.is_some()) {
+            self.busy_cycles += 1;
+        }
         // Priority alternates by cycle parity so neither port starves
         // under persistent conflicts.
         let first = (now & 1) as usize;
@@ -259,6 +266,16 @@ impl TargetModel for Dcspm {
             served += delta;
         }
         self.stats.beats_served += served;
+        // Port occupancy is constant across a replayable window (no
+        // grant, no completion inside it), so the busy count a naive
+        // run would accumulate is exactly the window length.
+        if served > 0 {
+            self.busy_cycles += delta;
+        }
+    }
+
+    fn busy_cycles(&self) -> u64 {
+        self.busy_cycles
     }
 }
 
@@ -319,6 +336,24 @@ mod tests {
         assert_eq!(d.lanes(), 2);
         assert_eq!(d.lane_of(&read(CONTIG_ALIAS_BIT + CAPACITY / 2, 8, 0)), 1);
         assert_eq!(d.lane_of(&read(0, 8, 0)), 0);
+    }
+
+    #[test]
+    fn busy_cycles_counts_only_service_cycles() {
+        let mut d = Dcspm::new();
+        let done = run(&mut d, vec![read(0, 8, 0).with_tag(1)], 20);
+        assert_eq!(done.len(), 1);
+        // Busy exactly while the burst was in service (cycles 0..8);
+        // the 12 idle tail cycles must not count.
+        assert_eq!(d.busy_cycles(), 8);
+        // A fast-forwarded window replays the same accounting.
+        let mut f = Dcspm::new();
+        f.start(read(0, 8, 0), 0);
+        f.fast_forward(0, 7);
+        let mut out = Vec::new();
+        f.tick(7, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(f.busy_cycles(), d.busy_cycles());
     }
 
     #[test]

@@ -114,9 +114,56 @@ impl BusInitiator for dma::DmaEngine {
     }
 }
 
+/// Release everything `tsu` can shape at `now` into the fabric,
+/// stamping release times and trace events. Shared verbatim by every
+/// stepping core (the wheel calls it only at processed cycles, where
+/// `Tsu::release` has lazily caught up on any skipped period
+/// rollovers).
+fn release_into_fabric(
+    tsu: &mut Tsu,
+    staged: &mut Vec<Burst>,
+    xbar: &mut Crossbar,
+    trace: &mut TraceBuf,
+    now: Cycle,
+) {
+    staged.clear();
+    tsu.release(now, staged);
+    for mut b in staged.drain(..) {
+        b.released_at = now;
+        if let Some(tb) = trace.as_deref_mut() {
+            tb.push(TraceEvent {
+                at: now,
+                domain: Domain::System,
+                initiator: b.initiator,
+                target: Some(b.target),
+                lane: 0,
+                tag: b.tag,
+                kind: TraceKind::TsuRelease {
+                    beats: b.beats,
+                    write: b.write,
+                },
+            });
+        }
+        xbar.push(b);
+    }
+}
+
+/// Flat next-event arrays for the wheel core (the structure-of-arrays
+/// hot state): one slot per port, `Cycle::MAX` = dormant. `clean[i]` is
+/// the replay watermark — every cycle `< clean[i]` is fully accounted
+/// on port `i`'s initiator and TSU; the window up to the current cycle
+/// is replayed lazily through the `fast_forward` hooks before the port
+/// next acts (or at the end of the run).
+#[derive(Default)]
+struct WheelState {
+    init_next: Vec<Cycle>,
+    tsu_next: Vec<Cycle>,
+    clean: Vec<Cycle>,
+}
+
 /// The assembled SoC.
 ///
-/// Two stepping regimes share one cycle-accurate semantics:
+/// Three stepping regimes share one cycle-accurate semantics:
 ///
 /// - [`SocSim::step`] — naive: every component ticks every cycle;
 /// - [`SocSim::step_fast`] — event-driven: after a normal step, if the
@@ -125,13 +172,22 @@ impl BusInitiator for dma::DmaEngine {
 ///   per-cycle counters are replayed via the `fast_forward` hooks. The
 ///   two regimes produce bit-identical results (enforced by
 ///   `tests/event_driven_equivalence.rs`, and cross-checkable at runtime
-///   with [`SocSim::validate_skips`]).
+///   with [`SocSim::validate_skips`]);
+/// - [`SocSim::run_until_wheel`] — the wheel core: flat per-port and
+///   per-target arrays of next-event times drive both *which* components
+///   a processed cycle touches (only those whose wheel slot fired) and
+///   *how far* the clock can jump between processed cycles — including
+///   across busy-but-inert windows (W-channel holds, parked grant
+///   scans) the event-driven core must step through. Bit-identical to
+///   both of the above (`tests/wheel_equivalence.rs`).
 pub struct SocSim {
     pub xbar: Crossbar,
     ports: Vec<(Box<dyn BusInitiator>, Tsu)>,
     staged: Vec<Burst>,
     /// Reused completion scratch (avoids per-cycle reallocation).
     comp_scratch: Vec<Completion>,
+    /// Wheel-core state; inert unless a `*_wheel` entry point runs.
+    wheel: WheelState,
     pub now: Cycle,
     /// Whether `run_until_done` uses the event-driven fast path.
     pub event_driven: bool,
@@ -169,6 +225,7 @@ impl SocSim {
             ports: Vec::new(),
             staged: Vec::new(),
             comp_scratch: Vec::new(),
+            wheel: WheelState::default(),
             now: 0,
             event_driven: true,
             validate_skips: false,
@@ -254,83 +311,63 @@ impl SocSim {
             if tsu.queued() == 0 {
                 continue; // nothing shaped this cycle
             }
-            self.staged.clear();
-            tsu.release(now, &mut self.staged);
-            for mut b in self.staged.drain(..) {
-                b.released_at = now;
-                if let Some(tb) = self.trace.as_deref_mut() {
-                    tb.push(TraceEvent {
-                        at: now,
-                        domain: Domain::System,
-                        initiator: b.initiator,
-                        target: Some(b.target),
-                        lane: 0,
-                        tag: b.tag,
-                        kind: TraceKind::TsuRelease {
-                            beats: b.beats,
-                            write: b.write,
-                        },
-                    });
-                }
-                self.xbar.push(b);
-            }
+            release_into_fabric(tsu, &mut self.staged, &mut self.xbar, &mut self.trace, now);
         }
         self.xbar.tick(now);
-        if !self.xbar.completions.is_empty() {
-            // Swap into the reusable scratch so the crossbar keeps an
-            // allocated-but-empty buffer (hot-loop optimization, see
-            // EXPERIMENTS.md §Perf).
-            std::mem::swap(&mut self.comp_scratch, &mut self.xbar.completions);
-            self.completions_delivered += self.comp_scratch.len() as u64;
-            for i in 0..self.comp_scratch.len() {
-                let c = self.comp_scratch[i];
-                if let Some(tb) = self.trace.as_deref_mut() {
-                    tb.push(TraceEvent {
-                        at: now,
-                        domain: Domain::System,
-                        initiator: c.initiator,
-                        target: Some(c.target),
-                        lane: 0,
-                        tag: c.tag,
-                        kind: TraceKind::Delivery {
-                            beats: c.beats,
-                            write: c.write,
-                            last_fragment: c.last_fragment,
-                            issued_at: c.issued_at,
-                            released_at: c.released_at,
-                            granted_at: c.granted_at,
-                        },
-                    });
-                }
-                let (init, tsu) = &mut self.ports[c.initiator.0 as usize];
-                init.complete(c, now, tsu);
-                // A completion may have queued follow-up bursts eligible
-                // this cycle; release immediately so back-to-back chains
-                // don't pay a phantom cycle.
-                self.staged.clear();
-                tsu.release(now, &mut self.staged);
-                for mut b in self.staged.drain(..) {
-                    b.released_at = now;
-                    if let Some(tb) = self.trace.as_deref_mut() {
-                        tb.push(TraceEvent {
-                            at: now,
-                            domain: Domain::System,
-                            initiator: b.initiator,
-                            target: Some(b.target),
-                            lane: 0,
-                            tag: b.tag,
-                            kind: TraceKind::TsuRelease {
-                                beats: b.beats,
-                                write: b.write,
-                            },
-                        });
-                    }
-                    self.xbar.push(b);
-                }
-            }
-            self.comp_scratch.clear();
-        }
+        self.deliver_completions(now, false);
         self.now += 1;
+    }
+
+    /// Route this cycle's completions back to their initiators (shared
+    /// by every stepping core). With `wheel` set, each receiving port's
+    /// lazy replay window is flushed through this cycle's no-op tick
+    /// *before* the completion lands — running counters must see the
+    /// pre-completion state, exactly as under naive stepping — and its
+    /// wheel slots are refreshed afterwards.
+    fn deliver_completions(&mut self, now: Cycle, wheel: bool) {
+        if self.xbar.completions.is_empty() {
+            return;
+        }
+        // Swap into the reusable scratch so the crossbar keeps an
+        // allocated-but-empty buffer (hot-loop optimization, see
+        // EXPERIMENTS.md §Perf).
+        std::mem::swap(&mut self.comp_scratch, &mut self.xbar.completions);
+        self.completions_delivered += self.comp_scratch.len() as u64;
+        for i in 0..self.comp_scratch.len() {
+            let c = self.comp_scratch[i];
+            if let Some(tb) = self.trace.as_deref_mut() {
+                tb.push(TraceEvent {
+                    at: now,
+                    domain: Domain::System,
+                    initiator: c.initiator,
+                    target: Some(c.target),
+                    lane: 0,
+                    tag: c.tag,
+                    kind: TraceKind::Delivery {
+                        beats: c.beats,
+                        write: c.write,
+                        last_fragment: c.last_fragment,
+                        issued_at: c.issued_at,
+                        released_at: c.released_at,
+                        granted_at: c.granted_at,
+                    },
+                });
+            }
+            let port = c.initiator.0 as usize;
+            if wheel {
+                self.wheel_sync_port(port, now + 1);
+            }
+            let (init, tsu) = &mut self.ports[port];
+            init.complete(c, now, tsu);
+            // A completion may have queued follow-up bursts eligible
+            // this cycle; release immediately so back-to-back chains
+            // don't pay a phantom cycle.
+            release_into_fabric(tsu, &mut self.staged, &mut self.xbar, &mut self.trace, now);
+            if wheel {
+                self.wheel_recompute_port(port, now + 1);
+            }
+        }
+        self.comp_scratch.clear();
     }
 
     /// All initiators drained and the fabric empty.
@@ -471,6 +508,178 @@ impl SocSim {
         self.run_until(deadline, true, |_| false);
     }
 
+    // --- Wheel core -----------------------------------------------------
+
+    /// Arm the wheel: size the flat arrays to the attached ports and
+    /// compute every slot's next-event time at the current cycle.
+    fn wheel_init(&mut self) {
+        let now = self.now;
+        let n = self.ports.len();
+        self.wheel.init_next.resize(n, Cycle::MAX);
+        self.wheel.tsu_next.resize(n, Cycle::MAX);
+        self.wheel.clean.resize(n, now);
+        for i in 0..n {
+            self.wheel.clean[i] = now;
+            self.wheel_recompute_port(i, now);
+        }
+        self.xbar.wheel_init(now);
+    }
+
+    /// Refresh port `i`'s wheel slots (initiator event, TSU release
+    /// deadline) as seen from cycle `at`.
+    fn wheel_recompute_port(&mut self, i: usize, at: Cycle) {
+        let (init, tsu) = &self.ports[i];
+        self.wheel.init_next[i] = match init.next_event(at) {
+            Some(t) => t.max(at),
+            None => Cycle::MAX,
+        };
+        self.wheel.tsu_next[i] = match tsu.next_release_at(at) {
+            Some(t) => t.max(at),
+            None => Cycle::MAX,
+        };
+    }
+
+    /// Replay port `i`'s lazy window `[clean, to)` — no-op cycles by the
+    /// `next_event` contracts; only running counters (DMA busy cycles,
+    /// TRU stall cycles, ...) accrue, through the same `fast_forward`
+    /// hooks the event-driven core uses.
+    fn wheel_sync_port(&mut self, i: usize, to: Cycle) {
+        let from = self.wheel.clean[i];
+        if from < to {
+            let (init, tsu) = &mut self.ports[i];
+            init.fast_forward(from, to);
+            tsu.fast_forward(from, to);
+            self.wheel.clean[i] = to;
+        }
+    }
+
+    /// One processed wheel cycle: phase 1 touches only ports whose
+    /// wheel slot fired (everything else is provably a no-op and gets
+    /// replayed lazily), phase 2 runs the crossbar's wheel cycle, phase
+    /// 3 delivers completions — the same three phases as [`SocSim::step`]
+    /// in the same order.
+    fn step_wheel(&mut self) {
+        let now = self.now;
+        for i in 0..self.ports.len() {
+            if self.wheel.init_next[i] > now && self.wheel.tsu_next[i] > now {
+                continue; // dormant this cycle
+            }
+            self.wheel_sync_port(i, now);
+            let (init, tsu) = &mut self.ports[i];
+            init.tick(now, tsu);
+            if tsu.queued() > 0 {
+                release_into_fabric(tsu, &mut self.staged, &mut self.xbar, &mut self.trace, now);
+            }
+            self.wheel.clean[i] = now + 1;
+            self.wheel_recompute_port(i, now + 1);
+        }
+        self.xbar.wheel_cycle(now);
+        self.deliver_completions(now, true);
+        self.now = now + 1;
+    }
+
+    /// The earliest cycle `>= self.now` at which any wheel slot fires —
+    /// ports, targets, or the crossbar's grant-scan/hold schedule.
+    fn wheel_next_due(&self) -> Cycle {
+        let mut due = self.xbar.wheel_next(self.now);
+        for (&a, &b) in self.wheel.init_next.iter().zip(&self.wheel.tsu_next) {
+            due = due.min(a).min(b);
+        }
+        due
+    }
+
+    /// Flush every lazy replay window (ports, TSUs, targets) so stats
+    /// and counters read exactly as after a naive run.
+    fn wheel_flush(&mut self) {
+        let now = self.now;
+        for i in 0..self.ports.len() {
+            self.wheel_sync_port(i, now);
+        }
+        self.xbar.wheel_flush(now);
+    }
+
+    /// Validate-skips analog for the wheel: step the proposed jump
+    /// window through the wheel one cycle at a time and assert nothing
+    /// effectful happened — no grants, no deliveries, no queue-length
+    /// change. Unlike the event-driven validator, parked bursts may
+    /// legitimately sit queued across the window (a W-channel hold, a
+    /// grant scan waiting out a busy target); they must merely be
+    /// *frozen*.
+    fn wheel_validate_inert(&mut self, target: Cycle) {
+        while self.now < target {
+            let granted: u64 = self.xbar.granted_beats.iter().sum();
+            let delivered = self.completions_delivered;
+            let queued = self.xbar.queued_bursts();
+            let at = self.now;
+            self.step_wheel();
+            assert_eq!(
+                queued,
+                self.xbar.queued_bursts(),
+                "wheel window not inert: queue changed at cycle {at}"
+            );
+            let granted_after: u64 = self.xbar.granted_beats.iter().sum();
+            assert_eq!(
+                granted, granted_after,
+                "wheel window not inert: grant at cycle {at}"
+            );
+            assert_eq!(
+                delivered, self.completions_delivered,
+                "wheel window not inert: completion at cycle {at}"
+            );
+        }
+    }
+
+    /// The wheel-core run loop: processed cycles touch only components
+    /// whose wheel slot fired; the windows in between are jumped in
+    /// O(ports + targets) and replayed lazily. Bit-identical to
+    /// [`SocSim::run_until`] on either stepping path (enforced by
+    /// `tests/wheel_equivalence.rs`); like there, the jump is suppressed
+    /// the moment `done` holds so the observed cycle count matches
+    /// naive stepping exactly. With [`SocSim::validate_skips`] set,
+    /// jumped windows are stepped through the wheel cycle-by-cycle and
+    /// asserted inert instead.
+    pub fn run_until_wheel(
+        &mut self,
+        deadline: Cycle,
+        mut done: impl FnMut(&SocSim) -> bool,
+    ) -> bool {
+        self.wheel_init();
+        let mut held = false;
+        while self.now < deadline {
+            if done(self) {
+                held = true;
+                break;
+            }
+            self.step_wheel();
+            if self.now < deadline && !done(self) {
+                let target = self.wheel_next_due().min(deadline);
+                if target > self.now {
+                    if self.validate_skips {
+                        self.wheel_validate_inert(target);
+                    } else {
+                        self.xbar.wheel_skip(self.now, target);
+                        self.skipped_cycles += target - self.now;
+                        self.now = target;
+                    }
+                }
+            }
+        }
+        self.wheel_flush();
+        held
+    }
+
+    /// Advance a fixed number of simulated cycles on the wheel core
+    /// (the bench's counterpart to [`SocSim::run_cycles_fast`]).
+    pub fn run_cycles_wheel(&mut self, cycles: Cycle) {
+        let deadline = self.now + cycles;
+        self.run_until_wheel(deadline, |_| false);
+    }
+
+    /// Number of attached initiator ports.
+    pub fn n_initiators(&self) -> usize {
+        self.ports.len()
+    }
+
     /// Whether a specific initiator finished.
     pub fn finished(&self, id: InitiatorId) -> bool {
         self.ports[id.0 as usize].0.finished()
@@ -609,6 +818,42 @@ mod tests {
         checked.validate_skips = true;
         assert!(checked.run_until_done(50_000_000));
         assert_eq!(checked.now, naive.now);
+
+        // Wheel core: must skip at least as much as the event-driven
+        // path (it also jumps busy-but-inert windows) and still land
+        // bit-identical to naive stepping.
+        let mut wheel = build();
+        assert!(wheel.run_until_wheel(50_000_000, |soc| soc.drained()));
+        assert!(
+            wheel.skipped_cycles >= fast.skipped_cycles,
+            "wheel skipped {} < event-driven {}",
+            wheel.skipped_cycles,
+            fast.skipped_cycles
+        );
+        assert_eq!(wheel.now, naive.now, "wheel drain cycle diverged");
+        assert_eq!(
+            wheel.tsu_stats(InitiatorId(1)).tru_stall_cycles,
+            naive.tsu_stats(InitiatorId(1)).tru_stall_cycles,
+            "wheel TRU stall accounting diverged"
+        );
+        assert_eq!(wheel.completions_delivered, naive.completions_delivered);
+        let (w_mean, w_misses) = {
+            let h: &mut HostCore = wheel.initiator_mut(InitiatorId(0));
+            (h.iteration_latency.mean(), h.l1_misses)
+        };
+        assert_eq!(w_mean, f_mean);
+        assert_eq!(w_misses, f_misses);
+
+        // Wheel validate mode: every proposed wheel jump window is
+        // stepped through the wheel and asserted inert.
+        let mut wchecked = build();
+        wchecked.validate_skips = true;
+        assert!(wchecked.run_until_wheel(50_000_000, |soc| soc.drained()));
+        assert_eq!(wchecked.now, naive.now);
+        assert_eq!(
+            wchecked.tsu_stats(InitiatorId(1)).tru_stall_cycles,
+            naive.tsu_stats(InitiatorId(1)).tru_stall_cycles
+        );
     }
 
     #[test]

@@ -37,6 +37,10 @@ use crate::soc::axi::{InitiatorId, Target};
 use crate::soc::clock::{Cycle, Domain, RateConverter};
 use crate::wcet::Resource;
 
+pub mod service;
+
+pub use service::{ServiceCounters, ServiceSnapshot, SERVICE_RESOURCES};
+
 /// What happened at a hook site.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TraceKind {
@@ -45,8 +49,10 @@ pub enum TraceKind {
     TsuRelease { beats: u32, write: bool },
     /// The crossbar granted a burst to a target lane (system domain).
     Grant { beats: u32, write: bool },
-    /// An unbuffered write grant holds the shared W channel for `beats`
-    /// cycles, stalling every other grant (system domain).
+    /// An unbuffered write grant holds the shared W channel, stalling
+    /// every other grant. `beats` counts cycles of the *target's* clock
+    /// grid (PHY edges for uncore targets, system cycles otherwise);
+    /// the event timestamp itself is system-domain.
     WHold { beats: u32 },
     /// The HyperRAM channel scheduled one line's service (uncore-local
     /// timestamp). `retry_cycles` is the injected ECC-retry overhead
@@ -280,7 +286,19 @@ impl InterferenceLedger {
             cap.events
                 .iter()
                 .filter_map(|e| match e.kind {
-                    TraceKind::WHold { beats } => Some((e.at, e.at + beats as Cycle)),
+                    // The hold runs on the granted target's clock grid:
+                    // `beats` PHY edges for an uncore target (converted
+                    // back to the system edge the crossbar unblocks at,
+                    // identity when coupled), system cycles otherwise.
+                    TraceKind::WHold { beats } => {
+                        let end = match e.target {
+                            Some(Target::Hyperram) | Some(Target::Peripheral) => cap
+                                .uncore
+                                .to_system_edge(cap.uncore.local_of(e.at) + beats as Cycle),
+                            _ => e.at + beats as Cycle,
+                        };
+                        Some((e.at, end))
+                    }
                     _ => None,
                 })
                 .collect(),

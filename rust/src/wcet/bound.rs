@@ -676,7 +676,29 @@ fn analyze_model(
         // W-channel hold, plus each writer's provable back-to-back chain.
         let interference = worst_comp.times(n_frags * ahead);
         let w_term = if w_frag > 0 {
-            CostSplit::sys((ahead + 1 + w_chain) * w_frag as Cycle)
+            let count = ahead + 1 + w_chain;
+            let sys_cand = CostSplit::sys(count * w_frag as Cycle);
+            match pricing {
+                Pricing::Lockstep => sys_cand,
+                Pricing::WallClock { .. } => {
+                    // W data dribbles on the *target's* clock grid: a
+                    // hold on an uncore target runs `w_frag` PHY cycles
+                    // plus one system cycle of edge rounding. Neither
+                    // candidate dominates at every frequency ratio, so
+                    // take the units-max of the all-system and
+                    // all-uncore extremes — an upper bound on any mix
+                    // of hold targets.
+                    let unc_cand = CostSplit {
+                        system: count,
+                        uncore: count * w_frag as Cycle,
+                    };
+                    if pricing.units(unc_cand) > pricing.units(sys_cand) {
+                        unc_cand
+                    } else {
+                        sys_cand
+                    }
+                }
+            }
         } else {
             CostSplit::ZERO
         };

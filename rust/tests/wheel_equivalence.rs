@@ -1,0 +1,194 @@
+//! Equivalence property for the structure-of-arrays wheel core: the
+//! wheel executor must be *bit-identical* to naive per-cycle stepping
+//! (and therefore to the event-driven core, which has its own
+//! equivalence suite) — same drain cycles, same latency samples, same
+//! per-cycle counters, same trace streams. `ScenarioReport` and
+//! `TraceCapture` equality are exact (f64 included), so any divergence
+//! in timing, accounting, RNG draw order or event emission fails
+//! loudly.
+
+use carfield::coordinator::task::Criticality;
+use carfield::coordinator::{FaultPlan, IsolationPolicy, McTask, Scenario, Scheduler, Workload};
+use carfield::power::OperatingPoint;
+use carfield::soc::amr::IntPrecision;
+use carfield::soc::dma::DmaJob;
+use carfield::soc::hostd::TctSpec;
+use carfield::soc::vector::FpFormat;
+
+fn assert_equivalent(scenario: &Scenario) {
+    let wheel = Scheduler::run_wheel(scenario);
+    let naive = Scheduler::run_naive(scenario);
+    assert_eq!(
+        wheel, naive,
+        "wheel vs naive diverged for scenario `{}`",
+        scenario.name
+    );
+    let fast = Scheduler::run(scenario);
+    assert_eq!(
+        wheel, fast,
+        "wheel vs event-driven diverged for scenario `{}`",
+        scenario.name
+    );
+}
+
+fn small_tct() -> McTask {
+    McTask::new(
+        "tct",
+        Criticality::Hard,
+        Workload::HostTct(TctSpec {
+            accesses: 256,
+            iterations: 3,
+            ..TctSpec::fig6a()
+        }),
+    )
+}
+
+fn dma() -> McTask {
+    McTask::new(
+        "sys-dma",
+        Criticality::BestEffort,
+        Workload::DmaCopy(DmaJob::interferer()),
+    )
+}
+
+/// A coupled operating point: the tree pins the uncore to the system
+/// clock, which is exactly the seed's single timebase.
+fn coupled(v: f64) -> OperatingPoint {
+    OperatingPoint::uniform(v).expect("grid voltage")
+}
+
+/// Fig. 6a-shaped scenarios (host TCT vs system DMA on the HyperRAM
+/// path) across the whole isolation-policy ladder — the exact grid the
+/// event-driven suite pins, now against the wheel.
+#[test]
+fn fig6a_policy_ladder_wheel_matches_naive() {
+    let policies = [
+        IsolationPolicy::NoIsolation,
+        IsolationPolicy::TsuRegulation,
+        IsolationPolicy::TsuPlusLlcPartition {
+            tct_fraction_percent: 50,
+        },
+        IsolationPolicy::PrivatePaths,
+    ];
+    assert_equivalent(
+        &Scenario::new("isolated", IsolationPolicy::NoIsolation).with_task(small_tct()),
+    );
+    for (i, policy) in policies.into_iter().enumerate() {
+        assert_equivalent(
+            &Scenario::new(&format!("fig6a-wheel-{i}"), policy)
+                .with_task(small_tct())
+                .with_task(dma()),
+        );
+    }
+}
+
+/// Cluster-pair scenario: AMR lockstep TCT + vector NCT sharing AXI and
+/// the DCSPM — exercises the dual-port DCSPM's `fast_forward` replay
+/// under wheel windows bounded by `target_next`.
+#[test]
+fn cluster_pair_wheel_matches_naive() {
+    let amr = || {
+        McTask::new(
+            "amr",
+            Criticality::Safety,
+            Workload::AmrMatMul {
+                precision: IntPrecision::Int8,
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 16,
+            },
+        )
+    };
+    let vec = || {
+        McTask::new(
+            "vec",
+            Criticality::BestEffort,
+            Workload::VectorMatMul {
+                format: FpFormat::Fp16,
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 32,
+            },
+        )
+    };
+    for policy in [IsolationPolicy::NoIsolation, IsolationPolicy::PrivatePaths] {
+        assert_equivalent(
+            &Scenario::new("cluster-pair-wheel", policy)
+                .with_task(amr())
+                .with_task(vec()),
+        );
+    }
+}
+
+/// Decoupled uncore sweep: the wheel's PHY-grid W-holds and
+/// uncore-edge grant-scan parking must stay bit-identical to naive
+/// stepping at slower, equal, faster and non-integer clock ratios.
+#[test]
+fn decoupled_uncore_wheel_matches_naive() {
+    let policies = [IsolationPolicy::TsuRegulation, IsolationPolicy::NoIsolation];
+    for policy in policies {
+        for uncore_mhz in [350.0, 500.0, 610.0, 1000.0, 1400.0] {
+            let op = coupled(0.8).with_uncore_mhz(uncore_mhz).expect("valid");
+            let s = Scenario::new("uncore-wheel", policy)
+                .with_task(small_tct())
+                .with_task(dma())
+                .with_op_point(op);
+            let wheel = Scheduler::run_wheel(&s);
+            let naive = Scheduler::run_naive(&s);
+            assert_eq!(
+                wheel, naive,
+                "wheel vs naive diverged: uncore {uncore_mhz}MHz, {policy:?}"
+            );
+        }
+    }
+}
+
+/// Seeded fault injection through the wheel: retry re-execution, scrub
+/// traffic on the extra initiator slot, and recovery stalls must all
+/// replay identically (the fault RNG draws are keyed to cycle numbers,
+/// so any skip-window slip would change the draw order).
+#[test]
+fn faulted_mix_wheel_matches_naive() {
+    let s = Scenario::new("faulted-wheel", IsolationPolicy::TsuRegulation)
+        .with_task(McTask::new(
+            "amr",
+            Criticality::Safety,
+            Workload::AmrMatMul {
+                precision: IntPrecision::Int8,
+                m: 64,
+                k: 64,
+                n: 64,
+                tile: 8,
+            },
+        ))
+        .with_task(dma())
+        .with_faults(FaultPlan::new(0x5EED).with_amr_rate(4.0).with_k(2));
+    assert_equivalent(&s);
+}
+
+/// Traced wheel runs: the merged event stream and the ledger task
+/// directory must be bit-identical to the naive-stepping capture, and
+/// arming the tracer must not perturb the wheel report.
+#[test]
+fn traced_wheel_capture_bit_identical() {
+    let s = Scenario::new("traced-wheel", IsolationPolicy::TsuRegulation)
+        .with_task(small_tct())
+        .with_task(dma());
+    let (wheel_report, wheel_cap) = Scheduler::run_traced_wheel(&s);
+    let (naive_report, naive_cap) = Scheduler::run_traced_naive(&s);
+    assert_eq!(wheel_report, naive_report, "traced reports diverged");
+    assert_eq!(wheel_cap, naive_cap, "trace captures diverged");
+    let untraced = Scheduler::run_wheel(&s);
+    assert_eq!(wheel_report, untraced, "tracing perturbed the wheel run");
+
+    // Decoupled uncore too: WHold events carry PHY-grid beat counts
+    // and uncore-domain line fills cross the converter.
+    let op = coupled(0.8).with_uncore_mhz(350.0).expect("valid");
+    let sd = s.clone().with_op_point(op);
+    let (wr, wc) = Scheduler::run_traced_wheel(&sd);
+    let (nr, nc) = Scheduler::run_traced_naive(&sd);
+    assert_eq!(wr, nr, "decoupled traced reports diverged");
+    assert_eq!(wc, nc, "decoupled trace captures diverged");
+}

@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Gate the committed bench JSON against a fresh `make bench` run.
+
+Two checks, both hard failures (exit 1):
+
+1. Schema staleness: the committed ``BENCH_perf_hotpath.json`` must
+   carry the same section and metric labels the bench binary emits
+   today. A drifted label set means the committed perf trajectory no
+   longer describes the code — regenerate and re-commit the JSON.
+2. Perf floor: the fresh run's event-driven simulator throughput on the
+   fig6a topology must stay at or above the floor committed in PR 1
+   (>= 60 Mcyc/s).
+
+Environment-dependent rows are exempt from the schema comparison: the
+PJRT artifact sections (skipped when artifacts or the PJRT plugin are
+absent) and the committed file's ``measurement status`` marker (present
+when the JSON was committed from a machine without a toolchain and CI
+is the measuring authority).
+"""
+
+import argparse
+import json
+import re
+import sys
+
+# Sections whose presence depends on the environment, by label prefix.
+OPTIONAL_SECTION_PREFIXES = ("matmul_int8", "qnn_mlp")
+# Metrics allowed in one file but not the other.
+OPTIONAL_METRICS = frozenset({"measurement status"})
+
+EVENT_DRIVEN_METRIC = "simulated cycles/sec event-driven"
+EVENT_DRIVEN_FLOOR = 60.0
+WHEEL_SPEEDUP_METRIC = "wheel speedup vs event-driven"
+
+
+def load(path):
+    try:
+        with open(path, encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        sys.exit(f"check_bench: cannot read {path}: {e}")
+
+
+def labels(doc, key):
+    out = []
+    for row in doc.get(key, []):
+        label = row.get("label", "")
+        if label in OPTIONAL_METRICS or label.startswith(OPTIONAL_SECTION_PREFIXES):
+            continue
+        # Section labels embed runtime values (grid sizes, thread
+        # counts) that legitimately differ between the committing
+        # machine and the CI runner; compare digit-normalized shapes.
+        out.append(re.sub(r"\d+", "N", label))
+    return out
+
+
+def metric_value(doc, label):
+    for row in doc.get("metrics", []):
+        if row.get("label") == label:
+            return row.get("value")
+    return None
+
+
+def diff(kind, committed, fresh):
+    problems = []
+    missing = [l for l in fresh if l not in committed]
+    stale = [l for l in committed if l not in fresh]
+    for l in missing:
+        problems.append(f"committed JSON lacks {kind} {l!r} (bench schema grew)")
+    for l in stale:
+        problems.append(f"committed JSON carries {kind} {l!r} the bench no longer emits")
+    if not problems and committed != fresh:
+        problems.append(f"{kind} order drifted: committed {committed} vs fresh {fresh}")
+    return problems
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("committed", help="BENCH JSON as committed in the repo")
+    p.add_argument("fresh", help="BENCH JSON freshly written by `make bench`")
+    args = p.parse_args()
+
+    committed = load(args.committed)
+    fresh = load(args.fresh)
+
+    problems = []
+    if committed.get("bench") != fresh.get("bench"):
+        problems.append(
+            f"bench name drifted: committed {committed.get('bench')!r} "
+            f"vs fresh {fresh.get('bench')!r}"
+        )
+    problems += diff("section", labels(committed, "sections"), labels(fresh, "sections"))
+    problems += diff("metric", labels(committed, "metrics"), labels(fresh, "metrics"))
+
+    ed = metric_value(fresh, EVENT_DRIVEN_METRIC)
+    if not isinstance(ed, (int, float)):
+        problems.append(f"fresh run reports no {EVENT_DRIVEN_METRIC!r} value")
+    elif ed < EVENT_DRIVEN_FLOOR:
+        problems.append(
+            f"event-driven throughput regressed: {ed:.1f} Mcyc/s "
+            f"< floor {EVENT_DRIVEN_FLOOR:.0f} (PR 1 fig6a floor)"
+        )
+    else:
+        print(f"check_bench: event-driven {ed:.1f} Mcyc/s >= floor {EVENT_DRIVEN_FLOOR:.0f}")
+
+    wheel = metric_value(fresh, WHEEL_SPEEDUP_METRIC)
+    if isinstance(wheel, (int, float)):
+        print(f"check_bench: wheel speedup vs event-driven {wheel:.2f}x (acceptance >= 1.5)")
+
+    if problems:
+        for problem in problems:
+            print(f"check_bench: FAIL: {problem}", file=sys.stderr)
+        sys.exit(1)
+    print("check_bench: committed BENCH JSON matches the bench schema; floor holds")
+
+
+if __name__ == "__main__":
+    main()
