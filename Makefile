@@ -6,7 +6,7 @@
 
 RUST_DIR := rust
 
-.PHONY: build test bench wcet autotune dvfs faults trace artifacts python-test
+.PHONY: build test bench wcet autotune dvfs faults trace workingset artifacts python-test
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -46,6 +46,14 @@ faults: build
 # perturbed report, or an invalid sink).
 trace: build
 	cd $(RUST_DIR) && target/release/carfield trace
+
+# Working-set observability: traced fig6a profiles, the TCT's
+# partition-fit certificate, and the admission flip it buys (fails on a
+# profile-sum mismatch, an unsound certificate, or a missing
+# cold-rejected/certified-admitted flip); certificate JSON lands in
+# rust/target/workingset/.
+workingset: build
+	cd $(RUST_DIR) && target/release/carfield workingset
 
 # AOT-lower the JAX/Pallas kernels to HLO text artifacts consumed by the
 # rust PJRT runtime (requires the python toolchain).

@@ -7,8 +7,9 @@
 //! recomposition overhead, fault-injection overhead (faulted vs
 //! fault-free simulation, k-fault bound throughput, reliability-grid
 //! latency), event-tracing overhead (zero-cost-when-disabled gate +
-//! armed recording cost), coordinator dispatch, and PJRT artifact
-//! execution overhead.
+//! armed recording cost), working-set profiling (fold throughput on a
+//! real capture + the zero-cost gate re-asserted with line/set-tagged
+//! fills), coordinator dispatch, and PJRT artifact execution overhead.
 //!
 //! Targets (see lib.rs layering docs): >= 60 simulated Mcyc/s on the
 //! Fig. 6a topology via the event-driven path (>= 3x naive), raised from
@@ -16,7 +17,7 @@
 //! binary and records `BENCH_perf_hotpath.json` for the perf trajectory.
 
 use carfield::coordinator::task::Criticality;
-use carfield::coordinator::{sweep, IsolationPolicy, McTask, Scenario, Scheduler, Workload};
+use carfield::coordinator::{sweep, IsolationPolicy, McTask, Scenario, Scheduler, StepMode, Workload};
 use carfield::experiments::{fig6a, fig6b};
 use carfield::runtime::ArtifactRuntime;
 use carfield::soc::axi::InitiatorId;
@@ -129,6 +130,19 @@ fn sweep_throughput(b: &mut BenchRunner) {
             grid.iter().map(|s| Scheduler::run_wheel(s).cycles).sum::<u64>()
         });
     assert_eq!(wheel_cycles, sim_cycles, "wheel sweep diverged from event-driven");
+    // The composed fast path: wheel core x thread fan-out, through the
+    // same order-preserving sweep the experiments call.
+    let (wheel_par_cycles, dt_wheel_parallel) = b.time_with_mean(
+        &format!("sweep {n} scenarios wheel on {threads} threads"),
+        1,
+        || {
+            sweep::run_scenarios_mode(&grid, threads, StepMode::Wheel)
+                .iter()
+                .map(|r| r.cycles)
+                .sum::<u64>()
+        },
+    );
+    assert_eq!(wheel_par_cycles, sim_cycles, "parallel wheel sweep diverged");
     b.metric(
         "sweep simulated throughput (parallel)",
         sim_cycles as f64 / dt_parallel / 1e6,
@@ -148,6 +162,16 @@ fn sweep_throughput(b: &mut BenchRunner) {
         "sweep wall-clock speedup",
         dt_serial / dt_parallel,
         &format!("x ({threads} threads)"),
+    );
+    b.metric(
+        "sweep simulated throughput (wheel parallel)",
+        wheel_par_cycles as f64 / dt_wheel_parallel / 1e6,
+        "Mcyc/s (wheel core x thread fan-out)",
+    );
+    b.metric(
+        "sweep wall-clock speedup (wheel parallel)",
+        dt_serial / dt_wheel_parallel,
+        &format!("x vs event-driven serial ({threads} threads)"),
     );
 }
 
@@ -432,6 +456,78 @@ fn tracing_overhead(b: &mut BenchRunner) {
     );
 }
 
+/// Working-set observability: profile-fold throughput on a real traced
+/// capture, and the zero-cost-when-disabled gate re-asserted now that
+/// armed fills carry line/set address tags (the tags are computed only
+/// on the armed emission path, so the disabled run must stay within 5%
+/// of the untraced baseline exactly as before).
+fn workingset_overhead(b: &mut BenchRunner) {
+    use carfield::trace::profiles_of;
+    const CYCLES: u64 = 2_000_000;
+    let (_, dt_untraced) = b.time_with_mean("SocSim 2M cycles untraced (ws baseline)", 5, || {
+        let mut soc = fig6a_topology();
+        soc.run_cycles_fast(CYCLES);
+    });
+    let (_, dt_disabled) =
+        b.time_with_mean("SocSim 2M cycles tracing disarmed (line/set-tagged fills)", 5, || {
+            let mut soc = fig6a_topology();
+            soc.set_trace(true);
+            soc.set_trace(false);
+            soc.run_cycles_fast(CYCLES);
+        });
+    let (events, dt_armed) =
+        b.time_with_mean("SocSim 2M cycles tracing armed (line/set-tagged fills)", 5, || {
+            let mut soc = fig6a_topology();
+            soc.set_trace(true);
+            soc.run_cycles_fast(CYCLES);
+            soc.take_trace().len()
+        });
+    let disabled_cost = dt_disabled / dt_untraced.max(1e-12);
+    b.metric(
+        "ws trace-disabled cost vs untraced",
+        disabled_cost,
+        "x wall-clock (gate <= 1.05, address tags armed-only)",
+    );
+    b.metric(
+        "ws trace-armed cost vs untraced",
+        dt_armed / dt_untraced.max(1e-12),
+        "x wall-clock (line/set tagging + recording)",
+    );
+    assert!(
+        disabled_cost <= 1.05,
+        "address-tagged fills leaked {disabled_cost:.3}x cost into the disabled path (gate: 1.05)"
+    );
+
+    // Fold throughput on the regulated fig6a capture — the stream the
+    // certificate demo mints from.
+    let scenario = &fig6a::scenario_grid()[2];
+    let (_, cap) = Scheduler::run_traced(scenario);
+    let n_events = cap.events.len();
+    let (profiles, dt_fold) =
+        b.time_with_mean("fold working-set profiles (tsu-regulated capture)", 20, || {
+            profiles_of(&cap)
+        });
+    assert!(
+        !profiles.is_empty() && profiles.iter().all(|p| p.sums_exactly()),
+        "a folded profile broke the exact-sum invariant"
+    );
+    b.metric(
+        "workingset fold throughput",
+        n_events as f64 / dt_fold.max(1e-12) / 1e6,
+        "Mevents/s (profiles + fit-curve replays)",
+    );
+    b.metric(
+        "workingset events folded",
+        n_events as f64,
+        "events per fold (tsu-regulated capture)",
+    );
+    b.metric(
+        "ws trace events captured (2M cycles)",
+        events as f64,
+        "events (line/set-tagged)",
+    );
+}
+
 /// Coordinator scenario-assembly + teardown overhead.
 fn dispatch_overhead(b: &mut BenchRunner) {
     b.time("Scheduler::run tiny scenario", 5, || {
@@ -490,6 +586,7 @@ fn main() {
     uncore_overhead(&mut b);
     reliability_overhead(&mut b);
     tracing_overhead(&mut b);
+    workingset_overhead(&mut b);
     dispatch_overhead(&mut b);
     artifact_overhead(&mut b);
     b.finish();

@@ -15,9 +15,16 @@
 //!    admit the mix.
 //! 2. **Coarse lattice fallback.** When no single axis admits the mix,
 //!    the knob lattice (throttle ladder x DCSPM aliasing; the DPLLC
-//!    partition axis stays parked until the bounds become
-//!    partition-aware) is swept in ascending [`restrictiveness`] order;
-//!    again the first feasible point wins.
+//!    partition axis stays parked on the cold path — cold bounds cannot
+//!    see it) is swept in ascending [`restrictiveness`] order; again the
+//!    first feasible point wins.
+//! 3. **Certified partition axis** ([`Autotuner::tune_certified`]).
+//!    When even the lattice exhausts, a trace-minted
+//!    [`PartitionCertificate`](crate::trace::PartitionCertificate) for
+//!    the mix's critical TCT shape unlocks the `tct_sets` axis: lattice
+//!    points crossed with the certified set counts are evaluated under
+//!    the certificate-backed warm bounds of
+//!    [`Scheduler::admit_certified`].
 //!
 //! Every evaluation is *analytic* — one `Scheduler::admit` call
 //! (microseconds) — so a full search costs less than a millisecond of
@@ -43,6 +50,8 @@ use crate::wcet::Resource;
 use super::metrics::ScenarioReport;
 use super::policy::{SocTuning, TsuKnobs};
 use super::scheduler::{AdmissionDecision, Scenario, Scheduler};
+use super::task::Workload;
+use crate::trace::CertificateLibrary;
 
 /// NCT throttle ladder swept by the descent, least- to most-restrictive
 /// (descending budget/period bandwidth). Points keep `gbs <= budget`,
@@ -63,12 +72,16 @@ pub const THROTTLE_LADDER: [(u32, u32, Cycle); 11] = [
 ];
 
 // NOTE: the DPLLC partition split (`SocTuning::tct_sets`) is part of the
-// tuning space but deliberately NOT swept by the lattice: today's
-// completion bounds are cache-cold, so the bound engine is blind to the
-// partition and every `tct_sets` variant would evaluate identically
-// (pure duplicate work that could also never win the least-restrictive
-// ordering). The ROADMAP's "partition-aware completion bounds" follow-on
-// activates the axis.
+// tuning space but NOT swept by the *cold* lattice: cold completion
+// bounds price every line fill at the row-open worst case, so the bound
+// engine is blind to the partition and every `tct_sets` variant would
+// evaluate identically (pure duplicate work that could also never win
+// the least-restrictive ordering). The axis activates in
+// [`Autotuner::tune_certified`]: a [`PartitionCertificate`]
+// (`crate::trace::PartitionCertificate`) supplies empirical
+// warm-iteration evidence for specific set counts, and only those
+// certified counts are swept — under `Scheduler::admit_certified`, whose
+// warm bounds actually see the partition.
 
 /// How the winning tuning was found.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -79,6 +92,9 @@ pub enum SearchStrategy {
     CoordinateDescent,
     /// The descent failed; the coarse lattice sweep found a point.
     LatticeSweep,
+    /// The whole cold space is infeasible; a certificate-backed DPLLC
+    /// partition point admitted the mix via its warm-iteration bound.
+    CertifiedPartition,
 }
 
 /// A successful search: the least-restrictive tuning found whose bounds
@@ -287,6 +303,84 @@ impl Autotuner {
             binding,
         })
     }
+
+    /// Certificate-aware search: the cold search first (bit-identical to
+    /// [`Autotuner::tune`], and always preferred — a cold-feasible point
+    /// needs no empirical evidence), then, on cold exhaustion, the
+    /// parked DPLLC partition axis activates. Every (throttle, aliasing)
+    /// lattice point is crossed with every set count the library's
+    /// certificate for the mix's critical TCT shape can vouch for, and
+    /// the variants are evaluated under [`Scheduler::admit_certified`]
+    /// in ascending restrictiveness order. A `CertifiedPartition`
+    /// outcome therefore names a tuning *no cold bound admits* — its
+    /// feasibility rests on the certificate's measured warm-iteration
+    /// hit rates, which the one-simulation [`validate`] call confirms.
+    pub fn tune_certified(
+        &self,
+        scenario: &Scenario,
+        lib: &mut CertificateLibrary,
+    ) -> Result<TuneOutcome, TuneError> {
+        let err = match self.tune(scenario) {
+            Ok(outcome) => return Ok(outcome),
+            Err(e) => e,
+        };
+
+        // The certified partition axis: every set count the library can
+        // vouch for on a critical HostTct shape in this mix.
+        let mut sets: Vec<u32> = Vec::new();
+        for task in &scenario.tasks {
+            if !task.criticality.is_time_critical() {
+                continue;
+            }
+            if let Workload::HostTct(spec) = &task.workload {
+                if let Some(cert) = lib.lookup(&crate::trace::shape_key(spec)) {
+                    sets.extend(cert.entries.iter().map(|e| e.sets));
+                }
+            }
+        }
+        sets.sort_unstable();
+        sets.dedup();
+        if sets.is_empty() {
+            return Err(err);
+        }
+
+        let mut evaluations = err.evaluations;
+        let mut capped = err.capped;
+        // Seed the near-miss tracker with the cold search's best so the
+        // exhaustion report stays the tightest gap seen *anywhere*.
+        let mut best = err.best_bound.map(|b| (b, err.deadline, err.binding));
+        let mut probe = scenario.clone();
+        for candidate in certified_lattice(&sets) {
+            if evaluations >= self.max_evaluations {
+                capped = true;
+                break;
+            }
+            probe.tuning = candidate;
+            let decision = Scheduler::admit_certified(&probe, lib);
+            evaluations += 1;
+            if decision.admitted {
+                return Ok(TuneOutcome {
+                    tuning: candidate,
+                    strategy: SearchStrategy::CertifiedPartition,
+                    relaxed: Some(err.binding),
+                    evaluations,
+                    decision,
+                });
+            }
+            track_best(&decision, &mut best);
+        }
+        let (best_bound, deadline, binding) = match best {
+            Some((b, d, r)) => (Some(b), d, r),
+            None => (None, err.deadline, err.binding),
+        };
+        Err(TuneError {
+            evaluations,
+            capped,
+            best_bound,
+            deadline,
+            binding,
+        })
+    }
 }
 
 /// Track the near-miss rejection — the smallest bound-over-deadline gap
@@ -388,9 +482,37 @@ fn lattice() -> Vec<SocTuning> {
     points
 }
 
+/// The partition axis the cold lattice parks: every (throttle, aliasing)
+/// lattice point crossed with every certified TCT set count, sorted by
+/// ascending restrictiveness. Only reachable through a certificate —
+/// cold bounds evaluate every `tct_sets` variant identically, so these
+/// points are meaningful solely under `Scheduler::admit_certified`.
+fn certified_lattice(sets: &[u32]) -> Vec<SocTuning> {
+    let mut points = Vec::new();
+    for base in lattice() {
+        for &s in sets {
+            points.push(SocTuning {
+                tct_sets: s as usize,
+                ..base
+            });
+        }
+    }
+    points.sort_by_key(restrictiveness);
+    points
+}
+
 /// Convenience entry point with the default evaluation budget.
 pub fn autotune(scenario: &Scenario) -> Result<TuneOutcome, TuneError> {
     Autotuner::default().tune(scenario)
+}
+
+/// Certificate-aware convenience entry point: cold search first, then
+/// the certified DPLLC partition axis (see [`Autotuner::tune_certified`]).
+pub fn autotune_certified(
+    scenario: &Scenario,
+    lib: &mut CertificateLibrary,
+) -> Result<TuneOutcome, TuneError> {
+    Autotuner::default().tune_certified(scenario, lib)
 }
 
 /// Confirm an analytically chosen tuning with one real simulation:
@@ -488,6 +610,60 @@ mod tests {
         assert!(e.capped);
         assert_eq!(e.evaluations, 3);
         assert!(e.to_string().contains("cut short"), "{e}");
+    }
+
+    #[test]
+    fn certified_partition_axis_admits_what_every_cold_bound_rejects() {
+        use crate::soc::hostd::TctSpec;
+        use crate::trace::{shape_key, CertEntry, CertificateLibrary, PartitionCertificate};
+
+        // B_cold: the tightest completion bound any cold tuning reaches
+        // (the 1-cycle deadline makes the near-miss tracker report it).
+        let e = autotune(&reference_mix(1)).expect_err("1-cycle deadline");
+        let b_cold = e.best_bound.expect("finite cold bounds exist");
+        let cold_space = 1 + THROTTLE_LADDER.len() as u64 + 12 * 2;
+
+        // Just below it every cold point rejects, and an empty library
+        // leaves the partition axis locked: same exhaustion as tune().
+        let s = reference_mix(b_cold - 1);
+        let mut lib = CertificateLibrary::new();
+        let err = Autotuner::default()
+            .tune_certified(&s, &mut lib)
+            .expect_err("empty library cannot unlock the axis");
+        assert_eq!(err.evaluations, cold_space);
+
+        // A fig6a working-set certificate (768 distinct lines fit 96
+        // sets x 8 ways) flips the verdict: the certified sweep finds a
+        // partition point whose warm bound admits the mix.
+        lib.insert(PartitionCertificate {
+            task: "tct".into(),
+            shape_key: shape_key(&TctSpec::fig6a()),
+            ways: 8,
+            accesses: 6144,
+            distinct_lines: 768,
+            entries: vec![CertEntry {
+                sets: 96,
+                max_fills: 768,
+                warm_hit_ppm: 1_000_000,
+            }],
+        });
+        let o = Autotuner::default()
+            .tune_certified(&s, &mut lib)
+            .expect("certificate admits");
+        assert_eq!(o.strategy, SearchStrategy::CertifiedPartition);
+        assert_eq!(o.tuning.tct_sets, 96, "the certified set count");
+        assert!(o.decision.admitted);
+        assert_eq!(
+            o.decision.report.bound_for("tct").warm_sets,
+            Some(96),
+            "the admitting bound must be the certificate-backed warm one"
+        );
+        assert!(o.evaluations > cold_space, "cold space searched first");
+        // A cold-feasible mix never reaches the certified axis.
+        let easy = Autotuner::default()
+            .tune_certified(&reference_mix(2_500_000), &mut lib)
+            .expect("feasible");
+        assert_eq!(easy.strategy, SearchStrategy::AlreadyFeasible);
     }
 
     #[test]

@@ -34,9 +34,11 @@ pub mod scheduler;
 pub mod sweep;
 pub mod task;
 
-pub use autotune::{autotune, Autotuner, SearchStrategy, TuneError, TuneOutcome};
+pub use autotune::{
+    autotune, autotune_certified, Autotuner, SearchStrategy, TuneError, TuneOutcome,
+};
 pub use faults::{FaultPlan, ScrubConfig};
 pub use metrics::{ScenarioReport, TaskIndex, TaskReport};
 pub use policy::{IsolationPolicy, ResourceConfig, SocTuning, TsuKnobs, TuningError};
-pub use scheduler::{AdmissionDecision, Rejection, Scenario, Scheduler};
+pub use scheduler::{AdmissionDecision, Rejection, Scenario, Scheduler, StepMode};
 pub use task::{Criticality, McTask, Workload};

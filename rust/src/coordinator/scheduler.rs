@@ -178,8 +178,10 @@ impl AdmissionDecision {
 pub struct Scheduler;
 
 /// Which of the three bit-identical stepping cores executes a scenario.
+/// Public so grid sweeps ([`crate::coordinator::sweep`]) can compose the
+/// wheel core's per-scenario speedup with cross-scenario parallelism.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum StepMode {
+pub enum StepMode {
     /// Every component ticks every cycle (the reference semantics).
     Naive,
     /// Cycle-skipping over fabric-quiescent windows.
@@ -197,7 +199,25 @@ impl Scheduler {
     /// all), naming the binding resource. Tasks without a deadline
     /// (`deadline == 0`) are always admissible.
     pub fn admit(scenario: &Scenario) -> AdmissionDecision {
-        let report = wcet::analyze(scenario);
+        Self::decision_from(scenario, wcet::analyze(scenario))
+    }
+
+    /// Certificate-aware admission: identical to [`Scheduler::admit`]
+    /// except the bound engine may price the critical task's warm
+    /// iterations from a matching [`PartitionCertificate`]
+    /// (`crate::trace::PartitionCertificate`) when the tuning grants it
+    /// an exclusive DPLLC partition. With an empty library — or no
+    /// matching certificate — the decision is bit-identical to `admit`.
+    pub fn admit_certified(
+        scenario: &Scenario,
+        lib: &mut crate::trace::CertificateLibrary,
+    ) -> AdmissionDecision {
+        Self::decision_from(scenario, wcet::analyze_certified(scenario, lib))
+    }
+
+    /// Turn a feasibility report into an admission verdict — the shared
+    /// tail of the cold and certificate-backed admission paths.
+    fn decision_from(scenario: &Scenario, report: WcetReport) -> AdmissionDecision {
         let clocks = scenario.clocks();
         let mut rejections = Vec::new();
         for task in &scenario.tasks {
@@ -280,6 +300,23 @@ impl Scheduler {
     /// `tests/event_driven_equivalence.rs`).
     pub fn run(scenario: &Scenario) -> ScenarioReport {
         Self::execute(scenario, StepMode::EventDriven).0
+    }
+
+    /// Execute under an explicit stepping core — the sweep module's hook
+    /// for wheel-accelerated grids. All three modes return bit-identical
+    /// reports (`tests/wheel_equivalence.rs`), so callers pick purely on
+    /// wall clock.
+    pub fn run_mode(scenario: &Scenario, mode: StepMode) -> ScenarioReport {
+        Self::execute(scenario, mode).0
+    }
+
+    /// Traced counterpart of [`Scheduler::run_mode`] (tracing forced on,
+    /// capture returned) — the working-set determinism tests step the
+    /// same mix through every core and demand bit-equal profiles.
+    pub fn run_traced_mode(scenario: &Scenario, mode: StepMode) -> (ScenarioReport, TraceCapture) {
+        let s = scenario.clone().with_trace(TraceConfig::on());
+        let (report, cap) = Self::execute(&s, mode);
+        (report, cap.expect("tracing was armed"))
     }
 
     /// Naive cycle-by-cycle reference executor, kept for the equivalence

@@ -11,7 +11,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 
 use super::metrics::ScenarioReport;
-use super::scheduler::{Scenario, Scheduler};
+use super::scheduler::{Scenario, Scheduler, StepMode};
 
 /// Worker count to saturate this host (>= 1). The `CARFIELD_THREADS`
 /// environment variable overrides it (clamped to >= 1) so CI and
@@ -87,7 +87,20 @@ where
 /// `run_scenarios(g, n)` return identical reports — only wall-clock
 /// changes.
 pub fn run_scenarios(scenarios: &[Scenario], threads: usize) -> Vec<ScenarioReport> {
-    parallel_map(scenarios, threads, Scheduler::run)
+    run_scenarios_mode(scenarios, threads, StepMode::EventDriven)
+}
+
+/// Run independent scenarios across threads under an explicit stepping
+/// core. The wheel core is the fastest of the three bit-identical
+/// executors, so grid sweeps compose the two speedup levels — per-
+/// scenario cycle-skipping times cross-scenario parallelism — without
+/// changing a single reported number.
+pub fn run_scenarios_mode(
+    scenarios: &[Scenario],
+    threads: usize,
+    mode: StepMode,
+) -> Vec<ScenarioReport> {
+    parallel_map(scenarios, threads, |s| Scheduler::run_mode(s, mode))
 }
 
 #[cfg(test)]
@@ -144,5 +157,12 @@ mod tests {
         assert_eq!(serial, parallel);
         assert_eq!(serial.len(), 3);
         assert!(serial[0].task("tct").mean_latency > 0.0);
+
+        // The wheel core composes with the sweep: same grid, same
+        // reports, on every (mode, thread-count) combination.
+        for mode in [StepMode::Naive, StepMode::Wheel] {
+            assert_eq!(run_scenarios_mode(&grid, 1, mode), serial);
+            assert_eq!(run_scenarios_mode(&grid, 3, mode), serial);
+        }
     }
 }

@@ -15,6 +15,9 @@
 //! across an availability × deadline sweep. `trace` is the bound
 //! gap-attribution table (`carfield trace`): the fig6a grid traced into
 //! per-resource interference ledgers laid next to the WCET breakdown.
+//! `workingset` is the partition-fit flip demo (`carfield workingset`):
+//! traced working-set profiles minted into partition certificates that
+//! admit a fig6a mix every cold bound rejects, simulation-validated.
 
 pub mod autotune;
 pub mod bounds;
@@ -28,3 +31,4 @@ pub mod fig8;
 pub mod micro;
 pub mod reliability;
 pub mod trace;
+pub mod workingset;

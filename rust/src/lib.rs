@@ -65,6 +65,16 @@
 //!   `Resource` axis; `carfield trace` prints measured-vs-bound *gap
 //!   attribution* per Fig. 6a row and exports JSONL + Perfetto sinks.
 //!
+//! - **Working-set certificates** — line-fill events carry line/set
+//!   address tags, so `trace::profiles_of` folds a capture into
+//!   per-task occupancy profiles (per-set fills re-summing exactly to
+//!   the observed total) with an exclusive-partition replay fit curve;
+//!   `PartitionCertificate`s minted from the curve unlock the WCET
+//!   engine's certificate-backed warm bounds (`analyze_certified`) and
+//!   the autotuner's parked `tct_sets` axis (`autotune_certified`);
+//!   `carfield workingset` demos the admission flip no cold bound can
+//!   produce, validated by one partitioned simulation.
+//!
 //! Perf target (tracked by `make bench` → `BENCH_perf_hotpath.json`):
 //! >= 60 simulated Mcyc/s on the Fig. 6a TCT+DMA topology via the
 //! event-driven path (>= 3x the naive 20 Mcyc/s target it replaces).

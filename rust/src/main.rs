@@ -34,6 +34,15 @@
 //!                           JSONL + Perfetto sinks written to `--out D`
 //!                           (default `target/trace`; `--threads N`
 //!                           pins the sweep width);
+//! - `workingset`          — trace-driven working-set profiles on the
+//!                           fig6a grid, a partition-fit certificate
+//!                           minted from the TCT's measured fit curve,
+//!                           and the admission flip it buys: a deadline
+//!                           every cold-bound `tct_sets` setting rejects
+//!                           but the certified warm path admits,
+//!                           validated by one partitioned simulation
+//!                           (certificate JSON written to `--out D`,
+//!                           default `target/workingset`);
 //! - `all`                 — run every experiment in sequence;
 //! - `artifacts [--dir D]` — list AOT artifacts and smoke-execute one;
 //! - `infer [--dir D]`     — run the QNN MLP artifact through the PJRT
@@ -68,6 +77,7 @@ fn main() {
         Some("dvfs") => cmd_dvfs(&args),
         Some("faults") => cmd_faults(),
         Some("trace") => cmd_trace(&args),
+        Some("workingset") => cmd_workingset(&args),
         Some("all") => {
             exp::fig3c::print(&exp::fig3c::run());
             exp::fig5::print(&exp::fig5::run());
@@ -86,7 +96,7 @@ fn main() {
         Some("scenario") => cmd_scenario(&args),
         _ => {
             eprintln!(
-                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|autotune|dvfs|faults|trace|all|artifacts|infer|scenario> [options]"
+                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|autotune|dvfs|faults|trace|workingset|all|artifacts|infer|scenario> [options]"
             );
             std::process::exit(2);
         }
@@ -360,6 +370,49 @@ fn cmd_trace(args: &Args) {
     }
     if r.rows.is_empty() {
         eprintln!("trace regression: the attribution table is empty");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_workingset(args: &Args) {
+    let threads = args.get_parse("threads", carfield::coordinator::sweep::default_threads());
+    let r = exp::workingset::run_with_threads(threads);
+    exp::workingset::print(&r);
+    let out = args.get_or("out", "target/workingset");
+    match exp::workingset::write_certificates(&r, out) {
+        Ok(n) => println!("wrote {n} certificate file(s) to {out}/"),
+        Err(e) => {
+            eprintln!("cannot write certificates to {out}: {e}");
+            std::process::exit(1);
+        }
+    }
+    // The smoke gates: the exact-sum profile invariant, the
+    // cold-rejected/certified-admitted flip, and the simulation-backed
+    // certificate soundness are what make the profiles *evidence* — a
+    // run missing any of them is a regression, not a report.
+    if !r.profiles_exact() {
+        eprintln!(
+            "workingset validation failed: a profile's per-set rows no longer \
+             re-sum exactly to the observed line fills"
+        );
+        std::process::exit(1);
+    }
+    if r.certificate.is_none() {
+        eprintln!("workingset regression: the fig6a TCT minted no partition certificate");
+        std::process::exit(1);
+    }
+    if !r.flip_demonstrated() {
+        eprintln!(
+            "workingset regression: no fig6a mix was rejected by every cold-bound \
+             tct_sets setting yet admitted through the certificate"
+        );
+        std::process::exit(1);
+    }
+    if !r.validated() {
+        eprintln!(
+            "workingset validation failed: the certified winner's simulation missed \
+             its warm bound, its deadline, or the certified fill budget"
+        );
         std::process::exit(1);
     }
 }

@@ -234,6 +234,24 @@ impl Dpllc {
     pub fn sets(&self) -> usize {
         self.cfg.sets
     }
+
+    pub fn ways(&self) -> usize {
+        self.cfg.ways
+    }
+
+    /// The absolute set index `addr` maps to inside `part_id`'s
+    /// partition — the same arithmetic `access`/`probe` use, exposed so
+    /// the trace layer's line-fill events (and the working-set profiler
+    /// built on them) can never drift from the cache model.
+    pub fn set_of(&self, addr: u64, part_id: u8) -> usize {
+        self.set_index(addr, part_id)
+    }
+
+    /// `(first_set, n_sets)` for `part_id` (unknown ids fall back to the
+    /// default partition, exactly like `access`).
+    pub fn partition_of(&self, part_id: u8) -> (usize, usize) {
+        self.partition(part_id)
+    }
 }
 
 #[cfg(test)]
@@ -353,6 +371,20 @@ mod tests {
         assert_eq!(c.stats[1].misses, 1);
         assert_eq!(c.stats[1].hits, 1);
         assert_eq!(c.stats[0].misses, 1);
+    }
+
+    #[test]
+    fn set_of_matches_access_indexing() {
+        let c = Dpllc::new(DpllcConfig::split(0.375)); // 96-set TCT partition
+        assert_eq!(c.ways(), 8);
+        assert_eq!(c.partition_of(1), (160, 96));
+        assert_eq!(c.partition_of(0), (0, 160));
+        // part 1 indexes only its own sets: first + (line % n).
+        assert_eq!(c.set_of(0, 1), 160);
+        assert_eq!(c.set_of(64, 1), 161);
+        assert_eq!(c.set_of(96 * 64, 1), 160, "wraps at the partition size");
+        // Unknown ids fall back to partition 0, like access().
+        assert_eq!(c.set_of(64, 42), c.set_of(64, 0));
     }
 
     #[test]

@@ -316,6 +316,8 @@ impl HyperramPath {
                     dirty_victim: wb,
                     retry_cycles,
                     service_cycles: dur,
+                    line: line_addr / self.llc.line_bytes(),
+                    set: self.llc.set_of(line_addr, part) as u32,
                 },
             });
         }
@@ -387,10 +389,31 @@ impl TargetModel for HyperramPath {
         if self.hit_port.is_none() && self.all_hit(&burst) {
             let (first, n) = self.lines_of(&burst);
             for i in 0..n as u64 {
-                let r = self
-                    .llc
-                    .access(first + i * self.llc.line_bytes(), burst.part_id, burst.write);
+                let addr = first + i * self.llc.line_bytes();
+                let r = self.llc.access(addr, burst.part_id, burst.write);
                 debug_assert_eq!(r, Access::Hit);
+                // One hit event per line so a capture carries the *full*
+                // DPLLC access stream — the working-set profiler's
+                // hit-rate denominators depend on it. Lane 1 mirrors the
+                // arbitration lane the burst was granted on.
+                if let Some(tb) = self.trace.as_deref_mut() {
+                    tb.push(TraceEvent {
+                        at: now,
+                        domain: Domain::Uncore,
+                        initiator: burst.initiator,
+                        target: Some(Target::Hyperram),
+                        lane: 1,
+                        tag: burst.tag,
+                        kind: TraceKind::LineFill {
+                            hit: true,
+                            dirty_victim: false,
+                            retry_cycles: 0,
+                            service_cycles: self.timing.llc_hit,
+                            line: addr / self.llc.line_bytes(),
+                            set: self.llc.set_of(addr, burst.part_id) as u32,
+                        },
+                    });
+                }
             }
             let done_at = now + self.timing.llc_hit + n as Cycle;
             self.hit_port = Some((burst, done_at));
@@ -652,6 +675,31 @@ mod tests {
         let c2 = run_one(&mut q, read(0, 8).with_tag(1), 0);
         assert!((40..=42).contains(&c2.finished_at));
         assert_eq!(q.stats.retries, 0);
+    }
+
+    #[test]
+    fn trace_records_full_access_stream_with_line_and_set() {
+        use crate::trace::armed;
+        let mut p = HyperramPath::carfield();
+        p.set_trace(armed());
+        run_one(&mut p, read(0, 32).with_tag(1), 0); // 4 cold lines
+        run_one(&mut p, read(0, 32).with_tag(2), 1000); // all-hit burst
+        let ev = p.take_trace();
+        let fills: Vec<_> = ev
+            .iter()
+            .filter_map(|e| match e.kind {
+                TraceKind::LineFill { hit, line, set, .. } => Some((hit, line, set, e.lane)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(fills.len(), 8, "4 misses + 4 hit-port hits");
+        assert_eq!(fills.iter().filter(|f| !f.0).count(), 4);
+        for (i, &(hit, line, set, lane)) in fills.iter().enumerate() {
+            assert_eq!(hit, i >= 4, "misses first, then the warm burst");
+            assert_eq!(line, (i as u64) % 4, "64B-granular line address");
+            assert_eq!(set as usize, p.llc.set_of(line * 64, 0), "cache-model set");
+            assert_eq!(lane, if hit { 1 } else { 0 }, "hit port rides lane 1");
+        }
     }
 
     #[test]

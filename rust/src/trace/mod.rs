@@ -38,8 +38,13 @@ use crate::soc::clock::{Cycle, Domain, RateConverter};
 use crate::wcet::Resource;
 
 pub mod service;
+pub mod workingset;
 
 pub use service::{ServiceCounters, ServiceSnapshot, SERVICE_RESOURCES};
+pub use workingset::{
+    profiles_of, shape_key, CertEntry, CertificateLibrary, FitPoint, PartitionCertificate,
+    ReuseSummary, WorkingSetProfile, CERT_WARM_THRESHOLD_PPM,
+};
 
 /// What happened at a hook site.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -54,14 +59,22 @@ pub enum TraceKind {
     /// grid (PHY edges for uncore targets, system cycles otherwise);
     /// the event timestamp itself is system-domain.
     WHold { beats: u32 },
-    /// The HyperRAM channel scheduled one line's service (uncore-local
+    /// The HyperRAM channel serviced one DPLLC line access (uncore-local
     /// timestamp). `retry_cycles` is the injected ECC-retry overhead
-    /// folded into `service_cycles`.
+    /// folded into `service_cycles`. `line` is the 64B-line-granular
+    /// address (`addr / LINE_BYTES`) and `set` the *absolute* DPLLC set
+    /// it indexed under the access's partition — computed by the cache
+    /// model itself (`Dpllc::set_of`), so the working-set profiler
+    /// ([`workingset`]) can never drift from the hardware's partition
+    /// arithmetic. Hit-port fast-path bursts emit one `hit: true` event
+    /// per line so a capture sees the *full* DPLLC access stream.
     LineFill {
         hit: bool,
         dirty_victim: bool,
         retry_cycles: Cycle,
         service_cycles: Cycle,
+        line: u64,
+        set: u32,
     },
     /// A DCSPM port lost its turn to a cross-port bank conflict
     /// (system domain).
@@ -447,9 +460,11 @@ fn kind_fields(k: &TraceKind, out: &mut String) {
             dirty_victim,
             retry_cycles,
             service_cycles,
+            line,
+            set,
         } => write!(
             out,
-            ",\"hit\":{hit},\"dirty_victim\":{dirty_victim},\"retry_cycles\":{retry_cycles},\"service_cycles\":{service_cycles}"
+            ",\"hit\":{hit},\"dirty_victim\":{dirty_victim},\"retry_cycles\":{retry_cycles},\"service_cycles\":{service_cycles},\"line\":{line},\"set\":{set}"
         )
         .unwrap(),
         TraceKind::BankConflict => {}
@@ -509,6 +524,9 @@ pub fn to_jsonl(cap: &TraceCapture) -> String {
 ///   instants.
 /// - `pid 3` "hyperram line engine": line fills (with retry overhead)
 ///   as `X` slices on the uncore grid converted to system edges.
+/// - `pid 4` "dpllc occupancy": one counter (`C`) track per touched set,
+///   stepping on every allocating fill — resident lines capped at the
+///   associativity, so a saturated counter reads "set full" directly.
 ///
 /// `ts`/`dur` are system-clock cycles (Perfetto renders them as µs —
 /// only the relative scale matters).
@@ -532,6 +550,12 @@ pub fn to_perfetto(cap: &TraceCapture) -> String {
     );
     let mut init_threads: Vec<u64> = Vec::new();
     let mut lane_threads: Vec<u64> = Vec::new();
+    // Per-set resident-line counters for the occupancy track: fills
+    // allocate, capped at the associativity (evictions replace in
+    // place, so a saturated set stays saturated).
+    let ways = crate::soc::mem::dpllc::DpllcConfig::carfield().ways as u64;
+    let mut occupancy: std::collections::BTreeMap<u32, u64> = std::collections::BTreeMap::new();
+    let mut occupancy_meta = false;
     let lane_tid = |t: Target, lane: u8| -> u64 {
         let ti = match t {
             Target::Dcspm => 0u64,
@@ -582,12 +606,34 @@ pub fn to_perfetto(cap: &TraceCapture) -> String {
                     ));
                 }
             }
-            TraceKind::LineFill { service_cycles, .. } => {
+            TraceKind::LineFill {
+                hit,
+                service_cycles,
+                set,
+                ..
+            } => {
                 let end = cap.uncore.to_system_edge(e.at + service_cycles);
                 let dur = end.saturating_sub(sys).max(1);
                 ev.push(format!(
                     "{{\"ph\":\"X\",\"pid\":3,\"tid\":0,\"ts\":{sys},\"dur\":{dur},\"name\":\"line fill\",\"cat\":\"mem\",\"args\":{args}}}"
                 ));
+                if !hit {
+                    if !occupancy_meta {
+                        occupancy_meta = true;
+                        ev.push(
+                            "{\"ph\":\"M\",\"pid\":4,\"name\":\"process_name\",\"args\":{\"name\":\"dpllc occupancy\"}}"
+                                .into(),
+                        );
+                    }
+                    let occ = {
+                        let c = occupancy.entry(set).or_insert(0);
+                        *c = (*c + 1).min(ways);
+                        *c
+                    };
+                    ev.push(format!(
+                        "{{\"ph\":\"C\",\"pid\":4,\"tid\":0,\"ts\":{sys},\"name\":\"set {set}\",\"args\":{{\"lines\":{occ}}}}}"
+                    ));
+                }
             }
             TraceKind::BankConflict => {
                 if let Some(t) = e.target {
@@ -638,9 +684,32 @@ pub fn validate_json(s: &str) -> Result<(), String> {
     Ok(())
 }
 
+/// First integer value of `"key":` in a flat JSON line (the sinks emit
+/// unnested numeric fields, so a string scan is exact here).
+fn field_i64(line: &str, key: &str) -> Option<i64> {
+    let pat = format!("\"{key}\":");
+    let i = line.find(&pat)? + pat.len();
+    let rest = line[i..].as_bytes();
+    let mut j = usize::from(rest.first() == Some(&b'-'));
+    let start = j;
+    while j < rest.len() && rest[j].is_ascii_digit() {
+        j += 1;
+    }
+    if j == start {
+        return None;
+    }
+    line[i..i + j].parse().ok()
+}
+
 /// Validate a JSONL document: every non-empty line is a JSON object
-/// containing the required keys.
+/// containing the required keys, and per (initiator, lane) track the
+/// `sys` stamps never regress. A capture is sorted on the system master
+/// grid, so a backwards-running track means an uncore-domain event was
+/// serialized with a raw local timestamp instead of crossing through
+/// the [`RateConverter`] — previously such a stamp slipped through the
+/// schema check silently.
 pub fn validate_jsonl(s: &str, required_keys: &[&str]) -> Result<(), String> {
+    let mut last_sys: std::collections::BTreeMap<(i64, i64), i64> = std::collections::BTreeMap::new();
     for (n, line) in s.lines().enumerate() {
         if line.is_empty() {
             continue;
@@ -652,6 +721,22 @@ pub fn validate_jsonl(s: &str, required_keys: &[&str]) -> Result<(), String> {
         for k in required_keys {
             if !line.contains(&format!("\"{k}\":")) {
                 return Err(format!("line {}: missing key {k:?}", n + 1));
+            }
+        }
+        if let Some(sys) = field_i64(line, "sys") {
+            let track = (
+                field_i64(line, "initiator").unwrap_or(-1),
+                field_i64(line, "lane").unwrap_or(-1),
+            );
+            if let Some(prev) = last_sys.insert(track, sys) {
+                if sys < prev {
+                    return Err(format!(
+                        "line {}: sys {sys} regresses below {prev} on track (initiator {}, lane {}) — uncore timestamp not converted to the system grid?",
+                        n + 1,
+                        track.0,
+                        track.1
+                    ));
+                }
             }
         }
     }
@@ -972,6 +1057,8 @@ mod tests {
                 dirty_victim: false,
                 retry_cycles: 0,
                 service_cycles: 24,
+                line: 0,
+                set: 0,
             },
         });
         cap.events.push(delivery(0, 1, 0, 0, 1, 3, Target::Hyperram));
@@ -989,6 +1076,86 @@ mod tests {
         let jsonl = to_jsonl(&cap);
         validate_jsonl(&jsonl, &["kind", "sys", "at", "initiator", "tag"]).unwrap();
         assert!(jsonl.contains("\"kind\":\"delivery\""));
+    }
+
+    fn fill(at: Cycle, hit: bool, line: u64, set: u32) -> TraceEvent {
+        TraceEvent {
+            at,
+            domain: Domain::Uncore,
+            initiator: InitiatorId(0),
+            target: Some(Target::Hyperram),
+            lane: 0,
+            tag: line,
+            kind: TraceKind::LineFill {
+                hit,
+                dirty_victim: false,
+                retry_cycles: 0,
+                service_cycles: if hit { 4 } else { 24 },
+                line,
+                set,
+            },
+        }
+    }
+
+    #[test]
+    fn jsonl_carries_line_and_set_fields() {
+        let cap = capture(vec![fill(0, false, 161, 33)], vec![]);
+        let jsonl = to_jsonl(&cap);
+        validate_jsonl(&jsonl, &["kind", "sys", "line", "set"]).unwrap();
+        assert!(jsonl.contains("\"line\":161"));
+        assert!(jsonl.contains("\"set\":33"));
+    }
+
+    #[test]
+    fn jsonl_validator_rejects_unconverted_uncore_stamps() {
+        // Same (initiator, lane) track, sys running backwards: the
+        // second stamp was serialized raw instead of grid-converted.
+        let bad = "{\"kind\":\"line_fill\",\"sys\":40,\"initiator\":0,\"lane\":0}\n\
+                   {\"kind\":\"line_fill\",\"sys\":20,\"initiator\":0,\"lane\":0}\n";
+        let err = validate_jsonl(bad, &["kind", "sys"]).unwrap_err();
+        assert!(err.contains("regresses"), "unexpected error: {err}");
+        // Distinct tracks may interleave arbitrarily.
+        let ok = "{\"kind\":\"grant\",\"sys\":40,\"initiator\":0,\"lane\":0}\n\
+                  {\"kind\":\"grant\",\"sys\":20,\"initiator\":1,\"lane\":0}\n\
+                  {\"kind\":\"grant\",\"sys\":20,\"initiator\":0,\"lane\":1}\n";
+        validate_jsonl(ok, &["kind", "sys"]).unwrap();
+        // Equal stamps on one track are fine (same-cycle events).
+        let eq = "{\"sys\":7,\"initiator\":2,\"lane\":0}\n{\"sys\":7,\"initiator\":2,\"lane\":0}\n";
+        validate_jsonl(eq, &[]).unwrap();
+    }
+
+    #[test]
+    fn real_capture_passes_the_monotone_track_check() {
+        // Decoupled uncore (2:1): local stamps 10 and 30 land on system
+        // edges 5 and 15 — converted stamps keep the track monotone.
+        let mut cap = TraceCapture::new("s", RateConverter::new(1000.0, 500.0));
+        cap.events.push(fill(30, false, 2, 2));
+        cap.events.push(fill(10, false, 1, 1));
+        cap.finish();
+        validate_jsonl(&to_jsonl(&cap), &["kind", "sys", "line", "set"]).unwrap();
+    }
+
+    #[test]
+    fn perfetto_emits_per_set_occupancy_counters() {
+        // Three allocating fills into set 5 (8-way: counter 1, 2, 3)
+        // plus a hit that must not step any counter.
+        let cap = capture(
+            vec![
+                fill(0, false, 100, 5),
+                fill(24, false, 101, 5),
+                fill(48, true, 100, 5),
+                fill(52, false, 102, 5),
+            ],
+            vec![],
+        );
+        let json = to_perfetto(&cap);
+        validate_json(&json).unwrap();
+        assert!(json.contains("dpllc occupancy"));
+        assert!(json.contains("\"ph\":\"C\""));
+        assert!(json.contains("\"name\":\"set 5\",\"args\":{\"lines\":1}"));
+        assert!(json.contains("\"name\":\"set 5\",\"args\":{\"lines\":3}"));
+        // The hit contributed a line-engine slice but no counter step.
+        assert_eq!(json.matches("\"ph\":\"C\"").count(), 3);
     }
 
     #[test]

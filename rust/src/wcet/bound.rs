@@ -185,6 +185,10 @@ pub struct TaskBound {
     /// The k-fault term is *not* included — append it with
     /// [`TaskBound::breakdown_with_fault`].
     pub breakdown: Vec<(Resource, CostSplit)>,
+    /// The exclusive-partition size whose certificate-backed warm
+    /// pricing produced the winning completion bound ([`analyze_certified`]).
+    /// `None` on every cold path — plain [`analyze`] never sets it.
+    pub warm_sets: Option<u32>,
 }
 
 impl TaskBound {
@@ -351,10 +355,80 @@ impl Pricing {
     }
 }
 
+/// Empirical warm-iteration evidence for one task: a
+/// [`PartitionCertificate`](crate::trace::PartitionCertificate) entry
+/// matched to the scenario's exact `tct_sets` setting. At most
+/// `max_fills` of the task's accesses pay the cold line-fill cost; the
+/// rest are certified DPLLC hits priced at hit latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WarmSpec {
+    pub sets: u32,
+    pub max_fills: u64,
+}
+
 /// Analyze a scenario: derive bounds for every time-critical task
 /// without simulating. Pure and deterministic — identical output for
 /// identical scenarios, regardless of thread count or call order.
 pub fn analyze(scenario: &Scenario) -> WcetReport {
+    analyze_with(scenario, &[])
+}
+
+/// [`analyze`], with certificate-backed warm-iteration pricing for host
+/// TCTs. Strictly sound fallback: a task gets a [`WarmSpec`] only when
+/// **(a)** the scenario actually programs an exclusive TCT partition
+/// whose set count matches a certified entry *exactly* (no
+/// interpolation — hit rate is not monotone in set count), **(b)** that
+/// task is the only time-critical HyperRAM initiator (placement puts
+/// every critical task in the TCT partition, so a second one would
+/// break exclusivity), and **(c)** the certificate's associativity
+/// matches the live cache geometry. Everything else — and every
+/// non-HostTct task — takes the cold path, bit-identical to
+/// [`analyze`]. Library lookups count hits/misses like
+/// [`UtilizationLibrary`](crate::power::certificates::UtilizationLibrary).
+pub fn analyze_certified(
+    scenario: &Scenario,
+    lib: &mut crate::trace::CertificateLibrary,
+) -> WcetReport {
+    use crate::coordinator::Workload;
+    let tct_sets = scenario.tuning.tct_sets as u32;
+    let mut warm: Vec<(String, WarmSpec)> = Vec::new();
+    if tct_sets > 0 {
+        let models = models_of(scenario);
+        let hyperram_criticals = models
+            .iter()
+            .filter(|m| m.critical && m.streams.iter().any(|s| s.target == Target::Hyperram))
+            .count();
+        if hyperram_criticals == 1 {
+            for t in &scenario.tasks {
+                if !t.criticality.is_time_critical() {
+                    continue;
+                }
+                let Workload::HostTct(spec) = &t.workload else {
+                    continue;
+                };
+                let key = crate::trace::shape_key(spec);
+                let Some(cert) = lib.lookup(&key) else {
+                    continue;
+                };
+                if cert.ways as usize != crate::soc::mem::dpllc::DpllcConfig::carfield().ways {
+                    continue;
+                }
+                if let Some(e) = cert.entry_for(tct_sets) {
+                    warm.push((
+                        t.name.clone(),
+                        WarmSpec {
+                            sets: e.sets,
+                            max_fills: e.max_fills,
+                        },
+                    ));
+                }
+            }
+        }
+    }
+    analyze_with(scenario, &warm)
+}
+
+fn analyze_with(scenario: &Scenario, warm: &[(String, WarmSpec)]) -> WcetReport {
     // Tie the engine's geometry constants to the simulator's: if the
     // cache/bus geometry ever drifts, fail loudly (release builds
     // included — `carfield wcet` and admission control must never emit
@@ -382,7 +456,11 @@ pub fn analyze(scenario: &Scenario) -> WcetReport {
     let bounds = (0..models.len())
         .filter(|&i| models[i].critical)
         .map(|i| {
-            let mut tb = analyze_model(i, &models, &timing, pricing);
+            let w = warm
+                .iter()
+                .find(|(n, _)| *n == models[i].name)
+                .map(|&(_, s)| s);
+            let mut tb = analyze_model(i, &models, &timing, pricing, w);
             tb.fault_bound = fault_term(&models[i], plan);
             tb
         })
@@ -601,6 +679,7 @@ fn analyze_model(
     models: &[InitiatorModel],
     timing: &HyperRamTiming,
     pricing: Pricing,
+    warm: Option<WarmSpec>,
 ) -> TaskBound {
     let me = &models[my_idx];
     let dirty = dirty_possible(models);
@@ -733,7 +812,7 @@ fn analyze_model(
         });
     }
 
-    let (completion, completion_binding, breakdown) = completion_of(
+    let (completion, completion_binding, breakdown, warm_sets) = completion_of(
         my_idx,
         models,
         &per_stream,
@@ -742,6 +821,7 @@ fn analyze_model(
         w_frag,
         mem_binding,
         pricing,
+        warm,
     );
     TaskBound {
         task: me.name.clone(),
@@ -751,6 +831,7 @@ fn analyze_model(
         completion_binding,
         fault_bound: CostSplit::ZERO,
         breakdown,
+        warm_sets,
     }
 }
 
@@ -849,6 +930,31 @@ fn window_interference(
     total
 }
 
+/// Iterate the busy-window fixed point `t = base + I(t)` from `base_u`
+/// (bound units); `None` when it diverges.
+fn busy_converge(
+    models: &[InitiatorModel],
+    my_idx: usize,
+    target: Target,
+    base_u: f64,
+    timing: &HyperRamTiming,
+    dirty: bool,
+    pricing: Pricing,
+) -> Option<f64> {
+    let mut t = base_u;
+    for _ in 0..200 {
+        let nxt = base_u + window_interference(models, my_idx, target, t, timing, dirty, pricing);
+        if nxt > WINDOW_CAP {
+            return None;
+        }
+        if nxt - t <= 1.0 {
+            return Some(nxt);
+        }
+        t = nxt;
+    }
+    None
+}
+
 #[allow(clippy::too_many_arguments)]
 fn completion_of(
     my_idx: usize,
@@ -859,13 +965,19 @@ fn completion_of(
     w_frag: u32,
     mem_binding: Resource,
     pricing: Pricing,
-) -> (Option<CostSplit>, Resource, Vec<(Resource, CostSplit)>) {
+    warm: Option<WarmSpec>,
+) -> (
+    Option<CostSplit>,
+    Resource,
+    Vec<(Resource, CostSplit)>,
+    Option<u32>,
+) {
     let me = &models[my_idx];
     if per_stream.iter().any(|s| s.endless) {
-        return (None, Resource::Endless, Vec::new());
+        return (None, Resource::Endless, Vec::new(), None);
     }
     // ---- structural path (always finite, always sound) ----
-    let (structural, structural_binding, base, target, compute, mult) = match me.shape {
+    let (structural, structural_binding, base, warm_base, target, compute, mult) = match me.shape {
         TaskShape::HostTct { think, accesses } => {
             let structural = CostSplit::sys(think + 2)
                 .plus(per_stream[0].total)
@@ -886,10 +998,35 @@ fn completion_of(
                 ))
                 .plus(pricing.sync())
                 .times(accesses);
+            // Certificate-backed warm base: at most `max_fills` accesses
+            // pay the cold fill (with the competitor reopen), the rest
+            // are certified DPLLC hits served by the parallel hit port
+            // at `llc_hit + 1` uncore cycles (the simulator's exact
+            // hit-port service for one line) — they never touch the
+            // HyperBUS channel, so the only channel time in the warm
+            // window is the fills' own plus the competitors' (the same
+            // arrival-curve interference the fixed point adds).
+            let warm_base = warm.map(|w| {
+                let fills = w.max_fills.min(accesses);
+                let hits = accesses - fills;
+                CostSplit::sys(think + EDGES)
+                    .times(accesses)
+                    .plus(
+                        CostSplit::unc(timing.worst_lines_cost(1, LINE_BYTES, dirty) + reopen)
+                            .plus(pricing.sync())
+                            .times(fills),
+                    )
+                    .plus(
+                        CostSplit::unc(timing.llc_hit + 1)
+                            .plus(pricing.sync())
+                            .times(hits),
+                    )
+            });
             (
                 structural,
                 mem_binding,
                 base,
+                warm_base,
                 Target::Hyperram,
                 CostSplit::sys(think + 2),
                 accesses,
@@ -922,6 +1059,7 @@ fn completion_of(
                 structural,
                 binding,
                 base,
+                None,
                 Target::Dcspm,
                 CostSplit::sys(compute_per_tile + 4),
                 tiles,
@@ -938,6 +1076,7 @@ fn completion_of(
                 Some(structural),
                 mem_binding,
                 structural_rows(per_stream, CostSplit::sys(2), chunks),
+                None,
             );
         }
     };
@@ -947,34 +1086,39 @@ fn completion_of(
     let mut best = structural;
     let mut binding = structural_binding;
     let mut rows = structural_rows(per_stream, compute, mult);
+    let mut warm_sets = None;
     if competitors_regulated(models, my_idx, target) && w_frag == 0 {
-        let base_u = pricing.units(base);
-        let mut t = base_u;
-        let mut converged = false;
-        for _ in 0..200 {
-            let nxt = base_u
-                + window_interference(models, my_idx, target, t, timing, dirty, pricing);
-            if nxt > WINDOW_CAP {
-                break;
+        if let Some(t) =
+            busy_converge(models, my_idx, target, pricing.units(base), timing, dirty, pricing)
+        {
+            let busy = pricing.busy_split(t);
+            if pricing.units(busy) < pricing.units(structural) {
+                best = busy;
+                binding = match target {
+                    Target::Hyperram => Resource::HyperramChannel,
+                    _ => Resource::DcspmPort,
+                };
+                rows = busy_rows(busy, compute.times(mult), binding, pricing);
             }
-            if nxt - t <= 1.0 {
-                t = nxt;
-                converged = true;
-                break;
-            }
-            t = nxt;
         }
-        let busy = pricing.busy_split(t);
-        if converged && pricing.units(busy) < pricing.units(structural) {
-            best = busy;
-            binding = match target {
-                Target::Hyperram => Resource::HyperramChannel,
-                _ => Resource::DcspmPort,
-            };
-            rows = busy_rows(busy, compute.times(mult), binding, pricing);
+        // The warm window needs the same regime: every hit the
+        // certificate prices assumes the exclusive partition is intact
+        // and no unbuffered writer stalls the hit-port grants.
+        if let (Some(wb), Some(w)) = (warm_base, warm) {
+            if let Some(t) =
+                busy_converge(models, my_idx, target, pricing.units(wb), timing, dirty, pricing)
+            {
+                let busy = pricing.busy_split(t);
+                if pricing.units(busy) < pricing.units(best) {
+                    best = busy;
+                    binding = Resource::HyperramChannel;
+                    rows = busy_rows(busy, compute.times(mult), binding, pricing);
+                    warm_sets = Some(w.sets);
+                }
+            }
         }
     }
-    (Some(best), binding, rows)
+    (Some(best), binding, rows, warm_sets)
 }
 
 #[cfg(test)]
@@ -1234,6 +1378,119 @@ mod tests {
         ] {
             assert!(!r.describe().is_empty());
         }
+    }
+
+    #[test]
+    fn certified_warm_bound_beats_cold_and_falls_back_soundly() {
+        use crate::coordinator::SocTuning;
+        use crate::trace::{CertEntry, CertificateLibrary, PartitionCertificate};
+
+        let spec = TctSpec::fig6a();
+        let cert = || PartitionCertificate {
+            task: "tct".into(),
+            shape_key: crate::trace::shape_key(&spec),
+            ways: 8,
+            accesses: 6144,
+            distinct_lines: 768,
+            entries: vec![CertEntry {
+                sets: 96,
+                max_fills: 768,
+                warm_hit_ppm: 1_000_000,
+            }],
+        };
+        let part = |sets: usize| SocTuning {
+            tct_sets: sets,
+            ..SocTuning::tsu_regulation()
+        };
+        let s = fig6a_scenario(IsolationPolicy::TsuRegulation).with_tuning(part(96));
+
+        // Empty library: bit-identical to the cold engine (and the miss
+        // is counted, like the utilization library's).
+        let mut empty = CertificateLibrary::new();
+        assert_eq!(analyze_certified(&s, &mut empty), analyze(&s));
+        assert_eq!(empty.misses, 1);
+
+        let mut lib = CertificateLibrary::new();
+        lib.insert(cert());
+        let cold = analyze(&s);
+        let warm = analyze_certified(&s, &mut lib);
+        let cb = cold.bound_for("tct");
+        let wb = warm.bound_for("tct");
+        assert_eq!(cb.warm_sets, None, "plain analyze never warms");
+        assert_eq!(wb.warm_sets, Some(96));
+        let (c, w) = (
+            cb.completion_cycles(None).unwrap(),
+            wb.completion_cycles(None).unwrap(),
+        );
+        // 768 cold fills + 5376 certified hits must price well under
+        // 6144 cold fills: the warm busy window starts from a base less
+        // than a third of the cold one.
+        assert!(w * 10 < c * 9, "warm {w} not tighter than cold {c}");
+        // The per-transaction memory bound stays structural (one access
+        // can always miss) and the breakdown still re-sums exactly.
+        assert_eq!(wb.mem_bound, cb.mem_bound);
+        let total = wb
+            .breakdown
+            .iter()
+            .fold(CostSplit::ZERO, |acc, (_, x)| acc.plus(*x));
+        assert_eq!(Some(total), wb.completion_bound);
+
+        // No exclusive partition programmed: cold, even with the
+        // certificate in the library.
+        let shared = fig6a_scenario(IsolationPolicy::TsuRegulation);
+        assert_eq!(analyze_certified(&shared, &mut lib), analyze(&shared));
+        // A partition size the certificate has no entry for: cold (no
+        // interpolation — hit rate is not monotone in set count).
+        let other = fig6a_scenario(IsolationPolicy::TsuRegulation).with_tuning(part(128));
+        assert_eq!(analyze_certified(&other, &mut lib), analyze(&other));
+        // An associativity mismatch with the live geometry: cold.
+        let mut stale = CertificateLibrary::new();
+        stale.insert(PartitionCertificate {
+            ways: 4,
+            ..cert()
+        });
+        assert_eq!(analyze_certified(&s, &mut stale), analyze(&s));
+    }
+
+    #[test]
+    fn certified_warm_path_requires_an_exclusive_critical_initiator() {
+        use crate::coordinator::SocTuning;
+        use crate::trace::{CertEntry, CertificateLibrary, PartitionCertificate};
+        let spec = TctSpec::fig6a();
+        let mut lib = CertificateLibrary::new();
+        lib.insert(PartitionCertificate {
+            task: "tct".into(),
+            shape_key: crate::trace::shape_key(&spec),
+            ways: 8,
+            accesses: 6144,
+            distinct_lines: 768,
+            entries: vec![CertEntry {
+                sets: 96,
+                max_fills: 768,
+                warm_hit_ppm: 1_000_000,
+            }],
+        });
+        // Two critical HyperRAM initiators share the TCT partition —
+        // exclusivity is gone, so the certificate must NOT apply.
+        let part = SocTuning {
+            tct_sets: 96,
+            ..SocTuning::tsu_regulation()
+        };
+        let s = Scenario::new("pair", part)
+            .with_task(McTask::new(
+                "tct",
+                Criticality::Hard,
+                Workload::HostTct(TctSpec::fig6a()),
+            ))
+            .with_task(McTask::new(
+                "tct2",
+                Criticality::Hard,
+                Workload::HostTct(TctSpec::fig6a()),
+            ));
+        let r = analyze_certified(&s, &mut lib);
+        assert_eq!(r, analyze(&s));
+        assert_eq!(r.bound_for("tct").warm_sets, None);
+        assert_eq!(lib.hits + lib.misses, 0, "no lookup without exclusivity");
     }
 
     #[test]

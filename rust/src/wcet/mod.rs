@@ -79,5 +79,5 @@ pub mod bound;
 pub mod fuzz;
 pub mod model;
 
-pub use bound::{analyze, CostSplit, Resource, TaskBound, WcetReport};
+pub use bound::{analyze, analyze_certified, CostSplit, Resource, TaskBound, WarmSpec, WcetReport};
 pub use model::{models_of, InitiatorModel, StreamModel, TaskShape};

@@ -1,0 +1,156 @@
+//! Working-set profile determinism and certificate soundness.
+//!
+//! Three contracts, each load-bearing for the partition certificates'
+//! evidentiary value:
+//!
+//! 1. **Thread parity** — folded profiles are bit-identical whatever
+//!    the sweep width ({1, 2, 8} covers serial, contended and
+//!    oversubscribed scheduling, the widths `CARFIELD_THREADS` feeds).
+//! 2. **Stepping parity** — the naive, event-driven and wheel cores
+//!    produce identical captures and therefore identical profiles: the
+//!    line-fill hook (line/set tags included) sits on paths every
+//!    stepping core pins.
+//! 3. **Certificate soundness** — a certificate minted from a *shared*
+//!    (thrashed) run's replayed fit curve is met by a real simulation
+//!    with an exclusive partition of a certified size: observed fills
+//!    land exactly on the certified `max_fills`, the measured warm hit
+//!    rate clears the certified rate, and every fill stays inside the
+//!    partition's set range. The exact-sum invariant holds throughout.
+
+use carfield::coordinator::task::Criticality;
+use carfield::coordinator::{sweep, McTask, Scenario, Scheduler, SocTuning, StepMode, Workload};
+use carfield::experiments::fig6a;
+use carfield::soc::dma::DmaJob;
+use carfield::soc::hostd::TctSpec;
+use carfield::soc::mem::dpllc::TOTAL_SETS;
+use carfield::trace::{profiles_of, shape_key, PartitionCertificate, CERT_WARM_THRESHOLD_PPM};
+
+/// Fig. 6a-shaped walk scaled down so the naive per-cycle reference
+/// stays cheap: 256 distinct lines x 3 rounds.
+fn small_spec() -> TctSpec {
+    TctSpec {
+        accesses: 256,
+        iterations: 3,
+        ..TctSpec::fig6a()
+    }
+}
+
+fn small_tct() -> McTask {
+    McTask::new("tct", Criticality::Hard, Workload::HostTct(small_spec()))
+}
+
+fn dma() -> McTask {
+    McTask::new(
+        "sys-dma",
+        Criticality::BestEffort,
+        Workload::DmaCopy(DmaJob::interferer()),
+    )
+}
+
+fn contended(tuning: SocTuning) -> Scenario {
+    Scenario::new("ws-contended", tuning)
+        .with_task(small_tct())
+        .with_task(dma())
+}
+
+/// Contract 1 on the real figure grid: same profiles at every width.
+#[test]
+fn profiles_bit_identical_across_sweep_widths() {
+    let grid = fig6a::scenario_grid();
+    let fold = |threads: usize| {
+        sweep::parallel_map(&grid, threads, |s| {
+            let (_, cap) = Scheduler::run_traced(s);
+            profiles_of(&cap)
+        })
+    };
+    let serial = fold(1);
+    assert_eq!(serial, fold(2), "2-thread fold diverged from serial");
+    assert_eq!(serial, fold(8), "8-thread fold diverged from serial");
+    for (scenario, profiles) in grid.iter().zip(&serial) {
+        assert!(!profiles.is_empty(), "`{}` profiled nothing", scenario.name);
+        for p in profiles {
+            assert!(p.sums_exactly(), "`{}`/{}: {p:?}", scenario.name, p.task);
+        }
+    }
+}
+
+/// Contract 2: identical reports, captures and profiles across all
+/// three stepping cores.
+#[test]
+fn profiles_identical_across_stepping_modes() {
+    let scenario = contended(SocTuning::tsu_regulation());
+    let (event_report, event_cap) = Scheduler::run_traced_mode(&scenario, StepMode::EventDriven);
+    let (naive_report, naive_cap) = Scheduler::run_traced_mode(&scenario, StepMode::Naive);
+    let (wheel_report, wheel_cap) = Scheduler::run_traced_mode(&scenario, StepMode::Wheel);
+    assert_eq!(event_report, naive_report, "event-driven vs naive reports diverged");
+    assert_eq!(event_report, wheel_report, "event-driven vs wheel reports diverged");
+    assert_eq!(event_cap, naive_cap, "event streams diverged (naive)");
+    assert_eq!(event_cap, wheel_cap, "event streams diverged (wheel)");
+    let profiles = profiles_of(&event_cap);
+    assert_eq!(profiles, profiles_of(&naive_cap));
+    assert_eq!(profiles, profiles_of(&wheel_cap));
+    assert!(!profiles.is_empty());
+    assert!(profiles.iter().all(|p| p.sums_exactly()));
+}
+
+/// Contract 3: the replayed fit curve is exact arithmetic — an
+/// exclusive partition of a certified size reproduces the certificate's
+/// numbers in a real simulation, not merely within them.
+#[test]
+fn certified_partition_simulation_meets_the_certificate() {
+    // Mint from the shared (DMA-thrashed) run: the observed stream is
+    // the evidence, the fit curve is its exclusive-partition replay.
+    let shared = contended(SocTuning::tsu_regulation());
+    let (_, cap) = Scheduler::run_traced(&shared);
+    let profile = profiles_of(&cap)
+        .into_iter()
+        .find(|p| p.task == "tct")
+        .expect("tct profile");
+    assert!(profile.sums_exactly());
+    assert_eq!(profile.distinct_lines, 256);
+    let cert = PartitionCertificate::mint(&profile, &shape_key(&small_spec()))
+        .expect("256 lines over 8 ways fit from 32 sets");
+    // 32 sets x 8 ways hold the 256-line walk exactly: compulsory-only
+    // fills, perfect warm rate.
+    let entry = *cert.entry_for(32).expect("exact-capacity size certified");
+    assert_eq!(entry.max_fills, 256);
+    assert!(entry.warm_hit_ppm >= CERT_WARM_THRESHOLD_PPM);
+
+    // Validate with a real exclusive partition of that size.
+    let part = SocTuning {
+        tct_sets: 32,
+        ..SocTuning::tsu_regulation()
+    };
+    let (report, pcap) = Scheduler::run_traced(&contended(part));
+    let p = profiles_of(&pcap)
+        .into_iter()
+        .find(|p| p.task == "tct")
+        .expect("tct profile");
+    assert!(p.sums_exactly());
+    assert_eq!(
+        p.fills, entry.max_fills,
+        "the partitioned run must land exactly on the replayed fill count"
+    );
+    let warm_accesses = p.accesses() - p.distinct_lines;
+    let measured_ppm = if warm_accesses == 0 {
+        1_000_000
+    } else {
+        (p.hits * 1_000_000 / warm_accesses) as u32
+    };
+    assert!(
+        measured_ppm >= entry.warm_hit_ppm,
+        "measured warm rate {measured_ppm} ppm under certified {}",
+        entry.warm_hit_ppm
+    );
+    // Every fill lands inside the TCT's exclusive set range (the top 32
+    // of the 256 sets), pinning the absolute-set tags to the partition
+    // arithmetic.
+    for &set in p.set_fills.keys() {
+        assert!(
+            (TOTAL_SETS - 32..TOTAL_SETS).contains(&(set as usize)),
+            "fill outside the exclusive partition: set {set}"
+        );
+    }
+    // And the partition did its job end to end.
+    assert!(report.task("tct").makespan > 0);
+}

@@ -31,6 +31,10 @@ OPTIONAL_METRICS = frozenset({"measurement status"})
 EVENT_DRIVEN_METRIC = "simulated cycles/sec event-driven"
 EVENT_DRIVEN_FLOOR = 60.0
 WHEEL_SPEEDUP_METRIC = "wheel speedup vs event-driven"
+WHEEL_PARALLEL_METRIC = "sweep wall-clock speedup (wheel parallel)"
+WS_FOLD_METRIC = "workingset fold throughput"
+WS_DISABLED_METRIC = "ws trace-disabled cost vs untraced"
+WS_DISABLED_GATE = 1.05
 
 
 def load(path):
@@ -106,6 +110,21 @@ def main():
     wheel = metric_value(fresh, WHEEL_SPEEDUP_METRIC)
     if isinstance(wheel, (int, float)):
         print(f"check_bench: wheel speedup vs event-driven {wheel:.2f}x (acceptance >= 1.5)")
+
+    wheel_par = metric_value(fresh, WHEEL_PARALLEL_METRIC)
+    if isinstance(wheel_par, (int, float)):
+        print(f"check_bench: wheel-parallel sweep speedup {wheel_par:.2f}x vs event-driven serial")
+
+    ws_fold = metric_value(fresh, WS_FOLD_METRIC)
+    if isinstance(ws_fold, (int, float)):
+        print(f"check_bench: working-set fold throughput {ws_fold:.2f} Mevents/s")
+
+    ws_disabled = metric_value(fresh, WS_DISABLED_METRIC)
+    if isinstance(ws_disabled, (int, float)) and ws_disabled > WS_DISABLED_GATE:
+        problems.append(
+            f"address-tagged fills leaked into the disabled trace path: "
+            f"{ws_disabled:.3f}x > gate {WS_DISABLED_GATE}"
+        )
 
     if problems:
         for problem in problems:
