@@ -6,7 +6,11 @@
 
 RUST_DIR := rust
 
-.PHONY: build test bench wcet autotune dvfs faults trace workingset artifacts python-test
+.PHONY: build test bench wcet autotune dvfs faults trace workingset pack artifacts python-test
+
+# Queue depth for the admission-service smoke run (the bench drives the
+# full 10^5/10^6 depths; CI smokes the pipeline at 10^4).
+PACK_DEPTH ?= 10000
 
 build:
 	cd $(RUST_DIR) && cargo build --release
@@ -54,6 +58,14 @@ trace: build
 # rust/target/workingset/.
 workingset: build
 	cd $(RUST_DIR) && target/release/carfield workingset
+
+# Admission as a service: a seeded request queue packed into co-resident
+# mixes by the racing bound-aware heuristics, governed, and confirmed by
+# one batched validation sweep (fails on zero co-residency, an unsound
+# packed mix, a refuted validation row, or race accounting that misses a
+# batch). Results are bit-identical at any shard width.
+pack: build
+	cd $(RUST_DIR) && target/release/carfield pack --depth $(PACK_DEPTH)
 
 # AOT-lower the JAX/Pallas kernels to HLO text artifacts consumed by the
 # rust PJRT runtime (requires the python toolchain).

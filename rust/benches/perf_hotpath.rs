@@ -9,7 +9,10 @@
 //! latency), event-tracing overhead (zero-cost-when-disabled gate +
 //! armed recording cost), working-set profiling (fold throughput on a
 //! real capture + the zero-cost gate re-asserted with line/set-tagged
-//! fills), coordinator dispatch, and PJRT artifact execution overhead.
+//! fills), the admission service (sustained admissions/sec through the
+//! sharded packing pipeline at queue depths 10^5 and 10^6, heuristic
+//! win rates, certificate-library hit rate), coordinator dispatch, and
+//! PJRT artifact execution overhead.
 //!
 //! Targets (see lib.rs layering docs): >= 60 simulated Mcyc/s on the
 //! Fig. 6a topology via the event-driven path (>= 3x naive), raised from
@@ -111,8 +114,11 @@ fn sweep_throughput(b: &mut BenchRunner) {
         .chain(fig6b::scenario_grid())
         .collect();
     let n = grid.len();
+    // Pinned to the event-driven core: `run_scenarios` now defaults to
+    // the wheel, and these two rows are the event-driven baseline the
+    // wheel rows below are measured against.
     let (sim_cycles, dt_serial) = b.time_with_mean(&format!("sweep {n} scenarios serial"), 1, || {
-        sweep::run_scenarios(&grid, 1)
+        sweep::run_scenarios_mode(&grid, 1, StepMode::EventDriven)
             .iter()
             .map(|r| r.cycles)
             .sum::<u64>()
@@ -120,7 +126,10 @@ fn sweep_throughput(b: &mut BenchRunner) {
     let threads = sweep::default_threads();
     let (_, dt_parallel) =
         b.time_with_mean(&format!("sweep {n} scenarios on {threads} threads"), 1, || {
-            assert_eq!(sweep::run_scenarios(&grid, threads).len(), n);
+            assert_eq!(
+                sweep::run_scenarios_mode(&grid, threads, StepMode::EventDriven).len(),
+                n
+            );
         });
     // Wheel scaling on the same fig6a + fig6b grids: the serial wheel
     // sweep against the serial event-driven sweep above is the
@@ -439,9 +448,11 @@ fn tracing_overhead(b: &mut BenchRunner) {
     );
 
     // The determinism half of the gate, on the real figure grid.
+    // Event-driven pinned: `run_traced` records on the event-driven
+    // core, so the untraced comparison must run the same core.
     let grid = fig6a::scenario_grid();
     let (reports_off, _) = b.time_with_mean("sweep fig6a grid tracing disabled", 2, || {
-        sweep::run_scenarios(&grid, 1)
+        sweep::run_scenarios_mode(&grid, 1, StepMode::EventDriven)
     });
     let (reports_on, dt_on) = b.time_with_mean("sweep fig6a grid tracing enabled", 2, || {
         grid.iter()
@@ -528,6 +539,101 @@ fn workingset_overhead(b: &mut BenchRunner) {
     );
 }
 
+/// Admission as a service: sustained throughput of the sharded
+/// bound-aware packing pipeline. Two depths: 10^5 through the full
+/// pipeline (pack + governed prefix + batched validation sweep) and
+/// 10^6 through packing alone (the sustained-admission ceiling). Every
+/// reported number is a pure function of the seed — wall clock only
+/// enters the derived req/s rates.
+fn packing_overhead(b: &mut BenchRunner) {
+    use carfield::service::{self, ServiceConfig};
+
+    let cfg = ServiceConfig::default(); // depth 10^5, rescue off
+    let depth = cfg.depth;
+    let (report, dt) = b.time_with_mean(
+        "admission service 100k requests (pack+govern+validate)",
+        1,
+        || service::run(&cfg),
+    );
+    assert!(
+        report.multi_request_mixes() >= 1,
+        "the packer produced no co-resident mix"
+    );
+    assert!(report.all_admitted(), "a packed mix is analytically inadmissible");
+    assert!(
+        !report.validations.is_empty() && report.validation_sound(),
+        "the batched validation sweep refuted a packed mix"
+    );
+    assert_eq!(
+        report.ffd_wins + report.slack_wins + report.ties,
+        report.batches as u64,
+        "heuristic race accounting missed a batch"
+    );
+    b.metric(
+        "pack sustained admissions (100k queue)",
+        depth as f64 / dt.max(1e-12),
+        "req/s (pack + govern + validate)",
+    );
+    b.metric(
+        "pack packed-mix throughput",
+        report.packed() as f64 / dt.max(1e-12),
+        "mixes/s (admitted co-residency sets)",
+    );
+    b.metric(
+        "pack packing ratio",
+        report.packing_ratio(),
+        "req/mix (> 1 = real co-residency)",
+    );
+    b.metric(
+        "pack ffd win rate",
+        100.0 * report.ffd_wins as f64 / report.batches.max(1) as f64,
+        "% of batches (strictly fewer mixes)",
+    );
+    b.metric(
+        "pack best-fit-slack win rate",
+        100.0 * report.slack_wins as f64 / report.batches.max(1) as f64,
+        "% of batches (strictly fewer mixes)",
+    );
+    b.metric(
+        "pack heuristic disagreement rate",
+        100.0 * report.disagreement_rate(),
+        "% of batches (assignments differ at all)",
+    );
+    b.metric(
+        "pack admit probes per request",
+        report.stats.probes as f64 / depth.max(1) as f64,
+        "admit() calls/req (scalar pre-filter ahead)",
+    );
+    b.metric(
+        "pack certificate-library hit rate",
+        100.0 * report.library_hit_rate(),
+        "% of governed shapes (measurement sweep skipped)",
+    );
+
+    // The sustained-admission ceiling: packing alone at 10^6 (the
+    // govern/validate prefixes off — their cost is depth-independent).
+    let deep = ServiceConfig {
+        depth: 1_000_000,
+        govern_cap: 0,
+        validate_cap: 0,
+        ..ServiceConfig::default()
+    };
+    let (deep_report, dt_deep) = b.time_with_mean(
+        "admission service 1M requests (pack only)",
+        1,
+        || service::run(&deep),
+    );
+    assert!(
+        deep_report.all_admitted(),
+        "a packed mix is analytically inadmissible at depth 10^6"
+    );
+    b.metric(
+        "pack-only sustained admissions (1M queue)",
+        deep.depth as f64 / dt_deep.max(1e-12),
+        "req/s (packing stage alone)",
+    );
+}
+
 /// Coordinator scenario-assembly + teardown overhead.
 fn dispatch_overhead(b: &mut BenchRunner) {
     b.time("Scheduler::run tiny scenario", 5, || {
@@ -587,6 +693,7 @@ fn main() {
     reliability_overhead(&mut b);
     tracing_overhead(&mut b);
     workingset_overhead(&mut b);
+    packing_overhead(&mut b);
     dispatch_overhead(&mut b);
     artifact_overhead(&mut b);
     b.finish();

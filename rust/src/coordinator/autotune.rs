@@ -214,6 +214,17 @@ impl Default for Autotuner {
 }
 
 impl Autotuner {
+    /// A tuner with an explicit (usually small) evaluation budget — the
+    /// admission service's rescue pass runs one of these over a merged
+    /// mix the packing probe rejected, so a repair attempt costs a
+    /// bounded number of analytic evaluations instead of the full
+    /// lattice.
+    pub fn budgeted(max_evaluations: u64) -> Self {
+        Self {
+            max_evaluations: max_evaluations.max(1),
+        }
+    }
+
     /// Search the tuning space for the least-restrictive point whose
     /// completion bounds admit `scenario`'s mix. Purely analytic; see
     /// [`validate`] for the simulation-backed confirmation.

@@ -192,6 +192,17 @@ pub enum StepMode {
     Wheel,
 }
 
+impl Default for StepMode {
+    /// The promoted default core: the wheel is the fastest of the three
+    /// and bit-identical by the equivalence matrix, so `Scheduler::run`,
+    /// the grid sweeps and every figure driver inherit it. The
+    /// event-driven core stays on as the second oracle behind the
+    /// debug-build cross-check in [`Scheduler::run`].
+    fn default() -> Self {
+        StepMode::Wheel
+    }
+}
+
 impl Scheduler {
     /// Bound-aware admission control: compute the analytical WCET
     /// bounds for the mix and reject it when any critical task's
@@ -296,10 +307,23 @@ impl Scheduler {
     }
 
     /// Execute the scenario; returns per-task reports. Runs on the
-    /// event-driven fast path (bit-identical to naive stepping; see
-    /// `tests/event_driven_equivalence.rs`).
+    /// structure-of-arrays wheel core (the promoted default fast path).
+    /// The event-driven core is the second oracle: debug builds re-run
+    /// every scenario through it and assert bit-identical reports, and
+    /// release builds carry the same guarantee via
+    /// `tests/wheel_equivalence.rs` / `tests/event_driven_equivalence.rs`.
     pub fn run(scenario: &Scenario) -> ScenarioReport {
-        Self::execute(scenario, StepMode::EventDriven).0
+        let report = Self::execute(scenario, StepMode::default()).0;
+        #[cfg(debug_assertions)]
+        {
+            let oracle = Self::execute(scenario, StepMode::EventDriven).0;
+            assert_eq!(
+                report, oracle,
+                "wheel core diverged from the event-driven oracle on {}",
+                scenario.name
+            );
+        }
+        report
     }
 
     /// Execute under an explicit stepping core — the sweep module's hook

@@ -85,9 +85,10 @@ where
 /// Run independent scenarios across threads (order-preserving). Each
 /// scenario is deterministic, so `run_scenarios(g, 1)` and
 /// `run_scenarios(g, n)` return identical reports — only wall-clock
-/// changes.
+/// changes. Steps on [`StepMode::default()`] (the promoted wheel core);
+/// use [`run_scenarios_mode`] to pin another core explicitly.
 pub fn run_scenarios(scenarios: &[Scenario], threads: usize) -> Vec<ScenarioReport> {
-    run_scenarios_mode(scenarios, threads, StepMode::EventDriven)
+    run_scenarios_mode(scenarios, threads, StepMode::default())
 }
 
 /// Run independent scenarios across threads under an explicit stepping

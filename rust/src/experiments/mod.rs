@@ -18,6 +18,10 @@
 //! `workingset` is the partition-fit flip demo (`carfield workingset`):
 //! traced working-set profiles minted into partition certificates that
 //! admit a fig6a mix every cold bound rejects, simulation-validated.
+//! `packing` is the admission-service demo (`carfield pack`): a seeded
+//! request queue driven through the sharded bound-aware packing
+//! pipeline (heuristic race, governed prefix, batched validation
+//! sweep), gated on co-residency, admission and validation soundness.
 
 pub mod autotune;
 pub mod bounds;
@@ -29,6 +33,7 @@ pub mod fig6b;
 pub mod fig7;
 pub mod fig8;
 pub mod micro;
+pub mod packing;
 pub mod reliability;
 pub mod trace;
 pub mod workingset;

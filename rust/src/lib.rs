@@ -14,11 +14,10 @@
 //!   the XLA PJRT CPU client (`runtime` module). Python is never on the
 //!   simulated request path.
 //!
-//! Execution model (two regimes, bit-identical by construction):
+//! Execution model (three stepping cores, bit-identical by construction):
 //! - **Naive stepping** — `SocSim::step` ticks every initiator, TSU and
 //!   target each system cycle; the cycle-accurate reference.
-//! - **Event-driven stepping** — the default for `run_until_done`,
-//!   `Scheduler::run` and the experiment drivers. Every component
+//! - **Event-driven stepping** — the second oracle. Every component
 //!   exposes `next_event(now)` (TSU release times, HyperRAM line edges,
 //!   compute-FSM completion times, ...); when the crossbar is idle,
 //!   `SocSim::step_fast` jumps `now` straight to the earliest pending
@@ -26,6 +25,13 @@
 //!   `tests/event_driven_equivalence.rs` asserts bit-identical
 //!   `ScenarioReport`s against naive stepping, and
 //!   `SocSim::validate_skips` cross-checks every skip window at runtime.
+//! - **Wheel stepping** — the promoted default for `Scheduler::run`,
+//!   the sweeps and every experiment driver: a structure-of-arrays
+//!   event wheel whose per-cycle work touches only fired slots and
+//!   whose completion-delivery path replays lazily through the same
+//!   arrays. Debug builds cross-check every `Scheduler::run` against
+//!   the event-driven oracle; `tests/wheel_equivalence.rs` pins the
+//!   three-way matrix in release.
 //! - **Parallel sweeps** — `coordinator::sweep` fans independent
 //!   scenario grids (Fig. 3c/5/6a/6b) across `std::thread::scope`
 //!   workers, order-preserving and deterministic (`CARFIELD_THREADS`
@@ -75,6 +81,19 @@
 //!   `carfield workingset` demos the admission flip no cold bound can
 //!   produce, validated by one partitioned simulation.
 //!
+//! - **Admission as a service** — the `service` module turns the
+//!   admit-vs-simulate cost asymmetry (microseconds vs milliseconds)
+//!   into a high-throughput pipeline: seeded scenario requests are
+//!   packed into co-resident mixes under the analytic admission test
+//!   (first-fit-decreasing racing best-fit on the binding resource's
+//!   slack, behind a common `PackHeuristic` trait), each packed mix is
+//!   governed to its lowest common operating point through the
+//!   `UtilizationLibrary` certificate store, and the packed schedules
+//!   are confirmed by one batched wheel sweep. Sharded across worker
+//!   threads with an order-preserving merge — results are bit-identical
+//!   at any shard count (`tests/packing_determinism.rs`); `carfield
+//!   pack` / `make pack` drive it at 10^4–10^6 queue depths.
+//!
 //! Perf target (tracked by `make bench` → `BENCH_perf_hotpath.json`):
 //! >= 60 simulated Mcyc/s on the Fig. 6a TCT+DMA topology via the
 //! event-driven path (>= 3x the naive 20 Mcyc/s target it replaces).
@@ -85,6 +104,7 @@ pub mod coordinator;
 pub mod experiments;
 pub mod power;
 pub mod runtime;
+pub mod service;
 pub mod soc;
 pub mod trace;
 pub mod util;

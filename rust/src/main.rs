@@ -43,6 +43,15 @@
 //!                           validated by one partitioned simulation
 //!                           (certificate JSON written to `--out D`,
 //!                           default `target/workingset`);
+//! - `pack`                — admission as a service: a seeded queue of
+//!                           `--depth N` scenario requests (default
+//!                           10^5) packed into co-resident mixes by the
+//!                           racing bound-aware heuristics, governed to
+//!                           the lowest common operating point, and
+//!                           confirmed by one batched validation sweep
+//!                           (`--seed N` reseeds the queue, `--threads
+//!                           N` pins the shard width — results are
+//!                           bit-identical at any width);
 //! - `all`                 — run every experiment in sequence;
 //! - `artifacts [--dir D]` — list AOT artifacts and smoke-execute one;
 //! - `infer [--dir D]`     — run the QNN MLP artifact through the PJRT
@@ -78,6 +87,7 @@ fn main() {
         Some("faults") => cmd_faults(),
         Some("trace") => cmd_trace(&args),
         Some("workingset") => cmd_workingset(&args),
+        Some("pack") => cmd_pack(&args),
         Some("all") => {
             exp::fig3c::print(&exp::fig3c::run());
             exp::fig5::print(&exp::fig5::run());
@@ -96,7 +106,7 @@ fn main() {
         Some("scenario") => cmd_scenario(&args),
         _ => {
             eprintln!(
-                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|autotune|dvfs|faults|trace|workingset|all|artifacts|infer|scenario> [options]"
+                "usage: carfield <boot|fig3c|fig5|fig6a|fig6b|fig7|fig8|micro|wcet|autotune|dvfs|faults|trace|workingset|pack|all|artifacts|infer|scenario> [options]"
             );
             std::process::exit(2);
         }
@@ -413,6 +423,40 @@ fn cmd_workingset(args: &Args) {
             "workingset validation failed: the certified winner's simulation missed \
              its warm bound, its deadline, or the certified fill budget"
         );
+        std::process::exit(1);
+    }
+}
+
+fn cmd_pack(args: &Args) {
+    let depth = args.get_parse("depth", 100_000usize);
+    let seed = args.get_parse("seed", 1u64);
+    let threads = args.get_parse("threads", carfield::coordinator::sweep::default_threads());
+    let r = exp::packing::run_with(depth, seed, threads);
+    exp::packing::print(&r);
+    // The smoke gates: co-residency is what distinguishes a *packer*
+    // from one-scenario-per-slot dispatch, the admission and validation
+    // gates are the service's soundness claim, and the race accounting
+    // catches a heuristic silently dropping out of the comparison.
+    if !r.co_residency() {
+        eprintln!("pack regression: no packed mix holds more than one request");
+        std::process::exit(1);
+    }
+    if !r.all_admitted() {
+        eprintln!(
+            "pack validation failed: a packed mix has negative binding slack \
+             or a per-task bound past its deadline"
+        );
+        std::process::exit(1);
+    }
+    if !r.validation_sound() {
+        eprintln!(
+            "pack validation failed: the batched sweep refuted a packed mix \
+             (measured makespan past its bound or a deadline missed)"
+        );
+        std::process::exit(1);
+    }
+    if !r.race_accounted() {
+        eprintln!("pack regression: heuristic win/tie counts do not cover every batch");
         std::process::exit(1);
     }
 }

@@ -98,6 +98,18 @@ impl UtilizationLibrary {
         self.entries.insert(key, utils);
     }
 
+    /// Fraction of lookups answered from the library (0.0 before any
+    /// lookup) — the admission service's "repeat shapes skip the
+    /// measurement sweep" observability number.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
     pub fn len(&self) -> usize {
         self.entries.len()
     }

@@ -1,0 +1,40 @@
+//! Admission as a service: the sharded bound-aware packing pipeline.
+//!
+//! The paper's predictability machinery makes the *analytic* admission
+//! test (`Scheduler::admit`) cost microseconds while a validating
+//! simulation costs milliseconds — a ~100x asymmetry. This module
+//! turns that asymmetry into a service: a seeded queue of 10^5–10^6
+//! scenario requests is admitted, packed into co-resident mixes,
+//! governed to energy-minimal operating points, and confirmed by one
+//! batched simulation sweep — with the expensive stages bounded to
+//! deterministic prefixes and the cheap analytic stage doing all the
+//! heavy lifting.
+//!
+//! - [`request`] — seeded request synthesis: `wcet::fuzz` mixes
+//!   profiled solo and stamped with bound-derived cycle deadlines.
+//! - [`pack`] — the [`PackHeuristic`] race: first-fit-decreasing on
+//!   demand vs best-fit on the binding resource's slack, both layered
+//!   over a scalar pre-filter plus the exact admission probe (with an
+//!   optional budget-capped autotune rescue for rejected merges).
+//! - [`pipeline`] — fixed-size batches fanned across worker threads
+//!   with an order-preserving merge (bit-identical at any shard
+//!   count), then the capped govern stage (shared
+//!   [`UtilizationLibrary`](crate::power::UtilizationLibrary) — repeat
+//!   shapes skip the measurement sweep) and the single batched
+//!   validation sweep.
+//!
+//! `experiments::packing` / `carfield pack` / `make pack` drive the
+//! pipeline and gate its invariants; `tests/packing_determinism.rs`
+//! pins shard- and step-mode-invariance; the `packing` section of
+//! `BENCH_perf_hotpath.json` tracks sustained admissions/sec and
+//! heuristic win-rates at depth 10^5 and 10^6.
+
+pub mod pack;
+pub mod pipeline;
+pub mod request;
+
+pub use pack::{BestFitSlack, FirstFitDecreasing, PackConfig, PackHeuristic, PackStats};
+pub use pipeline::{
+    run, GovernedMix, PackedMix, ServiceConfig, ServiceReport, ValidationRow,
+};
+pub use request::{synthesize, ScenarioRequest};

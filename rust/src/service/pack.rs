@@ -1,0 +1,458 @@
+//! Bound-aware bin packing: co-residency under the analytic admission
+//! test.
+//!
+//! A *bin* is a set of requests proposed to run co-resident as one
+//! merged scenario (tasks renamed `r{id}.{name}`, one initiator slot
+//! each — placement is physical, so bins cap at
+//! [`PackConfig::max_members`] requests). Feasibility is layered:
+//!
+//! 1. **Scalar pre-filter** — the sum of member demands must stay
+//!    under [`PackConfig::demand_cap`]; a bin that fails never costs
+//!    an exact probe.
+//! 2. **Exact probe** — `Scheduler::admit` on the merged scenario is
+//!    the authoritative oracle: interference is recomputed for the
+//!    *combined* mix, so a filter-passing candidate can still be
+//!    rejected (and a rejection can optionally be *rescued* by a
+//!    budget-capped [`Autotuner`] pass that searches for a stronger
+//!    isolation tuning admitting the merged mix).
+//!
+//! Two heuristics race behind the [`PackHeuristic`] trait:
+//! first-fit-decreasing on demand, and best-fit on the binding
+//! resource's slack (tightest post-insertion [`min_slack`] wins).
+//! Both are deterministic; the racer keeps whichever packed the batch
+//! into fewer mixes (ties go to first-fit-decreasing) and records
+//! whether they disagreed on the assignment at all.
+
+use crate::coordinator::{AdmissionDecision, Autotuner, Scenario, Scheduler, SocTuning};
+use crate::wcet::{min_slack, Resource};
+
+use super::request::ScenarioRequest;
+
+/// Knobs for one packing pass.
+#[derive(Debug, Clone)]
+pub struct PackConfig {
+    /// Hard cap on co-resident requests per mix (each request task
+    /// occupies one physical initiator slot).
+    pub max_members: usize,
+    /// Scalar pre-filter: candidate bins whose demand sum would exceed
+    /// this skip the exact probe outright.
+    pub demand_cap: f64,
+    /// Best-fit probe window: how many filter-passing open bins the
+    /// slack heuristic admit-probes per request.
+    pub probe_window: usize,
+    /// Autotune evaluation budget for rescuing a rejected merged probe
+    /// (0 disables rescue — the bench's high-depth setting).
+    pub rescue_evaluations: u64,
+    /// Rescue attempts per heuristic per batch (bounds worst-case
+    /// packing latency; the first N rejected probes get the tuner).
+    pub rescue_attempts: u64,
+}
+
+impl Default for PackConfig {
+    fn default() -> Self {
+        Self {
+            max_members: 4,
+            demand_cap: 1.0,
+            probe_window: 4,
+            rescue_evaluations: 0,
+            rescue_attempts: 8,
+        }
+    }
+}
+
+/// Aggregate probe accounting across a packing pass (summed over both
+/// racing heuristics). Pure counters — deterministic for a fixed
+/// request stream.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PackStats {
+    /// Exact `Scheduler::admit` probes issued.
+    pub probes: u64,
+    /// Candidate bins the scalar demand filter discarded (probes
+    /// avoided).
+    pub filtered: u64,
+    /// Probes the exact test rejected (the filter's false positives).
+    pub rejected: u64,
+    /// Rescue passes attempted on rejected probes.
+    pub rescues: u64,
+    /// Rescue passes that found an admitting tuning.
+    pub rescued: u64,
+}
+
+impl PackStats {
+    pub fn add(&mut self, other: &PackStats) {
+        self.probes += other.probes;
+        self.filtered += other.filtered;
+        self.rejected += other.rejected;
+        self.rescues += other.rescues;
+        self.rescued += other.rescued;
+    }
+}
+
+/// One packed bin: members (batch-local request indices), the tuning
+/// the merged mix is admitted under, and the admitting decision.
+#[derive(Debug, Clone)]
+pub struct Bin {
+    pub members: Vec<usize>,
+    /// Sum of member demands (the filter's running scalar).
+    pub demand: f64,
+    pub tuning: SocTuning,
+    /// The admitting decision at `(members, tuning)`.
+    pub decision: AdmissionDecision,
+    /// Tightest per-task slack in the merged mix (`i64::MAX` when no
+    /// member task carries a deadline).
+    pub min_slack: i64,
+    /// Binding resource of the min-slack task.
+    pub binding: Resource,
+    /// Whether a budgeted autotune pass re-tuned this bin.
+    pub rescued: bool,
+}
+
+/// Build the merged co-residency scenario for `members` under
+/// `tuning`: every member task joins, renamed `r{request id}.{name}`
+/// so reports and bounds stay attributable per request.
+pub fn merge(
+    name: &str,
+    requests: &[ScenarioRequest],
+    members: &[usize],
+    tuning: SocTuning,
+) -> Scenario {
+    let mut s = Scenario::new(name, tuning);
+    for &m in members {
+        let req = &requests[m];
+        for task in &req.scenario.tasks {
+            let mut t = task.clone();
+            t.name = format!("r{}.{}", req.id, t.name);
+            s.tasks.push(t);
+        }
+    }
+    s
+}
+
+fn bin_from(
+    requests: &[ScenarioRequest],
+    members: Vec<usize>,
+    merged: &Scenario,
+    tuning: SocTuning,
+    decision: AdmissionDecision,
+    rescued: bool,
+) -> Bin {
+    let demand = members.iter().map(|&m| requests[m].demand).sum();
+    // Deadlines live on the merged tasks and no operating point is
+    // pinned, so the slack probe is tuning-independent — the merged
+    // scenario from the admission probe serves even when a rescue
+    // changed the tuning.
+    let (min_slack, binding) = match min_slack(merged, &decision.report) {
+        Some(p) => (p.slack, p.binding),
+        None => (i64::MAX, Resource::Compute),
+    };
+    Bin {
+        members,
+        demand,
+        tuning,
+        decision,
+        min_slack,
+        binding,
+        rescued,
+    }
+}
+
+/// Exact-probe a request into a bin: merge, admit, optionally rescue.
+/// Returns the grown bin on success.
+fn try_fit(
+    requests: &[ScenarioRequest],
+    bin: &Bin,
+    req_idx: usize,
+    cfg: &PackConfig,
+    stats: &mut PackStats,
+    rescue_left: &mut u64,
+) -> Option<Bin> {
+    let mut members = bin.members.clone();
+    members.push(req_idx);
+    let probe = merge("pack-probe", requests, &members, bin.tuning);
+    stats.probes += 1;
+    let decision = Scheduler::admit(&probe);
+    if decision.admitted {
+        return Some(bin_from(
+            requests,
+            members,
+            &probe,
+            bin.tuning,
+            decision,
+            bin.rescued,
+        ));
+    }
+    stats.rejected += 1;
+    if cfg.rescue_evaluations > 0 && *rescue_left > 0 {
+        *rescue_left -= 1;
+        stats.rescues += 1;
+        let tuner = Autotuner::budgeted(cfg.rescue_evaluations);
+        if let Ok(outcome) = tuner.tune(&probe) {
+            stats.rescued += 1;
+            return Some(bin_from(
+                requests,
+                members,
+                &probe,
+                outcome.tuning,
+                outcome.decision,
+                true,
+            ));
+        }
+    }
+    None
+}
+
+/// Open a fresh bin holding only `req_idx` at the request's own
+/// tuning. Admitted by construction: the request's deadlines were
+/// stamped from its solo bounds with headroom >= 1.2, and renaming
+/// tasks changes nothing the bound engine reads.
+fn singleton(requests: &[ScenarioRequest], req_idx: usize, stats: &mut PackStats) -> Bin {
+    let members = vec![req_idx];
+    let tuning = requests[req_idx].scenario.tuning;
+    let probe = merge("singleton-probe", requests, &members, tuning);
+    stats.probes += 1;
+    let decision = Scheduler::admit(&probe);
+    debug_assert!(
+        decision.admitted,
+        "solo-admissible request rejected as a singleton: {}",
+        decision.summary()
+    );
+    bin_from(requests, members, &probe, tuning, decision, false)
+}
+
+/// A deterministic packing heuristic over one batch of requests.
+pub trait PackHeuristic: Sync {
+    fn name(&self) -> &'static str;
+    fn pack(
+        &self,
+        requests: &[ScenarioRequest],
+        cfg: &PackConfig,
+        stats: &mut PackStats,
+    ) -> Vec<Bin>;
+}
+
+/// Classical first-fit-decreasing on demand: requests sorted by
+/// descending demand (ties broken by queue position — a total,
+/// deterministic order), each placed into the first open bin that
+/// passes the filter and the exact probe.
+pub struct FirstFitDecreasing;
+
+impl FirstFitDecreasing {
+    pub const NAME: &'static str = "first-fit-decreasing";
+}
+
+impl PackHeuristic for FirstFitDecreasing {
+    fn name(&self) -> &'static str {
+        Self::NAME
+    }
+
+    fn pack(
+        &self,
+        requests: &[ScenarioRequest],
+        cfg: &PackConfig,
+        stats: &mut PackStats,
+    ) -> Vec<Bin> {
+        let mut order: Vec<usize> = (0..requests.len()).collect();
+        order.sort_by(|&a, &b| {
+            requests[b]
+                .demand
+                .total_cmp(&requests[a].demand)
+                .then(a.cmp(&b))
+        });
+        let mut bins: Vec<Bin> = Vec::new();
+        let mut rescue_left = cfg.rescue_attempts;
+        for &i in &order {
+            let d = requests[i].demand;
+            let mut placed = false;
+            for bin in bins.iter_mut() {
+                if bin.members.len() >= cfg.max_members {
+                    continue;
+                }
+                if bin.demand + d > cfg.demand_cap {
+                    stats.filtered += 1;
+                    continue;
+                }
+                if let Some(grown) = try_fit(requests, bin, i, cfg, stats, &mut rescue_left) {
+                    *bin = grown;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                bins.push(singleton(requests, i, stats));
+            }
+        }
+        bins
+    }
+}
+
+/// Best-fit on the binding resource's slack: requests in queue order,
+/// each probed against up to [`PackConfig::probe_window`]
+/// filter-passing open bins; the admitting bin with the *tightest*
+/// post-insertion [`min_slack`] wins (ties go to the lowest bin
+/// index). Packing tight-first keeps slack-rich bins open for the
+/// requests that actually need them.
+pub struct BestFitSlack;
+
+impl BestFitSlack {
+    pub const NAME: &'static str = "best-fit-slack";
+}
+
+impl PackHeuristic for BestFitSlack {
+    fn name(&self) -> &'static str {
+        Self::NAME
+    }
+
+    fn pack(
+        &self,
+        requests: &[ScenarioRequest],
+        cfg: &PackConfig,
+        stats: &mut PackStats,
+    ) -> Vec<Bin> {
+        let mut bins: Vec<Bin> = Vec::new();
+        let mut rescue_left = cfg.rescue_attempts;
+        for i in 0..requests.len() {
+            let d = requests[i].demand;
+            let mut best: Option<(usize, Bin)> = None;
+            let mut probed = 0usize;
+            for (b, bin) in bins.iter().enumerate() {
+                if probed >= cfg.probe_window {
+                    break;
+                }
+                if bin.members.len() >= cfg.max_members {
+                    continue;
+                }
+                if bin.demand + d > cfg.demand_cap {
+                    stats.filtered += 1;
+                    continue;
+                }
+                probed += 1;
+                if let Some(grown) = try_fit(requests, bin, i, cfg, stats, &mut rescue_left) {
+                    let tighter = best
+                        .as_ref()
+                        .map(|(_, cur)| grown.min_slack < cur.min_slack)
+                        .unwrap_or(true);
+                    if tighter {
+                        best = Some((b, grown));
+                    }
+                }
+            }
+            match best {
+                Some((b, grown)) => bins[b] = grown,
+                None => bins.push(singleton(requests, i, stats)),
+            }
+        }
+        bins
+    }
+}
+
+/// Outcome of racing the two heuristics over one batch.
+#[derive(Debug, Clone)]
+pub struct RaceOutcome {
+    /// The winning packing (fewer mixes; ties keep first-fit).
+    pub bins: Vec<Bin>,
+    pub winner: &'static str,
+    pub ffd_bins: usize,
+    pub slack_bins: usize,
+    /// The canonical assignments differed (strict wins included).
+    pub disagreed: bool,
+    pub stats: PackStats,
+}
+
+/// Canonical assignment form for disagreement detection: per-bin
+/// member id sets, order-normalized, so two packings compare equal
+/// exactly when they co-locate the same requests.
+fn canonical(bins: &[Bin], requests: &[ScenarioRequest]) -> Vec<Vec<u64>> {
+    let mut shape: Vec<Vec<u64>> = bins
+        .iter()
+        .map(|b| {
+            let mut ids: Vec<u64> = b.members.iter().map(|&m| requests[m].id).collect();
+            ids.sort_unstable();
+            ids
+        })
+        .collect();
+    shape.sort();
+    shape
+}
+
+/// Race both heuristics over one batch and keep the better packing.
+pub fn race(requests: &[ScenarioRequest], cfg: &PackConfig) -> RaceOutcome {
+    let mut stats = PackStats::default();
+    let ffd = FirstFitDecreasing.pack(requests, cfg, &mut stats);
+    let slack = BestFitSlack.pack(requests, cfg, &mut stats);
+    let disagreed = canonical(&ffd, requests) != canonical(&slack, requests);
+    let (ffd_bins, slack_bins) = (ffd.len(), slack.len());
+    let (bins, winner) = if slack_bins < ffd_bins {
+        (slack, BestFitSlack::NAME)
+    } else {
+        (ffd, FirstFitDecreasing::NAME)
+    };
+    RaceOutcome {
+        bins,
+        winner,
+        ffd_bins,
+        slack_bins,
+        disagreed,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::request::synthesize;
+
+    fn batch(n: u64, base: u64) -> Vec<ScenarioRequest> {
+        (0..n).map(|i| synthesize(i, base + i)).collect()
+    }
+
+    #[test]
+    fn merge_renames_and_preserves_deadlines() {
+        let reqs = batch(2, 11);
+        let tuning = reqs[0].scenario.tuning;
+        let merged = merge("m", &reqs, &[0, 1], tuning);
+        let expected: usize = reqs.iter().map(|r| r.scenario.tasks.len()).sum();
+        assert_eq!(merged.tasks.len(), expected);
+        for (r, req) in reqs.iter().enumerate() {
+            for task in &req.scenario.tasks {
+                let name = format!("r{}.{}", req.id, task.name);
+                let t = merged
+                    .tasks
+                    .iter()
+                    .find(|t| t.name == name)
+                    .unwrap_or_else(|| panic!("missing {name} (request {r})"));
+                assert_eq!(t.deadline, task.deadline);
+            }
+        }
+    }
+
+    #[test]
+    fn heuristics_pack_every_request_exactly_once() {
+        let reqs = batch(12, 101);
+        let cfg = PackConfig::default();
+        for h in [&FirstFitDecreasing as &dyn PackHeuristic, &BestFitSlack] {
+            let mut stats = PackStats::default();
+            let bins = h.pack(&reqs, &cfg, &mut stats);
+            let mut seen: Vec<usize> = bins.iter().flat_map(|b| b.members.clone()).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..reqs.len()).collect::<Vec<_>>(), "{}", h.name());
+            for b in &bins {
+                assert!(b.decision.admitted, "{}: unadmitted bin", h.name());
+                assert!(b.min_slack >= 0, "{}: negative slack packed", h.name());
+                assert!(b.members.len() <= cfg.max_members);
+            }
+            assert!(stats.probes > 0);
+        }
+    }
+
+    #[test]
+    fn race_is_deterministic() {
+        let reqs = batch(10, 777);
+        let cfg = PackConfig::default();
+        let a = race(&reqs, &cfg);
+        let b = race(&reqs, &cfg);
+        assert_eq!(canonical(&a.bins, &reqs), canonical(&b.bins, &reqs));
+        assert_eq!(a.winner, b.winner);
+        assert_eq!(a.stats, b.stats);
+        assert!(a.bins.len() <= reqs.len());
+    }
+}

@@ -1,0 +1,528 @@
+//! The sharded admission-and-packing pipeline.
+//!
+//! Stage layout (deterministic end to end):
+//!
+//! 1. **Shard + pack** — the queue is cut into fixed-size batches
+//!    ([`ServiceConfig::batch`] requests, *independent of the thread
+//!    count*: bins never span a batch boundary, so the work
+//!    decomposition is a function of the queue alone). Batches fan out
+//!    over `sweep::parallel_map`, each synthesizing its requests,
+//!    racing the two packing heuristics and returning packed mixes.
+//!    The order-preserving merge then assigns global mix ids — results
+//!    are bit-identical at any shard count.
+//! 2. **Govern** — the first [`ServiceConfig::govern_cap`] mixes run
+//!    through `Governor::govern_certified_with` against one shared
+//!    [`UtilizationLibrary`], so repeated mix shapes skip the
+//!    measurement sweep. Sequential by design: the library is shared
+//!    state, and a deterministic prefix beats a nondeterministic
+//!    everything.
+//! 3. **Validate** — the first [`ServiceConfig::validate_cap`] mixes
+//!    (at their governed points when stage 2 covered them) are
+//!    confirmed by **one** batched `sweep::run_scenarios_mode` call:
+//!    every measured makespan must sit within its analytic bound and
+//!    every deadline must hold.
+//!
+//! Caps are deterministic prefixes and are reported loudly (mix
+//! counts, capped counts) — never silent. Memory is bounded at depth
+//! 10^6 by generating requests inside their batch (dropped after
+//! packing) and retaining merged scenarios only for the mixes the
+//! govern/validate prefixes can reach.
+
+use crate::coordinator::sweep;
+use crate::coordinator::{Scenario, SocTuning, StepMode};
+use crate::power::governor::Governor;
+use crate::power::{OperatingPoint, UtilizationLibrary};
+use crate::soc::clock::Cycle;
+use crate::wcet::Resource;
+
+use super::pack::{self, PackConfig, PackStats};
+use super::request::{self, ScenarioRequest};
+
+/// Domain separation for the hot-shape pool draws.
+const HOT_SALT: u64 = 0x707_5EED_0000_0001;
+
+/// Pipeline configuration. The default is the bench's high-depth
+/// shape: full packing, govern/validate prefixes on, rescue off.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Queue depth: how many seeded requests to admit and pack.
+    pub depth: usize,
+    /// Base seed for the whole queue (request seeds derive from it).
+    pub seed: u64,
+    /// Worker threads for the pack fan-out and the validation sweep.
+    /// Results are bit-identical at any value.
+    pub threads: usize,
+    /// Batch size (requests per shard unit). Fixed relative to the
+    /// queue — NOT derived from `threads` — so the packing work
+    /// decomposition, and therefore every result, is thread-invariant.
+    pub batch: usize,
+    /// 1-in-N requests re-draw their seed from the hot-shape pool
+    /// (0 disables): the repeat-customer traffic that makes the
+    /// governor's certificate library earn its keep.
+    pub hot_rate: u64,
+    /// Number of distinct hot shapes.
+    pub hot_pool: u64,
+    /// Govern the first N merged mixes (0 skips the stage).
+    pub govern_cap: usize,
+    /// Validate the first N merged mixes with the batched sweep
+    /// (0 skips the stage).
+    pub validate_cap: usize,
+    /// Stepping core for the validation sweep (all three are
+    /// bit-identical; pick on wall clock).
+    pub mode: StepMode,
+    pub pack: PackConfig,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self {
+            depth: 100_000,
+            seed: 1,
+            threads: sweep::default_threads(),
+            batch: 256,
+            hot_rate: 4,
+            hot_pool: 8,
+            govern_cap: 32,
+            validate_cap: 64,
+            mode: StepMode::default(),
+            pack: PackConfig::default(),
+        }
+    }
+}
+
+/// splitmix64 finalizer — the per-request seed mixer (the repo's
+/// `XorShift` is a *stream* generator; this is a pure hash so request
+/// `id` can be mapped to a seed on any thread without shared state).
+fn mix64(seed: u64, x: u64) -> u64 {
+    let mut z = seed ^ x.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// The fuzz seed for request `id`: unique per id, except that roughly
+/// 1-in-`hot_rate` requests re-draw from the `hot_pool` shapes.
+pub fn request_seed(cfg: &ServiceConfig, id: u64) -> u64 {
+    let z = mix64(cfg.seed, id);
+    if cfg.hot_rate > 0 && z % cfg.hot_rate == 0 {
+        mix64(cfg.seed ^ HOT_SALT, z % cfg.hot_pool.max(1))
+    } else {
+        z
+    }
+}
+
+/// One packed co-residency mix after the global merge.
+#[derive(Debug, Clone)]
+pub struct PackedMix {
+    /// Global mix id (queue order; stable across shard counts).
+    pub id: usize,
+    /// Member request ids.
+    pub members: Vec<u64>,
+    /// Sum of member demands.
+    pub demand: f64,
+    /// The tuning the merged mix is admitted under.
+    pub tuning: SocTuning,
+    /// Tightest per-task admission slack (cycles).
+    pub min_slack: i64,
+    /// Binding resource of the min-slack task.
+    pub binding: Resource,
+    pub rescued: bool,
+    /// Per deadline task: (merged name, completion bound, deadline) in
+    /// cycles at the mix tuning — the soundness ledger.
+    pub checks: Vec<(String, Cycle, Cycle)>,
+    /// The merged scenario, retained only for mixes the govern or
+    /// validate prefix can reach (memory stays bounded at depth 10^6).
+    pub scenario: Option<Scenario>,
+}
+
+/// One governed mix: the lowest common operating point the certified
+/// governor found for the merged co-residency scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GovernedMix {
+    pub mix: usize,
+    pub op: OperatingPoint,
+    pub tuning: SocTuning,
+    /// Modeled energy saved vs the max-performance baseline.
+    pub saved_pct: Option<f64>,
+    /// The certificate library answered the shape lookup (measurement
+    /// sweep skipped).
+    pub from_library: bool,
+    /// Every shipped point simulation-confirmed inside the certified
+    /// flow.
+    pub confirmed: bool,
+    /// Per deadline task: (name, bound at the governed clocks,
+    /// deadline) in system cycles.
+    pub bounds: Vec<(String, Cycle, Cycle)>,
+}
+
+/// One row of the batched validation sweep.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ValidationRow {
+    pub mix: usize,
+    /// Ran at the governed (tuning, op) rather than as packed.
+    pub governed: bool,
+    /// Per bounded task: (name, measured makespan, completion bound).
+    pub checks: Vec<(String, Cycle, Cycle)>,
+    /// Every measured makespan within its analytic bound.
+    pub sound: bool,
+    pub deadlines_met: bool,
+}
+
+/// What one batch hands back to the merge.
+struct BatchPack {
+    mixes: Vec<PackedMix>,
+    ffd_bins: usize,
+    slack_bins: usize,
+    disagreed: bool,
+    stats: PackStats,
+}
+
+/// The pipeline's full, deterministic output (every field is a pure
+/// function of the config — wall clock never leaks in).
+#[derive(Debug, Clone)]
+pub struct ServiceReport {
+    pub depth: usize,
+    pub seed: u64,
+    pub batches: usize,
+    pub mode: StepMode,
+    pub mixes: Vec<PackedMix>,
+    pub stats: PackStats,
+    /// Batches first-fit-decreasing packed strictly tighter.
+    pub ffd_wins: u64,
+    /// Batches best-fit-on-slack packed strictly tighter.
+    pub slack_wins: u64,
+    /// Batches with equal mix counts.
+    pub ties: u64,
+    /// Batches where the two assignments differed at all.
+    pub disagreements: u64,
+    pub governed: Vec<GovernedMix>,
+    /// Mixes the governor could not place (no deadline, or exhausted).
+    pub govern_failures: u64,
+    pub library_hits: u64,
+    pub library_misses: u64,
+    pub library_len: usize,
+    pub validations: Vec<ValidationRow>,
+}
+
+impl ServiceReport {
+    pub fn packed(&self) -> usize {
+        self.mixes.len()
+    }
+
+    /// Requests per packed mix (>= 1.0; higher = tighter packing).
+    pub fn packing_ratio(&self) -> f64 {
+        self.depth as f64 / self.mixes.len().max(1) as f64
+    }
+
+    /// Mixes holding more than one request (the packer's actual wins).
+    pub fn multi_request_mixes(&self) -> usize {
+        self.mixes.iter().filter(|m| m.members.len() > 1).count()
+    }
+
+    /// Every packed mix analytically admitted: non-negative slack and
+    /// every per-task bound within its deadline.
+    pub fn all_admitted(&self) -> bool {
+        self.mixes.iter().all(|m| {
+            m.min_slack >= 0 && m.checks.iter().all(|(_, bound, deadline)| bound <= deadline)
+        })
+    }
+
+    /// Every validation row sound with deadlines met (vacuously true
+    /// with `validate_cap = 0`; gate on `validations.len()` too).
+    pub fn validation_sound(&self) -> bool {
+        self.validations.iter().all(|v| v.sound && v.deadlines_met)
+    }
+
+    /// Canonical packed assignment (member-id sets per mix, in queue
+    /// order) — the shard-invariance test's comparison key.
+    pub fn assignments(&self) -> Vec<Vec<u64>> {
+        self.mixes.iter().map(|m| m.members.clone()).collect()
+    }
+
+    pub fn disagreement_rate(&self) -> f64 {
+        self.disagreements as f64 / self.batches.max(1) as f64
+    }
+
+    pub fn library_hit_rate(&self) -> f64 {
+        let total = self.library_hits + self.library_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.library_hits as f64 / total as f64
+        }
+    }
+}
+
+/// Pack one batch: synthesize its requests, race the heuristics, and
+/// strip the working bins down to [`PackedMix`]es (merged scenarios
+/// retained only when `keep_scenarios`).
+fn pack_batch(cfg: &ServiceConfig, batch_idx: usize, keep_scenarios: bool) -> BatchPack {
+    let lo = batch_idx * cfg.batch;
+    let hi = ((batch_idx + 1) * cfg.batch).min(cfg.depth);
+    let requests: Vec<ScenarioRequest> = (lo..hi)
+        .map(|id| request::synthesize(id as u64, request_seed(cfg, id as u64)))
+        .collect();
+    let outcome = pack::race(&requests, &cfg.pack);
+    let mixes = outcome
+        .bins
+        .into_iter()
+        .map(|bin| {
+            let members: Vec<u64> = bin.members.iter().map(|&m| requests[m].id).collect();
+            // Soundness ledger: merged-name deadlines vs the admitting
+            // decision's bounds (cycle currency — no operating point).
+            let mut checks = Vec::new();
+            for &m in &bin.members {
+                let req = &requests[m];
+                for (task, _, deadline) in &req.checks {
+                    let name = format!("r{}.{}", req.id, task);
+                    let bound = bin
+                        .decision
+                        .report
+                        .bound_for(&name)
+                        .completion_cycles(None)
+                        .expect("admitted deadline task has a completion bound");
+                    checks.push((name, bound, *deadline));
+                }
+            }
+            let scenario = keep_scenarios
+                .then(|| pack::merge("mix", &requests, &bin.members, bin.tuning));
+            PackedMix {
+                id: usize::MAX, // assigned at the global merge
+                members,
+                demand: bin.demand,
+                tuning: bin.tuning,
+                min_slack: bin.min_slack,
+                binding: bin.binding,
+                rescued: bin.rescued,
+                checks,
+                scenario,
+            }
+        })
+        .collect();
+    BatchPack {
+        mixes,
+        ffd_bins: outcome.ffd_bins,
+        slack_bins: outcome.slack_bins,
+        disagreed: outcome.disagreed,
+        stats: outcome.stats,
+    }
+}
+
+/// Run the full pipeline. Deterministic: for a fixed config (any
+/// `threads`, any `mode`) the report's packed assignments, governed
+/// points and validation rows are bit-identical.
+pub fn run(cfg: &ServiceConfig) -> ServiceReport {
+    let batch = cfg.batch.max(1);
+    let n_batches = cfg.depth.div_ceil(batch);
+    let keep_needed = cfg.govern_cap.max(cfg.validate_cap);
+    // A batch of B requests yields at least B / max_members mixes, so
+    // batch k's first global mix id is >= k * that floor — batches
+    // past the govern/validate horizon provably never need their
+    // merged scenarios (conservative: extra batches may keep them).
+    let min_mixes_per_batch = (batch / cfg.pack.max_members.max(1)).max(1);
+    let batch_ids: Vec<usize> = (0..n_batches).collect();
+    let packs: Vec<BatchPack> = sweep::parallel_map(&batch_ids, cfg.threads, |&k| {
+        pack_batch(cfg, k, k * min_mixes_per_batch < keep_needed)
+    });
+
+    // Deterministic order-preserving merge: global mix ids in batch
+    // order, scenarios dropped past the prefix horizon.
+    let mut mixes: Vec<PackedMix> = Vec::new();
+    let mut stats = PackStats::default();
+    let (mut ffd_wins, mut slack_wins, mut ties, mut disagreements) = (0u64, 0u64, 0u64, 0u64);
+    for bp in packs {
+        stats.add(&bp.stats);
+        if bp.slack_bins < bp.ffd_bins {
+            slack_wins += 1;
+        } else if bp.ffd_bins < bp.slack_bins {
+            ffd_wins += 1;
+        } else {
+            ties += 1;
+        }
+        if bp.disagreed {
+            disagreements += 1;
+        }
+        for mut mix in bp.mixes {
+            mix.id = mixes.len();
+            if mix.id >= keep_needed {
+                mix.scenario = None;
+            } else if let Some(s) = mix.scenario.as_mut() {
+                s.name = format!("mix-{}", mix.id);
+            }
+            mixes.push(mix);
+        }
+    }
+
+    // Stage 2: govern the prefix against one shared certificate
+    // library (sequential — deterministic library state).
+    let governor = Governor::default();
+    let mut library = UtilizationLibrary::new();
+    let mut governed: Vec<GovernedMix> = Vec::new();
+    let mut govern_failures = 0u64;
+    for mix in mixes.iter().take(cfg.govern_cap) {
+        let Some(s) = &mix.scenario else { break };
+        let hits_before = library.hits;
+        match governor.govern_certified_with(s, &mut library) {
+            Ok(c) => {
+                let choice = &c.certified;
+                let clocks = choice.op.clock_tree();
+                let mut bounds = Vec::new();
+                for (task, _, deadline) in &mix.checks {
+                    if let Some(b) = choice
+                        .decision
+                        .report
+                        .bound_for(task)
+                        .completion_cycles(Some(&clocks))
+                    {
+                        bounds.push((task.clone(), b, *deadline));
+                    }
+                }
+                governed.push(GovernedMix {
+                    mix: mix.id,
+                    op: choice.op,
+                    tuning: choice.tuning,
+                    saved_pct: choice.energy_saved_pct(),
+                    from_library: library.hits > hits_before,
+                    confirmed: c.confirmed(),
+                    bounds,
+                });
+            }
+            Err(_) => govern_failures += 1,
+        }
+    }
+
+    // Stage 3: one batched validation sweep over the prefix, governed
+    // mixes at their governed (tuning, op).
+    struct ValidationJob {
+        mix: usize,
+        governed: bool,
+        scenario: Scenario,
+        bounds: Vec<(String, Cycle, Cycle)>,
+    }
+    let mut jobs: Vec<ValidationJob> = Vec::new();
+    for mix in mixes.iter().take(cfg.validate_cap) {
+        let Some(s) = &mix.scenario else { break };
+        let job = match governed.iter().find(|g| g.mix == mix.id) {
+            Some(g) => ValidationJob {
+                mix: mix.id,
+                governed: true,
+                scenario: s.clone().with_tuning(g.tuning).with_op_point(g.op),
+                bounds: g.bounds.clone(),
+            },
+            None => ValidationJob {
+                mix: mix.id,
+                governed: false,
+                scenario: s.clone(),
+                bounds: mix.checks.clone(),
+            },
+        };
+        jobs.push(job);
+    }
+    let scenarios: Vec<Scenario> = jobs.iter().map(|j| j.scenario.clone()).collect();
+    let reports = sweep::run_scenarios_mode(&scenarios, cfg.threads, cfg.mode);
+    let validations: Vec<ValidationRow> = jobs
+        .iter()
+        .zip(&reports)
+        .map(|(job, report)| {
+            let mut sound = true;
+            let mut checks = Vec::new();
+            for (task, bound, _) in &job.bounds {
+                let t = report.task(task);
+                sound &= t.makespan > 0 && t.makespan <= *bound;
+                checks.push((task.clone(), t.makespan, *bound));
+            }
+            ValidationRow {
+                mix: job.mix,
+                governed: job.governed,
+                checks,
+                sound,
+                deadlines_met: report.all_deadlines_met(),
+            }
+        })
+        .collect();
+
+    ServiceReport {
+        depth: cfg.depth,
+        seed: cfg.seed,
+        batches: n_batches,
+        mode: cfg.mode,
+        mixes,
+        stats,
+        ffd_wins,
+        slack_wins,
+        ties,
+        disagreements,
+        governed,
+        govern_failures,
+        library_hits: library.hits,
+        library_misses: library.misses,
+        library_len: library.len(),
+        validations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(depth: usize, threads: usize) -> ServiceConfig {
+        ServiceConfig {
+            depth,
+            seed: 5,
+            threads,
+            batch: 16,
+            govern_cap: 0,
+            validate_cap: 4,
+            ..ServiceConfig::default()
+        }
+    }
+
+    #[test]
+    fn hot_pool_repeats_shapes() {
+        let cfg = ServiceConfig::default();
+        let seeds: std::collections::BTreeSet<u64> =
+            (0..256u64).map(|id| request_seed(&cfg, id)).collect();
+        assert!(
+            seeds.len() < 256,
+            "hot pool produced no repeated request shapes"
+        );
+        // And the cold majority stays diverse.
+        assert!(seeds.len() > 128, "only {} distinct shapes", seeds.len());
+    }
+
+    #[test]
+    fn pipeline_packs_governs_and_validates() {
+        let cfg = ServiceConfig {
+            govern_cap: 1,
+            ..tiny(48, 2)
+        };
+        let r = run(&cfg);
+        assert_eq!(r.batches, 3);
+        let packed_requests: usize = r.mixes.iter().map(|m| m.members.len()).sum();
+        assert_eq!(packed_requests, 48, "every request packed exactly once");
+        assert!(r.packed() <= 48);
+        assert!(r.all_admitted(), "an inadmissible mix was packed");
+        assert_eq!(r.validations.len(), 4);
+        assert!(r.validation_sound(), "{:?}", r.validations);
+        assert!(r.governed.len() + r.govern_failures as usize == 1);
+        if let Some(g) = r.governed.first() {
+            assert!(g.confirmed, "governed point not simulation-confirmed");
+            assert!(r.validations.iter().any(|v| v.mix == g.mix && v.governed));
+        }
+    }
+
+    #[test]
+    fn scenarios_kept_only_for_the_prefix() {
+        let r = run(&tiny(64, 1));
+        let keep = 4usize; // max(govern_cap, validate_cap)
+        for m in &r.mixes {
+            if m.id >= keep {
+                assert!(m.scenario.is_none(), "mix {} kept its scenario", m.id);
+            }
+        }
+        assert!(
+            r.mixes.iter().take(keep).all(|m| m.scenario.is_some()),
+            "prefix mixes must keep their scenarios"
+        );
+    }
+}

@@ -1,0 +1,121 @@
+//! Scenario-request synthesis: the admission service's seeded input
+//! stream.
+//!
+//! Each request wraps one `wcet::fuzz` scenario, profiled exactly once
+//! by the analytic bound engine at its own tuning ("solo"), and
+//! stamped with *cycle* deadlines derived from the solo completion
+//! bounds — deadline = ceil(bound x headroom) with headroom drawn in
+//! [1.2, 4.0) from a domain-separated RNG, so every request is
+//! admissible alone by construction and its *demand* (the largest
+//! bound/deadline fraction across its deadline tasks) spans roughly
+//! [0.25, 0.83]. Demand is the scalar the packing pre-filter sums;
+//! the binding resource of the dominant task is what the slack
+//! heuristic bins on.
+//!
+//! Everything is a pure function of `(id, seed)`: the same pair yields
+//! the same request on any thread, which is what makes the sharded
+//! pipeline's results bit-identical at any shard count.
+
+use crate::coordinator::Scenario;
+use crate::soc::clock::Cycle;
+use crate::util::XorShift;
+use crate::wcet::{self, Resource};
+
+/// Domain separation for the deadline-headroom draws, mirroring
+/// `wcet::fuzz::random_fault_plan`: stamping deadlines never perturbs
+/// the scenario generator's own stream.
+const HEADROOM_SALT: u64 = 0xDEAD_11E5_0000_0001;
+
+/// One admission request: a fuzzed mix profiled solo and stamped with
+/// bound-derived cycle deadlines.
+#[derive(Debug, Clone)]
+pub struct ScenarioRequest {
+    /// Global queue position (stable across shard counts).
+    pub id: u64,
+    /// The `wcet::fuzz` seed the mix was generated from.
+    pub seed: u64,
+    /// The deadline-stamped scenario (original task names; the packer
+    /// renames on merge).
+    pub scenario: Scenario,
+    /// max over deadline tasks of solo bound / deadline, in (0, 1] —
+    /// 0.0 for the rare mix whose critical tasks are all unbounded
+    /// (they then carry no deadline and constrain nothing).
+    pub demand: f64,
+    /// Binding resource of the dominant (max-demand) task.
+    pub binding: Resource,
+    /// Per deadline task: (name, solo completion bound, deadline) in
+    /// cycles at the request's own tuning.
+    pub checks: Vec<(String, Cycle, Cycle)>,
+}
+
+/// Synthesize the deterministic request for `(id, seed)`: generate the
+/// fuzz mix, bound it once, stamp deadlines.
+pub fn synthesize(id: u64, seed: u64) -> ScenarioRequest {
+    let mut scenario = wcet::fuzz::random_scenario(seed);
+    scenario.name = format!("req-{id}");
+    let report = wcet::analyze(&scenario);
+    let mut headroom_rng = XorShift::new(seed ^ HEADROOM_SALT);
+    let mut demand = 0.0f64;
+    let mut binding = Resource::Compute;
+    let mut checks = Vec::new();
+    for task in &mut scenario.tasks {
+        if !task.criticality.is_time_critical() {
+            continue;
+        }
+        let b = report.bound_for(&task.name);
+        // One headroom draw per *critical* task (bounded or not), so
+        // the draw order is a function of the mix shape alone.
+        let headroom = 1.2 + 2.8 * headroom_rng.unit_f64();
+        let Some(bound) = b.completion_cycles(None) else {
+            continue;
+        };
+        let deadline = ((bound as f64 * headroom).ceil() as Cycle).max(bound);
+        task.deadline = deadline;
+        let d = bound as f64 / deadline as f64;
+        if d > demand {
+            demand = d;
+            binding = b.completion_binding;
+        }
+        checks.push((task.name.clone(), bound, deadline));
+    }
+    ScenarioRequest {
+        id,
+        seed,
+        scenario,
+        demand,
+        binding,
+        checks,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Scheduler;
+
+    #[test]
+    fn synthesis_is_deterministic_and_solo_admissible() {
+        for seed in 1..24u64 {
+            let a = synthesize(7, seed);
+            let b = synthesize(7, seed);
+            assert_eq!(a.checks, b.checks, "seed {seed} not deterministic");
+            assert_eq!(a.demand, b.demand);
+            assert!((0.0..=1.0).contains(&a.demand), "demand {}", a.demand);
+            for (task, bound, deadline) in &a.checks {
+                assert!(bound <= deadline, "{task}: {bound} > {deadline}");
+            }
+            // Deadlines were derived from the solo bounds, so the
+            // request alone must pass the admission test.
+            let d = Scheduler::admit(&a.scenario);
+            assert!(d.admitted, "seed {seed}: {}", d.summary());
+        }
+    }
+
+    #[test]
+    fn most_requests_carry_deadlines() {
+        let stamped = (1..64u64)
+            .filter(|&s| !synthesize(s, s).checks.is_empty())
+            .count();
+        assert!(stamped >= 48, "only {stamped}/63 requests have deadlines");
+    }
+}

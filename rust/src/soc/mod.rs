@@ -159,6 +159,16 @@ struct WheelState {
     init_next: Vec<Cycle>,
     tsu_next: Vec<Cycle>,
     clean: Vec<Cycle>,
+    /// Completion-delivery bookkeeping, flattened into the same SoA
+    /// layout: `comp_stamp[i]` is the delivery cycle (keyed to
+    /// `now + 1`) port `i` last received a completion at, and
+    /// `comp_dirty` lists the ports touched by the in-flight delivery
+    /// batch. Together they collapse the per-completion sync/recompute
+    /// pair — two virtual `next_event` calls per boxed completion — into
+    /// one sync before a port's first completion and one slot refresh
+    /// after its last.
+    comp_stamp: Vec<Cycle>,
+    comp_dirty: Vec<usize>,
 }
 
 /// The assembled SoC.
@@ -321,9 +331,13 @@ impl SocSim {
     /// Route this cycle's completions back to their initiators (shared
     /// by every stepping core). With `wheel` set, each receiving port's
     /// lazy replay window is flushed through this cycle's no-op tick
-    /// *before* the completion lands — running counters must see the
-    /// pre-completion state, exactly as under naive stepping — and its
-    /// wheel slots are refreshed afterwards.
+    /// before its *first* completion lands — running counters must see
+    /// the pre-completion state, exactly as under naive stepping — and
+    /// its wheel slots are refreshed once after its *last* (the slots
+    /// are only read again after delivery returns, so deferring the
+    /// refresh past later completions is last-write-wins identical to
+    /// refreshing per completion, minus the repeated virtual
+    /// `next_event` calls per boxed completion).
     fn deliver_completions(&mut self, now: Cycle, wheel: bool) {
         if self.xbar.completions.is_empty() {
             return;
@@ -333,6 +347,7 @@ impl SocSim {
         // EXPERIMENTS.md §Perf).
         std::mem::swap(&mut self.comp_scratch, &mut self.xbar.completions);
         self.completions_delivered += self.comp_scratch.len() as u64;
+        debug_assert!(self.wheel.comp_dirty.is_empty());
         for i in 0..self.comp_scratch.len() {
             let c = self.comp_scratch[i];
             if let Some(tb) = self.trace.as_deref_mut() {
@@ -354,8 +369,10 @@ impl SocSim {
                 });
             }
             let port = c.initiator.0 as usize;
-            if wheel {
+            if wheel && self.wheel.comp_stamp[port] != now + 1 {
                 self.wheel_sync_port(port, now + 1);
+                self.wheel.comp_stamp[port] = now + 1;
+                self.wheel.comp_dirty.push(port);
             }
             let (init, tsu) = &mut self.ports[port];
             init.complete(c, now, tsu);
@@ -363,9 +380,9 @@ impl SocSim {
             // this cycle; release immediately so back-to-back chains
             // don't pay a phantom cycle.
             release_into_fabric(tsu, &mut self.staged, &mut self.xbar, &mut self.trace, now);
-            if wheel {
-                self.wheel_recompute_port(port, now + 1);
-            }
+        }
+        while let Some(port) = self.wheel.comp_dirty.pop() {
+            self.wheel_recompute_port(port, now + 1);
         }
         self.comp_scratch.clear();
     }
@@ -518,6 +535,11 @@ impl SocSim {
         self.wheel.init_next.resize(n, Cycle::MAX);
         self.wheel.tsu_next.resize(n, Cycle::MAX);
         self.wheel.clean.resize(n, now);
+        // Stamp 0 is safe as the "no completion delivered" sentinel:
+        // deliveries key the stamp to `now + 1 >= 1`.
+        self.wheel.comp_stamp.clear();
+        self.wheel.comp_stamp.resize(n, 0);
+        self.wheel.comp_dirty.clear();
         for i in 0..n {
             self.wheel.clean[i] = now;
             self.wheel_recompute_port(i, now);

@@ -212,6 +212,16 @@ impl TaskBound {
         self.mem_bound.system_cycles(clocks)
     }
 
+    /// Admission slack against `deadline`, in system cycles at the
+    /// scenario's clocks: `deadline - completion bound` (k-fault term
+    /// included). Positive = margin, negative = infeasible by that
+    /// many cycles. `None` for endless workloads, which have no
+    /// completion bound to compare.
+    pub fn slack_cycles(&self, deadline: Cycle, clocks: Option<&ClockTree>) -> Option<i64> {
+        self.completion_cycles(clocks)
+            .map(|bound| deadline as i64 - bound as i64)
+    }
+
     /// Completion bound as wall-clock nanoseconds at an operating
     /// point's clock tree — the DVFS governor's currency, k-fault term
     /// included. *Exact*: each domain's cycles convert through their own
@@ -266,6 +276,55 @@ impl WcetReport {
             .find(|b| b.task == task)
             .unwrap_or_else(|| panic!("no bound for critical task {task}"))
     }
+}
+
+/// The binding admission margin of a mix: the deadline task whose
+/// completion bound sits closest to (or furthest past) its deadline,
+/// tagged with the resource that dominates the bound.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SlackProbe {
+    pub task: String,
+    /// The resource dominating the binding task's completion bound —
+    /// the mix's scarce axis (what slack-aware packing bins on, and
+    /// what to reconfigure when the slack goes negative).
+    pub binding: Resource,
+    /// `deadline - completion bound` in system cycles (negative =
+    /// infeasible; `i64::MIN` marks a deadline on an endless task,
+    /// which no configuration can admit).
+    pub slack: i64,
+}
+
+/// Extract the tightest admission margin from an analyzed scenario:
+/// for every deadline-carrying time-critical task, the slack of its
+/// completion bound (k-fault term included) against the deadline, in
+/// system cycles at the scenario's clocks; the row with the minimum
+/// slack wins. `None` when no task carries a deadline — nothing
+/// binds. Deterministic tie-break: the first task in declaration
+/// order keeps the probe.
+pub fn min_slack(scenario: &Scenario, report: &WcetReport) -> Option<SlackProbe> {
+    let clocks = scenario.clocks();
+    let mut best: Option<SlackProbe> = None;
+    for task in &scenario.tasks {
+        if !task.criticality.is_time_critical() {
+            continue;
+        }
+        let deadline = task.deadline_cycles(clocks.as_ref());
+        if deadline == 0 {
+            continue;
+        }
+        let b = report.bound_for(&task.name);
+        let slack = b
+            .slack_cycles(deadline, clocks.as_ref())
+            .unwrap_or(i64::MIN);
+        if best.as_ref().map(|p| slack < p.slack).unwrap_or(true) {
+            best = Some(SlackProbe {
+                task: task.name.clone(),
+                binding: b.completion_binding,
+                slack,
+            });
+        }
+    }
+    best
 }
 
 /// How a scenario's bounds are priced for comparison and for the

@@ -79,5 +79,8 @@ pub mod bound;
 pub mod fuzz;
 pub mod model;
 
-pub use bound::{analyze, analyze_certified, CostSplit, Resource, TaskBound, WarmSpec, WcetReport};
+pub use bound::{
+    analyze, analyze_certified, min_slack, CostSplit, Resource, SlackProbe, TaskBound, WarmSpec,
+    WcetReport,
+};
 pub use model::{models_of, InitiatorModel, StreamModel, TaskShape};

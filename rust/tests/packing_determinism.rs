@@ -1,0 +1,112 @@
+//! Shard- and step-mode-invariance of the admission service, plus the
+//! packed-mix soundness fuzz.
+//!
+//! The service's central claim is that its sharding is a *pure
+//! decomposition*: batches are fixed-size relative to the queue (never
+//! derived from the thread count), bins never span a batch, and the
+//! merge is order-preserving — so every field of the report is a
+//! function of the config alone. These tests pin that claim
+//! bit-for-bit across shard counts {1, 2, 8} and across all three
+//! stepping cores, and fuzz the admission invariant (every packed
+//! mix's per-task bound within its deadline, simulation-confirmed on
+//! the validation prefix) over several queue seeds.
+//!
+//! Configs here are deliberately tiny: debug builds double-run every
+//! validating simulation (wheel + event-driven oracle), so the
+//! govern/validate prefixes are kept to a handful of mixes.
+
+use carfield::coordinator::StepMode;
+use carfield::service::{self, ServiceConfig, ServiceReport};
+
+fn tiny(seed: u64, threads: usize, mode: StepMode) -> ServiceConfig {
+    ServiceConfig {
+        depth: 64,
+        seed,
+        threads,
+        batch: 16,
+        govern_cap: 1,
+        validate_cap: 3,
+        mode,
+        ..ServiceConfig::default()
+    }
+}
+
+/// Field-by-field bit-identity of two service reports (`demand` is
+/// compared through its bit pattern — "close enough" floats would hide
+/// a summation-order leak).
+fn assert_identical(a: &ServiceReport, b: &ServiceReport, what: &str) {
+    assert_eq!(a.assignments(), b.assignments(), "{what}: packed assignments");
+    assert_eq!(a.stats, b.stats, "{what}: probe/filter/reject counters");
+    assert_eq!(
+        (a.ffd_wins, a.slack_wins, a.ties, a.disagreements),
+        (b.ffd_wins, b.slack_wins, b.ties, b.disagreements),
+        "{what}: race accounting"
+    );
+    assert_eq!(a.mixes.len(), b.mixes.len(), "{what}: mix count");
+    for (ma, mb) in a.mixes.iter().zip(&b.mixes) {
+        assert_eq!(ma.id, mb.id, "{what}: mix id order");
+        assert_eq!(ma.tuning, mb.tuning, "{what}: mix {} tuning", ma.id);
+        assert_eq!(ma.min_slack, mb.min_slack, "{what}: mix {} slack", ma.id);
+        assert_eq!(ma.binding, mb.binding, "{what}: mix {} binding", ma.id);
+        assert_eq!(ma.rescued, mb.rescued, "{what}: mix {} rescue", ma.id);
+        assert_eq!(ma.checks, mb.checks, "{what}: mix {} bound ledger", ma.id);
+        assert_eq!(
+            ma.demand.to_bits(),
+            mb.demand.to_bits(),
+            "{what}: mix {} demand bits",
+            ma.id
+        );
+    }
+    assert_eq!(a.governed, b.governed, "{what}: governed prefix");
+    assert_eq!(a.govern_failures, b.govern_failures, "{what}: govern failures");
+    assert_eq!(
+        (a.library_hits, a.library_misses, a.library_len),
+        (b.library_hits, b.library_misses, b.library_len),
+        "{what}: certificate-library trajectory"
+    );
+    assert_eq!(a.validations, b.validations, "{what}: validation rows");
+}
+
+#[test]
+fn bit_identical_across_shard_counts() {
+    let base = service::run(&tiny(11, 1, StepMode::default()));
+    assert!(base.packed() > 0, "empty baseline proves nothing");
+    for threads in [2usize, 8] {
+        let r = service::run(&tiny(11, threads, StepMode::default()));
+        assert_identical(&base, &r, &format!("threads=1 vs threads={threads}"));
+    }
+}
+
+#[test]
+fn bit_identical_across_step_modes() {
+    let wheel = service::run(&tiny(17, 2, StepMode::Wheel));
+    assert!(
+        !wheel.validations.is_empty(),
+        "step-mode invariance needs a validation prefix to compare"
+    );
+    for mode in [StepMode::EventDriven, StepMode::Naive] {
+        let r = service::run(&tiny(17, 2, mode));
+        assert_identical(&wheel, &r, &format!("wheel vs {mode:?}"));
+    }
+}
+
+#[test]
+fn packed_mixes_are_sound_across_seeds() {
+    for seed in [2u64, 3, 7, 11] {
+        let r = service::run(&tiny(seed, 2, StepMode::default()));
+        let packed_requests: usize = r.mixes.iter().map(|m| m.members.len()).sum();
+        assert_eq!(
+            packed_requests, 64,
+            "seed {seed}: every request packed exactly once"
+        );
+        assert!(
+            r.all_admitted(),
+            "seed {seed}: a packed mix has negative slack or a bound past its deadline"
+        );
+        assert!(
+            !r.validations.is_empty() && r.validation_sound(),
+            "seed {seed}: the validation sweep refuted a packed mix: {:?}",
+            r.validations
+        );
+    }
+}

@@ -8,7 +8,9 @@
 //! loudly.
 
 use carfield::coordinator::task::Criticality;
-use carfield::coordinator::{FaultPlan, IsolationPolicy, McTask, Scenario, Scheduler, Workload};
+use carfield::coordinator::{
+    FaultPlan, IsolationPolicy, McTask, Scenario, Scheduler, StepMode, Workload,
+};
 use carfield::power::OperatingPoint;
 use carfield::soc::amr::IntPrecision;
 use carfield::soc::dma::DmaJob;
@@ -23,7 +25,9 @@ fn assert_equivalent(scenario: &Scenario) {
         "wheel vs naive diverged for scenario `{}`",
         scenario.name
     );
-    let fast = Scheduler::run(scenario);
+    // `Scheduler::run` is the wheel itself now, so pin the third leg to
+    // the event-driven core explicitly to keep three-way coverage.
+    let fast = Scheduler::run_mode(scenario, StepMode::EventDriven);
     assert_eq!(
         wheel, fast,
         "wheel vs event-driven diverged for scenario `{}`",

@@ -10,6 +10,11 @@ Two checks, both hard failures (exit 1):
 2. Perf floor: the fresh run's event-driven simulator throughput on the
    fig6a topology must stay at or above the floor committed in PR 1
    (>= 60 Mcyc/s).
+3. Fresh completeness: every section and metric in the *fresh* run must
+   carry a real number. The committed file may hold nulls (the
+   no-toolchain ``measurement status`` marker makes CI the measuring
+   authority), but a fresh run that wrote ``null`` means a timing or
+   derived metric silently produced a non-finite value.
 
 Environment-dependent rows are exempt from the schema comparison: the
 PJRT artifact sections (skipped when artifacts or the PJRT plugin are
@@ -35,6 +40,12 @@ WHEEL_PARALLEL_METRIC = "sweep wall-clock speedup (wheel parallel)"
 WS_FOLD_METRIC = "workingset fold throughput"
 WS_DISABLED_METRIC = "ws trace-disabled cost vs untraced"
 WS_DISABLED_GATE = 1.05
+PACK_ADMISSIONS_METRIC = "pack sustained admissions (100k queue)"
+PACK_DEEP_METRIC = "pack-only sustained admissions (1M queue)"
+PACK_RATIO_METRIC = "pack packing ratio"
+PACK_FFD_METRIC = "pack ffd win rate"
+PACK_SLACK_METRIC = "pack best-fit-slack win rate"
+PACK_LIBRARY_METRIC = "pack certificate-library hit rate"
 
 
 def load(path):
@@ -63,6 +74,24 @@ def metric_value(doc, label):
         if row.get("label") == label:
             return row.get("value")
     return None
+
+
+def null_rows(doc):
+    """Labels in a fresh run whose measured value is null/missing."""
+    out = []
+    for row in doc.get("sections", []):
+        label = row.get("label", "")
+        if label.startswith(OPTIONAL_SECTION_PREFIXES):
+            continue
+        if not isinstance(row.get("mean_ms"), (int, float)):
+            out.append(f"section {label!r}")
+    for row in doc.get("metrics", []):
+        label = row.get("label", "")
+        if label in OPTIONAL_METRICS:
+            continue
+        if not isinstance(row.get("value"), (int, float)):
+            out.append(f"metric {label!r}")
+    return out
 
 
 def diff(kind, committed, fresh):
@@ -125,6 +154,30 @@ def main():
             f"address-tagged fills leaked into the disabled trace path: "
             f"{ws_disabled:.3f}x > gate {WS_DISABLED_GATE}"
         )
+
+    pack = metric_value(fresh, PACK_ADMISSIONS_METRIC)
+    pack_deep = metric_value(fresh, PACK_DEEP_METRIC)
+    if isinstance(pack, (int, float)) and isinstance(pack_deep, (int, float)):
+        print(
+            f"check_bench: admission service {pack:,.0f} req/s full pipeline, "
+            f"{pack_deep:,.0f} req/s pack-only"
+        )
+    ratio = metric_value(fresh, PACK_RATIO_METRIC)
+    if isinstance(ratio, (int, float)):
+        print(f"check_bench: packing ratio {ratio:.2f} req/mix")
+    ffd = metric_value(fresh, PACK_FFD_METRIC)
+    slack = metric_value(fresh, PACK_SLACK_METRIC)
+    if isinstance(ffd, (int, float)) and isinstance(slack, (int, float)):
+        print(
+            f"check_bench: heuristic win rates ffd {ffd:.1f}% / "
+            f"best-fit-slack {slack:.1f}%"
+        )
+    lib = metric_value(fresh, PACK_LIBRARY_METRIC)
+    if isinstance(lib, (int, float)):
+        print(f"check_bench: certificate-library hit rate {lib:.1f}%")
+
+    for row in null_rows(fresh):
+        problems.append(f"fresh run wrote null for {row} (non-finite measurement)")
 
     if problems:
         for problem in problems:
